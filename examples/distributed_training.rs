@@ -1,0 +1,73 @@
+//! Distributed training, the paper's deployment shape: a TCP weight-store
+//! "database" process boundary, a master thread, and worker threads that
+//! each own a PJRT engine — all wired through the same binary here for
+//! convenience (the `issgd db-server` / `issgd worker` subcommands run the
+//! actors as real separate processes).
+//!
+//! Demonstrates the end-to-end driver deliverable: trains the SVHN-shaped
+//! `small` MLP (3072→4×256→10, ~1M params) on the synthetic corpus for a
+//! few hundred steps over a real socket, logging the loss curve.
+//!
+//! Run (after `make artifacts`):
+//!     cargo run --release --example distributed_training
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use issgd::config::RunConfig;
+use issgd::coordinator::{run_live, LiveOptions, Master};
+use issgd::weightstore::client::Client;
+use issgd::weightstore::server::Server;
+use issgd::weightstore::MemStore;
+
+fn main() -> Result<()> {
+    let mut cfg = RunConfig::setting_a(); // lr 0.01, smoothing +10
+    cfg.model = "small".into();
+    cfg.n_examples = 2048;
+    cfg.steps = 200;
+    cfg.n_workers = 2; // one core: keep thread contention sane
+    cfg.eval_every = 25;
+
+    // 1. The database actor on a real TCP socket.
+    let store = Arc::new(MemStore::new(Master::store_size(&cfg), cfg.init_weight));
+    let server = Server::bind("127.0.0.1:0", store)?;
+    let (addr, server_handle) = server.serve_in_background()?;
+    println!("weight store (database actor) listening on {addr}");
+
+    // 2. Master + workers, all talking to the store over TCP.
+    let outcome = run_live(
+        &cfg,
+        &LiveOptions {
+            store_addr: Some(addr.to_string()),
+            worker_throttle: Some(std::time::Duration::from_millis(2)),
+            wait_for_first_scores: true,
+        },
+    )?;
+
+    println!("\nstep   train-loss   (eval) train-err  test-err");
+    let evals = outcome.rec.get("eval_train_err");
+    let test_evals = outcome.rec.get("eval_test_err");
+    for (i, s) in outcome.rec.get("eval_train_loss").iter().enumerate() {
+        println!(
+            "{:>4}   {:>10.4}   {:>16.4}  {:>8.4}",
+            s.step,
+            s.value,
+            evals[i].value,
+            test_evals[i].value
+        );
+    }
+    let (train_e, valid_e, test_e) = outcome.final_err;
+    println!("\nfinal error: train {train_e:.4}  valid {valid_e:.4}  test {test_e:.4}");
+    println!("workers scored {} examples concurrently with training", outcome.scored);
+    println!(
+        "store traffic: {} param publishes, {} weight pushes, {} snapshots",
+        outcome.store_stats.param_pushes,
+        outcome.store_stats.weight_pushes,
+        outcome.store_stats.snapshot_fetches
+    );
+
+    // 3. Shut the database down.
+    Client::connect(&addr.to_string())?.shutdown_server()?;
+    server_handle.join().ok();
+    Ok(())
+}

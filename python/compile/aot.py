@@ -1,0 +1,178 @@
+"""AOT pipeline: lower the four L2 entry points to HLO text artifacts.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (from the ``python/`` directory)::
+
+    python -m compile.aot --config small --out ../artifacts
+    python -m compile.aot --config paper --out ../artifacts
+
+Writes ``<out>/<config>/{train_step,grad_norms,eval_step,grad_mean_sqnorm}.hlo.txt``
+plus ``<out>/<config>/manifest.json`` describing every shape the rust
+runtime needs.  Python never runs again after this: the rust binary loads
+the text, compiles it on the PJRT CPU client, and owns the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# ---------------------------------------------------------------------------
+# Model/batch configurations.  HLO artifacts are shape-specialised, so the
+# minibatch sizes are fixed here and recorded in the manifest.
+#
+#   dims        : layer widths, input -> hidden... -> classes
+#   batch_train : M, the master's SGD minibatch
+#   batch_score : B, the worker scoring batch (per-example grad norms)
+#   batch_eval  : E, the evaluation batch
+#
+# ``paper`` matches Alain et al. §5.1: permutation-invariant SVHN, 3072-dim
+# inputs, 4 hidden layers of 2048 ReLU units, 10 classes.  ``small`` keeps
+# the same shape family at CPU-friendly width; ``tiny`` is for unit tests.
+# ---------------------------------------------------------------------------
+CONFIGS = {
+    "tiny": dict(dims=[64, 32, 32, 10], batch_train=8, batch_score=16, batch_eval=16),
+    "small": dict(dims=[3072, 256, 256, 256, 256, 10], batch_train=64, batch_score=256, batch_eval=512),
+    "paper": dict(dims=[3072, 2048, 2048, 2048, 2048, 10], batch_train=128, batch_score=256, batch_eval=512),
+    "large": dict(dims=[3072, 4096, 4096, 4096, 4096, 10], batch_train=128, batch_score=256, batch_eval=512),
+}
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def param_specs(dims):
+    """ShapeDtypeStructs for the flat (W_0, b_0, ...) parameter arguments."""
+    specs = []
+    for din, dout in model.layer_dims(dims):
+        specs.append(jax.ShapeDtypeStruct((din, dout), F32))
+        specs.append(jax.ShapeDtypeStruct((dout,), F32))
+    return specs
+
+
+def entry_points(cfg):
+    """(name, fn, arg_specs) for each AOT entry point of one config."""
+    dims = cfg["dims"]
+    nl = len(model.layer_dims(dims))
+    d, c = dims[0], dims[-1]
+    m, b, e = cfg["batch_train"], cfg["batch_score"], cfg["batch_eval"]
+    ps = param_specs(dims)
+
+    def wrap(core, nbatch_args):
+        def f(*args):
+            flat = args[: 2 * nl]
+            rest = args[2 * nl :]
+            return core(flat, *rest)
+
+        return f
+
+    xspec = lambda n: jax.ShapeDtypeStruct((n, d), F32)
+    yspec = lambda n: jax.ShapeDtypeStruct((n, c), F32)
+
+    return [
+        (
+            "train_step",
+            wrap(model.train_step, 4),
+            ps + [xspec(m), yspec(m), jax.ShapeDtypeStruct((m,), F32), jax.ShapeDtypeStruct((1,), F32)],
+        ),
+        ("grad_norms", wrap(model.grad_norms, 2), ps + [xspec(b), yspec(b)]),
+        (
+            "peer_step",
+            wrap(model.peer_step, 3),
+            ps + [xspec(m), yspec(m), jax.ShapeDtypeStruct((m,), F32)],
+        ),
+        ("eval_step", wrap(model.eval_step, 2), ps + [xspec(e), yspec(e)]),
+        ("grad_mean_sqnorm", wrap(model.grad_mean_sqnorm, 2), ps + [xspec(m), yspec(m)]),
+    ]
+
+
+def lower_config(name: str, out_dir: str) -> dict:
+    cfg = CONFIGS[name]
+    cfg_dir = os.path.join(out_dir, name)
+    os.makedirs(cfg_dir, exist_ok=True)
+    artifacts = {}
+    for ep_name, fn, specs in entry_points(cfg):
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{ep_name}.hlo.txt"
+        path = os.path.join(cfg_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        artifacts[ep_name] = {
+            "file": fname,
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "bytes": len(text),
+        }
+        print(f"  {name}/{fname}: {len(text)} chars")
+
+    dims = cfg["dims"]
+    layers = [
+        {"w_shape": [din, dout], "b_shape": [dout]}
+        for din, dout in model.layer_dims(dims)
+    ]
+    n_params = sum(din * dout + dout for din, dout in model.layer_dims(dims))
+    manifest = {
+        "config": name,
+        "dims": dims,
+        "dtype": "f32",
+        "n_classes": dims[-1],
+        "input_dim": dims[0],
+        "n_layers": len(layers),
+        "n_params": n_params,
+        "layers": layers,
+        "batch_train": cfg["batch_train"],
+        "batch_score": cfg["batch_score"],
+        "batch_eval": cfg["batch_eval"],
+        "artifacts": artifacts,
+        # Argument conventions the rust runtime relies on:
+        #   every entry point: 2*n_layers leading params (W_0, b_0, ...)
+        #   train_step extras: x[M,d], y[M,C], coef[M], lr[1]
+        #                      -> outputs (params'..., loss)
+        #   grad_norms extras: x[B,d], y[B,C] -> (sqnorm[B], ce[B])
+        #   peer_step extras : x[M,d], y[M,C], coef[M]
+        #                      -> (grads..., loss, sqnorm[M])  (ASGD peers)
+        #   eval_step  extras: x[E,d], y[E,C] -> (sum_ce, n_correct)
+        #   grad_mean_sqnorm : x[M,d], y[M,C] -> (sqnorm,)
+        "calling_convention": "flat-params-first",
+    }
+    with open(os.path.join(cfg_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--config", default="tiny,small", help="comma-separated config names, or 'all'")
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    names = list(CONFIGS) if args.config == "all" else args.config.split(",")
+    for name in names:
+        if name not in CONFIGS:
+            raise SystemExit(f"unknown config {name!r}; have {list(CONFIGS)}")
+        print(f"lowering config {name} (dims={CONFIGS[name]['dims']})")
+        lower_config(name, args.out)
+    print("AOT done.")
+
+
+if __name__ == "__main__":
+    main()

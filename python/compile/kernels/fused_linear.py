@@ -1,0 +1,88 @@
+"""L1 Pallas kernel: blocked fused ``act(X @ W + b)`` dense layer.
+
+Used on the worker scoring path (``grad_norms``) where the forward pass of
+the MLP dominates.  The kernel tiles the output into ``(block_m, block_n)``
+MXU-shaped panels, keeps the full contraction dimension resident (the
+paper's layers have K ≤ 3072, so an ``X`` tile of ``128 x 3072`` f32 is
+1.5 MiB of VMEM), and fuses the bias add + ReLU into the epilogue so the
+pre-activation never round-trips through HBM.
+
+TPU mapping: the ``jnp.dot`` inside the kernel targets the MXU systolic
+array with ``preferred_element_type=float32`` accumulation; the epilogue is
+VPU work on the already-resident tile.  This replaces the CUDA
+threadblock/shared-memory tiling a 2015 GPU implementation would use —
+BlockSpec expresses the HBM→VMEM schedule declaratively.
+
+interpret=True as everywhere on this image (CPU PJRT cannot run Mosaic).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_M = 128
+DEFAULT_BLOCK_N = 256
+
+
+def _fused_linear_kernel(x_ref, w_ref, b_ref, o_ref, *, relu: bool):
+    x = x_ref[...]
+    w = w_ref[...]
+    b = b_ref[...]
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    acc = acc + b[None, :]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("relu", "block_m", "block_n"))
+def fused_linear(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    relu: bool = True,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+) -> jax.Array:
+    """``relu(x @ w + b)`` (or affine only with ``relu=False``), Pallas-blocked.
+
+    Args:
+      x: ``(M, K)`` input rows.
+      w: ``(K, N)`` weight matrix.
+      b: ``(N,)`` bias.
+      relu: fuse a ReLU epilogue (hidden layers) or not (logits layer).
+
+    Returns:
+      ``(M, N)`` activations, same dtype as ``x``.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: x is {x.shape}, w is {w.shape}")
+    if b.shape != (n,):
+        raise ValueError(f"bias shape {b.shape} != ({n},)")
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    pad_m = (-m) % bm
+    pad_n = (-n) % bn
+    xp = jnp.pad(x, ((0, pad_m), (0, 0))) if pad_m else x
+    wp = jnp.pad(w, ((0, 0), (0, pad_n))) if pad_n else w
+    bp = jnp.pad(b, (0, pad_n)) if pad_n else b
+    grid = (xp.shape[0] // bm, wp.shape[1] // bn)
+    out = pl.pallas_call(
+        functools.partial(_fused_linear_kernel, relu=relu),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], wp.shape[1]), x.dtype),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m, :n]

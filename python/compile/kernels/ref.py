@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for the Pallas kernels and for Proposition 1.
+
+Everything here is the *reference semantics* — slow, obvious, and used only
+by pytest to validate the kernels and the manual backprop in model.py.
+Nothing in this file is ever lowered into an artifact.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def layer_sqnorm_ref(x: jax.Array, g: jax.Array) -> jax.Array:
+    """Reference for kernels.per_example_norm.layer_sqnorm."""
+    rx = jnp.sum(jnp.square(x.astype(jnp.float32)), axis=1)
+    rg = jnp.sum(jnp.square(g.astype(jnp.float32)), axis=1)
+    return rx * rg + rg
+
+
+def fused_linear_ref(x: jax.Array, w: jax.Array, b: jax.Array, relu: bool = True) -> jax.Array:
+    """Reference for kernels.fused_linear.fused_linear."""
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :].astype(jnp.float32)
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y.astype(x.dtype)
+
+
+def mlp_forward_ref(params, x):
+    """Plain-jnp MLP forward: ReLU hidden layers, raw logits at the end."""
+    h = x
+    for i, (w, b) in enumerate(params):
+        h = jnp.dot(h, w) + b
+        if i + 1 < len(params):
+            h = jnp.maximum(h, 0.0)
+    return h
+
+
+def per_example_ce_ref(params, x, y_onehot):
+    """Per-example softmax cross-entropy, no batch reduction."""
+    logits = mlp_forward_ref(params, x)
+    logz = jax.nn.logsumexp(logits, axis=1)
+    ll = jnp.sum(logits * y_onehot, axis=1)
+    return logz - ll
+
+
+def ce_loss_ref(params, x, y_onehot):
+    """Mean softmax cross-entropy over the batch."""
+    return jnp.mean(per_example_ce_ref(params, x, y_onehot))
+
+
+def weighted_ce_ref(params, x, y_onehot, coef):
+    """The importance-weighted minibatch loss of paper §4.1.
+
+    ``coef[m]`` carries the full IS scaling ``(1/N sum omega) / omega_{i_m}``
+    (all ones recovers plain SGD), so the loss is ``mean(coef * ce)``.
+    """
+    return jnp.mean(coef * per_example_ce_ref(params, x, y_onehot))
+
+
+def per_example_grad_sqnorm_ref(params, x, y_onehot):
+    """Oracle for Proposition 1: per-example ||grad||^2 via vmap(grad).
+
+    Materializes the full per-example gradient (exactly what the paper's
+    trick avoids) and reduces it — the ground truth the fast path must match.
+    """
+
+    def single_loss(p, xi, yi):
+        return per_example_ce_ref(p, xi[None, :], yi[None, :])[0]
+
+    def single_sqnorm(xi, yi):
+        grads = jax.grad(single_loss)(params, xi, yi)
+        leaves = jax.tree_util.tree_leaves(grads)
+        return sum(jnp.sum(jnp.square(g)) for g in leaves)
+
+    return jax.vmap(single_sqnorm)(x, y_onehot)
+
+
+def mean_grad_sqnorm_ref(params, x, y_onehot):
+    """Oracle for grad_mean_sqnorm: ||grad of mean CE||_2^2 (flat params)."""
+    grads = jax.grad(ce_loss_ref)(params, x, y_onehot)
+    leaves = jax.tree_util.tree_leaves(grads)
+    return sum(jnp.sum(jnp.square(g)) for g in leaves)

@@ -1,0 +1,239 @@
+"""L2: the paper's model — permutation-invariant MLP with manual backprop.
+
+Why manual backprop instead of ``jax.grad``: Proposition 1 (the
+Goodfellow per-example-gradient-norm trick) needs the per-layer pairs
+``(X_l, dL/dY_l)`` — the layer *inputs* from the forward pass and the
+backpropagated gradients at each layer *output*.  Writing the backward
+pass explicitly exposes exactly those tensors, which we then feed to the
+L1 Pallas kernel (``kernels.per_example_norm``).  pytest cross-checks the
+whole construction against ``jax.grad`` / ``vmap(grad)`` oracles.
+
+Four entry points are AOT-lowered (see aot.py); every one takes the
+parameters as ``2*L`` leading arguments ``(W_0, b_0, ..., W_{L-1}, b_{L-1})``
+so the rust runtime can keep them device-resident across steps.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.fused_linear import fused_linear
+from compile.kernels.per_example_norm import mlp_sqnorms
+
+
+# ---------------------------------------------------------------------------
+# Parameter handling
+# ---------------------------------------------------------------------------
+
+def layer_dims(dims):
+    """``[(d_in, d_out), ...]`` per dense layer for a dims list like
+    ``[3072, 2048, 2048, 2048, 2048, 10]``."""
+    return list(zip(dims[:-1], dims[1:]))
+
+
+def init_params(key, dims, scale: str = "he"):
+    """He-initialised parameter list ``[(W, b), ...]`` (ReLU network)."""
+    params = []
+    for i, (din, dout) in enumerate(layer_dims(dims)):
+        key, sub = jax.random.split(key)
+        if scale == "he":
+            std = jnp.sqrt(2.0 / din)
+        else:
+            std = jnp.sqrt(1.0 / din)
+        w = jax.random.normal(sub, (din, dout), jnp.float32) * std
+        b = jnp.zeros((dout,), jnp.float32)
+        params.append((w, b))
+    return params
+
+
+def params_from_flat(flat_args):
+    """Group the flat ``(W_0, b_0, W_1, b_1, ...)`` argument list."""
+    if len(flat_args) % 2:
+        raise ValueError("parameter list must have an even length (W,b pairs)")
+    return [(flat_args[i], flat_args[i + 1]) for i in range(0, len(flat_args), 2)]
+
+
+def params_to_flat(params):
+    flat = []
+    for w, b in params:
+        flat.append(w)
+        flat.append(b)
+    return flat
+
+
+# ---------------------------------------------------------------------------
+# Forward / backward
+# ---------------------------------------------------------------------------
+
+def forward(params, x, use_pallas: bool = True):
+    """MLP forward pass keeping every layer input for the backward pass.
+
+    Returns ``(logits, xs, zs)`` where ``xs[l]`` is the input to layer ``l``
+    and ``zs[l]`` its pre-activation (needed for the ReLU mask).
+    Hidden layers run through the L1 Pallas ``fused_linear`` kernel; the
+    logits layer is affine (no ReLU).
+    """
+    xs, zs = [], []
+    h = x
+    nlayers = len(params)
+    for i, (w, b) in enumerate(params):
+        xs.append(h)
+        is_hidden = i + 1 < nlayers
+        if use_pallas:
+            z_act = fused_linear(h, w, b, relu=is_hidden)
+            # The ReLU mask needs the *pre*-activation sign; for hidden
+            # layers the fused kernel only returns post-ReLU values, but
+            # relu(z) > 0  <=>  z > 0, so the mask is recoverable and we
+            # store the post-activation as its own mask carrier.
+            zs.append(z_act)
+            h = z_act
+        else:
+            z = jnp.dot(h, w) + b
+            zs.append(z)
+            h = jnp.maximum(z, 0.0) if is_hidden else z
+    return h, xs, zs
+
+
+def _softmax_ce(logits, y_onehot):
+    """Per-example CE and the softmax probabilities (reused by backward)."""
+    m = jnp.max(logits, axis=1, keepdims=True)
+    shifted = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=1, keepdims=True)) + m
+    logp = logits - lse
+    ce = -jnp.sum(logp * y_onehot, axis=1)
+    probs = jnp.exp(logp)
+    return ce, probs
+
+
+def backward(params, xs, zs, dlogits):
+    """Manual backprop through the MLP given ``dL/dlogits``.
+
+    Returns ``(grads, gs)``: ``grads`` is the ``[(gW, gb), ...]`` parameter
+    gradient list and ``gs[l] = dL/dY_l`` the per-layer output gradients
+    consumed by Proposition 1.
+    """
+    nlayers = len(params)
+    grads = [None] * nlayers
+    gs = [None] * nlayers
+    g = dlogits
+    for i in range(nlayers - 1, -1, -1):
+        w, _b = params[i]
+        gs[i] = g
+        gw = jnp.dot(xs[i].T, g)
+        gb = jnp.sum(g, axis=0)
+        grads[i] = (gw, gb)
+        if i > 0:
+            g = jnp.dot(g, w.T)
+            # ReLU mask: zs[i-1] holds post-ReLU activations for hidden
+            # layers (see forward); relu(z) > 0 <=> z > 0.
+            g = g * (zs[i - 1] > 0.0).astype(g.dtype)
+    return grads, gs
+
+
+# ---------------------------------------------------------------------------
+# Entry points (AOT-lowered by aot.py)
+# ---------------------------------------------------------------------------
+
+def train_step(flat_params, x, y_onehot, coef, lr):
+    """One importance-weighted SGD step.
+
+    loss = mean_m coef[m] * CE(x_m)  — the paper's §4.1 minibatch loss with
+    ``coef_m = (1/N sum_n omega_n) / omega_{i_m}`` (all-ones = plain SGD).
+
+    Returns ``(new_flat_params..., loss)``.
+    """
+    params = params_from_flat(flat_params)
+    m = x.shape[0]
+    logits, xs, zs = forward(params, x)
+    ce, probs = _softmax_ce(logits, y_onehot)
+    loss = jnp.mean(coef * ce)
+    dlogits = (probs - y_onehot) * (coef / m)[:, None]
+    grads, _gs = backward(params, xs, zs, dlogits)
+    lr = lr.reshape(())
+    new_params = [(w - lr * gw, b - lr * gb) for (w, b), (gw, gb) in zip(params, grads)]
+    return tuple(params_to_flat(new_params)) + (loss,)
+
+
+def grad_norms(flat_params, x, y_onehot):
+    """Per-example gradient *squared* norms + per-example losses.
+
+    This is the worker scoring path: Proposition 1 via the Pallas kernel.
+    The per-example loss uses unscaled CE (the paper's ``L(x_n)``), so the
+    backward seed for example ``n`` is ``softmax - y`` with no 1/M factor.
+    """
+    params = params_from_flat(flat_params)
+    logits, xs, zs = forward(params, x)
+    ce, probs = _softmax_ce(logits, y_onehot)
+    dlogits = probs - y_onehot
+    # Per-layer output gradients WITHOUT forming per-example weight grads:
+    # we only need the backpropagated G_l matrices.
+    _grads, gs = backward(params, xs, zs, dlogits)
+    sqnorms = mlp_sqnorms(xs, gs)
+    return sqnorms, ce
+
+
+def eval_step(flat_params, x, y_onehot):
+    """``(sum CE, number correct)`` over the batch — used for figures 2-3."""
+    params = params_from_flat(flat_params)
+    logits, _xs, _zs = forward(params, x)
+    ce, _probs = _softmax_ce(logits, y_onehot)
+    pred = jnp.argmax(logits, axis=1)
+    label = jnp.argmax(y_onehot, axis=1)
+    ncorrect = jnp.sum((pred == label).astype(jnp.float32))
+    return jnp.sum(ce), ncorrect
+
+
+def grad_mean_sqnorm(flat_params, x, y_onehot):
+    """``||grad of mean CE||_2^2`` over the flat parameter vector.
+
+    Used by the master to approximate ``||g_TRUE||^2`` (paper §B.2) by
+    averaging this quantity over minibatches.
+    """
+    params = params_from_flat(flat_params)
+    m = x.shape[0]
+    logits, xs, zs = forward(params, x)
+    _ce, probs = _softmax_ce(logits, y_onehot)
+    dlogits = (probs - y_onehot) / m
+    grads, _gs = backward(params, xs, zs, dlogits)
+    total = jnp.float32(0.0)
+    for gw, gb in grads:
+        total = total + jnp.sum(jnp.square(gw)) + jnp.sum(jnp.square(gb))
+    return total
+
+
+def peer_step(flat_params, x, y_onehot, coef):
+    """ASGD/peer-mode entry point (paper §6's recommended combination).
+
+    Unlike ``train_step`` (which applies the SGD update locally), a *peer*
+    returns the raw weighted gradient so a parameter server can apply it
+    asynchronously — and, "whenever a gradient contribution is computed,
+    the importance weights can be obtained at the same time" (§6): the
+    same backward pass also yields the per-example gradient norms of the
+    *unweighted* loss via Proposition 1, to be shared as importance
+    weights.
+
+    Returns ``(grad_W0, grad_b0, ..., loss, sqnorms[M])``.
+
+    The per-example norm recovery uses that backprop is row-independent
+    across the batch: the weighted backward seeds each row with
+    ``(coef_m / M) * (softmax - y)``, so the unweighted per-example squared
+    norm is the weighted one divided by ``(coef_m / M)^2`` (guarded for
+    padded rows with ``coef = 0``, which get weight 0).
+    """
+    params = params_from_flat(flat_params)
+    m = x.shape[0]
+    logits, xs, zs = forward(params, x)
+    ce, probs = _softmax_ce(logits, y_onehot)
+    loss = jnp.mean(coef * ce)
+    scale = coef / m
+    dlogits = (probs - y_onehot) * scale[:, None]
+    grads, gs = backward(params, xs, zs, dlogits)
+    sq_weighted = mlp_sqnorms(xs, gs)
+    safe = jnp.where(scale > 0.0, scale, 1.0)
+    sqnorms = jnp.where(scale > 0.0, sq_weighted / jnp.square(safe), 0.0)
+    flat_grads = []
+    for gw, gb in grads:
+        flat_grads.append(gw)
+        flat_grads.append(gb)
+    return tuple(flat_grads) + (loss, sqnorms)

@@ -1,0 +1,60 @@
+"""AOT pipeline checks: lowering produces loadable HLO text + sane manifest."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def tiny_artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    manifest = aot.lower_config("tiny", str(out))
+    return str(out), manifest
+
+
+class TestLowering:
+    def test_all_entry_points_emitted(self, tiny_artifacts):
+        out, manifest = tiny_artifacts
+        for name in ("train_step", "grad_norms", "eval_step", "grad_mean_sqnorm"):
+            path = os.path.join(out, "tiny", manifest["artifacts"][name]["file"])
+            assert os.path.exists(path)
+            text = open(path).read()
+            assert "ENTRY" in text, f"{name} HLO text has no ENTRY computation"
+            assert "HloModule" in text
+
+    def test_manifest_contents(self, tiny_artifacts):
+        out, manifest = tiny_artifacts
+        on_disk = json.load(open(os.path.join(out, "tiny", "manifest.json")))
+        assert on_disk == manifest
+        assert manifest["dims"] == [64, 32, 32, 10]
+        assert manifest["n_layers"] == 3
+        assert manifest["n_params"] == 64 * 32 + 32 + 32 * 32 + 32 + 32 * 10 + 10
+        assert manifest["calling_convention"] == "flat-params-first"
+
+    def test_train_step_signature_shapes(self, tiny_artifacts):
+        # The ENTRY line must carry 2L params + x,y,coef,lr operands.
+        out, manifest = tiny_artifacts
+        text = open(os.path.join(out, "tiny", "train_step.hlo.txt")).read()
+        m = manifest["batch_train"]
+        d = manifest["input_dim"]
+        assert f"f32[{m},{d}]" in text, "train minibatch operand shape missing"
+        assert f"f32[{m}]" in text, "coef operand shape missing"
+
+    def test_unknown_config_rejected(self):
+        with pytest.raises(KeyError):
+            aot.lower_config("nonexistent", "/tmp")
+
+
+class TestConfigTable:
+    def test_paper_config_matches_paper(self):
+        cfg = aot.CONFIGS["paper"]
+        assert cfg["dims"] == [3072, 2048, 2048, 2048, 2048, 10]
+
+    def test_all_configs_have_batches(self):
+        for name, cfg in aot.CONFIGS.items():
+            for k in ("dims", "batch_train", "batch_score", "batch_eval"):
+                assert k in cfg, (name, k)
+            assert len(cfg["dims"]) >= 3

@@ -1,0 +1,128 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+This is the CORE correctness signal for the compute layer: every kernel
+must match ref.py to float32 tolerance across a hypothesis-driven sweep of
+shapes, including batch sizes that do not divide the block size.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.fused_linear import fused_linear
+from compile.kernels.per_example_norm import layer_sqnorm, mlp_sqnorms
+
+SETTINGS = dict(deadline=None, max_examples=15)
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# per_example_norm.layer_sqnorm
+# ---------------------------------------------------------------------------
+
+class TestLayerSqnorm:
+    @settings(**SETTINGS)
+    @given(
+        n=st.integers(1, 300),
+        din=st.integers(1, 80),
+        dout=st.integers(1, 40),
+        block=st.sampled_from([8, 32, 128]),
+    )
+    def test_matches_ref_shape_sweep(self, n, din, dout, block):
+        x = rand(n * 7 + din, n, din)
+        g = rand(n * 13 + dout, n, dout)
+        got = layer_sqnorm(x, g, block_n=block)
+        want = ref.layer_sqnorm_ref(x, g)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+    def test_block_exact_multiple(self):
+        x, g = rand(0, 256, 64), rand(1, 256, 32)
+        np.testing.assert_allclose(
+            np.asarray(layer_sqnorm(x, g, block_n=128)),
+            np.asarray(ref.layer_sqnorm_ref(x, g)),
+            rtol=1e-5,
+        )
+
+    def test_zero_gradient_rows_give_zero(self):
+        x = rand(2, 17, 8)
+        g = jnp.zeros((17, 4), jnp.float32)
+        assert np.allclose(np.asarray(layer_sqnorm(x, g)), 0.0)
+
+    def test_zero_input_rows_keep_bias_term(self):
+        # X = 0 kills the W contribution but not the b contribution.
+        x = jnp.zeros((9, 5), jnp.float32)
+        g = rand(3, 9, 6)
+        want = np.sum(np.square(np.asarray(g)), axis=1)
+        np.testing.assert_allclose(np.asarray(layer_sqnorm(x, g)), want, rtol=1e-5)
+
+    def test_batch_mismatch_raises(self):
+        with pytest.raises(ValueError):
+            layer_sqnorm(rand(0, 4, 3), rand(1, 5, 3))
+
+    def test_scaling_is_quartic_in_x_g(self):
+        # sqnorm(aX, bG) = a^2 b^2 rx rg + b^2 rg
+        x, g = rand(4, 12, 7), rand(5, 12, 3)
+        base_rx = np.sum(np.square(np.asarray(x)), axis=1)
+        base_rg = np.sum(np.square(np.asarray(g)), axis=1)
+        got = np.asarray(layer_sqnorm(2.0 * x, 3.0 * g))
+        want = 4.0 * 9.0 * base_rx * base_rg + 9.0 * base_rg
+        np.testing.assert_allclose(got, want, rtol=1e-4)
+
+
+class TestMlpSqnorms:
+    def test_accumulates_layers(self):
+        xs = [rand(0, 33, 10), rand(1, 33, 6)]
+        gs = [rand(2, 33, 6), rand(3, 33, 4)]
+        got = np.asarray(mlp_sqnorms(xs, gs))
+        want = sum(np.asarray(ref.layer_sqnorm_ref(x, g)) for x, g in zip(xs, gs))
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+
+    def test_length_mismatch_raises(self):
+        with pytest.raises(ValueError):
+            mlp_sqnorms([rand(0, 4, 3)], [])
+
+
+# ---------------------------------------------------------------------------
+# fused_linear
+# ---------------------------------------------------------------------------
+
+class TestFusedLinear:
+    @settings(**SETTINGS)
+    @given(
+        m=st.integers(1, 200),
+        k=st.integers(1, 64),
+        n=st.integers(1, 300),
+        relu=st.booleans(),
+    )
+    def test_matches_ref_shape_sweep(self, m, k, n, relu):
+        x = rand(m + 17, m, k)
+        w = rand(k + 31, k, n)
+        b = rand(n + 43, n)
+        got = fused_linear(x, w, b, relu=relu)
+        want = ref.fused_linear_ref(x, w, b, relu=relu)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+    def test_relu_clamps_negative(self):
+        x = -jnp.ones((4, 3), jnp.float32)
+        w = jnp.eye(3, dtype=jnp.float32)
+        b = jnp.zeros((3,), jnp.float32)
+        assert np.all(np.asarray(fused_linear(x, w, b, relu=True)) == 0.0)
+        assert np.all(np.asarray(fused_linear(x, w, b, relu=False)) == -1.0)
+
+    def test_shape_validation(self):
+        with pytest.raises(ValueError):
+            fused_linear(rand(0, 4, 3), rand(1, 5, 2), jnp.zeros((2,), jnp.float32))
+        with pytest.raises(ValueError):
+            fused_linear(rand(0, 4, 3), rand(1, 3, 2), jnp.zeros((3,), jnp.float32))
+
+    def test_block_sizes_do_not_change_result(self):
+        x, w, b = rand(0, 100, 24), rand(1, 24, 70), rand(2, 70)
+        a = fused_linear(x, w, b, block_m=32, block_n=32)
+        c = fused_linear(x, w, b, block_m=128, block_n=256)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c), rtol=1e-4, atol=1e-5)

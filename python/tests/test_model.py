@@ -1,0 +1,172 @@
+"""L2 correctness: the manual-backprop MLP vs jax.grad / vmap(grad) oracles.
+
+The critical checks:
+  * forward (through the Pallas fused_linear) == plain-jnp forward
+  * train_step's parameter update == SGD on jax.grad of the weighted loss
+  * grad_norms (Proposition 1 via the Pallas kernel) == vmap(grad) sqnorms
+  * the importance-weighted gradient estimator is UNBIASED (paper Thm 1)
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+DIMS = [12, 16, 16, 5]  # tiny 2-hidden-layer MLP for oracle-speed tests
+
+
+def setup(seed=0, n=9, dims=DIMS):
+    key = jax.random.PRNGKey(seed)
+    params = model.init_params(key, dims)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed + 100))
+    x = jax.random.normal(k1, (n, dims[0]), jnp.float32)
+    labels = jax.random.randint(k2, (n,), 0, dims[-1])
+    y = jax.nn.one_hot(labels, dims[-1], dtype=jnp.float32)
+    return params, x, y
+
+
+class TestForward:
+    @settings(deadline=None, max_examples=10)
+    @given(seed=st.integers(0, 1000), n=st.integers(1, 40))
+    def test_matches_plain_jnp(self, seed, n):
+        params, x, _ = setup(seed, n)
+        logits, xs, zs = model.forward(params, x)
+        want = ref.mlp_forward_ref(params, x)
+        np.testing.assert_allclose(np.asarray(logits), np.asarray(want), rtol=1e-4, atol=1e-5)
+        assert len(xs) == len(params) and len(zs) == len(params)
+        # xs[0] is the input itself; later xs are post-ReLU, thus >= 0
+        np.testing.assert_allclose(np.asarray(xs[0]), np.asarray(x))
+        for h in xs[1:]:
+            assert np.all(np.asarray(h) >= 0.0)
+
+
+class TestTrainStep:
+    def test_gradient_matches_jax_grad(self):
+        params, x, y = setup(3, 8)
+        coef = jnp.abs(jax.random.normal(jax.random.PRNGKey(7), (8,))) + 0.5
+        lr = jnp.array([0.05], jnp.float32)
+        flat = model.params_to_flat(params)
+        out = model.train_step(flat, x, y, coef, lr)
+        new_flat, loss = out[:-1], out[-1]
+
+        want_loss = ref.weighted_ce_ref(params, x, y, coef)
+        np.testing.assert_allclose(float(loss), float(want_loss), rtol=1e-5)
+
+        grads = jax.grad(ref.weighted_ce_ref)(params, x, y, coef)
+        want_flat = [p - 0.05 * g for p, g in zip(flat, model.params_to_flat(grads))]
+        for got, want in zip(new_flat, want_flat):
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-6)
+
+    def test_unit_coef_is_plain_sgd(self):
+        params, x, y = setup(4, 6)
+        flat = model.params_to_flat(params)
+        lr = jnp.array([0.1], jnp.float32)
+        out = model.train_step(flat, x, y, jnp.ones((6,), jnp.float32), lr)
+        grads = jax.grad(ref.ce_loss_ref)(params, x, y)
+        want = [p - 0.1 * g for p, g in zip(flat, model.params_to_flat(grads))]
+        for got, w in zip(out[:-1], want):
+            np.testing.assert_allclose(np.asarray(got), np.asarray(w), rtol=1e-4, atol=1e-6)
+
+    def test_loss_decreases_over_steps(self):
+        params, x, y = setup(5, 8)
+        flat = model.params_to_flat(params)
+        coef = jnp.ones((8,), jnp.float32)
+        lr = jnp.array([0.05], jnp.float32)
+        losses = []
+        for _ in range(30):
+            out = model.train_step(flat, x, y, coef, lr)
+            flat, loss = list(out[:-1]), float(out[-1])
+            losses.append(loss)
+        assert losses[-1] < losses[0] * 0.5, losses
+
+    def test_importance_weighted_estimator_is_unbiased(self):
+        # Theorem 1 sanity: E_q[(p/q) g] == E_p[g].  Build a 4-example
+        # "dataset", a non-uniform proposal, and average the weighted
+        # single-example gradients over the exact proposal distribution.
+        params, x, y = setup(6, 4)
+        omega = np.array([0.5, 1.0, 2.0, 4.0], np.float64)
+        zbar = omega.mean()
+        grads_true = jax.grad(ref.ce_loss_ref)(params, x, y)
+        flat_true = np.concatenate([np.asarray(g).ravel() for g in model.params_to_flat(grads_true)])
+
+        probs = omega / omega.sum()
+        acc = None
+        for n in range(4):
+            coef = jnp.zeros((4,), jnp.float32).at[n].set(zbar / omega[n])
+            # gradient of mean(coef * ce) with only example n active = coef_n/4 * grad ce_n
+            g = jax.grad(ref.weighted_ce_ref)(params, x, y, coef)
+            flat = np.concatenate([np.asarray(t).ravel() for t in model.params_to_flat(g)])
+            # minibatch of size 1 drawn as example n has weight probs[n]; the
+            # 1/M=1/4 in weighted_ce_ref must be undone (M=1 here): scale by 4.
+            contrib = probs[n] * 4.0 * flat
+            acc = contrib if acc is None else acc + contrib
+        np.testing.assert_allclose(acc, flat_true, rtol=1e-4, atol=1e-7)
+
+
+class TestGradNorms:
+    @settings(deadline=None, max_examples=8)
+    @given(seed=st.integers(0, 500), n=st.integers(1, 20))
+    def test_matches_vmap_grad_oracle(self, seed, n):
+        params, x, y = setup(seed, n)
+        flat = model.params_to_flat(params)
+        sqnorms, ce = model.grad_norms(flat, x, y)
+        want_sq = ref.per_example_grad_sqnorm_ref(params, x, y)
+        want_ce = ref.per_example_ce_ref(params, x, y)
+        np.testing.assert_allclose(np.asarray(sqnorms), np.asarray(want_sq), rtol=1e-3, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(ce), np.asarray(want_ce), rtol=1e-4, atol=1e-6)
+
+    def test_deeper_model(self):
+        dims = [12, 16, 16, 16, 16, 5]  # 4 hidden layers like the paper
+        params, x, y = setup(11, 7, dims)
+        flat = model.params_to_flat(params)
+        sqnorms, _ = model.grad_norms(flat, x, y)
+        want = ref.per_example_grad_sqnorm_ref(params, x, y)
+        np.testing.assert_allclose(np.asarray(sqnorms), np.asarray(want), rtol=1e-3, atol=1e-6)
+
+
+class TestEvalStep:
+    def test_counts_and_loss(self):
+        params, x, y = setup(8, 20)
+        flat = model.params_to_flat(params)
+        sumloss, ncorrect = model.eval_step(flat, x, y)
+        logits = ref.mlp_forward_ref(params, x)
+        want_correct = np.sum(np.argmax(np.asarray(logits), 1) == np.argmax(np.asarray(y), 1))
+        want_loss = float(jnp.sum(ref.per_example_ce_ref(params, x, y)))
+        assert float(ncorrect) == want_correct
+        np.testing.assert_allclose(float(sumloss), want_loss, rtol=1e-4)
+        assert 0 <= float(ncorrect) <= 20
+
+
+class TestGradMeanSqnorm:
+    def test_matches_oracle(self):
+        params, x, y = setup(9, 10)
+        flat = model.params_to_flat(params)
+        got = model.grad_mean_sqnorm(flat, x, y)
+        want = ref.mean_grad_sqnorm_ref(params, x, y)
+        np.testing.assert_allclose(float(got), float(want), rtol=1e-4)
+
+
+class TestParamPlumbing:
+    def test_flat_roundtrip(self):
+        params, _, _ = setup(1)
+        flat = model.params_to_flat(params)
+        back = model.params_from_flat(flat)
+        assert len(back) == len(params)
+        for (w, b), (w2, b2) in zip(params, back):
+            assert w is w2 and b is b2
+
+    def test_odd_flat_raises(self):
+        with pytest.raises(ValueError):
+            model.params_from_flat([jnp.zeros((2, 2))])
+
+    def test_init_shapes(self):
+        params = model.init_params(jax.random.PRNGKey(0), [7, 5, 3])
+        assert [tuple(w.shape) for w, _ in params] == [(7, 5), (5, 3)]
+        assert [tuple(b.shape) for _, b in params] == [(5,), (3,)]
+        # He init: biases zero, weights non-degenerate
+        for _, b in params:
+            assert np.all(np.asarray(b) == 0.0)

@@ -1,0 +1,82 @@
+"""peer_step (ASGD/peer-mode entry point, paper §6 extension) correctness:
+gradients match jax.grad of the weighted loss, and the co-computed
+per-example squared norms match the vmap(grad) oracle of the UNWEIGHTED
+per-example losses.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+DIMS = [12, 16, 16, 5]
+
+
+def setup(seed=0, n=8):
+    key = jax.random.PRNGKey(seed)
+    params = model.init_params(key, DIMS)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed + 100))
+    x = jax.random.normal(k1, (n, DIMS[0]), jnp.float32)
+    labels = jax.random.randint(k2, (n,), 0, DIMS[-1])
+    y = jax.nn.one_hot(labels, DIMS[-1], dtype=jnp.float32)
+    return params, x, y
+
+
+class TestPeerStep:
+    def test_gradients_match_jax_grad(self):
+        params, x, y = setup(1)
+        coef = jnp.abs(jax.random.normal(jax.random.PRNGKey(5), (8,))) + 0.25
+        flat = model.params_to_flat(params)
+        out = model.peer_step(flat, x, y, coef)
+        nl = len(params)
+        grads_flat, loss, sqnorms = out[: 2 * nl], out[2 * nl], out[2 * nl + 1]
+
+        want_loss = ref.weighted_ce_ref(params, x, y, coef)
+        np.testing.assert_allclose(float(loss), float(want_loss), rtol=1e-5)
+
+        want = model.params_to_flat(jax.grad(ref.weighted_ce_ref)(params, x, y, coef))
+        for got, w in zip(grads_flat, want):
+            np.testing.assert_allclose(np.asarray(got), np.asarray(w), rtol=1e-4, atol=1e-6)
+        assert sqnorms.shape == (8,)
+
+    def test_sqnorms_match_unweighted_oracle(self):
+        params, x, y = setup(2)
+        # Non-trivial coefficients including a padded (zero) slot.
+        coef = jnp.array([1.0, 2.0, 0.5, 3.0, 0.25, 1.5, 4.0, 0.0], jnp.float32)
+        flat = model.params_to_flat(params)
+        out = model.peer_step(flat, x, y, coef)
+        sqnorms = np.asarray(out[-1])
+        want = np.asarray(ref.per_example_grad_sqnorm_ref(params, x, y))
+        # Slots with coef == 0 report weight 0 by convention.
+        np.testing.assert_allclose(sqnorms[:7], want[:7], rtol=1e-3, atol=1e-6)
+        assert sqnorms[7] == 0.0
+
+    def test_applying_returned_gradient_matches_train_step(self):
+        # params - lr * peer_grad == train_step(params) — the two entry
+        # points must agree so a parameter server reproduces local SGD.
+        params, x, y = setup(3)
+        coef = jnp.ones((8,), jnp.float32)
+        lr = 0.07
+        flat = model.params_to_flat(params)
+        peer = model.peer_step(flat, x, y, coef)
+        nl = len(params)
+        stepped = model.train_step(flat, x, y, coef, jnp.array([lr], jnp.float32))
+        for g, p0, p1 in zip(peer[: 2 * nl], flat, stepped[:-1]):
+            np.testing.assert_allclose(
+                np.asarray(p0) - lr * np.asarray(g),
+                np.asarray(p1),
+                rtol=1e-4,
+                atol=1e-6,
+            )
+
+    def test_zero_coef_contributes_nothing(self):
+        params, x, y = setup(4)
+        flat = model.params_to_flat(params)
+        nl = len(params)
+        all_zero = model.peer_step(flat, x, y, jnp.zeros((8,), jnp.float32))
+        for g in all_zero[: 2 * nl]:
+            assert np.allclose(np.asarray(g), 0.0)
+        assert float(all_zero[2 * nl]) == 0.0

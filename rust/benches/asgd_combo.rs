@@ -1,0 +1,26 @@
+//! Extension bench — §6: ISSGD vs ASGD vs ISSGD+ASGD at a matched
+//! gradient-computation budget (smoke scale).  Sanity: every arm must
+//! actually train (finite, reduced loss).
+
+use issgd::experiments::{asgd, ExperimentScale};
+
+fn main() {
+    let scale = ExperimentScale::smoke();
+    println!("== asgd combo (smoke scale) ==");
+    let t0 = std::time::Instant::now();
+    match asgd::run(&scale) {
+        Ok(rows) => {
+            assert_eq!(rows.len(), 4);
+            for r in &rows {
+                assert!(
+                    r.final_train_loss.is_finite() && r.final_train_loss < 2.5,
+                    "{} did not train: loss {}",
+                    r.method,
+                    r.final_train_loss
+                );
+            }
+            println!("asgd bench done in {:.1}s", t0.elapsed().as_secs_f64());
+        }
+        Err(e) => eprintln!("asgd bench skipped/failed: {e:#} (run `make artifacts`)"),
+    }
+}

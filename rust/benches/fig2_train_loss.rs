@@ -1,0 +1,26 @@
+//! Paper bench — Figure 2: training loss + train prediction error, ISSGD
+//! vs SGD, both hyperparameter settings, median over seeds.  `cargo bench`
+//! runs this at smoke scale (tiny artifacts); the full-scale version is
+//! `issgd experiment fig2 --model small`.
+
+use issgd::experiments::{fig2, ExperimentScale};
+
+fn main() {
+    let scale = ExperimentScale::smoke();
+    println!("== fig2 (smoke scale: {:?} seeds, {} steps) ==", scale.seeds, scale.steps);
+    let t0 = std::time::Instant::now();
+    match fig2::run(&scale) {
+        Ok(runs) => {
+            let q = runs.b_issgd.quartiles("eval_train_loss");
+            let sgd_q = runs.b_sgd.quartiles("eval_train_loss");
+            if let (Some(is_last), Some(sgd_last)) = (q.median.last(), sgd_q.median.last()) {
+                println!(
+                    "setting b final median train loss: issgd {is_last:.4} vs sgd {sgd_last:.4} \
+                     (paper fig2: issgd descends faster)"
+                );
+            }
+            println!("fig2 bench done in {:.1}s", t0.elapsed().as_secs_f64());
+        }
+        Err(e) => eprintln!("fig2 bench skipped/failed: {e:#} (run `make artifacts`)"),
+    }
+}

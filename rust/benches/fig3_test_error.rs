@@ -1,0 +1,14 @@
+//! Paper bench — Figure 3: test prediction error curves, ISSGD vs SGD.
+//! Smoke scale for `cargo bench`; full scale via `issgd experiment fig3`.
+
+use issgd::experiments::{fig3, ExperimentScale};
+
+fn main() {
+    let scale = ExperimentScale::smoke();
+    println!("== fig3 (smoke scale) ==");
+    let t0 = std::time::Instant::now();
+    match fig3::run(&scale) {
+        Ok(()) => println!("fig3 bench done in {:.1}s", t0.elapsed().as_secs_f64()),
+        Err(e) => eprintln!("fig3 bench skipped/failed: {e:#} (run `make artifacts`)"),
+    }
+}

@@ -1,0 +1,28 @@
+//! Paper bench — Figure 4: √Tr(Σ(q)) for q_IDEAL / q_STALE (two smoothing
+//! constants) / q_UNIF during ISSGD training.  Also asserts the §4.2
+//! ordering ideal ≤ stale on every checkpoint (a hard invariant).
+
+use issgd::experiments::{fig4, ExperimentScale};
+
+fn main() {
+    let scale = ExperimentScale::smoke();
+    println!("== fig4 (smoke scale) ==");
+    let t0 = std::time::Instant::now();
+    match fig4::run_monitored(&scale) {
+        Ok(runs) => {
+            fig4::emit(&runs).unwrap();
+            for (panel, mr) in [("a", &runs.a), ("b", &runs.b)] {
+                let ideal = mr.quartiles("var_ideal_sqrt");
+                let stale = mr.quartiles("var_stale_sqrt");
+                for i in 0..ideal.steps.len() {
+                    assert!(
+                        ideal.median[i] <= stale.median[i] * 1.001 + 1e-9,
+                        "panel {panel}: ideal > stale at checkpoint {i}"
+                    );
+                }
+            }
+            println!("fig4 bench done in {:.1}s (ordering invariant held)", t0.elapsed().as_secs_f64());
+        }
+        Err(e) => eprintln!("fig4 bench skipped/failed: {e:#} (run `make artifacts`)"),
+    }
+}

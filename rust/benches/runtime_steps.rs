@@ -1,0 +1,80 @@
+//! Runtime bench: per-entry-point PJRT execution latency — the L3-visible
+//! cost of each AOT artifact, plus host-side batch assembly, isolating
+//! where a master step's time goes (EXPERIMENTS.md §Perf).
+//!
+//! Uses `tiny` artifacts by default; set `ISSGD_BENCH_MODEL=small` for the
+//! SVHN-shaped model.
+
+use issgd::bench::Harness;
+use issgd::data::{BatchBuilder, SynthDataset, SynthSpec};
+use issgd::model::ParamSet;
+use issgd::runtime::{artifacts_dir, Engine};
+use issgd::util::rng::Pcg64;
+
+fn main() {
+    let model = std::env::var("ISSGD_BENCH_MODEL").unwrap_or_else(|_| "tiny".into());
+    let dir = artifacts_dir(&model);
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping runtime_steps bench: no artifacts for {model} (run `make artifacts`)");
+        return;
+    }
+    let engine = Engine::load(&dir).expect("engine");
+    let m = engine.manifest().clone();
+    let mut h = Harness::from_env(&format!("runtime[{model}]"));
+
+    let spec = if m.input_dim == 64 {
+        SynthSpec::tiny(2048)
+    } else {
+        SynthSpec {
+            dim: m.input_dim,
+            ..SynthSpec::svhn_like(2048)
+        }
+    };
+    let data = SynthDataset::generate(7, spec);
+    let mut rng = Pcg64::seeded(3);
+    let mut params = ParamSet::init_he(&m, &mut rng);
+
+    // Host-side batch assembly.
+    let mut tb = BatchBuilder::new(m.batch_train, m.input_dim, m.n_classes);
+    let idx = rng.sample_with_replacement(2048, m.batch_train);
+    h.bench_throughput(&format!("batch_fill/m={}", m.batch_train), m.batch_train as u64, || {
+        std::hint::black_box(tb.fill(&data, &idx));
+    });
+
+    // train_step.
+    let coef = vec![1.0f32; m.batch_train];
+    tb.fill(&data, &idx);
+    h.bench_throughput(&format!("train_step/m={}", m.batch_train), m.batch_train as u64, || {
+        engine
+            .train_step(&mut params, &tb.x, &tb.y, &coef, 1e-4)
+            .unwrap();
+    });
+
+    // grad_norms (the worker hot path).
+    let mut sb = BatchBuilder::new(m.batch_score, m.input_dim, m.n_classes);
+    let sidx: Vec<usize> = (0..m.batch_score).collect();
+    sb.fill(&data, &sidx);
+    h.bench_throughput(&format!("grad_norms/b={}", m.batch_score), m.batch_score as u64, || {
+        std::hint::black_box(engine.grad_norms(&params, &sb.x, &sb.y).unwrap());
+    });
+
+    // eval_step.
+    let mut eb = BatchBuilder::new(m.batch_eval, m.input_dim, m.n_classes);
+    let eidx: Vec<usize> = (0..m.batch_eval).collect();
+    eb.fill(&data, &eidx);
+    h.bench_throughput(&format!("eval_step/e={}", m.batch_eval), m.batch_eval as u64, || {
+        std::hint::black_box(engine.eval_step(&params, &eb.x, &eb.y).unwrap());
+    });
+
+    // grad_mean_sqnorm.
+    h.bench(&format!("grad_mean_sqnorm/m={}", m.batch_train), || {
+        std::hint::black_box(engine.grad_mean_sqnorm(&params, &tb.x, &tb.y).unwrap());
+    });
+
+    // Params host<->literal serialisation (per-step overhead today).
+    h.bench("params/to_bytes", || {
+        std::hint::black_box(params.to_bytes());
+    });
+
+    h.finish();
+}

@@ -1,0 +1,64 @@
+//! Substrate bench: multinomial samplers — the ablation behind the
+//! master's choice of a Fenwick tree over an alias table (DESIGN.md §6).
+//!
+//! Workloads: pure sampling at several N; point update + sample (the
+//! master's actual access pattern: weights mutate continuously); alias
+//! rebuild cost; full minibatch draw.
+
+use issgd::bench::Harness;
+use issgd::sampler::{draw_minibatch, AliasSampler, FenwickSampler};
+use issgd::util::rng::Pcg64;
+
+fn weights(n: usize, rng: &mut Pcg64) -> Vec<f64> {
+    (0..n).map(|_| 0.01 + rng.next_f64() * 10.0).collect()
+}
+
+fn main() {
+    let mut h = Harness::from_env("sampler");
+    let mut rng = Pcg64::seeded(1);
+
+    for &n in &[1usize << 10, 1 << 14, 1 << 18] {
+        let w = weights(n, &mut rng);
+        let fen = FenwickSampler::new(&w);
+        let alias = AliasSampler::new(&w).unwrap();
+        let draws = 10_000u64;
+
+        h.bench_throughput(&format!("fenwick/sample/n={n}"), draws, || {
+            for _ in 0..draws {
+                std::hint::black_box(fen.sample(&mut rng));
+            }
+        });
+        h.bench_throughput(&format!("alias/sample/n={n}"), draws, || {
+            for _ in 0..draws {
+                std::hint::black_box(alias.sample(&mut rng));
+            }
+        });
+        // The master's real pattern: interleaved updates + draws.
+        let mut fen_mut = FenwickSampler::new(&w);
+        h.bench_throughput(&format!("fenwick/update+sample/n={n}"), draws, || {
+            for _ in 0..draws {
+                let i = rng.next_below(n as u64) as usize;
+                fen_mut.update(i, rng.next_f64() * 10.0);
+                std::hint::black_box(fen_mut.sample(&mut rng));
+            }
+        });
+        // Alias must rebuild to absorb an update.
+        h.bench(&format!("alias/rebuild/n={n}"), || {
+            std::hint::black_box(AliasSampler::new(&w).unwrap());
+        });
+    }
+
+    // Full minibatch draw with IS coefficients (the per-step hot path).
+    let w = weights(1 << 14, &mut rng);
+    let fen = FenwickSampler::new(&w);
+    h.bench_throughput("draw_minibatch/m=128/n=16384", 128, || {
+        std::hint::black_box(draw_minibatch(&fen, &mut rng, 128));
+    });
+    // Fenwick rebuild from a fresh snapshot (what the master does per step
+    // today; see EXPERIMENTS.md §Perf).
+    h.bench(&format!("fenwick/build/n={}", 1 << 14), || {
+        std::hint::black_box(FenwickSampler::new(&w));
+    });
+
+    h.finish();
+}

@@ -1,0 +1,45 @@
+//! Paper bench — §B.1 staleness ablation: kept-weight fraction and sampled
+//! version lag across worker counts and staleness thresholds.  Checks the
+//! paper's qualitative claims: tighter thresholds keep fewer weights, and
+//! more workers keep weights fresher.
+
+use issgd::experiments::{staleness, ExperimentScale};
+
+fn main() {
+    let scale = ExperimentScale::smoke();
+    println!("== staleness sweep (smoke scale) ==");
+    let t0 = std::time::Instant::now();
+    match staleness::run_sweep(&scale, &[1, 3], &[None, Some(1)]) {
+        Ok(rows) => {
+            staleness::emit(&rows).unwrap();
+            // Claim 1: a threshold never keeps MORE than no threshold.
+            let kept = |w: usize, t: Option<u64>| {
+                rows.iter()
+                    .find(|r| r.workers == w && r.threshold == t)
+                    .map(|r| r.kept_frac)
+                    .unwrap()
+            };
+            for &w in &[1usize, 3] {
+                assert!(
+                    kept(w, Some(1)) <= kept(w, None) + 1e-9,
+                    "threshold increased kept fraction for {w} workers?!"
+                );
+            }
+            // Claim 2: more workers -> fresher weights (lower sampled lag).
+            let lag = |w: usize| {
+                rows.iter()
+                    .find(|r| r.workers == w && r.threshold.is_none())
+                    .map(|r| r.sampled_lag)
+                    .unwrap()
+            };
+            assert!(
+                lag(3) <= lag(1) + 0.5,
+                "more workers should not increase staleness: lag(3)={} lag(1)={}",
+                lag(3),
+                lag(1)
+            );
+            println!("staleness bench done in {:.1}s (claims held)", t0.elapsed().as_secs_f64());
+        }
+        Err(e) => eprintln!("staleness bench skipped/failed: {e:#} (run `make artifacts`)"),
+    }
+}

@@ -1,0 +1,25 @@
+//! Paper bench — Table 1: final test error for SGD vs ISSGD with the
+//! setting picked by validation error, averaged over the last 10% of
+//! iterations (the paper's protocol).
+
+use issgd::experiments::{table1, ExperimentScale};
+
+fn main() {
+    let scale = ExperimentScale::smoke();
+    println!("== table1 (smoke scale) ==");
+    let t0 = std::time::Instant::now();
+    match table1::run(&scale) {
+        Ok(rows) => {
+            assert_eq!(rows.len(), 2);
+            for r in &rows {
+                assert!(
+                    r.test_err.is_finite() && (0.0..=1.0).contains(&r.test_err),
+                    "nonsense test error {r:?}",
+                    r = r.test_err
+                );
+            }
+            println!("table1 bench done in {:.1}s", t0.elapsed().as_secs_f64());
+        }
+        Err(e) => eprintln!("table1 bench skipped/failed: {e:#} (run `make artifacts`)"),
+    }
+}

@@ -1,0 +1,59 @@
+//! Substrate bench: the weight store — in-proc engine vs TCP transport
+//! (DESIGN.md §6 ablation "in-proc vs TCP round-trip overhead").
+
+use std::sync::Arc;
+
+use issgd::bench::Harness;
+use issgd::weightstore::client::Client;
+use issgd::weightstore::server::Server;
+use issgd::weightstore::{MemStore, WeightStore};
+
+fn main() {
+    let mut h = Harness::from_env("weightstore");
+    let n = 16_384usize;
+
+    // -- in-proc -----------------------------------------------------------
+    let mem = MemStore::new(n, 1.0);
+    let weights: Vec<f32> = (0..256).map(|i| i as f32).collect();
+    let mut v = 0u64;
+    h.bench_throughput("memstore/push_weights/256", 256, || {
+        mem.push_weights(0, &weights, 1).unwrap();
+    });
+    h.bench(&format!("memstore/snapshot/n={n}"), || {
+        std::hint::black_box(mem.fetch_weights().unwrap());
+    });
+    let blob = vec![0u8; 4 * 1_000_000]; // ~1M-param f32 model
+    h.bench("memstore/push_params/4MB", || {
+        v += 1;
+        mem.push_params(v, blob.clone()).unwrap();
+    });
+    h.bench("memstore/fetch_params/4MB", || {
+        std::hint::black_box(mem.fetch_params(0).unwrap());
+    });
+
+    // -- TCP ---------------------------------------------------------------
+    let server = Server::bind("127.0.0.1:0", Arc::new(MemStore::new(n, 1.0))).unwrap();
+    let (addr, handle) = server.serve_in_background().unwrap();
+    let client = Client::connect(&addr.to_string()).unwrap();
+    let mut v = 0u64;
+    h.bench_throughput("tcp/push_weights/256", 256, || {
+        client.push_weights(0, &weights, 1).unwrap();
+    });
+    h.bench(&format!("tcp/snapshot/n={n}"), || {
+        std::hint::black_box(client.fetch_weights().unwrap());
+    });
+    h.bench("tcp/push_params/4MB", || {
+        v += 1;
+        client.push_params(v, blob.clone()).unwrap();
+    });
+    h.bench("tcp/fetch_params/4MB", || {
+        std::hint::black_box(client.fetch_params(0).unwrap());
+    });
+    h.bench("tcp/now_rtt", || {
+        std::hint::black_box(client.now().unwrap());
+    });
+    client.shutdown_server().unwrap();
+    handle.join().unwrap();
+
+    h.finish();
+}

@@ -1,0 +1,42 @@
+//! Baselines the paper compares against.
+//!
+//! *Regular SGD* shares the entire stack with ISSGD — same `train_step`
+//! artifact, same master loop — differing only in the proposal (uniform)
+//! and coefficients (all ones).  That is exactly the paper's comparison
+//! protocol: in their SGD runs a background worker still computes
+//! statistics, but the minibatch distribution is uniform.
+
+use anyhow::Result;
+
+use crate::config::{RunConfig, TrainerKind};
+use crate::coordinator::{run_sim_with_engine, SimOutcome};
+use crate::runtime::Engine;
+
+/// Convert any run config into its uniform-SGD twin (same seed, same
+/// schedule, same data) — the controlled comparison of figures 2–3.
+pub fn sgd_twin(cfg: &RunConfig) -> RunConfig {
+    RunConfig {
+        trainer: TrainerKind::UniformSgd,
+        ..cfg.clone()
+    }
+}
+
+/// Run the uniform-SGD baseline for `cfg` (ignoring its trainer field).
+pub fn run_sgd_baseline(cfg: &RunConfig, engine: &Engine) -> Result<SimOutcome> {
+    run_sim_with_engine(&sgd_twin(cfg), engine)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn twin_flips_trainer_only() {
+        let cfg = RunConfig::setting_b();
+        let twin = sgd_twin(&cfg);
+        assert_eq!(twin.trainer, TrainerKind::UniformSgd);
+        assert_eq!(twin.lr, cfg.lr);
+        assert_eq!(twin.seed, cfg.seed);
+        assert_eq!(twin.steps, cfg.steps);
+    }
+}

@@ -1,0 +1,170 @@
+//! Micro/macro-benchmark harness (criterion is unavailable offline).
+//!
+//! Usage in a `[[bench]] harness = false` target:
+//!
+//! ```ignore
+//! let mut h = Harness::from_env("sampler");
+//! h.bench("fenwick/sample/4096", || { ... });
+//! h.finish();
+//! ```
+//!
+//! Reports min / median / mean / p95 over timed samples after a warmup,
+//! criterion-style, plus optional throughput.  `--quick` (or env
+//! `ISSGD_BENCH_QUICK=1`) shrinks budgets so `cargo bench` stays usable on
+//! a single-core box.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: usize,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+    pub p95: Duration,
+    /// items/sec if throughput was declared.
+    pub throughput: Option<f64>,
+}
+
+pub struct Harness {
+    group: String,
+    /// Per-benchmark wall budget.
+    budget: Duration,
+    max_samples: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Harness {
+    pub fn new(group: &str, budget: Duration, max_samples: usize) -> Harness {
+        println!("\n== bench group: {group} ==");
+        Harness {
+            group: group.to_string(),
+            budget,
+            max_samples,
+            results: Vec::new(),
+        }
+    }
+
+    /// Budgets from argv/env: default 2 s per benchmark, `--quick` = 0.3 s.
+    pub fn from_env(group: &str) -> Harness {
+        let quick = std::env::args().any(|a| a == "--quick")
+            || std::env::var("ISSGD_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+        if quick {
+            Self::new(group, Duration::from_millis(300), 20)
+        } else {
+            Self::new(group, Duration::from_secs(2), 60)
+        }
+    }
+
+    /// Time `f` repeatedly; report stats.  Returns the result for callers
+    /// that assert on regressions.
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) -> BenchResult {
+        self.bench_with_throughput(name, None, &mut f)
+    }
+
+    /// Like [`Harness::bench`] but records `items` processed per call so
+    /// the report shows items/sec.
+    pub fn bench_throughput(
+        &mut self,
+        name: &str,
+        items: u64,
+        mut f: impl FnMut(),
+    ) -> BenchResult {
+        self.bench_with_throughput(name, Some(items), &mut f)
+    }
+
+    fn bench_with_throughput(
+        &mut self,
+        name: &str,
+        items: Option<u64>,
+        f: &mut dyn FnMut(),
+    ) -> BenchResult {
+        // Warmup: 2 calls or 10% of budget, whichever first.
+        let warm_deadline = Instant::now() + self.budget / 10;
+        for _ in 0..2 {
+            f();
+            if Instant::now() > warm_deadline {
+                break;
+            }
+        }
+        let mut samples: Vec<Duration> = Vec::new();
+        let deadline = Instant::now() + self.budget;
+        while samples.len() < self.max_samples
+            && (samples.len() < 5 || Instant::now() < deadline)
+        {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed());
+        }
+        samples.sort();
+        let n = samples.len();
+        let mean = samples.iter().sum::<Duration>() / n as u32;
+        let result = BenchResult {
+            name: format!("{}/{}", self.group, name),
+            samples: n,
+            min: samples[0],
+            median: samples[n / 2],
+            mean,
+            p95: samples[(n * 95 / 100).min(n - 1)],
+            throughput: items.map(|i| i as f64 / mean.as_secs_f64()),
+        };
+        print_result(&result);
+        self.results.push(result.clone());
+        result
+    }
+
+    /// Print the closing summary (call last).
+    pub fn finish(self) -> Vec<BenchResult> {
+        println!("== {} done: {} benchmarks ==", self.group, self.results.len());
+        self.results
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:8.3} s ")
+    } else if s >= 1e-3 {
+        format!("{:8.3} ms", s * 1e3)
+    } else {
+        format!("{:8.3} µs", s * 1e6)
+    }
+}
+
+fn print_result(r: &BenchResult) {
+    let tp = match r.throughput {
+        Some(t) if t >= 1e6 => format!("  {:9.2} Mitems/s", t / 1e6),
+        Some(t) if t >= 1e3 => format!("  {:9.2} Kitems/s", t / 1e3),
+        Some(t) => format!("  {t:9.2} items/s"),
+        None => String::new(),
+    };
+    println!(
+        "{:<48} min {}  med {}  mean {}  p95 {}  (n={}){tp}",
+        r.name,
+        fmt_dur(r.min),
+        fmt_dur(r.median),
+        fmt_dur(r.mean),
+        fmt_dur(r.p95),
+        r.samples
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let mut h = Harness::new("test", Duration::from_millis(50), 10);
+        let r = h.bench("sleep", || std::thread::sleep(Duration::from_micros(200)));
+        assert!(r.samples >= 5);
+        assert!(r.min >= Duration::from_micros(200));
+        assert!(r.min <= r.median && r.median <= r.p95);
+        let r2 = h.bench_throughput("tp", 1000, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(r2.throughput.unwrap() > 0.0);
+        assert_eq!(h.finish().len(), 2);
+    }
+}

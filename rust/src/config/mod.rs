@@ -1,0 +1,376 @@
+//! Typed run configuration: every knob of the master/worker/database
+//! topology, loadable from a JSON file and overridable from the CLI.
+//!
+//! The two named hyperparameter settings of the paper's §5 figures are
+//! provided as presets: `setting_a` (lr 0.01, smoothing +10) and
+//! `setting_b` (lr 0.001, smoothing +1).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+/// How minibatches are drawn on the master.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrainerKind {
+    /// Importance sampling from the weight store (the paper's method).
+    Issgd,
+    /// Uniform sampling, coef = 1 (the paper's "regular SGD" baseline —
+    /// shares the same train_step artifact).
+    UniformSgd,
+}
+
+/// Synchronisation discipline between master and workers (paper §4.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyncMode {
+    /// Barriers enforced: after every parameter publish the workers
+    /// re-score the entire training set before the master proceeds.
+    /// Oracle-equivalent; used for sanity checks.
+    Exact,
+    /// Fire-and-forget: the master never waits; weights are stale to
+    /// varying degrees.  The practical mode.
+    Relaxed,
+}
+
+/// Units for the staleness threshold (§B.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StalenessUnit {
+    /// Wall-clock nanoseconds of the store clock (live runs; the paper's
+    /// "4 seconds").
+    Nanos,
+    /// Parameter-version distance (deterministic simulation runs).
+    Versions,
+}
+
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Model/artifact config name (`tiny`, `small`, `paper`, `large`).
+    pub model: String,
+    /// Number of synthetic examples (train+valid+test before the split).
+    pub n_examples: usize,
+    /// Master SGD steps to run.
+    pub steps: u64,
+    pub lr: f32,
+    /// §B.3 additive smoothing constant on probability weights.
+    pub smoothing: f64,
+    /// Adaptive smoothing (§B.3's suggested extension): when set, the
+    /// fixed constant is replaced per-step by the constant that brings the
+    /// proposal's normalised entropy up to this target in [0, 1].
+    pub adaptive_entropy: Option<f64>,
+    pub trainer: TrainerKind,
+    pub sync: SyncMode,
+    /// Number of scoring workers.
+    pub n_workers: usize,
+    /// Scoring batches each (simulated) worker completes per master step —
+    /// the worker:master speed ratio of the paper's testbed.
+    pub worker_batches_per_step: usize,
+    /// Master publishes parameters every this many steps ("a non-trivial
+    /// amount of training in-between", §4.2).
+    pub param_push_every: u64,
+    /// Staleness filter threshold; `None` disables (§B.1).
+    pub staleness_threshold: Option<u64>,
+    pub staleness_unit: StalenessUnit,
+    /// Evaluate train/test prediction error every this many steps (0 = never).
+    pub eval_every: u64,
+    /// Cap on eval batches per split per evaluation (0 = whole split).
+    pub eval_max_batches: usize,
+    /// Variance monitor (fig. 4) cadence in steps (0 = off).
+    pub monitor_every: u64,
+    /// Alternate smoothing constant reported by the monitor (fig. 4 shows
+    /// the actual and one alternate).
+    pub monitor_alt_smoothing: f64,
+    /// Initial probability weight before any worker has scored (uniform).
+    pub init_weight: f64,
+    /// Experiment seed: shapes data, init, and sampling.
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            model: "small".into(),
+            n_examples: 4096,
+            steps: 300,
+            lr: 0.01,
+            smoothing: 10.0,
+            adaptive_entropy: None,
+            trainer: TrainerKind::Issgd,
+            sync: SyncMode::Relaxed,
+            n_workers: 3,
+            worker_batches_per_step: 2,
+            param_push_every: 5,
+            staleness_threshold: None,
+            staleness_unit: StalenessUnit::Versions,
+            eval_every: 25,
+            eval_max_batches: 4,
+            monitor_every: 0,
+            monitor_alt_smoothing: 1.0,
+            init_weight: 1.0,
+            seed: 0,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Paper §5 figure setting (a): higher lr, heavier smoothing.
+    pub fn setting_a() -> Self {
+        RunConfig {
+            lr: 0.01,
+            smoothing: 10.0,
+            ..Default::default()
+        }
+    }
+
+    /// Paper §5 figure setting (b): lower lr, light smoothing.
+    pub fn setting_b() -> Self {
+        RunConfig {
+            lr: 0.001,
+            smoothing: 1.0,
+            ..Default::default()
+        }
+    }
+
+    /// Fast test-scale config against the `tiny` artifacts.
+    pub fn tiny_test() -> Self {
+        RunConfig {
+            model: "tiny".into(),
+            n_examples: 512,
+            steps: 40,
+            lr: 0.05,
+            smoothing: 1.0,
+            eval_every: 10,
+            eval_max_batches: 2,
+            monitor_every: 0,
+            ..Default::default()
+        }
+    }
+
+    // ---- JSON ----------------------------------------------------------
+
+    pub fn from_json(json: &Json) -> Result<RunConfig> {
+        let d = RunConfig::default();
+        let get_u = |k: &str, dv: usize| -> Result<usize> {
+            match json.get(k) {
+                None => Ok(dv),
+                Some(v) => v.as_usize().with_context(|| format!("field {k}")),
+            }
+        };
+        let get_f = |k: &str, dv: f64| -> Result<f64> {
+            match json.get(k) {
+                None => Ok(dv),
+                Some(v) => v.as_f64().with_context(|| format!("field {k}")),
+            }
+        };
+        let trainer = match json.get("trainer").and_then(Json::as_str) {
+            None => d.trainer,
+            Some("issgd") => TrainerKind::Issgd,
+            Some("sgd") => TrainerKind::UniformSgd,
+            Some(other) => anyhow::bail!("unknown trainer {other:?} (issgd|sgd)"),
+        };
+        let sync = match json.get("sync").and_then(Json::as_str) {
+            None => d.sync,
+            Some("exact") => SyncMode::Exact,
+            Some("relaxed") => SyncMode::Relaxed,
+            Some(other) => anyhow::bail!("unknown sync mode {other:?} (exact|relaxed)"),
+        };
+        let staleness_unit = match json.get("staleness_unit").and_then(Json::as_str) {
+            None => d.staleness_unit,
+            Some("nanos") => StalenessUnit::Nanos,
+            Some("versions") => StalenessUnit::Versions,
+            Some(other) => anyhow::bail!("unknown staleness unit {other:?}"),
+        };
+        let adaptive_entropy = match json.get("adaptive_entropy") {
+            None | Some(Json::Null) => d.adaptive_entropy,
+            Some(v) => Some(v.as_f64().context("adaptive_entropy")?),
+        };
+        let staleness_threshold = match json.get("staleness_threshold") {
+            None | Some(Json::Null) => d.staleness_threshold,
+            Some(v) => Some(v.as_usize().context("staleness_threshold")? as u64),
+        };
+        Ok(RunConfig {
+            model: json
+                .get("model")
+                .and_then(Json::as_str)
+                .unwrap_or(&d.model)
+                .to_string(),
+            n_examples: get_u("n_examples", d.n_examples)?,
+            steps: get_u("steps", d.steps as usize)? as u64,
+            lr: get_f("lr", d.lr as f64)? as f32,
+            smoothing: get_f("smoothing", d.smoothing)?,
+            adaptive_entropy,
+            trainer,
+            sync,
+            n_workers: get_u("n_workers", d.n_workers)?,
+            worker_batches_per_step: get_u("worker_batches_per_step", d.worker_batches_per_step)?,
+            param_push_every: get_u("param_push_every", d.param_push_every as usize)? as u64,
+            staleness_threshold,
+            staleness_unit,
+            eval_every: get_u("eval_every", d.eval_every as usize)? as u64,
+            eval_max_batches: get_u("eval_max_batches", d.eval_max_batches)?,
+            monitor_every: get_u("monitor_every", d.monitor_every as usize)? as u64,
+            monitor_alt_smoothing: get_f("monitor_alt_smoothing", d.monitor_alt_smoothing)?,
+            init_weight: get_f("init_weight", d.init_weight)?,
+            seed: get_u("seed", d.seed as usize)? as u64,
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let json = Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        Self::from_json(&json)
+    }
+
+    // ---- CLI overrides ---------------------------------------------------
+
+    /// The option names `apply_args` consumes (callers pass these to
+    /// `cli::parse` so typos are rejected).
+    pub const CLI_OPTS: &'static [&'static str] = &[
+        "config", "model", "n-examples", "steps", "lr", "smoothing", "target-entropy", "trainer", "sync",
+        "workers", "worker-batches", "push-every", "staleness", "staleness-unit",
+        "eval-every", "eval-max-batches", "monitor-every", "alt-smoothing", "init-weight",
+        "seed",
+    ];
+
+    /// Overlay CLI options onto `self`.
+    pub fn apply_args(mut self, args: &Args) -> Result<RunConfig> {
+        if let Some(m) = args.get("model") {
+            self.model = m.to_string();
+        }
+        self.n_examples = args.get_parse("n-examples", self.n_examples)?;
+        self.steps = args.get_parse("steps", self.steps)?;
+        self.lr = args.get_parse("lr", self.lr)?;
+        self.smoothing = args.get_parse("smoothing", self.smoothing)?;
+        if let Some(t) = args.get("target-entropy") {
+            self.adaptive_entropy = if t == "off" {
+                None
+            } else {
+                let v: f64 = t.parse().context("--target-entropy")?;
+                anyhow::ensure!((0.0..=1.0).contains(&v), "--target-entropy must be in [0,1]");
+                Some(v)
+            };
+        }
+        if let Some(t) = args.get("trainer") {
+            self.trainer = match t {
+                "issgd" => TrainerKind::Issgd,
+                "sgd" => TrainerKind::UniformSgd,
+                other => anyhow::bail!("unknown trainer {other:?} (issgd|sgd)"),
+            };
+        }
+        if let Some(s) = args.get("sync") {
+            self.sync = match s {
+                "exact" => SyncMode::Exact,
+                "relaxed" => SyncMode::Relaxed,
+                other => anyhow::bail!("unknown sync mode {other:?} (exact|relaxed)"),
+            };
+        }
+        self.n_workers = args.get_parse("workers", self.n_workers)?;
+        self.worker_batches_per_step =
+            args.get_parse("worker-batches", self.worker_batches_per_step)?;
+        self.param_push_every = args.get_parse("push-every", self.param_push_every)?;
+        if let Some(s) = args.get("staleness") {
+            self.staleness_threshold = if s == "off" {
+                None
+            } else {
+                Some(s.parse::<u64>().context("--staleness")?)
+            };
+        }
+        if let Some(u) = args.get("staleness-unit") {
+            self.staleness_unit = match u {
+                "nanos" => StalenessUnit::Nanos,
+                "versions" => StalenessUnit::Versions,
+                other => anyhow::bail!("unknown staleness unit {other:?}"),
+            };
+        }
+        self.eval_every = args.get_parse("eval-every", self.eval_every)?;
+        self.eval_max_batches = args.get_parse("eval-max-batches", self.eval_max_batches)?;
+        self.monitor_every = args.get_parse("monitor-every", self.monitor_every)?;
+        self.monitor_alt_smoothing =
+            args.get_parse("alt-smoothing", self.monitor_alt_smoothing)?;
+        self.init_weight = args.get_parse("init-weight", self.init_weight)?;
+        self.seed = args.get_parse("seed", self.seed)?;
+        self.validate()?;
+        Ok(self)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.n_examples > 0, "n_examples must be positive");
+        anyhow::ensure!(self.lr > 0.0 && self.lr.is_finite(), "lr must be positive");
+        anyhow::ensure!(self.smoothing >= 0.0, "smoothing must be >= 0");
+        if let Some(t) = self.adaptive_entropy {
+            anyhow::ensure!((0.0..=1.0).contains(&t), "adaptive_entropy must be in [0,1]");
+        }
+        anyhow::ensure!(self.n_workers > 0, "need at least one worker");
+        anyhow::ensure!(self.param_push_every > 0, "param_push_every must be >= 1");
+        anyhow::ensure!(self.init_weight >= 0.0, "init_weight must be >= 0");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::cli;
+
+    #[test]
+    fn presets_match_paper() {
+        let a = RunConfig::setting_a();
+        assert_eq!((a.lr, a.smoothing), (0.01, 10.0));
+        let b = RunConfig::setting_b();
+        assert_eq!((b.lr, b.smoothing), (0.001, 1.0));
+    }
+
+    #[test]
+    fn json_roundtrip_fields() {
+        let j = Json::parse(
+            r#"{"model": "tiny", "steps": 77, "lr": 0.5, "trainer": "sgd",
+                "sync": "exact", "staleness_threshold": 4, "staleness_unit": "versions"}"#,
+        )
+        .unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert_eq!(c.model, "tiny");
+        assert_eq!(c.steps, 77);
+        assert_eq!(c.trainer, TrainerKind::UniformSgd);
+        assert_eq!(c.sync, SyncMode::Exact);
+        assert_eq!(c.staleness_threshold, Some(4));
+        // untouched fields keep defaults
+        assert_eq!(c.n_workers, RunConfig::default().n_workers);
+    }
+
+    #[test]
+    fn json_rejects_bad_enums() {
+        let j = Json::parse(r#"{"trainer": "magic"}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let argv: Vec<String> = "--steps 9 --lr 0.25 --trainer sgd --staleness off"
+            .split_whitespace()
+            .map(String::from)
+            .collect();
+        let args = cli::parse(&argv, RunConfig::CLI_OPTS).unwrap();
+        let c = RunConfig {
+            staleness_threshold: Some(10),
+            ..RunConfig::default()
+        }
+        .apply_args(&args)
+        .unwrap();
+        assert_eq!(c.steps, 9);
+        assert_eq!(c.lr, 0.25);
+        assert_eq!(c.trainer, TrainerKind::UniformSgd);
+        assert_eq!(c.staleness_threshold, None);
+    }
+
+    #[test]
+    fn validation_catches_nonsense() {
+        let mut c = RunConfig::default();
+        c.n_workers = 0;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.lr = -1.0;
+        assert!(c.validate().is_err());
+    }
+}

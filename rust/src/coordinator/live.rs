@@ -1,0 +1,139 @@
+//! Live cluster: master + workers as real OS threads (optionally against a
+//! remote TCP weight store), with genuine wall-clock staleness — the
+//! paper's actual deployment shape.
+//!
+//! Every thread compiles its own [`Engine`] (PJRT client handles are not
+//! `Send`), mirroring the paper's one-GPU-per-actor topology.  The master
+//! never waits on workers ("fire and forget", §4.2) — relaxed mode only;
+//! exact mode is a simulation-side tool (`sim.rs`).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::{RunConfig, SyncMode};
+use crate::data::shards;
+use crate::runtime::{artifacts_dir, Engine};
+use crate::weightstore::{MemStore, WeightStore};
+use crate::{log_info, log_warn};
+
+use super::master::Master;
+use super::sim::SimOutcome;
+use super::worker::WorkerState;
+
+/// Options specific to live execution.
+#[derive(Debug, Clone, Default)]
+pub struct LiveOptions {
+    /// Connect to a remote TCP store instead of an in-process one.
+    pub store_addr: Option<String>,
+    /// Pause between worker scoring batches (keeps a small host responsive
+    /// and emulates slower scoring hardware).
+    pub worker_throttle: Option<std::time::Duration>,
+    /// Before the first master step, wait until every worker has pushed at
+    /// least one weight batch.  Strictly speaking a synchronisation
+    /// barrier (the paper's master never waits), but useful on small hosts
+    /// where the master otherwise finishes before workers even compile.
+    pub wait_for_first_scores: bool,
+}
+
+/// Run a live threaded cluster for `cfg`.
+pub fn run_live(cfg: &RunConfig, opts: &LiveOptions) -> Result<SimOutcome> {
+    anyhow::ensure!(
+        cfg.sync == SyncMode::Relaxed,
+        "live mode is fire-and-forget; use sim mode for exact-sync runs"
+    );
+    let n_weights = Master::store_size(cfg);
+    let mem: Option<Arc<MemStore>> = if opts.store_addr.is_none() {
+        Some(Arc::new(MemStore::new(n_weights, cfg.init_weight)))
+    } else {
+        None
+    };
+    let connect = |role: &str| -> Result<Arc<dyn WeightStore>> {
+        Ok(match (&opts.store_addr, &mem) {
+            (Some(addr), _) => {
+                let c = crate::weightstore::client::Client::connect(addr)?;
+                log_info!(role, "connected to store at {addr}");
+                Arc::new(c)
+            }
+            (None, Some(mem)) => mem.clone(),
+            _ => unreachable!(),
+        })
+    };
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let dims_dir = artifacts_dir(&cfg.model);
+
+    // Master engine first — fail fast before spawning anything.
+    let master_engine = Engine::load(&dims_dir)?;
+    let master_store = connect("master")?;
+    let mut master = Master::new(cfg.clone(), &master_engine, master_store.clone())?;
+
+    // Workers: each thread owns engine + store connection + shard.
+    let mut handles = Vec::new();
+    for (id, shard) in shards(master.train_idx.len(), cfg.n_workers)
+        .into_iter()
+        .enumerate()
+    {
+        let stop = Arc::clone(&stop);
+        let data = Arc::clone(&master.data);
+        let train_idx = Arc::new(master.train_idx.clone());
+        let dir = dims_dir.clone();
+        let store = connect(&format!("worker-{id}"))?;
+        let throttle = opts.worker_throttle;
+        handles.push(std::thread::spawn(move || -> Result<u64> {
+            let engine = Engine::load_entries(&dir, &["grad_norms"])?;
+            let mut w = WorkerState::new(id, shard, engine.manifest(), data, train_idx, store);
+            w.run_live(&engine, &stop, throttle)?;
+            Ok(w.examples_scored)
+        }));
+    }
+    log_info!("master", "live cluster up: {} workers, {} steps", cfg.n_workers, cfg.steps);
+
+    let run = (|| -> Result<()> {
+        if opts.wait_for_first_scores {
+            // Publish params so workers can start, then poll the store.
+            master.maybe_push_params()?;
+            let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+            while master_store.stats()?.weight_pushes < cfg.n_workers as u64 {
+                anyhow::ensure!(
+                    std::time::Instant::now() < deadline,
+                    "workers produced no scores within 60s"
+                );
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+            log_info!("master", "all {} workers have scored; starting", cfg.n_workers);
+        }
+        for _ in 0..cfg.steps {
+            master.maybe_push_params()?;
+            master.train_one_step(&master_engine)?;
+            master.maybe_evaluate(&master_engine)?;
+            master.maybe_monitor(&master_engine)?;
+        }
+        Ok(())
+    })();
+    stop.store(true, Ordering::Relaxed);
+
+    let mut scored_examples = 0u64;
+    for h in handles {
+        match h.join() {
+            Ok(Ok(examples)) => scored_examples += examples,
+            Ok(Err(e)) => log_warn!("master", "worker failed: {e}"),
+            Err(_) => log_warn!("master", "worker panicked"),
+        }
+    }
+    run?;
+
+    let final_err = (
+        master.evaluate(&master_engine, super::master::EvalSplit::Train)?.1,
+        master.evaluate(&master_engine, super::master::EvalSplit::Valid)?.1,
+        master.evaluate(&master_engine, super::master::EvalSplit::Test)?.1,
+    );
+    let store_stats = master_store.stats()?;
+    Ok(SimOutcome {
+        rec: master.rec,
+        final_err,
+        scored: scored_examples,
+        store_stats,
+    })
+}

@@ -1,0 +1,391 @@
+//! The master actor: runs ISSGD (or the uniform-SGD baseline) against a
+//! weight store, per paper §4.
+//!
+//! Per step the master: (1) periodically publishes its parameters to the
+//! store ("fire and forget"), (2) pulls the probability-weight snapshot,
+//! applies the §B.1 staleness filter and §B.3 smoothing, (3) draws a
+//! minibatch from the multinomial proposal, (4) executes the AOT
+//! `train_step` with the importance coefficients, and (5) on configured
+//! cadences evaluates prediction error and the Figure-4 variance monitors.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::{RunConfig, StalenessUnit, TrainerKind};
+use crate::data::{split_indices, BatchBuilder, Dataset, SplitSpec, SynthDataset, SynthSpec};
+use crate::metrics::RunRecorder;
+use crate::model::ParamSet;
+use crate::runtime::Engine;
+use crate::sampler::{
+    draw_minibatch, effective_sample_size_ratio, smoothing_for_entropy, FenwickSampler,
+    Smoothing, StalenessFilter,
+};
+use crate::util::rng::Pcg64;
+use crate::variance::{trace_sigma, GTrueEstimator, VarianceReport};
+use crate::weightstore::WeightStore;
+
+/// Which split to evaluate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvalSplit {
+    Train,
+    Valid,
+    Test,
+}
+
+/// Master-side training session: parameters, data, splits, metrics.
+pub struct Master {
+    pub cfg: RunConfig,
+    pub data: Arc<SynthDataset>,
+    pub train_idx: Vec<usize>,
+    pub valid_idx: Vec<usize>,
+    pub test_idx: Vec<usize>,
+    pub store: Arc<dyn WeightStore>,
+    pub params: ParamSet,
+    /// Last parameter version published to the store.
+    pub version: u64,
+    /// Master step counter.
+    pub step: u64,
+    pub rec: RunRecorder,
+    rng: Pcg64,
+    batch: BatchBuilder,
+    gtrue: GTrueEstimator,
+    /// Count of swallowed store failures (fire-and-forget resilience).
+    pub store_errors: u64,
+}
+
+impl Master {
+    /// Build a session: synthesise the dataset, split it, init parameters.
+    pub fn new(cfg: RunConfig, engine: &Engine, store: Arc<dyn WeightStore>) -> Result<Master> {
+        cfg.validate()?;
+        let manifest = engine.manifest();
+        let spec = if manifest.input_dim == 64 {
+            SynthSpec::tiny(cfg.n_examples)
+        } else {
+            SynthSpec {
+                dim: manifest.input_dim,
+                ..SynthSpec::svhn_like(cfg.n_examples)
+            }
+        };
+        anyhow::ensure!(
+            spec.n_classes == manifest.n_classes,
+            "dataset classes {} != model classes {}",
+            spec.n_classes,
+            manifest.n_classes
+        );
+        let data = Arc::new(SynthDataset::generate(cfg.seed, spec));
+        let (train_idx, valid_idx, test_idx) = split_indices(data.len(), SplitSpec::default());
+        anyhow::ensure!(
+            store.fetch_weights()?.len() == train_idx.len(),
+            "store tracks {} weights but the train split has {} examples",
+            store.fetch_weights()?.len(),
+            train_idx.len()
+        );
+        let mut rng = Pcg64::new(cfg.seed, 0x3A57E5);
+        let params = ParamSet::init_he(manifest, &mut rng);
+        let batch = BatchBuilder::new(manifest.batch_train, manifest.input_dim, manifest.n_classes);
+        Ok(Master {
+            cfg,
+            data,
+            train_idx,
+            valid_idx,
+            test_idx,
+            store,
+            params,
+            version: 0,
+            step: 0,
+            rec: RunRecorder::new(),
+            rng,
+            batch,
+            gtrue: GTrueEstimator::new(),
+            store_errors: 0,
+        })
+    }
+
+    /// Number of weights the store must track for this session's config —
+    /// use before `Master::new` to size the store.
+    pub fn store_size(cfg: &RunConfig) -> usize {
+        let (train, _, _) = split_indices(cfg.n_examples, SplitSpec::default());
+        train.len()
+    }
+
+    /// Publish current parameters if the cadence says so (always publishes
+    /// at step 0 so workers can start scoring immediately).
+    ///
+    /// Store failures are logged and swallowed: the paper's master is
+    /// "fire and forget" (§4.2) — a flaky database must degrade ISSGD
+    /// towards plain SGD, never crash training.
+    pub fn maybe_push_params(&mut self) -> Result<bool> {
+        if self.step % self.cfg.param_push_every != 0 {
+            return Ok(false);
+        }
+        match self
+            .store
+            .push_params(self.version + 1, self.params.to_bytes())
+        {
+            Ok(()) => {
+                self.version += 1;
+                Ok(true)
+            }
+            Err(e) => {
+                self.store_errors += 1;
+                crate::log_warn!("master", "param push failed (continuing): {e}");
+                Ok(false)
+            }
+        }
+    }
+
+    /// Staleness-filter a raw weight snapshot.  Returns the raw (unsmoothed)
+    /// weights with filtered-out entries marked `None`, plus the kept
+    /// fraction.
+    fn raw_filtered_weights(&self) -> Result<(Vec<Option<f64>>, f64)> {
+        let snap = self.store.fetch_weights()?;
+        let (stamps, now): (&[u64], u64) = match self.cfg.staleness_unit {
+            StalenessUnit::Nanos => (&snap.stamps, self.store.now()?),
+            StalenessUnit::Versions => (&snap.param_versions, self.version),
+        };
+        let filter = match self.cfg.staleness_threshold {
+            None => StalenessFilter::disabled(),
+            Some(t) => StalenessFilter::with_threshold(t),
+        };
+        let mut weights = vec![None; snap.len()];
+        let mut kept = 0usize;
+        for i in 0..snap.len() {
+            if filter.keep(stamps[i], now) {
+                weights[i] = Some(snap.weights[i]);
+                kept += 1;
+            }
+        }
+        let kept_frac = if snap.is_empty() {
+            1.0
+        } else {
+            kept as f64 / snap.len() as f64
+        };
+        Ok((weights, kept_frac))
+    }
+
+    /// Staleness-filter + smooth a raw weight snapshot into the sampling
+    /// weights actually used.  Returns `(weights, kept_fraction)` —
+    /// filtered-out entries get weight 0 (excluded from the proposal).
+    pub fn effective_weights(&self, smoothing: f64) -> Result<(Vec<f64>, f64)> {
+        let (raw, kept_frac) = self.raw_filtered_weights()?;
+        let smooth = Smoothing::new(smoothing);
+        let weights = raw
+            .iter()
+            .map(|w| w.map(|w| smooth.apply(w)).unwrap_or(0.0))
+            .collect();
+        Ok((weights, kept_frac))
+    }
+
+    /// The smoothing constant for this step: the fixed §B.3 constant, or
+    /// the entropy-targeted adaptive constant (§B.3's suggested extension)
+    /// solved on the kept weights.
+    fn smoothing_for_step(&self, raw: &[Option<f64>]) -> f64 {
+        match self.cfg.adaptive_entropy {
+            None => self.cfg.smoothing,
+            Some(target) => {
+                let kept: Vec<f64> = raw.iter().filter_map(|w| *w).collect();
+                smoothing_for_entropy(&kept, target, 1e-4)
+            }
+        }
+    }
+
+    /// One master training step.  Returns the minibatch loss.
+    pub fn train_one_step(&mut self, engine: &Engine) -> Result<f32> {
+        let m = self.batch.batch();
+        let (positions, coefs) = match self.cfg.trainer {
+            TrainerKind::Issgd => {
+                // Degrade to uniform sampling if the store is unreachable —
+                // an unbiased fallback (it is exactly regular SGD).
+                let (raw, kept) = match self.raw_filtered_weights() {
+                    Ok(v) => v,
+                    Err(e) => {
+                        self.store_errors += 1;
+                        crate::log_warn!("master", "weight fetch failed (uniform fallback): {e}");
+                        (vec![Some(1.0); self.train_idx.len()], 1.0)
+                    }
+                };
+                self.rec.record("kept_frac", self.step, kept);
+                let c = self.smoothing_for_step(&raw);
+                if self.cfg.adaptive_entropy.is_some() {
+                    self.rec.record("smoothing_c", self.step, c);
+                }
+                let smooth = Smoothing::new(c);
+                let weights: Vec<f64> = raw
+                    .iter()
+                    .map(|w| w.map(|w| smooth.apply(w)).unwrap_or(0.0))
+                    .collect();
+                if self.step % 10 == 0 {
+                    self.rec
+                        .record("ess", self.step, effective_sample_size_ratio(&weights));
+                }
+                let sampler = FenwickSampler::new(&weights);
+                let (positions, coefs, _) = draw_minibatch(&sampler, &mut self.rng, m);
+                (positions, coefs)
+            }
+            TrainerKind::UniformSgd => {
+                let positions = self.rng.sample_with_replacement(self.train_idx.len(), m);
+                (positions, vec![1.0f32; m])
+            }
+        };
+        // Staleness diagnostics: how old (in versions) are the weights of
+        // the sampled examples?
+        if self.cfg.trainer == TrainerKind::Issgd && self.step % 10 == 0 {
+            if let Ok(snap) = self.store.fetch_weights() {
+            let lag: f64 = positions
+                .iter()
+                .map(|&p| (self.version.saturating_sub(snap.param_versions[p])) as f64)
+                .sum::<f64>()
+                / positions.len().max(1) as f64;
+            self.rec.record("sampled_version_lag", self.step, lag);
+            }
+        }
+        let global: Vec<usize> = positions.iter().map(|&p| self.train_idx[p]).collect();
+        self.batch.fill(self.data.as_ref(), &global);
+        let out = engine.train_step(&mut self.params, &self.batch.x, &self.batch.y, &coefs, self.cfg.lr)?;
+        self.rec.record("train_loss", self.step, out.loss as f64);
+        self.step += 1;
+        Ok(out.loss)
+    }
+
+    /// Mean loss + prediction error over (a capped number of full batches
+    /// of) a split.
+    pub fn evaluate(&mut self, engine: &Engine, split: EvalSplit) -> Result<(f64, f64)> {
+        let idx: &[usize] = match split {
+            EvalSplit::Train => &self.train_idx,
+            EvalSplit::Valid => &self.valid_idx,
+            EvalSplit::Test => &self.test_idx,
+        };
+        let manifest = engine.manifest();
+        let e = manifest.batch_eval;
+        let mut batch = BatchBuilder::new(e, manifest.input_dim, manifest.n_classes);
+        let n_full = (idx.len() / e).max(1);
+        let n_batches = if self.cfg.eval_max_batches == 0 {
+            n_full
+        } else {
+            n_full.min(self.cfg.eval_max_batches)
+        };
+        let (mut sum_loss, mut sum_correct, mut count) = (0f64, 0f64, 0usize);
+        for b in 0..n_batches {
+            let start = b * e;
+            let chunk: Vec<usize> = (0..e).map(|i| idx[(start + i) % idx.len()]).collect();
+            batch.fill(self.data.as_ref(), &chunk);
+            let out = engine.eval_step(&self.params, &batch.x, &batch.y)?;
+            sum_loss += out.sum_loss as f64;
+            sum_correct += out.n_correct as f64;
+            count += e;
+        }
+        let mean_loss = sum_loss / count as f64;
+        let err = 1.0 - sum_correct / count as f64;
+        Ok((mean_loss, err))
+    }
+
+    /// Record the standard evaluation metrics on the configured cadence.
+    pub fn maybe_evaluate(&mut self, engine: &Engine) -> Result<()> {
+        if self.cfg.eval_every == 0 || self.step % self.cfg.eval_every != 0 {
+            return Ok(());
+        }
+        let (train_loss, train_err) = self.evaluate(engine, EvalSplit::Train)?;
+        let (test_loss, test_err) = self.evaluate(engine, EvalSplit::Test)?;
+        let step = self.step;
+        self.rec.record("eval_train_loss", step, train_loss);
+        self.rec.record("eval_train_err", step, train_err);
+        self.rec.record("eval_test_loss", step, test_loss);
+        self.rec.record("eval_test_err", step, test_err);
+        Ok(())
+    }
+
+    /// Current per-example squared gradient norms over the whole training
+    /// split (the variance monitor's ground truth; O(N/B) scoring calls).
+    pub fn score_train_set(&self, engine: &Engine) -> Result<Vec<f64>> {
+        let manifest = engine.manifest();
+        let b = manifest.batch_score;
+        let mut batch = BatchBuilder::new(b, manifest.input_dim, manifest.n_classes);
+        let n = self.train_idx.len();
+        let mut sqnorms = vec![0f64; n];
+        let mut start = 0;
+        while start < n {
+            let count = (n - start).min(b);
+            let chunk: Vec<usize> = (0..count).map(|i| self.train_idx[start + i]).collect();
+            batch.fill(self.data.as_ref(), &chunk);
+            let out = engine.grad_norms(&self.params, &batch.x, &batch.y)?;
+            for i in 0..count {
+                sqnorms[start + i] = out.sqnorms[i] as f64;
+            }
+            start += count;
+        }
+        Ok(sqnorms)
+    }
+
+    /// §B.2 ‖g_TRUE‖² estimate: average ‖minibatch mean grad‖² over
+    /// `n_batches` uniform minibatches under the current parameters.
+    pub fn estimate_g_true_sq(&mut self, engine: &Engine, n_batches: usize) -> Result<f64> {
+        self.gtrue.reset();
+        let m = self.batch.batch();
+        for _ in 0..n_batches {
+            let pos = self.rng.sample_with_replacement(self.train_idx.len(), m);
+            let global: Vec<usize> = pos.iter().map(|&p| self.train_idx[p]).collect();
+            self.batch.fill(self.data.as_ref(), &global);
+            let sq = engine.grad_mean_sqnorm(&self.params, &self.batch.x, &self.batch.y)?;
+            self.gtrue.push(sq as f64);
+        }
+        Ok(self.gtrue.estimate())
+    }
+
+    /// The Figure-4 variance monitor: Tr(Σ) for q_IDEAL / q_STALE (actual
+    /// smoothing) / q_STALE (alternate smoothing) / q_UNIF under the
+    /// *current* parameters.  Expensive — gated by `cfg.monitor_every`.
+    pub fn monitor_variance(&mut self, engine: &Engine) -> Result<(VarianceReport, VarianceReport)> {
+        let sqnorms = self.score_train_set(engine)?;
+        let g_true_sq = self.estimate_g_true_sq(engine, 4)?;
+        let (stale_actual, kept) = self.effective_weights(self.cfg.smoothing)?;
+        let (stale_alt, _) = self.effective_weights(self.cfg.monitor_alt_smoothing)?;
+        let actual = trace_sigma(&sqnorms, &stale_actual, g_true_sq);
+        let alt = trace_sigma(&sqnorms, &stale_alt, g_true_sq);
+        let step = self.step;
+        self.rec.record("var_ideal_sqrt", step, actual.ideal().sqrt());
+        self.rec.record("var_unif_sqrt", step, actual.unif().sqrt());
+        self.rec.record("var_stale_sqrt", step, actual.stale().sqrt());
+        self.rec.record("var_stale_alt_sqrt", step, alt.stale().sqrt());
+        self.rec.record("g_true_sq", step, g_true_sq);
+        self.rec.record("monitor_kept_frac", step, kept);
+        Ok((actual, alt))
+    }
+
+    /// Persist a resumable checkpoint of this session.
+    pub fn save_checkpoint(&self, path: &std::path::Path) -> Result<()> {
+        crate::model::Checkpoint {
+            model: self.cfg.model.clone(),
+            step: self.step,
+            version: self.version,
+            seed: self.cfg.seed,
+            params: self.params.clone(),
+        }
+        .save(path)
+    }
+
+    /// Restore parameters/step/version from a checkpoint (validated
+    /// against the engine's manifest; the config seed must match so the
+    /// dataset regenerates identically).
+    pub fn restore_checkpoint(&mut self, engine: &Engine, path: &std::path::Path) -> Result<()> {
+        let ckpt = crate::model::Checkpoint::load(path, engine.manifest())?;
+        anyhow::ensure!(
+            ckpt.seed == self.cfg.seed,
+            "checkpoint seed {} != config seed {} (dataset would differ)",
+            ckpt.seed,
+            self.cfg.seed
+        );
+        self.params = ckpt.params;
+        self.step = ckpt.step;
+        self.version = ckpt.version;
+        Ok(())
+    }
+
+    pub fn maybe_monitor(&mut self, engine: &Engine) -> Result<()> {
+        if self.cfg.monitor_every == 0 || self.step % self.cfg.monitor_every != 0 {
+            return Ok(());
+        }
+        self.monitor_variance(engine)?;
+        Ok(())
+    }
+}

@@ -1,0 +1,26 @@
+//! The paper's distributed coordination layer (§4): master, workers and
+//! their orchestration.
+//!
+//! Actors:
+//! * [`master::Master`] — runs ISSGD / uniform SGD against a weight store.
+//! * [`worker::WorkerState`] — scores per-example gradient norms and keeps
+//!   the store fresh.
+//! * the *database* actor lives in [`crate::weightstore`].
+//!
+//! Orchestration modes:
+//! * [`sim::run_sim`] — deterministic single-thread interleave (the
+//!   experiment drivers' workhorse; bit-reproducible staleness).
+//! * [`live::run_live`] — real threads, real clocks, optional TCP store
+//!   (the paper's deployment shape).
+
+pub mod live;
+pub mod master;
+pub mod peer;
+pub mod sim;
+pub mod worker;
+
+pub use live::{run_live, LiveOptions};
+pub use peer::{run_asgd_sim, AsgdOutcome, PeerState};
+pub use master::{EvalSplit, Master};
+pub use sim::{run_sim, run_sim_with_engine, SimOutcome};
+pub use worker::WorkerState;

@@ -1,0 +1,254 @@
+//! Peer mode: ASGD, and the paper's §6 recommended ISSGD+ASGD combination.
+//!
+//! The paper's future-work section sketches how importance sampling should
+//! be married to Asynchronous SGD: "get rid of the master/workers
+//! distinction and have only workers (or *peers*) along with a parameter
+//! server...  Whenever a gradient contribution is computed, the importance
+//! weights can be obtained at the same time.  These can be shared in the
+//! same way that the gradients are shared, so that all the workers are
+//! able to use the importance weights to run ISSGD steps."
+//!
+//! We implement exactly that topology:
+//! * the *parameter server* is the weight store's `apply_grad` op
+//!   (`params -= lr * grad`, version bump per contribution);
+//! * each *peer* loops: fetch latest params (stale between fetches),
+//!   draw a minibatch — uniformly (plain ASGD) or by importance sampling
+//!   from the shared weights (ISSGD+ASGD) — run the `peer_step` artifact,
+//!   push the gradient, and push the per-example norms that came for free.
+//!
+//! `run_asgd_sim` drives the peers in a deterministic round-robin with a
+//! configurable fetch cadence, so gradients are genuinely stale (a peer
+//! computes on params that other peers have since updated) while runs
+//! remain reproducible.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::{RunConfig, TrainerKind};
+use crate::data::{BatchBuilder, SynthDataset};
+use crate::metrics::RunRecorder;
+use crate::model::ParamSet;
+use crate::runtime::Engine;
+use crate::sampler::{draw_minibatch, FenwickSampler, Smoothing};
+use crate::util::rng::Pcg64;
+use crate::weightstore::{MemStore, WeightStore};
+
+use super::master::{EvalSplit, Master};
+
+/// One ASGD peer.
+pub struct PeerState {
+    pub id: usize,
+    data: Arc<SynthDataset>,
+    train_idx: Arc<Vec<usize>>,
+    store: Arc<dyn WeightStore>,
+    params: Option<ParamSet>,
+    pub version: u64,
+    /// Use importance sampling from the shared weights (ISSGD+ASGD) or
+    /// uniform minibatches (plain ASGD).
+    pub use_is: bool,
+    smoothing: f64,
+    lr: f32,
+    rng: Pcg64,
+    batch: BatchBuilder,
+    coef_buf: Vec<f32>,
+    pub steps_done: u64,
+}
+
+impl PeerState {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        id: usize,
+        manifest: &crate::runtime::Manifest,
+        data: Arc<SynthDataset>,
+        train_idx: Arc<Vec<usize>>,
+        store: Arc<dyn WeightStore>,
+        use_is: bool,
+        smoothing: f64,
+        lr: f32,
+        seed: u64,
+    ) -> PeerState {
+        PeerState {
+            id,
+            data,
+            train_idx,
+            store,
+            params: None,
+            version: 0,
+            use_is,
+            smoothing,
+            lr,
+            rng: Pcg64::new(seed, 0x9EE5 + id as u64),
+            batch: BatchBuilder::new(manifest.batch_train, manifest.input_dim, manifest.n_classes),
+            coef_buf: Vec::new(),
+            steps_done: 0,
+        }
+    }
+
+    /// Pull newer parameters if available.
+    pub fn refresh_params(&mut self, engine: &Engine) -> Result<bool> {
+        match self.store.fetch_params(self.version)? {
+            None => Ok(false),
+            Some((version, bytes)) => {
+                self.params = Some(ParamSet::from_bytes(engine.manifest(), &bytes)?);
+                self.version = version;
+                Ok(true)
+            }
+        }
+    }
+
+    /// One peer contribution: sample, compute gradient + norms, push both.
+    /// Returns the minibatch loss (None before params are available).
+    pub fn step(&mut self, engine: &Engine) -> Result<Option<f32>> {
+        let params = match &self.params {
+            None => return Ok(None),
+            Some(p) => p,
+        };
+        let m = self.batch.batch();
+        let n = self.train_idx.len();
+        let (positions, coefs) = if self.use_is {
+            let snap = self.store.fetch_weights()?;
+            let smooth = Smoothing::new(self.smoothing);
+            // Coverage correction: unlike the master/worker topology, peers
+            // only score the examples they happen to sample, so early on
+            // most weights are still the placeholder init value — which is
+            // NOT a gradient norm, and treating it as one mis-calibrates
+            // the importance correction badly enough to diverge.  Examples
+            // never scored (param_version == 0) get the *mean of scored
+            // weights* as their prior: they are sampled at an average rate
+            // and their coefficient stays ~1 until real information about
+            // them exists.
+            let scored: Vec<f64> = snap
+                .param_versions
+                .iter()
+                .zip(&snap.weights)
+                .filter(|(&v, _)| v > 0)
+                .map(|(_, &w)| w)
+                .collect();
+            let prior = if scored.is_empty() {
+                1.0
+            } else {
+                scored.iter().sum::<f64>() / scored.len() as f64
+            };
+            let weights: Vec<f64> = snap
+                .weights
+                .iter()
+                .zip(&snap.param_versions)
+                .map(|(&w, &v)| smooth.apply(if v > 0 { w } else { prior }))
+                .collect();
+            let sampler = FenwickSampler::new(&weights);
+            let (pos, coefs, _) = draw_minibatch(&sampler, &mut self.rng, m);
+            (pos, coefs)
+        } else {
+            (self.rng.sample_with_replacement(n, m), vec![1.0f32; m])
+        };
+        let global: Vec<usize> = positions.iter().map(|&p| self.train_idx[p]).collect();
+        self.batch.fill(self.data.as_ref(), &global);
+        self.coef_buf.clear();
+        self.coef_buf.extend_from_slice(&coefs);
+        let out = engine.peer_step(params, &self.batch.x, &self.batch.y, &self.coef_buf)?;
+        // Parameter-server update (asynchronous: our params copy is stale).
+        self.store.apply_grad(self.lr, &out.grad_flat)?;
+        // Share the importance weights that came for free (§6) — only for
+        // the examples this minibatch touched, like the worker scoring path
+        // but with zero extra compute.
+        for (slot, &pos) in positions.iter().enumerate() {
+            let sq = out.sqnorms[slot].max(0.0);
+            if sq > 0.0 {
+                self.store.push_weights(pos, &[sq.sqrt()], self.version)?;
+            }
+        }
+        self.steps_done += 1;
+        Ok(Some(out.loss))
+    }
+}
+
+/// Outcome of an ASGD/peer simulation (mirrors `SimOutcome`).
+pub struct AsgdOutcome {
+    pub rec: RunRecorder,
+    pub final_err: (f64, f64, f64),
+    pub total_peer_steps: u64,
+    pub store_stats: crate::weightstore::StoreStats,
+}
+
+/// Deterministic ASGD / ISSGD+ASGD simulation.
+///
+/// `cfg.n_workers` peers contribute gradients round-robin; each peer
+/// re-fetches parameters every `cfg.param_push_every` of its own steps
+/// (the staleness knob: contributions in between are computed on old
+/// params).  `cfg.trainer` picks plain ASGD (`UniformSgd`) or the §6
+/// combination (`Issgd`).  `cfg.steps` counts *total* gradient
+/// contributions across peers, making loss-vs-gradient-budget comparable
+/// with the master/worker topology.
+pub fn run_asgd_sim(cfg: &RunConfig, engine: &Engine) -> Result<AsgdOutcome> {
+    cfg.validate()?;
+    let store: Arc<MemStore> = Arc::new(MemStore::new(Master::store_size(cfg), cfg.init_weight));
+    let store_dyn: Arc<dyn WeightStore> = store.clone();
+    // Reuse Master for data/split/init/eval plumbing; it never trains here.
+    let mut eval_master = Master::new(cfg.clone(), engine, store_dyn.clone())?;
+    // Publish initial parameters (version 1) for the peers.
+    store_dyn.push_params(1, eval_master.params.to_bytes())?;
+
+    let manifest = engine.manifest();
+    let use_is = cfg.trainer == TrainerKind::Issgd;
+    let mut peers: Vec<PeerState> = (0..cfg.n_workers)
+        .map(|id| {
+            PeerState::new(
+                id,
+                manifest,
+                Arc::clone(&eval_master.data),
+                Arc::new(eval_master.train_idx.clone()),
+                store_dyn.clone(),
+                use_is,
+                cfg.smoothing,
+                cfg.lr,
+                cfg.seed,
+            )
+        })
+        .collect();
+
+    let mut rec = RunRecorder::new();
+    let mut total_steps = 0u64;
+    while total_steps < cfg.steps {
+        for peer in &mut peers {
+            if total_steps >= cfg.steps {
+                break;
+            }
+            // Fetch cadence: stale in between (the ASGD staleness source).
+            if peer.steps_done % cfg.param_push_every == 0 {
+                peer.refresh_params(engine)?;
+            }
+            if let Some(loss) = peer.step(engine)? {
+                rec.record("train_loss", total_steps, loss as f64);
+                total_steps += 1;
+            }
+        }
+        // Evaluate with the *server's* current parameters.
+        if cfg.eval_every > 0 && total_steps % cfg.eval_every == 0 {
+            if let Some((_v, bytes)) = store_dyn.fetch_params(0)? {
+                eval_master.params = ParamSet::from_bytes(manifest, &bytes)?;
+                let (l, e) = eval_master.evaluate(engine, EvalSplit::Train)?;
+                let (_tl, te) = eval_master.evaluate(engine, EvalSplit::Test)?;
+                rec.record("eval_train_loss", total_steps, l);
+                rec.record("eval_train_err", total_steps, e);
+                rec.record("eval_test_err", total_steps, te);
+            }
+        }
+    }
+
+    // Final evaluation with server params.
+    if let Some((_v, bytes)) = store_dyn.fetch_params(0)? {
+        eval_master.params = ParamSet::from_bytes(manifest, &bytes)?;
+    }
+    let final_err = (
+        eval_master.evaluate(engine, EvalSplit::Train)?.1,
+        eval_master.evaluate(engine, EvalSplit::Valid)?.1,
+        eval_master.evaluate(engine, EvalSplit::Test)?.1,
+    );
+    Ok(AsgdOutcome {
+        rec,
+        final_err,
+        total_peer_steps: total_steps,
+        store_stats: store.stats()?,
+    })
+}

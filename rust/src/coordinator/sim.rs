@@ -1,0 +1,107 @@
+//! Deterministic single-thread cluster simulation.
+//!
+//! Interleaves the master and workers on a fixed schedule: per master
+//! step, each worker refreshes parameters and scores
+//! `cfg.worker_batches_per_step` batches.  This reproduces the paper's
+//! staleness phenomenology (weights lag parameters by a controlled
+//! amount) while staying bit-reproducible across runs and machines —
+//! which is what the multi-seed experiment drivers need.  The live
+//! thread/TCP topology with real wall-clock staleness lives in
+//! [`super::live`].
+//!
+//! In `SyncMode::Exact` the interleave becomes the paper's Figure-1
+//! barrier diagram: every parameter publish is followed by a full
+//! re-score of all shards before the master takes its next step.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::{RunConfig, SyncMode};
+use crate::data::shards;
+use crate::metrics::RunRecorder;
+use crate::runtime::{artifacts_dir, Engine};
+use crate::weightstore::{MemStore, WeightStore};
+
+use super::master::Master;
+use super::worker::WorkerState;
+
+/// Outcome of a simulated run.
+pub struct SimOutcome {
+    pub rec: RunRecorder,
+    /// Final-parameters prediction error on (train, valid, test).
+    pub final_err: (f64, f64, f64),
+    /// Total examples scored by all workers.
+    pub scored: u64,
+    /// Store op counters.
+    pub store_stats: crate::weightstore::StoreStats,
+}
+
+/// Run one full simulated experiment for `cfg`.
+///
+/// Engine is loaded from the artifacts directory of `cfg.model`
+/// (`ISSGD_ARTIFACTS` env var overrides the base path).
+pub fn run_sim(cfg: &RunConfig) -> Result<SimOutcome> {
+    let engine = Engine::load(&artifacts_dir(&cfg.model))?;
+    run_sim_with_engine(cfg, &engine)
+}
+
+/// Same as [`run_sim`] but reusing an already-compiled engine (the
+/// experiment drivers run many seeds against one engine).
+pub fn run_sim_with_engine(cfg: &RunConfig, engine: &Engine) -> Result<SimOutcome> {
+    let store: Arc<MemStore> = Arc::new(MemStore::new(Master::store_size(cfg), cfg.init_weight));
+    let store_dyn: Arc<dyn WeightStore> = store.clone();
+    let mut master = Master::new(cfg.clone(), engine, store_dyn.clone())?;
+
+    let manifest = engine.manifest();
+    let mut workers: Vec<WorkerState> = shards(master.train_idx.len(), cfg.n_workers)
+        .into_iter()
+        .enumerate()
+        .map(|(id, shard)| {
+            WorkerState::new(
+                id,
+                shard,
+                manifest,
+                Arc::clone(&master.data),
+                Arc::new(master.train_idx.clone()),
+                store_dyn.clone(),
+            )
+        })
+        .collect();
+
+    let mut scored = 0u64;
+    for _ in 0..cfg.steps {
+        let pushed = master.maybe_push_params()?;
+        match cfg.sync {
+            SyncMode::Exact => {
+                if pushed {
+                    // Barrier: every weight refreshed under the new params
+                    // before the master continues (paper fig. 1 dotted lines).
+                    for w in &mut workers {
+                        scored += w.sweep_full(engine)? as u64;
+                    }
+                }
+            }
+            SyncMode::Relaxed => {
+                for w in &mut workers {
+                    scored += w.advance(engine, cfg.worker_batches_per_step)? as u64;
+                }
+            }
+        }
+        master.train_one_step(engine)?;
+        master.maybe_evaluate(engine)?;
+        master.maybe_monitor(engine)?;
+    }
+
+    let final_err = (
+        master.evaluate(engine, super::master::EvalSplit::Train)?.1,
+        master.evaluate(engine, super::master::EvalSplit::Valid)?.1,
+        master.evaluate(engine, super::master::EvalSplit::Test)?.1,
+    );
+    Ok(SimOutcome {
+        rec: master.rec,
+        final_err,
+        scored,
+        store_stats: store.stats()?,
+    })
+}

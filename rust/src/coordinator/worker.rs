@@ -1,0 +1,170 @@
+//! The worker actor: keeps probability weights fresh (paper §4.2).
+//!
+//! A worker owns a contiguous shard of training-set *positions*, fetches
+//! the newest parameters from the store when available, sweeps its shard
+//! in scoring batches computing ‖g(x_n)‖ via the AOT `grad_norms` entry
+//! point (Proposition 1 / Pallas kernel), and pushes the norms back to the
+//! store tagged with the parameter version they were computed from.
+//!
+//! The same `WorkerState` drives both execution modes:
+//! * **sim** — `advance(k)` called by the deterministic interleaver.
+//! * **live** — `run_live` loops in its own OS thread with its own engine
+//!   until the stop flag flips.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::data::{BatchBuilder, Shard, SynthDataset};
+use crate::model::ParamSet;
+use crate::runtime::Engine;
+use crate::weightstore::WeightStore;
+
+pub struct WorkerState {
+    pub id: usize,
+    /// Positions (train-split indices) this worker scores.
+    pub shard: Shard,
+    /// Global dataset ids for each train-split position.
+    train_idx: Arc<Vec<usize>>,
+    data: Arc<SynthDataset>,
+    store: Arc<dyn WeightStore>,
+    /// Local parameter copy + its version (0 = none yet).
+    params: Option<ParamSet>,
+    pub version: u64,
+    /// Next position within the shard to score.
+    cursor: usize,
+    batch: BatchBuilder,
+    /// Scoring batches completed (monitoring).
+    pub batches_done: u64,
+    /// Total examples scored (monitoring).
+    pub examples_scored: u64,
+    /// Reusable weight staging buffer.
+    push_buf: Vec<f32>,
+}
+
+impl WorkerState {
+    pub fn new(
+        id: usize,
+        shard: Shard,
+        engine_manifest: &crate::runtime::Manifest,
+        data: Arc<SynthDataset>,
+        train_idx: Arc<Vec<usize>>,
+        store: Arc<dyn WeightStore>,
+    ) -> WorkerState {
+        let batch = BatchBuilder::new(
+            engine_manifest.batch_score,
+            engine_manifest.input_dim,
+            engine_manifest.n_classes,
+        );
+        WorkerState {
+            id,
+            shard,
+            train_idx,
+            data,
+            store,
+            params: None,
+            version: 0,
+            cursor: shard.start,
+            batch,
+            batches_done: 0,
+            examples_scored: 0,
+            push_buf: Vec::new(),
+        }
+    }
+
+    /// Pull newer parameters if the store has them.  Returns true if the
+    /// local copy changed.
+    pub fn refresh_params(&mut self, engine: &Engine) -> Result<bool> {
+        match self.store.fetch_params(self.version)? {
+            None => Ok(false),
+            Some((version, bytes)) => {
+                self.params = Some(ParamSet::from_bytes(engine.manifest(), &bytes)?);
+                self.version = version;
+                Ok(true)
+            }
+        }
+    }
+
+    /// Score the next batch of shard positions and push ‖g‖ weights.
+    /// No-op (returns 0) until parameters have been published.
+    pub fn score_next_batch(&mut self, engine: &Engine) -> Result<usize> {
+        let params = match &self.params {
+            None => return Ok(0),
+            Some(p) => p,
+        };
+        if self.shard.is_empty() {
+            return Ok(0);
+        }
+        let b = self.batch.batch();
+        let count = (self.shard.end - self.cursor).min(b);
+        let positions: Vec<usize> = (0..count).map(|i| self.cursor + i).collect();
+        let global: Vec<usize> = positions.iter().map(|&p| self.train_idx[p]).collect();
+        self.batch.fill(self.data.as_ref(), &global);
+        let out = engine.grad_norms(params, &self.batch.x, &self.batch.y)?;
+        // ω̃_n = ‖g(x_n)‖ — the *norm*, not the squared norm (Theorem 1).
+        self.push_buf.clear();
+        self.push_buf
+            .extend(out.sqnorms[..count].iter().map(|&sq| sq.max(0.0).sqrt()));
+        self.store
+            .push_weights(self.cursor, &self.push_buf, self.version)?;
+        self.cursor += count;
+        if self.cursor >= self.shard.end {
+            self.cursor = self.shard.start;
+        }
+        self.batches_done += 1;
+        self.examples_scored += count as u64;
+        Ok(count)
+    }
+
+    /// Sim-mode driver: refresh params once, then score `k` batches.
+    pub fn advance(&mut self, engine: &Engine, k: usize) -> Result<usize> {
+        self.refresh_params(engine)?;
+        let mut scored = 0;
+        for _ in 0..k {
+            scored += self.score_next_batch(engine)?;
+        }
+        Ok(scored)
+    }
+
+    /// Exact-mode sweep: score the entire shard under the current params
+    /// (refreshing first).  Returns examples scored.
+    pub fn sweep_full(&mut self, engine: &Engine) -> Result<usize> {
+        self.refresh_params(engine)?;
+        if self.params.is_none() || self.shard.is_empty() {
+            return Ok(0);
+        }
+        self.cursor = self.shard.start;
+        let mut scored = 0;
+        loop {
+            scored += self.score_next_batch(engine)?;
+            if self.cursor == self.shard.start {
+                break; // wrapped: full sweep done
+            }
+        }
+        Ok(scored)
+    }
+
+    /// Live-mode loop: poll for parameters and keep sweeping until `stop`.
+    /// `throttle` inserts a pause between batches to emulate slower
+    /// workers (and to keep a single-core host responsive).
+    pub fn run_live(
+        &mut self,
+        engine: &Engine,
+        stop: &AtomicBool,
+        throttle: Option<std::time::Duration>,
+    ) -> Result<()> {
+        while !stop.load(Ordering::Relaxed) {
+            self.refresh_params(engine)?;
+            if self.params.is_none() {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                continue;
+            }
+            self.score_next_batch(engine)?;
+            if let Some(d) = throttle {
+                std::thread::sleep(d);
+            }
+        }
+        Ok(())
+    }
+}

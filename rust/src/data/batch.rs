@@ -1,0 +1,153 @@
+//! Batch assembly: gather dataset rows into the dense row-major buffers +
+//! one-hot label matrices the AOT entry points expect.
+//!
+//! The HLO artifacts are shape-specialised, so every batch has a fixed
+//! size; when fewer than `batch` real examples are available the builder
+//! pads by repeating rows and reports the effective count so aggregate
+//! statistics (loss sums, correct counts) can be corrected by the caller.
+
+use super::Dataset;
+
+/// Reusable staging buffers for one batch shape.  Reuse avoids
+/// re-allocating `batch*dim` floats on the master's hot loop.
+pub struct BatchBuilder {
+    batch: usize,
+    dim: usize,
+    n_classes: usize,
+    pub x: Vec<f32>,
+    pub y: Vec<f32>,
+}
+
+impl BatchBuilder {
+    pub fn new(batch: usize, dim: usize, n_classes: usize) -> Self {
+        BatchBuilder {
+            batch,
+            dim,
+            n_classes,
+            x: vec![0.0; batch * dim],
+            y: vec![0.0; batch * n_classes],
+        }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Fill the staging buffers from `dataset` rows `indices`.
+    ///
+    /// Returns the number of *real* (un-padded) examples.  Panics if
+    /// `indices` is empty or longer than the batch size — both are caller
+    /// bugs, not data conditions.
+    pub fn fill<D: Dataset + ?Sized>(&mut self, dataset: &D, indices: &[usize]) -> usize {
+        assert!(!indices.is_empty(), "empty batch");
+        assert!(
+            indices.len() <= self.batch,
+            "{} indices for batch size {}",
+            indices.len(),
+            self.batch
+        );
+        assert_eq!(dataset.dim(), self.dim, "dataset dim mismatch");
+        self.y.fill(0.0);
+        for slot in 0..self.batch {
+            // Pad by cycling through the provided indices: padded rows are
+            // *valid* examples, so the executable never sees garbage, and
+            // the caller discards their contribution via the real count.
+            let idx = indices[slot % indices.len()];
+            let row = dataset.features(idx);
+            self.x[slot * self.dim..(slot + 1) * self.dim].copy_from_slice(row);
+            let label = dataset.label(idx) as usize;
+            debug_assert!(label < self.n_classes);
+            self.y[slot * self.n_classes + label] = 1.0;
+        }
+        indices.len()
+    }
+
+    /// Fill and also produce the per-slot loss coefficient vector used by
+    /// `train_step`: `coef[m] = scale / omega[indices[m]]` for real rows and
+    /// `0` for padded rows (padding then contributes nothing to loss or
+    /// gradient — exactness, not approximation).
+    pub fn fill_weighted<D: Dataset + ?Sized>(
+        &mut self,
+        dataset: &D,
+        indices: &[usize],
+        coef_of: impl Fn(usize) -> f32,
+        coef_out: &mut Vec<f32>,
+    ) -> usize {
+        let real = self.fill(dataset, indices);
+        coef_out.clear();
+        coef_out.resize(self.batch, 0.0);
+        for slot in 0..real.min(self.batch) {
+            coef_out[slot] = coef_of(indices[slot]);
+        }
+        real
+    }
+}
+
+/// Iterate index chunks of size `batch` over `[0, n)` (last chunk short).
+pub fn chunks(n: usize, batch: usize) -> impl Iterator<Item = Vec<usize>> {
+    (0..n.div_ceil(batch)).map(move |c| {
+        let start = c * batch;
+        (start..(start + batch).min(n)).collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{SynthDataset, SynthSpec};
+
+    fn data() -> SynthDataset {
+        SynthDataset::generate(1, SynthSpec::tiny(50))
+    }
+
+    #[test]
+    fn fills_rows_and_onehot() {
+        let d = data();
+        let mut b = BatchBuilder::new(4, 64, 10);
+        let real = b.fill(&d, &[3, 7, 9, 11]);
+        assert_eq!(real, 4);
+        assert_eq!(&b.x[0..64], d.features(3));
+        assert_eq!(&b.x[2 * 64..3 * 64], d.features(9));
+        for slot in 0..4 {
+            let row = &b.y[slot * 10..(slot + 1) * 10];
+            assert_eq!(row.iter().sum::<f32>(), 1.0);
+            let hot = row.iter().position(|&v| v == 1.0).unwrap();
+            assert_eq!(hot as u32, d.label([3, 7, 9, 11][slot]));
+        }
+    }
+
+    #[test]
+    fn pads_by_cycling() {
+        let d = data();
+        let mut b = BatchBuilder::new(5, 64, 10);
+        let real = b.fill(&d, &[2, 4]);
+        assert_eq!(real, 2);
+        assert_eq!(&b.x[2 * 64..3 * 64], d.features(2)); // slot 2 cycles to idx 0
+        assert_eq!(&b.x[3 * 64..4 * 64], d.features(4));
+    }
+
+    #[test]
+    fn weighted_fill_zeroes_padding() {
+        let d = data();
+        let mut b = BatchBuilder::new(4, 64, 10);
+        let mut coef = Vec::new();
+        let real = b.fill_weighted(&d, &[1, 2], |i| (i + 1) as f32, &mut coef);
+        assert_eq!(real, 2);
+        assert_eq!(coef, vec![2.0, 3.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty batch")]
+    fn empty_batch_panics() {
+        let d = data();
+        BatchBuilder::new(4, 64, 10).fill(&d, &[]);
+    }
+
+    #[test]
+    fn chunk_iteration_covers() {
+        let cs: Vec<Vec<usize>> = chunks(10, 4).collect();
+        assert_eq!(cs.len(), 3);
+        assert_eq!(cs[2], vec![8, 9]);
+        assert_eq!(cs.concat(), (0..10).collect::<Vec<_>>());
+    }
+}

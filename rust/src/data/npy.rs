@@ -1,0 +1,467 @@
+//! Minimal NumPy `.npy` reader/writer — the bridge to *real* data.
+//!
+//! The synthetic dataset (DESIGN.md §3) stands in for SVHN in this
+//! environment, but the system is built for the real thing: export SVHN
+//! with numpy (`np.save("features.npy", X.astype(np.float32))`,
+//! `np.save("labels.npy", y.astype(np.int64))`) and load it with
+//! [`NpyDataset::load`] — no python on the training path, so the loader
+//! is implemented here (format spec:
+//! https://numpy.org/doc/stable/reference/generated/numpy.lib.format.html).
+//!
+//! Supports format versions 1.0/2.0, C-order, little-endian `f32`/`f64`
+//! (features) and `u8`/`i32`/`i64` (labels) — the dtypes numpy actually
+//! emits for image data and class labels.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::Dataset;
+
+/// A parsed `.npy` array (flat data + shape).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NpyArray {
+    pub shape: Vec<usize>,
+    pub data: NpyData,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum NpyData {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+    U8(Vec<u8>),
+    I32(Vec<i32>),
+    I64(Vec<i64>),
+}
+
+impl NpyArray {
+    pub fn len(&self) -> usize {
+        match &self.data {
+            NpyData::F32(v) => v.len(),
+            NpyData::F64(v) => v.len(),
+            NpyData::U8(v) => v.len(),
+            NpyData::I32(v) => v.len(),
+            NpyData::I64(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Convert to f32 (lossy for i64 > 2^24, fine for labels/pixels).
+    pub fn to_f32(&self) -> Vec<f32> {
+        match &self.data {
+            NpyData::F32(v) => v.clone(),
+            NpyData::F64(v) => v.iter().map(|&x| x as f32).collect(),
+            NpyData::U8(v) => v.iter().map(|&x| x as f32).collect(),
+            NpyData::I32(v) => v.iter().map(|&x| x as f32).collect(),
+            NpyData::I64(v) => v.iter().map(|&x| x as f32).collect(),
+        }
+    }
+
+    /// Convert to u32 labels; errors on negatives or non-integers.
+    pub fn to_labels(&self) -> Result<Vec<u32>> {
+        let check = |x: f64, i: usize| -> Result<u32> {
+            anyhow::ensure!(
+                x >= 0.0 && x.fract() == 0.0 && x < u32::MAX as f64,
+                "label {x} at index {i} is not a small non-negative integer"
+            );
+            Ok(x as u32)
+        };
+        match &self.data {
+            NpyData::U8(v) => Ok(v.iter().map(|&x| x as u32).collect()),
+            NpyData::I32(v) => v
+                .iter()
+                .enumerate()
+                .map(|(i, &x)| check(x as f64, i))
+                .collect(),
+            NpyData::I64(v) => v
+                .iter()
+                .enumerate()
+                .map(|(i, &x)| check(x as f64, i))
+                .collect(),
+            NpyData::F32(v) => v
+                .iter()
+                .enumerate()
+                .map(|(i, &x)| check(x as f64, i))
+                .collect(),
+            NpyData::F64(v) => v.iter().enumerate().map(|(i, &x)| check(x, i)).collect(),
+        }
+    }
+}
+
+/// Read a `.npy` file.
+pub fn read_npy(path: &Path) -> Result<NpyArray> {
+    let mut f = std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic[..6] == b"\x93NUMPY", "not a .npy file (bad magic)");
+    let (major, _minor) = (magic[6], magic[7]);
+    let header_len = match major {
+        1 => {
+            let mut b = [0u8; 2];
+            f.read_exact(&mut b)?;
+            u16::from_le_bytes(b) as usize
+        }
+        2 => {
+            let mut b = [0u8; 4];
+            f.read_exact(&mut b)?;
+            u32::from_le_bytes(b) as usize
+        }
+        v => bail!("unsupported .npy format version {v}"),
+    };
+    let mut header = vec![0u8; header_len];
+    f.read_exact(&mut header)?;
+    let header = String::from_utf8(header).context("non-utf8 .npy header")?;
+    let (descr, fortran, shape) = parse_header(&header)?;
+    anyhow::ensure!(!fortran, "fortran_order arrays not supported");
+    let count: usize = shape.iter().product();
+
+    let mut raw = Vec::new();
+    f.read_to_end(&mut raw)?;
+    let need = |elem: usize| -> Result<()> {
+        anyhow::ensure!(
+            raw.len() >= count * elem,
+            "file truncated: {} bytes for {count} x {elem}B elements",
+            raw.len()
+        );
+        Ok(())
+    };
+    let data = match descr.as_str() {
+        "<f4" | "|f4" => {
+            need(4)?;
+            NpyData::F32(
+                raw[..count * 4]
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            )
+        }
+        "<f8" => {
+            need(8)?;
+            NpyData::F64(
+                raw[..count * 8]
+                    .chunks_exact(8)
+                    .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            )
+        }
+        "|u1" => {
+            need(1)?;
+            NpyData::U8(raw[..count].to_vec())
+        }
+        "<i4" => {
+            need(4)?;
+            NpyData::I32(
+                raw[..count * 4]
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            )
+        }
+        "<i8" => {
+            need(8)?;
+            NpyData::I64(
+                raw[..count * 8]
+                    .chunks_exact(8)
+                    .map(|c| i64::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            )
+        }
+        other => bail!("unsupported dtype descr {other:?}"),
+    };
+    Ok(NpyArray { shape, data })
+}
+
+/// Write a `.npy` (format 1.0, C-order, little-endian).
+pub fn write_npy(path: &Path, array: &NpyArray) -> Result<()> {
+    let descr = match &array.data {
+        NpyData::F32(_) => "<f4",
+        NpyData::F64(_) => "<f8",
+        NpyData::U8(_) => "|u1",
+        NpyData::I32(_) => "<i4",
+        NpyData::I64(_) => "<i8",
+    };
+    let count: usize = array.shape.iter().product();
+    anyhow::ensure!(count == array.len(), "shape/data mismatch");
+    let shape_str = match array.shape.len() {
+        1 => format!("({},)", array.shape[0]),
+        _ => format!(
+            "({})",
+            array
+                .shape
+                .iter()
+                .map(|d| d.to_string())
+                .collect::<Vec<_>>()
+                .join(", ")
+        ),
+    };
+    let mut header = format!(
+        "{{'descr': '{descr}', 'fortran_order': False, 'shape': {shape_str}, }}"
+    );
+    // Pad so that magic(6)+version(2)+len(2)+header is a multiple of 64.
+    let unpadded = 10 + header.len() + 1;
+    let pad = (64 - unpadded % 64) % 64;
+    header.push_str(&" ".repeat(pad));
+    header.push('\n');
+
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(b"\x93NUMPY\x01\x00")?;
+    f.write_all(&(header.len() as u16).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    match &array.data {
+        NpyData::F32(v) => {
+            for x in v {
+                f.write_all(&x.to_le_bytes())?;
+            }
+        }
+        NpyData::F64(v) => {
+            for x in v {
+                f.write_all(&x.to_le_bytes())?;
+            }
+        }
+        NpyData::U8(v) => f.write_all(v)?,
+        NpyData::I32(v) => {
+            for x in v {
+                f.write_all(&x.to_le_bytes())?;
+            }
+        }
+        NpyData::I64(v) => {
+            for x in v {
+                f.write_all(&x.to_le_bytes())?;
+            }
+        }
+    }
+    Ok(())
+}
+
+fn parse_header(header: &str) -> Result<(String, bool, Vec<usize>)> {
+    // The header is a python dict literal with a known key set; a tiny
+    // hand parser beats dragging in a python-literal grammar.
+    let grab = |key: &str| -> Result<&str> {
+        let pat = format!("'{key}':");
+        let at = header.find(&pat).with_context(|| format!("missing {key}"))?;
+        Ok(header[at + pat.len()..].trim_start())
+    };
+    let descr_part = grab("descr")?;
+    anyhow::ensure!(descr_part.starts_with('\''), "bad descr");
+    let descr = descr_part[1..]
+        .split('\'')
+        .next()
+        .context("bad descr")?
+        .to_string();
+    let fortran = grab("fortran_order")?.starts_with("True");
+    let shape_part = grab("shape")?;
+    anyhow::ensure!(shape_part.starts_with('('), "bad shape");
+    let close = shape_part.find(')').context("bad shape")?;
+    let inner = &shape_part[1..close];
+    let shape: Vec<usize> = inner
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(|s| s.parse::<usize>().context("bad shape dim"))
+        .collect::<Result<_>>()?;
+    Ok((descr, fortran, shape))
+}
+
+/// A dataset loaded from `features.npy` (N×D f32) + `labels.npy` (N ints).
+pub struct NpyDataset {
+    features: Vec<f32>,
+    labels: Vec<u32>,
+    dim: usize,
+    n_classes: usize,
+}
+
+impl NpyDataset {
+    /// Load and validate a features/labels pair.  `n_classes` of 0 means
+    /// infer as `max(label) + 1`.
+    pub fn load(features_path: &Path, labels_path: &Path, n_classes: usize) -> Result<NpyDataset> {
+        let feats = read_npy(features_path)?;
+        anyhow::ensure!(
+            feats.shape.len() == 2,
+            "features must be 2-d (N, D), got {:?}",
+            feats.shape
+        );
+        let (n, dim) = (feats.shape[0], feats.shape[1]);
+        let labels_arr = read_npy(labels_path)?;
+        let labels = labels_arr.to_labels()?;
+        anyhow::ensure!(
+            labels.len() == n,
+            "{n} feature rows but {} labels",
+            labels.len()
+        );
+        let max_label = labels.iter().copied().max().unwrap_or(0);
+        let n_classes = if n_classes == 0 {
+            max_label as usize + 1
+        } else {
+            anyhow::ensure!(
+                (max_label as usize) < n_classes,
+                "label {max_label} out of range for {n_classes} classes"
+            );
+            n_classes
+        };
+        Ok(NpyDataset {
+            features: feats.to_f32(),
+            labels,
+            dim,
+            n_classes,
+        })
+    }
+}
+
+impl Dataset for NpyDataset {
+    fn len(&self) -> usize {
+        self.labels.len()
+    }
+    fn dim(&self) -> usize {
+        self.dim
+    }
+    fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+    fn features(&self, idx: usize) -> &[f32] {
+        &self.features[idx * self.dim..(idx + 1) * self.dim]
+    }
+    fn label(&self, idx: usize) -> u32 {
+        self.labels[idx]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("issgd-npy-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let arr = NpyArray {
+            shape: vec![2, 3],
+            data: NpyData::F32(vec![1.0, -2.5, 3.25, 0.0, 1e-7, 1e7]),
+        };
+        let p = tmp("f32.npy");
+        write_npy(&p, &arr).unwrap();
+        assert_eq!(read_npy(&p).unwrap(), arr);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn label_dtypes_roundtrip() {
+        for data in [
+            NpyData::U8(vec![0, 1, 9]),
+            NpyData::I32(vec![0, 1, 9]),
+            NpyData::I64(vec![0, 1, 9]),
+        ] {
+            let arr = NpyArray {
+                shape: vec![3],
+                data,
+            };
+            let p = tmp("labels.npy");
+            write_npy(&p, &arr).unwrap();
+            let back = read_npy(&p).unwrap();
+            assert_eq!(back.to_labels().unwrap(), vec![0, 1, 9]);
+            std::fs::remove_file(&p).ok();
+        }
+    }
+
+    #[test]
+    fn header_is_numpy_compatible_shape() {
+        // 1-element tuple must keep the trailing comma: "(3,)".
+        let arr = NpyArray {
+            shape: vec![3],
+            data: NpyData::U8(vec![1, 2, 3]),
+        };
+        let p = tmp("one-d.npy");
+        write_npy(&p, &arr).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        let header = String::from_utf8_lossy(&bytes[10..bytes.len() - 3]);
+        assert!(header.contains("(3,)"), "header: {header}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let p = tmp("garbage.npy");
+        std::fs::write(&p, b"not numpy at all").unwrap();
+        assert!(read_npy(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_bad_labels() {
+        let arr = NpyArray {
+            shape: vec![2],
+            data: NpyData::F32(vec![1.5, 2.0]),
+        };
+        assert!(arr.to_labels().is_err());
+        let neg = NpyArray {
+            shape: vec![1],
+            data: NpyData::I64(vec![-3]),
+        };
+        assert!(neg.to_labels().is_err());
+    }
+
+    #[test]
+    fn dataset_load_and_validate() {
+        let fp = tmp("ds-features.npy");
+        let lp = tmp("ds-labels.npy");
+        write_npy(
+            &fp,
+            &NpyArray {
+                shape: vec![4, 3],
+                data: NpyData::F32((0..12).map(|i| i as f32).collect()),
+            },
+        )
+        .unwrap();
+        write_npy(
+            &lp,
+            &NpyArray {
+                shape: vec![4],
+                data: NpyData::I64(vec![0, 2, 1, 2]),
+            },
+        )
+        .unwrap();
+        let ds = NpyDataset::load(&fp, &lp, 0).unwrap();
+        assert_eq!(ds.len(), 4);
+        assert_eq!(ds.dim(), 3);
+        assert_eq!(ds.n_classes(), 3); // inferred max+1
+        assert_eq!(ds.features(1), &[3.0, 4.0, 5.0]);
+        assert_eq!(ds.label(3), 2);
+        // explicit class count must bound labels
+        assert!(NpyDataset::load(&fp, &lp, 2).is_err());
+        std::fs::remove_file(&fp).ok();
+        std::fs::remove_file(&lp).ok();
+    }
+
+    #[test]
+    fn mismatched_lengths_rejected() {
+        let fp = tmp("mm-features.npy");
+        let lp = tmp("mm-labels.npy");
+        write_npy(
+            &fp,
+            &NpyArray {
+                shape: vec![2, 2],
+                data: NpyData::F32(vec![0.0; 4]),
+            },
+        )
+        .unwrap();
+        write_npy(
+            &lp,
+            &NpyArray {
+                shape: vec![3],
+                data: NpyData::U8(vec![0, 1, 0]),
+            },
+        )
+        .unwrap();
+        assert!(NpyDataset::load(&fp, &lp, 0).is_err());
+        std::fs::remove_file(&fp).ok();
+        std::fs::remove_file(&lp).ok();
+    }
+}

@@ -1,0 +1,141 @@
+//! §6 extension experiment: ISSGD vs ASGD vs the paper's recommended
+//! ISSGD+ASGD combination, at a matched gradient-computation budget.
+//!
+//! The paper explicitly avoids this comparison ("we are not currently in
+//! possession of a good production-quality ASGD implementation") and
+//! poses it as future work; we built the parameter server
+//! (`WeightStore::apply_grad`) and peer actors (`coordinator::peer`), so
+//! we run it.  Four arms, same seed/data/schedule:
+//!
+//!   sgd        — single master, uniform minibatches (paper baseline)
+//!   issgd      — master/worker/database ISSGD (the paper's method)
+//!   asgd       — K peers + parameter server, uniform minibatches
+//!   issgd+asgd — K peers + parameter server, importance-sampled
+//!                minibatches with §6's co-computed weights
+//!
+//! The x-axis is total gradient computations (master steps or peer
+//! contributions), so the comparison is optimization-efficiency, not
+//! wall-clock on this single-core host.
+
+use anyhow::Result;
+
+use crate::baseline::sgd_twin;
+use crate::config::{RunConfig, TrainerKind};
+use crate::coordinator::peer::run_asgd_sim;
+use crate::coordinator::run_sim_with_engine;
+use crate::metrics::{quartiles_across_runs, write_figure_csv, RunRecorder};
+
+use super::runner::{engine_for, ExperimentScale};
+use super::results_dir;
+
+pub struct AsgdRow {
+    pub method: &'static str,
+    pub final_train_err: f64,
+    pub final_test_err: f64,
+    pub final_train_loss: f64,
+}
+
+pub fn run_comparison(scale: &ExperimentScale) -> Result<Vec<AsgdRow>> {
+    let engine = engine_for(scale)?;
+    let base = scale.apply(RunConfig::setting_b());
+
+    let mut rows = Vec::new();
+    let mut series: Vec<(&'static str, Vec<RunRecorder>)> = Vec::new();
+
+    for (name, peers, trainer) in [
+        ("sgd", None, TrainerKind::UniformSgd),
+        ("issgd", None, TrainerKind::Issgd),
+        ("asgd", Some(3usize), TrainerKind::UniformSgd),
+        ("issgd_asgd", Some(3usize), TrainerKind::Issgd),
+    ] {
+        let mut recs = Vec::new();
+        let (mut errs, mut terrs, mut losses) = (Vec::new(), Vec::new(), Vec::new());
+        for s in 0..scale.seeds {
+            let mut cfg = base.clone();
+            cfg.trainer = trainer;
+            cfg.seed = base.seed + s;
+            let (rec, ferr) = match peers {
+                None => {
+                    let cfg = if trainer == TrainerKind::UniformSgd {
+                        sgd_twin(&cfg)
+                    } else {
+                        cfg
+                    };
+                    let out = run_sim_with_engine(&cfg, &engine)?;
+                    (out.rec, out.final_err)
+                }
+                Some(k) => {
+                    cfg.n_workers = k;
+                    // Peers re-fetch every 4 own-steps: genuine staleness.
+                    cfg.param_push_every = 4;
+                    let out = run_asgd_sim(&cfg, &engine)?;
+                    (out.rec, out.final_err)
+                }
+            };
+            losses.push(rec.tail_mean("train_loss", 0.1).unwrap_or(f64::NAN));
+            errs.push(ferr.0);
+            terrs.push(ferr.2);
+            recs.push(rec);
+        }
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+        rows.push(AsgdRow {
+            method: name,
+            final_train_err: mean(&errs),
+            final_test_err: mean(&terrs),
+            final_train_loss: mean(&losses),
+        });
+        series.push((name, recs));
+    }
+
+    // CSV: median train-loss trajectories of all four arms.
+    let quartiles: Vec<_> = series
+        .iter()
+        .map(|(name, recs)| {
+            let refs: Vec<&RunRecorder> = recs.iter().collect();
+            (*name, quartiles_across_runs(&refs, "eval_train_loss"))
+        })
+        .collect();
+    let named: Vec<(&str, &crate::metrics::QuartileSeries)> =
+        quartiles.iter().map(|(n, q)| (*n, q)).collect();
+    // Arms share the eval schedule; guard against empty series anyway.
+    if named.iter().all(|(_, q)| !q.steps.is_empty())
+        && named
+            .iter()
+            .all(|(_, q)| q.steps == named[0].1.steps)
+    {
+        write_figure_csv(&results_dir().join("asgd_combo_train_loss.csv"), &named)?;
+    }
+    Ok(rows)
+}
+
+pub fn emit(rows: &[AsgdRow]) -> Result<()> {
+    println!("\n§6 extension: ISSGD × ASGD at matched gradient budget");
+    println!("{:-<72}", "");
+    println!(
+        "{:<14} {:>16} {:>15} {:>15}",
+        "method", "final train loss", "final train err", "final test err"
+    );
+    for r in rows {
+        println!(
+            "{:<14} {:>16.4} {:>15.4} {:>15.4}",
+            r.method, r.final_train_loss, r.final_train_err, r.final_test_err
+        );
+    }
+    let dir = results_dir();
+    std::fs::create_dir_all(&dir)?;
+    let mut csv = String::from("method,final_train_loss,final_train_err,final_test_err\n");
+    for r in rows {
+        csv.push_str(&format!(
+            "{},{},{},{}\n",
+            r.method, r.final_train_loss, r.final_train_err, r.final_test_err
+        ));
+    }
+    std::fs::write(dir.join("asgd_combo.csv"), csv)?;
+    Ok(())
+}
+
+pub fn run(scale: &ExperimentScale) -> Result<Vec<AsgdRow>> {
+    let rows = run_comparison(scale)?;
+    emit(&rows)?;
+    Ok(rows)
+}

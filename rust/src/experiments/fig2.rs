@@ -1,0 +1,80 @@
+//! Figure 2: training loss (top) and training prediction error (bottom)
+//! for ISSGD vs regular SGD, under the paper's two hyperparameter
+//! settings — (a) lr 0.01 / smoothing +10, (b) lr 0.001 / smoothing +1.
+//! Median + quartiles across seeds.
+
+use anyhow::Result;
+
+use crate::baseline::sgd_twin;
+use crate::config::RunConfig;
+use crate::metrics::write_figure_csv;
+use crate::runtime::Engine;
+
+use super::runner::{engine_for, ExperimentScale, MultiRun};
+use super::results_dir;
+
+/// The four runs shared by figures 2, 3 and table 1.
+pub struct SettingsRuns {
+    pub a_issgd: MultiRun,
+    pub a_sgd: MultiRun,
+    pub b_issgd: MultiRun,
+    pub b_sgd: MultiRun,
+}
+
+/// Run ISSGD + SGD under both §5 hyperparameter settings.
+pub fn run_settings(scale: &ExperimentScale, engine: &Engine) -> Result<SettingsRuns> {
+    let a = scale.apply(RunConfig::setting_a());
+    let b = scale.apply(RunConfig::setting_b());
+    Ok(SettingsRuns {
+        a_issgd: MultiRun::run(&a, engine, scale.seeds, "fig2a issgd")?,
+        a_sgd: MultiRun::run(&sgd_twin(&a), engine, scale.seeds, "fig2a sgd")?,
+        b_issgd: MultiRun::run(&b, engine, scale.seeds, "fig2b issgd")?,
+        b_sgd: MultiRun::run(&sgd_twin(&b), engine, scale.seeds, "fig2b sgd")?,
+    })
+}
+
+/// Emit fig2 CSVs + stdout summary from pre-computed runs.
+pub fn emit(runs: &SettingsRuns) -> Result<()> {
+    let dir = results_dir();
+    for (panel, issgd, sgd) in [
+        ("a", &runs.a_issgd, &runs.a_sgd),
+        ("b", &runs.b_issgd, &runs.b_sgd),
+    ] {
+        for (metric, fname) in in_panels(panel) {
+            let is_q = issgd.quartiles(metric);
+            let sgd_q = sgd.quartiles(metric);
+            write_figure_csv(&dir.join(fname), &[("issgd", &is_q), ("sgd", &sgd_q)])?;
+        }
+        let is_final = issgd
+            .quartiles("eval_train_loss")
+            .median
+            .last()
+            .copied()
+            .unwrap_or(f64::NAN);
+        let sgd_final = sgd
+            .quartiles("eval_train_loss")
+            .median
+            .last()
+            .copied()
+            .unwrap_or(f64::NAN);
+        println!(
+            "fig2{panel}: final median train loss  ISSGD {is_final:.4}  SGD {sgd_final:.4}  (paper: ISSGD reaches lower loss faster)"
+        );
+    }
+    Ok(())
+}
+
+fn in_panels(panel: &str) -> Vec<(&'static str, String)> {
+    vec![
+        ("eval_train_loss", format!("fig2{panel}_train_loss.csv")),
+        ("eval_train_err", format!("fig2{panel}_train_err.csv")),
+    ]
+}
+
+/// Standalone driver.
+pub fn run(scale: &ExperimentScale) -> Result<SettingsRuns> {
+    let engine = engine_for(scale)?;
+    let runs = run_settings(scale, &engine)?;
+    emit(&runs)?;
+    Ok(runs)
+}

@@ -1,0 +1,38 @@
+//! Figure 3: test prediction error, ISSGD vs SGD, both settings.
+//! Shares runs with figure 2 (same training trajectories, different
+//! evaluation split).
+
+use anyhow::Result;
+
+use crate::metrics::write_figure_csv;
+
+use super::fig2::{run_settings, SettingsRuns};
+use super::runner::{engine_for, ExperimentScale};
+use super::results_dir;
+
+pub fn emit(runs: &SettingsRuns) -> Result<()> {
+    let dir = results_dir();
+    for (panel, issgd, sgd) in [
+        ("a", &runs.a_issgd, &runs.a_sgd),
+        ("b", &runs.b_issgd, &runs.b_sgd),
+    ] {
+        let is_q = issgd.quartiles("eval_test_err");
+        let sgd_q = sgd.quartiles("eval_test_err");
+        write_figure_csv(
+            &dir.join(format!("fig3{panel}_test_err.csv")),
+            &[("issgd", &is_q), ("sgd", &sgd_q)],
+        )?;
+        let is_final = is_q.median.last().copied().unwrap_or(f64::NAN);
+        let sgd_final = sgd_q.median.last().copied().unwrap_or(f64::NAN);
+        println!(
+            "fig3{panel}: final median test err  ISSGD {is_final:.4}  SGD {sgd_final:.4}"
+        );
+    }
+    Ok(())
+}
+
+pub fn run(scale: &ExperimentScale) -> Result<()> {
+    let engine = engine_for(scale)?;
+    let runs = run_settings(scale, &engine)?;
+    emit(&runs)
+}

@@ -1,0 +1,25 @@
+//! Experiment drivers: one per paper table/figure (DESIGN.md §5).
+//!
+//! Every driver runs multi-seed simulations, aggregates median/quartiles
+//! across seeds (the paper's 50-run tubes; seed count configurable), and
+//! writes one CSV per panel under the results directory, printing the
+//! paper-shaped summary rows to stdout.  `cargo bench` wraps the same
+//! drivers at reduced scale (see `rust/benches/`).
+
+pub mod adaptive;
+pub mod asgd;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod runner;
+pub mod staleness;
+pub mod table1;
+
+pub use runner::{ExperimentScale, MultiRun};
+
+use std::path::PathBuf;
+
+/// Where experiment CSVs go (`ISSGD_RESULTS` env var overrides).
+pub fn results_dir() -> PathBuf {
+    PathBuf::from(std::env::var("ISSGD_RESULTS").unwrap_or_else(|_| "results".to_string()))
+}

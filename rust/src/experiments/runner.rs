@@ -1,0 +1,110 @@
+//! Shared multi-seed experiment machinery.
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::coordinator::{run_sim_with_engine, SimOutcome};
+use crate::metrics::{quartiles_across_runs, QuartileSeries, RunRecorder};
+use crate::runtime::{artifacts_dir, Engine};
+use crate::log_info;
+
+/// Scale knobs shared by all drivers: the paper ran 50 seeds for hours on
+/// four GPUs; the default here is sized for a single-core CPU box.  Drivers
+/// multiply their own step counts off `steps`.
+#[derive(Debug, Clone)]
+pub struct ExperimentScale {
+    pub seeds: u64,
+    pub steps: u64,
+    pub n_examples: usize,
+    pub model: String,
+}
+
+impl Default for ExperimentScale {
+    fn default() -> Self {
+        ExperimentScale {
+            seeds: 5,
+            steps: 300,
+            n_examples: 2048,
+            model: "small".into(),
+        }
+    }
+}
+
+impl ExperimentScale {
+    /// Quick smoke scale against tiny artifacts (CI/tests).
+    pub fn smoke() -> Self {
+        ExperimentScale {
+            seeds: 2,
+            steps: 40,
+            n_examples: 512,
+            model: "tiny".into(),
+        }
+    }
+
+    /// Apply the scale to a config preset.
+    pub fn apply(&self, mut cfg: RunConfig) -> RunConfig {
+        cfg.steps = self.steps;
+        cfg.n_examples = self.n_examples;
+        cfg.model = self.model.clone();
+        cfg
+    }
+}
+
+/// The result of running one config across seeds.
+pub struct MultiRun {
+    pub recorders: Vec<RunRecorder>,
+    pub outcomes: Vec<SimOutcome>,
+}
+
+impl MultiRun {
+    /// Run `cfg` once per seed (seed = base + i), reusing one engine.
+    pub fn run(cfg: &RunConfig, engine: &Engine, seeds: u64, label: &str) -> Result<MultiRun> {
+        let mut recorders = Vec::new();
+        let mut outcomes = Vec::new();
+        for s in 0..seeds {
+            let mut c = cfg.clone();
+            c.seed = cfg.seed + s;
+            let out = run_sim_with_engine(&c, engine)?;
+            log_info!(
+                "exp",
+                "{label} seed {s}: final train/test err {:.4}/{:.4}",
+                out.final_err.0,
+                out.final_err.2
+            );
+            recorders.push(out.rec.clone());
+            outcomes.push(out);
+        }
+        Ok(MultiRun {
+            recorders,
+            outcomes,
+        })
+    }
+
+    /// Median/quartile series of a metric across the seeds.
+    pub fn quartiles(&self, metric: &str) -> QuartileSeries {
+        let refs: Vec<&RunRecorder> = self.recorders.iter().collect();
+        quartiles_across_runs(&refs, metric)
+    }
+
+    /// Per-seed tail means of a metric (the Table-1 statistic).
+    pub fn tail_means(&self, metric: &str, frac: f64) -> Vec<f64> {
+        self.recorders
+            .iter()
+            .filter_map(|r| r.tail_mean(metric, frac))
+            .collect()
+    }
+}
+
+/// Load the engine for a scale (helper shared by drivers).
+pub fn engine_for(scale: &ExperimentScale) -> Result<Engine> {
+    Engine::load(&artifacts_dir(&scale.model))
+}
+
+/// Mean of a slice (empty-safe).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        f64::NAN
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}

@@ -1,0 +1,91 @@
+//! Table 1: final test prediction error for SGD (ours) and ISSGD,
+//! averaged over the final 10% of recorded iterations, hyperparameter
+//! setting chosen by validation error — exactly the paper's protocol.
+
+use anyhow::Result;
+
+use super::fig2::{run_settings, SettingsRuns};
+use super::runner::{engine_for, mean, ExperimentScale, MultiRun};
+
+pub struct Table1Row {
+    pub method: &'static str,
+    pub setting: &'static str,
+    pub valid_err: f64,
+    pub test_err: f64,
+}
+
+/// Pick the better setting per method by validation error, report test.
+pub fn compute(runs: &SettingsRuns) -> Vec<Table1Row> {
+    let pick = |name: &'static str, a: &MultiRun, b: &MultiRun| -> Table1Row {
+        let stat = |mr: &MultiRun, metric: &str| mean(&mr.tail_means(metric, 0.1));
+        // Validation = final-10% average of test split stand-in: we record
+        // valid via final_err; use eval_test_err tail as test statistic and
+        // outcome valid errs for selection.
+        let a_valid = mean(
+            &a.outcomes
+                .iter()
+                .map(|o| o.final_err.1)
+                .collect::<Vec<_>>(),
+        );
+        let b_valid = mean(
+            &b.outcomes
+                .iter()
+                .map(|o| o.final_err.1)
+                .collect::<Vec<_>>(),
+        );
+        if a_valid <= b_valid {
+            Table1Row {
+                method: name,
+                setting: "a (lr .01, +10)",
+                valid_err: a_valid,
+                test_err: stat(a, "eval_test_err"),
+            }
+        } else {
+            Table1Row {
+                method: name,
+                setting: "b (lr .001, +1)",
+                valid_err: b_valid,
+                test_err: stat(b, "eval_test_err"),
+            }
+        }
+    };
+    vec![
+        pick("SGD (ours)", &runs.a_sgd, &runs.b_sgd),
+        pick("Importance Sampling SGD", &runs.a_issgd, &runs.b_issgd),
+    ]
+}
+
+pub fn emit(runs: &SettingsRuns) -> Result<Vec<Table1Row>> {
+    let rows = compute(runs);
+    println!("\nTable 1: test error (final-10% average, setting by validation)");
+    println!("{:-<78}", "");
+    println!("{:<28} {:<18} {:>12} {:>12}", "Model", "Setting", "Valid err", "Test err");
+    for r in &rows {
+        println!(
+            "{:<28} {:<18} {:>12.4} {:>12.4}",
+            r.method, r.setting, r.valid_err, r.test_err
+        );
+    }
+    println!(
+        "(paper: SGD 0.0754 vs ISSGD 0.0756 on permutation-invariant SVHN — \
+         near-identical final errors; the win is optimisation speed)"
+    );
+    // Persist as CSV too.
+    let dir = super::results_dir();
+    std::fs::create_dir_all(&dir)?;
+    let mut csv = String::from("method,setting,valid_err,test_err\n");
+    for r in &rows {
+        csv.push_str(&format!(
+            "{},{},{},{}\n",
+            r.method, r.setting, r.valid_err, r.test_err
+        ));
+    }
+    std::fs::write(dir.join("table1.csv"), csv)?;
+    Ok(rows)
+}
+
+pub fn run(scale: &ExperimentScale) -> Result<Vec<Table1Row>> {
+    let engine = engine_for(scale)?;
+    let runs = run_settings(scale, &engine)?;
+    emit(&runs)
+}

@@ -1,0 +1,34 @@
+//! # issgd — Distributed Importance Sampling SGD
+//!
+//! A rust + JAX + Pallas reproduction of *"Variance Reduction in SGD by
+//! Distributed Importance Sampling"* (Alain, Lamb, Sankar, Courville,
+//! Bengio; arXiv 1511.06481).
+//!
+//! Architecture (three layers, python never on the training path):
+//!
+//! * **L3 (this crate)** — the distributed coordinator: master ISSGD loop,
+//!   worker scoring loops, the weight-store "database" actor, samplers,
+//!   variance monitors, experiments and CLI.
+//! * **L2** — the permutation-invariant MLP with manual backprop, written
+//!   in JAX (`python/compile/model.py`) and AOT-lowered to HLO text.
+//! * **L1** — Pallas kernels for the per-example gradient-norm trick
+//!   (Proposition 1) and the fused dense layer
+//!   (`python/compile/kernels/`).
+//!
+//! Start with [`runtime::Engine`] to load artifacts and
+//! [`coordinator::Cluster`] to run the paper's master/worker/database
+//! topology; see `examples/quickstart.rs` for the 60-second tour.
+
+pub mod baseline;
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod sampler;
+pub mod util;
+pub mod variance;
+pub mod weightstore;

@@ -1,0 +1,317 @@
+//! `issgd` — CLI for the distributed importance-sampling SGD system.
+//!
+//! Subcommands:
+//!   train        run one training session (sim or live topology)
+//!   db-server    run the weight-store "database" actor on a TCP port
+//!   worker       run a standalone scoring worker against a remote store
+//!   experiment   regenerate a paper figure/table (fig2|fig3|fig4|table1|staleness|all)
+//!   info         print artifact/manifest information
+//!
+//! Examples:
+//!   issgd train --model tiny --steps 50 --trainer issgd
+//!   issgd db-server --addr 127.0.0.1:7070 --n-examples 4096
+//!   issgd worker --store 127.0.0.1:7070 --worker-id 0 --workers 3
+//!   issgd experiment fig4 --seeds 5 --steps 300
+//!   ISSGD_RESULTS=results issgd experiment all
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use issgd::config::RunConfig;
+use issgd::coordinator::{run_live, run_sim, LiveOptions};
+use issgd::experiments::{self, ExperimentScale};
+use issgd::log_info;
+use issgd::runtime::{artifacts_dir, Manifest};
+use issgd::util::cli::{self, Args};
+use issgd::util::logging;
+use issgd::weightstore::{server::Server, MemStore};
+
+const USAGE: &str = "\
+issgd — Distributed Importance Sampling SGD (Alain et al., 2015)
+
+USAGE: issgd <subcommand> [options]
+
+SUBCOMMANDS
+  train         one training session
+                  --model tiny|small|paper  --trainer issgd|sgd  --sync exact|relaxed
+                  --steps N --lr F --smoothing F --workers N --seed N
+                  --live            use real threads instead of the deterministic sim
+                  --store ADDR      (live) connect to a remote db-server
+                  --monitor-every N enable the variance monitor
+  db-server     run the weight store
+                  --addr HOST:PORT  --n-examples N  --init-weight F
+  worker        standalone scoring worker against a remote store
+                  --store ADDR --worker-id I --workers N --model NAME
+                  --n-examples N --seed N
+  experiment    regenerate paper artefacts: fig2|fig3|fig4|table1|staleness|asgd|adaptive|all
+                  --seeds N --steps N --n-examples N --model NAME
+  plot          render a result CSV as a terminal chart
+                  issgd plot results/fig4b_sqrt_trace.csv [--log-y] [--width N] [--height N]
+  info          print manifest info for --model
+Global: --log-level error|warn|info|debug|trace  --results DIR";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn value_opts() -> Vec<&'static str> {
+    let mut opts = RunConfig::CLI_OPTS.to_vec();
+    opts.extend([
+        "log-level", "addr", "store", "worker-id", "seeds", "results", "throttle-ms",
+        "width", "height",
+    ]);
+    opts
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    let args = cli::parse(argv, &value_opts()).map_err(|e| anyhow::anyhow!(e))?;
+    if let Some(level) = args.get("log-level") {
+        logging::set_level(
+            logging::level_from_str(level).with_context(|| format!("bad log level {level:?}"))?,
+        );
+    }
+    if let Some(dir) = args.get("results") {
+        std::env::set_var("ISSGD_RESULTS", dir);
+    }
+    let sub = match args.positional().first() {
+        Some(s) => s.as_str(),
+        None => {
+            println!("{USAGE}");
+            return Ok(());
+        }
+    };
+    match sub {
+        "train" => cmd_train(&args),
+        "db-server" => cmd_db_server(&args),
+        "worker" => cmd_worker(&args),
+        "experiment" => cmd_experiment(&args),
+        "plot" => cmd_plot(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?}\n{USAGE}"),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = RunConfig::default().apply_args(args)?;
+    let live = args.flag("live") || args.get("store").is_some();
+    log_info!(
+        "cli",
+        "training: model={} trainer={:?} sync={:?} steps={} workers={} ({})",
+        cfg.model,
+        cfg.trainer,
+        cfg.sync,
+        cfg.steps,
+        cfg.n_workers,
+        if live { "live" } else { "sim" }
+    );
+    let outcome = if live {
+        let opts = LiveOptions {
+            store_addr: args.get("store").map(String::from),
+            worker_throttle: match args.get_parse("throttle-ms", 0u64)? {
+                0 => None,
+                ms => Some(std::time::Duration::from_millis(ms)),
+            },
+            wait_for_first_scores: args.flag("wait"),
+        };
+        run_live(&cfg, &opts)?
+    } else {
+        run_sim(&cfg)?
+    };
+    let losses = outcome.rec.get("train_loss");
+    let last = losses.last().map(|s| s.value).unwrap_or(f64::NAN);
+    println!("steps:            {}", losses.len());
+    println!("final train loss: {last:.4}");
+    println!(
+        "final err (train/valid/test): {:.4} / {:.4} / {:.4}",
+        outcome.final_err.0, outcome.final_err.1, outcome.final_err.2
+    );
+    println!("examples scored by workers:   {}", outcome.scored);
+    println!(
+        "store ops: {} param pushes, {} weight pushes ({} weights), {} snapshots",
+        outcome.store_stats.param_pushes,
+        outcome.store_stats.weight_pushes,
+        outcome.store_stats.weights_written,
+        outcome.store_stats.snapshot_fetches
+    );
+    Ok(())
+}
+
+fn cmd_db_server(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:7070");
+    let n = args.get_parse("n-examples", 4096usize)?;
+    let init = args.get_parse("init-weight", 1.0f64)?;
+    // The store tracks train-split weights only.
+    let n_weights = issgd::coordinator::Master::store_size(&RunConfig {
+        n_examples: n,
+        ..RunConfig::default()
+    });
+    let store = Arc::new(MemStore::new(n_weights, init));
+    let server = Server::bind(addr, store)?;
+    log_info!(
+        "db",
+        "weight store listening on {} ({n_weights} weights)",
+        server.local_addr()?
+    );
+    server.serve()
+}
+
+fn cmd_worker(args: &Args) -> Result<()> {
+    use issgd::coordinator::WorkerState;
+    use issgd::data::{shards, split_indices, SplitSpec, SynthDataset, SynthSpec};
+    use issgd::runtime::Engine;
+    use std::sync::atomic::AtomicBool;
+
+    let addr = args.require("store").map_err(|e| anyhow::anyhow!(e))?;
+    let cfg = RunConfig::default().apply_args(args)?;
+    let worker_id = args.get_parse("worker-id", 0usize)?;
+    anyhow::ensure!(worker_id < cfg.n_workers, "worker-id out of range");
+
+    let engine = Engine::load_entries(&artifacts_dir(&cfg.model), &["grad_norms"])?;
+    let manifest = engine.manifest().clone();
+    let spec = if manifest.input_dim == 64 {
+        SynthSpec::tiny(cfg.n_examples)
+    } else {
+        SynthSpec {
+            dim: manifest.input_dim,
+            ..SynthSpec::svhn_like(cfg.n_examples)
+        }
+    };
+    let data = Arc::new(SynthDataset::generate(cfg.seed, spec));
+    let (train_idx, _, _) = split_indices(cfg.n_examples, SplitSpec::default());
+    let shard = shards(train_idx.len(), cfg.n_workers)[worker_id];
+    let store = Arc::new(issgd::weightstore::client::Client::connect(addr)?);
+    log_info!(
+        "worker",
+        "worker {worker_id}/{} scoring shard {}..{} against {addr}",
+        cfg.n_workers,
+        shard.start,
+        shard.end
+    );
+    let mut w = WorkerState::new(worker_id, shard, &manifest, data, Arc::new(train_idx), store);
+    let stop = AtomicBool::new(false); // runs until killed
+    w.run_live(&engine, &stop, None)
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let which = args
+        .positional()
+        .get(1)
+        .map(String::as_str)
+        .unwrap_or("all");
+    let mut scale = ExperimentScale::default();
+    scale.seeds = args.get_parse("seeds", scale.seeds)?;
+    scale.steps = args.get_parse("steps", scale.steps)?;
+    scale.n_examples = args.get_parse("n-examples", scale.n_examples)?;
+    if let Some(m) = args.get("model") {
+        scale.model = m.to_string();
+    }
+    log_info!(
+        "exp",
+        "experiment {which}: model={} seeds={} steps={} n={}",
+        scale.model,
+        scale.seeds,
+        scale.steps,
+        scale.n_examples
+    );
+    match which {
+        "fig2" => {
+            experiments::fig2::run(&scale)?;
+        }
+        "fig3" => experiments::fig3::run(&scale)?,
+        "fig4" => experiments::fig4::run(&scale)?,
+        "table1" => {
+            experiments::table1::run(&scale)?;
+        }
+        "staleness" => experiments::staleness::run(&scale)?,
+        "asgd" => {
+            experiments::asgd::run(&scale)?;
+        }
+        "adaptive" => {
+            experiments::adaptive::run(&scale)?;
+        }
+        "all" => {
+            // fig2/fig3/table1 share the four settings runs.
+            let engine = experiments::runner::engine_for(&scale)?;
+            let runs = experiments::fig2::run_settings(&scale, &engine)?;
+            experiments::fig2::emit(&runs)?;
+            experiments::fig3::emit(&runs)?;
+            experiments::table1::emit(&runs)?;
+            experiments::fig4::run(&scale)?;
+            experiments::staleness::run(&scale)?;
+            experiments::asgd::run(&scale)?;
+            experiments::adaptive::run(&scale)?;
+        }
+        other => bail!("unknown experiment {other:?} (fig2|fig3|fig4|table1|staleness|asgd|adaptive|all)"),
+    }
+    println!("CSVs written to {}", experiments::results_dir().display());
+    Ok(())
+}
+
+fn cmd_plot(args: &Args) -> Result<()> {
+    use issgd::util::csv::Table;
+    use issgd::util::plot::{render, PlotOptions, Series};
+
+    let path = args
+        .positional()
+        .get(1)
+        .context("usage: issgd plot <file.csv> [--log-y]")?;
+    let table = Table::load(std::path::Path::new(path))?;
+    let steps = table
+        .column("step")
+        .context("CSV has no 'step' column")?
+        .to_vec();
+    // Plot every *_median column (the quartile CSVs), else every non-step
+    // numeric column.
+    let mut names = table.columns_with_suffix("_median");
+    if names.is_empty() {
+        names = table
+            .columns
+            .iter()
+            .filter(|c| *c != "step")
+            .map(String::as_str)
+            .collect();
+    }
+    let series: Vec<Series> = names
+        .iter()
+        .map(|name| Series {
+            name: name.trim_end_matches("_median").to_string(),
+            xs: steps.clone(),
+            ys: table.column(name).unwrap().to_vec(),
+        })
+        .collect();
+    let opts = PlotOptions {
+        width: args.get_parse("width", 72usize)?,
+        height: args.get_parse("height", 20usize)?,
+        title: path.to_string(),
+        log_y: args.flag("log-y"),
+    };
+    print!("{}", render(&series, &opts));
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "small");
+    let dir = artifacts_dir(model);
+    let m = Manifest::load(&dir)?;
+    println!("config:       {}", m.config);
+    println!("artifacts:    {}", dir.display());
+    println!("dims:         {:?}", m.dims);
+    println!("n_params:     {}", m.n_params);
+    println!(
+        "batches:      train {}, score {}, eval {}",
+        m.batch_train, m.batch_score, m.batch_eval
+    );
+    for (name, file) in &m.artifacts {
+        println!("  entry point {name}: {file}");
+    }
+    Ok(())
+}

@@ -1,0 +1,284 @@
+//! Metrics: per-run time series, multi-seed aggregation (median/quartiles,
+//! the statistics the paper plots over its 50 runs), and CSV/JSON export
+//! consumed by the experiment drivers.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One sample of a named metric.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Sample {
+    /// Master step index at which the sample was taken.
+    pub step: u64,
+    /// Wall-clock seconds since run start.
+    pub time_s: f64,
+    pub value: f64,
+}
+
+/// All metrics of a single run.
+#[derive(Debug, Clone, Default)]
+pub struct RunRecorder {
+    series: BTreeMap<String, Vec<Sample>>,
+    start: Option<std::time::Instant>,
+}
+
+impl RunRecorder {
+    pub fn new() -> Self {
+        RunRecorder {
+            series: BTreeMap::new(),
+            start: Some(std::time::Instant::now()),
+        }
+    }
+
+    pub fn record(&mut self, name: &str, step: u64, value: f64) {
+        let time_s = self.start.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
+        self.record_at(name, step, time_s, value);
+    }
+
+    pub fn record_at(&mut self, name: &str, step: u64, time_s: f64, value: f64) {
+        self.series
+            .entry(name.to_string())
+            .or_default()
+            .push(Sample { step, time_s, value });
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.series.keys().map(String::as_str)
+    }
+
+    pub fn get(&self, name: &str) -> &[Sample] {
+        self.series.get(name).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Mean of the last `frac` (0..1] of samples — the paper's Table 1
+    /// statistic ("average over the final 10% of iterations").
+    pub fn tail_mean(&self, name: &str, frac: f64) -> Option<f64> {
+        let xs = self.get(name);
+        if xs.is_empty() {
+            return None;
+        }
+        let keep = ((xs.len() as f64 * frac).ceil() as usize).clamp(1, xs.len());
+        let tail = &xs[xs.len() - keep..];
+        Some(tail.iter().map(|s| s.value).sum::<f64>() / tail.len() as f64)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        for (name, samples) in &self.series {
+            let arr = samples
+                .iter()
+                .map(|s| {
+                    Json::Arr(vec![
+                        Json::Num(s.step as f64),
+                        Json::Num(s.time_s),
+                        Json::Num(s.value),
+                    ])
+                })
+                .collect();
+            obj.insert(name.clone(), Json::Arr(arr));
+        }
+        Json::Obj(obj)
+    }
+}
+
+/// Quartile summary of one metric across runs, per step.
+#[derive(Debug, Clone)]
+pub struct QuartileSeries {
+    pub steps: Vec<u64>,
+    pub q1: Vec<f64>,
+    pub median: Vec<f64>,
+    pub q3: Vec<f64>,
+}
+
+/// Median (and quartiles) across runs at each common step — the paper's
+/// "thicker line plus a tube containing half the trajectories" (Fig. 2).
+/// Steps present in only some runs are dropped (runs are normally
+/// recorded on identical schedules).
+pub fn quartiles_across_runs(runs: &[&RunRecorder], name: &str) -> QuartileSeries {
+    let mut by_step: BTreeMap<u64, Vec<f64>> = BTreeMap::new();
+    for run in runs {
+        for s in run.get(name) {
+            by_step.entry(s.step).or_default().push(s.value);
+        }
+    }
+    let n_runs = runs.len();
+    let mut out = QuartileSeries {
+        steps: Vec::new(),
+        q1: Vec::new(),
+        median: Vec::new(),
+        q3: Vec::new(),
+    };
+    for (step, mut vals) in by_step {
+        if vals.len() != n_runs {
+            continue;
+        }
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        out.steps.push(step);
+        out.q1.push(quantile_sorted(&vals, 0.25));
+        out.median.push(quantile_sorted(&vals, 0.5));
+        out.q3.push(quantile_sorted(&vals, 0.75));
+    }
+    out
+}
+
+/// Linear-interpolated quantile of an ascending-sorted slice.
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=1.0).contains(&q));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Write `series` as CSV: `step,q1,median,q3`.
+pub fn write_quartile_csv(path: &Path, series: &QuartileSeries) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    writeln!(f, "step,q1,median,q3")?;
+    for i in 0..series.steps.len() {
+        writeln!(
+            f,
+            "{},{},{},{}",
+            series.steps[i], series.q1[i], series.median[i], series.q3[i]
+        )?;
+    }
+    Ok(())
+}
+
+/// Write several same-schedule quartile series side by side:
+/// `step,<name1>_median,<name1>_q1,... ` — the "one CSV per figure" format.
+pub fn write_figure_csv(path: &Path, named: &[(&str, &QuartileSeries)]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    anyhow::ensure!(!named.is_empty(), "no series");
+    let steps = &named[0].1.steps;
+    for (name, s) in named {
+        anyhow::ensure!(
+            &s.steps == steps,
+            "series {name} has a different step schedule"
+        );
+    }
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let mut header = String::from("step");
+    for (name, _) in named {
+        header.push_str(&format!(",{name}_q1,{name}_median,{name}_q3"));
+    }
+    writeln!(f, "{header}")?;
+    for i in 0..steps.len() {
+        let mut row = format!("{}", steps[i]);
+        for (_, s) in named {
+            row.push_str(&format!(",{},{},{}", s.q1[i], s.median[i], s.q3[i]));
+        }
+        writeln!(f, "{row}")?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_read_back() {
+        let mut r = RunRecorder::new();
+        r.record_at("loss", 0, 0.0, 2.0);
+        r.record_at("loss", 1, 0.1, 1.0);
+        r.record_at("acc", 0, 0.0, 0.5);
+        assert_eq!(r.get("loss").len(), 2);
+        assert_eq!(r.get("missing").len(), 0);
+        assert_eq!(r.names().count(), 2);
+    }
+
+    #[test]
+    fn tail_mean_last_fraction() {
+        let mut r = RunRecorder::new();
+        for i in 0..10 {
+            r.record_at("x", i, 0.0, i as f64);
+        }
+        // last 10% of 10 samples = just the last one
+        assert_eq!(r.tail_mean("x", 0.1), Some(9.0));
+        // last 50% = mean of 5..9
+        assert_eq!(r.tail_mean("x", 0.5), Some(7.0));
+        assert_eq!(r.tail_mean("nope", 0.1), None);
+    }
+
+    #[test]
+    fn quantiles_interpolate() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(quantile_sorted(&xs, 0.0), 1.0);
+        assert_eq!(quantile_sorted(&xs, 1.0), 4.0);
+        assert_eq!(quantile_sorted(&xs, 0.5), 2.5);
+    }
+
+    #[test]
+    fn quartiles_across_three_runs() {
+        let mut runs = Vec::new();
+        for v in [1.0, 2.0, 3.0] {
+            let mut r = RunRecorder::new();
+            r.record_at("m", 0, 0.0, v);
+            r.record_at("m", 5, 0.0, v * 10.0);
+            runs.push(r);
+        }
+        let refs: Vec<&RunRecorder> = runs.iter().collect();
+        let q = quartiles_across_runs(&refs, "m");
+        assert_eq!(q.steps, vec![0, 5]);
+        assert_eq!(q.median, vec![2.0, 20.0]);
+        assert_eq!(q.q1, vec![1.5, 15.0]);
+        assert_eq!(q.q3, vec![2.5, 25.0]);
+    }
+
+    #[test]
+    fn partial_steps_dropped() {
+        let mut a = RunRecorder::new();
+        a.record_at("m", 0, 0.0, 1.0);
+        a.record_at("m", 1, 0.0, 1.0);
+        let mut b = RunRecorder::new();
+        b.record_at("m", 0, 0.0, 2.0);
+        let q = quartiles_across_runs(&[&a, &b], "m");
+        assert_eq!(q.steps, vec![0]); // step 1 missing from run b
+    }
+
+    #[test]
+    fn csv_writers() {
+        let dir = std::env::temp_dir().join(format!("issgd-metrics-{}", std::process::id()));
+        let s = QuartileSeries {
+            steps: vec![0, 1],
+            q1: vec![0.1, 0.2],
+            median: vec![0.5, 0.6],
+            q3: vec![0.9, 1.0],
+        };
+        let p1 = dir.join("one.csv");
+        write_quartile_csv(&p1, &s).unwrap();
+        let text = std::fs::read_to_string(&p1).unwrap();
+        assert!(text.starts_with("step,q1,median,q3\n0,0.1,0.5,0.9"));
+        let p2 = dir.join("fig.csv");
+        write_figure_csv(&p2, &[("a", &s), ("b", &s)]).unwrap();
+        let text = std::fs::read_to_string(&p2).unwrap();
+        assert!(text.contains("a_q1,a_median,a_q3,b_q1"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn json_export_parses() {
+        let mut r = RunRecorder::new();
+        r.record_at("loss", 3, 1.5, 0.25);
+        let j = r.to_json();
+        let arr = j.get("loss").unwrap().as_arr().unwrap();
+        assert_eq!(arr[0].as_arr().unwrap()[0].as_usize().unwrap(), 3);
+    }
+}

@@ -1,0 +1,166 @@
+//! Checkpointing: persist and restore training state.
+//!
+//! Format: a small JSON header (model config, step, version, seed, shape
+//! fingerprint) followed by the raw little-endian f32 parameter blob —
+//! the same wire format the weight store broadcasts, so a checkpoint is
+//! byte-compatible with `ParamSet::to_bytes`.  Writes go through a temp
+//! file + rename for crash safety.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::Manifest;
+use crate::util::json::Json;
+
+use super::ParamSet;
+
+const MAGIC: &[u8; 8] = b"ISSGDCKP";
+
+/// Everything needed to resume a run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub model: String,
+    pub step: u64,
+    pub version: u64,
+    pub seed: u64,
+    pub params: ParamSet,
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let header = Json::obj(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("step", Json::Num(self.step as f64)),
+            ("version", Json::Num(self.version as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("n_params", Json::Num(self.params.n_params() as f64)),
+            (
+                "layer_dims",
+                Json::Arr(
+                    self.params
+                        .layers
+                        .iter()
+                        .map(|l| {
+                            Json::Arr(vec![Json::Num(l.d_in as f64), Json::Num(l.d_out as f64)])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+        .to_string();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let tmp = path.with_extension("ckpt.tmp");
+        {
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            f.write_all(MAGIC)?;
+            f.write_all(&(header.len() as u32).to_le_bytes())?;
+            f.write_all(header.as_bytes())?;
+            f.write_all(&self.params.to_bytes())?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    /// Load and validate against the manifest the engine will run with.
+    pub fn load(path: &Path, manifest: &Manifest) -> Result<Checkpoint> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening checkpoint {}", path.display()))?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == MAGIC, "not an issgd checkpoint");
+        let mut len_b = [0u8; 4];
+        f.read_exact(&mut len_b)?;
+        let mut header = vec![0u8; u32::from_le_bytes(len_b) as usize];
+        f.read_exact(&mut header)?;
+        let header = Json::parse(std::str::from_utf8(&header)?)
+            .map_err(|e| anyhow::anyhow!("checkpoint header: {e}"))?;
+        let model = header.req_str("model")?.to_string();
+        anyhow::ensure!(
+            model == manifest.config,
+            "checkpoint is for model {model:?}, engine runs {:?}",
+            manifest.config
+        );
+        let n_params = header.req_usize("n_params")?;
+        anyhow::ensure!(
+            n_params == manifest.n_params,
+            "checkpoint has {n_params} params, manifest expects {}",
+            manifest.n_params
+        );
+        let mut blob = Vec::new();
+        f.read_to_end(&mut blob)?;
+        let params = ParamSet::from_bytes(manifest, &blob)?;
+        Ok(Checkpoint {
+            model,
+            step: header.req_usize("step")? as u64,
+            version: header.req_usize("version")? as u64,
+            seed: header.req_usize("seed")? as u64,
+            params,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::LayerSpec;
+    use crate::util::rng::Pcg64;
+
+    fn manifest() -> Manifest {
+        Manifest::synthetic_for_tests(vec![
+            LayerSpec { d_in: 6, d_out: 4 },
+            LayerSpec { d_in: 4, d_out: 2 },
+        ])
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("issgd-ckpt-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip() {
+        let m = manifest();
+        let ckpt = Checkpoint {
+            model: "synthetic".into(),
+            step: 123,
+            version: 45,
+            seed: 6,
+            params: ParamSet::init_he(&m, &mut Pcg64::seeded(1)),
+        };
+        let p = tmp("roundtrip");
+        ckpt.save(&p).unwrap();
+        let back = Checkpoint::load(&p, &m).unwrap();
+        assert_eq!(back, ckpt);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_model() {
+        let m = manifest();
+        let ckpt = Checkpoint {
+            model: "synthetic".into(),
+            step: 0,
+            version: 0,
+            seed: 0,
+            params: ParamSet::init_he(&m, &mut Pcg64::seeded(2)),
+        };
+        let p = tmp("wrong-model");
+        ckpt.save(&p).unwrap();
+        let other = Manifest::synthetic_for_tests(vec![LayerSpec { d_in: 6, d_out: 6 }]);
+        assert!(Checkpoint::load(&p, &other).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let p = tmp("corrupt");
+        std::fs::write(&p, b"ISSGDCKPgarbage").unwrap();
+        assert!(Checkpoint::load(&p, &manifest()).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

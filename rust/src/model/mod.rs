@@ -1,0 +1,193 @@
+//! Host-side model parameters: initialisation, (de)serialisation for the
+//! weight-store wire, and conversion to the flat `(W_0, b_0, ...)` operand
+//! list the AOT entry points expect.
+//!
+//! The actual math lives in the HLO artifacts; rust only owns the bytes.
+
+pub mod checkpoint;
+
+pub use checkpoint::Checkpoint;
+
+use anyhow::Result;
+
+use crate::runtime::Manifest;
+use crate::util::rng::Pcg64;
+
+/// One dense layer's parameters, row-major `W: (d_in, d_out)` + `b: (d_out,)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Layer {
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+    pub d_in: usize,
+    pub d_out: usize,
+}
+
+/// Full parameter set for one model config.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSet {
+    pub layers: Vec<Layer>,
+}
+
+impl ParamSet {
+    /// He-normal initialisation (matches the python-side `init_params`
+    /// convention: std = sqrt(2/d_in), zero biases).  The exact draws
+    /// differ from jax's — irrelevant, since rust owns initialisation in
+    /// every run path.
+    pub fn init_he(manifest: &Manifest, rng: &mut Pcg64) -> ParamSet {
+        let layers = manifest
+            .layers
+            .iter()
+            .map(|spec| {
+                let std = (2.0 / spec.d_in as f32).sqrt();
+                let mut w = vec![0f32; spec.d_in * spec.d_out];
+                rng.fill_gaussian(&mut w, std);
+                Layer {
+                    w,
+                    b: vec![0f32; spec.d_out],
+                    d_in: spec.d_in,
+                    d_out: spec.d_out,
+                }
+            })
+            .collect();
+        ParamSet { layers }
+    }
+
+    /// Total scalar parameter count.
+    pub fn n_params(&self) -> usize {
+        self.layers.iter().map(|l| l.w.len() + l.b.len()).sum()
+    }
+
+    /// Serialise to the wire format used for master→worker broadcast:
+    /// plain little-endian f32s in layer order (shapes come from the
+    /// manifest both sides share).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.n_params() * 4);
+        for layer in &self.layers {
+            for v in layer.w.iter().chain(layer.b.iter()) {
+                out.extend(v.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    /// Inverse of [`ParamSet::to_bytes`]; validates the byte count against
+    /// the manifest.
+    pub fn from_bytes(manifest: &Manifest, bytes: &[u8]) -> Result<ParamSet> {
+        let expect = manifest.n_params * 4;
+        anyhow::ensure!(
+            bytes.len() == expect,
+            "parameter blob is {} bytes, manifest expects {}",
+            bytes.len(),
+            expect
+        );
+        let mut pos = 0usize;
+        let mut take = |n: usize| {
+            let s = &bytes[pos..pos + n * 4];
+            pos += n * 4;
+            s.chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect::<Vec<f32>>()
+        };
+        let layers = manifest
+            .layers
+            .iter()
+            .map(|spec| Layer {
+                w: take(spec.d_in * spec.d_out),
+                b: take(spec.d_out),
+                d_in: spec.d_in,
+                d_out: spec.d_out,
+            })
+            .collect();
+        Ok(ParamSet { layers })
+    }
+
+    /// L2 norm of the flattened parameter vector (monitoring).
+    pub fn l2_norm(&self) -> f64 {
+        self.layers
+            .iter()
+            .flat_map(|l| l.w.iter().chain(l.b.iter()))
+            .map(|&v| (v as f64) * (v as f64))
+            .sum::<f64>()
+            .sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::LayerSpec;
+
+    fn manifest() -> Manifest {
+        Manifest::synthetic_for_tests(vec![
+            LayerSpec { d_in: 8, d_out: 4 },
+            LayerSpec { d_in: 4, d_out: 3 },
+        ])
+    }
+
+    #[test]
+    fn init_shapes_and_counts() {
+        let m = manifest();
+        let p = ParamSet::init_he(&m, &mut Pcg64::seeded(1));
+        assert_eq!(p.layers.len(), 2);
+        assert_eq!(p.layers[0].w.len(), 32);
+        assert_eq!(p.layers[1].b.len(), 3);
+        assert_eq!(p.n_params(), 32 + 4 + 12 + 3);
+        assert_eq!(p.n_params(), m.n_params);
+        // biases zero, weights not all zero
+        assert!(p.layers[0].b.iter().all(|&v| v == 0.0));
+        assert!(p.layers[0].w.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn init_is_deterministic_per_seed() {
+        let m = manifest();
+        let a = ParamSet::init_he(&m, &mut Pcg64::seeded(9));
+        let b = ParamSet::init_he(&m, &mut Pcg64::seeded(9));
+        let c = ParamSet::init_he(&m, &mut Pcg64::seeded(10));
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn he_std_is_plausible() {
+        let m = Manifest::synthetic_for_tests(vec![LayerSpec {
+            d_in: 512,
+            d_out: 256,
+        }]);
+        let p = ParamSet::init_he(&m, &mut Pcg64::seeded(2));
+        let w = &p.layers[0].w;
+        let mean: f64 = w.iter().map(|&v| v as f64).sum::<f64>() / w.len() as f64;
+        let var: f64 =
+            w.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / w.len() as f64;
+        let want = 2.0 / 512.0;
+        assert!(mean.abs() < 0.002, "mean {mean}");
+        assert!((var - want).abs() / want < 0.1, "var {var} want {want}");
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let m = manifest();
+        let p = ParamSet::init_he(&m, &mut Pcg64::seeded(3));
+        let bytes = p.to_bytes();
+        assert_eq!(bytes.len(), p.n_params() * 4);
+        let q = ParamSet::from_bytes(&m, &bytes).unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn from_bytes_validates_length() {
+        let m = manifest();
+        assert!(ParamSet::from_bytes(&m, &[0u8; 7]).is_err());
+    }
+
+    #[test]
+    fn l2_norm_zero_for_zero_params() {
+        let m = manifest();
+        let mut p = ParamSet::init_he(&m, &mut Pcg64::seeded(4));
+        for l in &mut p.layers {
+            l.w.fill(0.0);
+            l.b.fill(0.0);
+        }
+        assert_eq!(p.l2_norm(), 0.0);
+    }
+}

@@ -1,0 +1,305 @@
+//! PJRT execution engine: loads the HLO-text artifacts once, compiles them
+//! on the CPU PJRT client, and exposes typed step functions to the
+//! coordinator.  This is the only module that touches the `xla` crate on
+//! the hot path.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `client.compile` → `execute`.  Outputs
+//! are single tuple literals (the AOT side lowers with `return_tuple=True`)
+//! decomposed with `Literal::to_tuple`.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use super::Manifest;
+use crate::model::ParamSet;
+
+/// Result of one training step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepOutput {
+    pub loss: f32,
+}
+
+/// Result of one scoring call over a batch.
+#[derive(Debug, Clone)]
+pub struct ScoreOutput {
+    /// Per-example squared gradient norms `||g(x_n)||^2`.
+    pub sqnorms: Vec<f32>,
+    /// Per-example cross-entropy losses.
+    pub losses: Vec<f32>,
+}
+
+/// Result of one evaluation call over a batch.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalOutput {
+    pub sum_loss: f32,
+    pub n_correct: f32,
+}
+
+/// Result of one ASGD peer step (paper §6 extension).
+#[derive(Debug, Clone)]
+pub struct PeerOutput {
+    /// Flattened weighted gradient in layer order (W_0, b_0, ...), ready
+    /// for the parameter server's `apply_grad`.
+    pub grad_flat: Vec<f32>,
+    pub loss: f32,
+    /// Per-example squared gradient norms of the unweighted loss — the
+    /// importance weights obtained "at the same time" (§6).
+    pub sqnorms: Vec<f32>,
+}
+
+pub struct Engine {
+    manifest: Manifest,
+    #[allow(dead_code)]
+    client: PjRtClient,
+    train_step: Option<PjRtLoadedExecutable>,
+    grad_norms: Option<PjRtLoadedExecutable>,
+    peer_step: Option<PjRtLoadedExecutable>,
+    eval_step: Option<PjRtLoadedExecutable>,
+    grad_mean_sqnorm: Option<PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    const ALL_ENTRIES: &'static [&'static str] = &[
+        "train_step",
+        "grad_norms",
+        "peer_step",
+        "eval_step",
+        "grad_mean_sqnorm",
+    ];
+
+    /// Load and compile all entry points of a config directory.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        Self::load_entries(dir, Self::ALL_ENTRIES)
+    }
+
+    /// Load and compile only the named entry points (e.g. a worker only
+    /// needs `grad_norms` — compiling the rest wastes startup time, and
+    /// every live worker thread owns its own engine because `PjRtClient`
+    /// is not `Send`).
+    pub fn load_entries(dir: &Path, entries: &[&str]) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        Self::with_manifest_entries(manifest, entries)
+    }
+
+    pub fn with_manifest(manifest: Manifest) -> Result<Engine> {
+        Self::with_manifest_entries(manifest, Self::ALL_ENTRIES)
+    }
+
+    pub fn with_manifest_entries(manifest: Manifest, entries: &[&str]) -> Result<Engine> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let compile = |name: &str| -> Result<Option<PjRtLoadedExecutable>> {
+            if !entries.contains(&name) {
+                return Ok(None);
+            }
+            let path = manifest.artifact_path(name)?;
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))
+                .map(Some)
+        };
+        for e in entries {
+            anyhow::ensure!(Self::ALL_ENTRIES.contains(e), "unknown entry point {e:?}");
+        }
+        Ok(Engine {
+            train_step: compile("train_step")?,
+            grad_norms: compile("grad_norms")?,
+            peer_step: compile("peer_step")?,
+            eval_step: compile("eval_step")?,
+            grad_mean_sqnorm: compile("grad_mean_sqnorm")?,
+            manifest,
+            client,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    // -- buffer plumbing ----------------------------------------------------
+    //
+    // Inputs go host -> device via `buffer_from_host_buffer` + `execute_b`.
+    // Never use `execute::<Literal>` here: xla-rs 0.1.6's C++ `execute`
+    // converts each input literal to a device buffer, `release()`s it and
+    // never frees it — a per-call leak proportional to the argument sizes
+    // (~8 MB/step for the `small` config; found the hard way, see
+    // EXPERIMENTS.md §Perf).  `execute_b` leaves input ownership with us,
+    // and `PjRtBuffer`'s Drop frees device memory correctly.  As a bonus
+    // this path performs one host->device copy instead of literal-building
+    // plus transfer.
+
+    fn buf_2d(&self, data: &[f32], rows: usize, cols: usize) -> Result<PjRtBuffer> {
+        anyhow::ensure!(
+            data.len() == rows * cols,
+            "buffer holds {} values, shape ({rows},{cols}) needs {}",
+            data.len(),
+            rows * cols
+        );
+        Ok(self.client.buffer_from_host_buffer(data, &[rows, cols], None)?)
+    }
+
+    fn buf_1d(&self, data: &[f32]) -> Result<PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, &[data.len()], None)?)
+    }
+
+    fn params_to_buffers(&self, params: &ParamSet, out: &mut Vec<PjRtBuffer>) -> Result<()> {
+        anyhow::ensure!(
+            params.layers.len() == self.manifest.layers.len(),
+            "param set has {} layers, manifest {}",
+            params.layers.len(),
+            self.manifest.layers.len()
+        );
+        for layer in &params.layers {
+            out.push(self.buf_2d(&layer.w, layer.d_in, layer.d_out)?);
+            out.push(self.buf_1d(&layer.b)?);
+        }
+        Ok(())
+    }
+
+    fn literals_to_params(&self, literals: &[Literal]) -> Result<ParamSet> {
+        let specs = &self.manifest.layers;
+        anyhow::ensure!(
+            literals.len() == 2 * specs.len(),
+            "expected {} param literals, got {}",
+            2 * specs.len(),
+            literals.len()
+        );
+        let mut layers = Vec::with_capacity(specs.len());
+        for (i, spec) in specs.iter().enumerate() {
+            let w = literals[2 * i].to_vec::<f32>()?;
+            let b = literals[2 * i + 1].to_vec::<f32>()?;
+            anyhow::ensure!(w.len() == spec.d_in * spec.d_out && b.len() == spec.d_out);
+            layers.push(crate::model::Layer {
+                w,
+                b,
+                d_in: spec.d_in,
+                d_out: spec.d_out,
+            });
+        }
+        Ok(ParamSet { layers })
+    }
+
+    fn run(&self, exe: &PjRtLoadedExecutable, args: &[PjRtBuffer]) -> Result<Vec<Literal>> {
+        let result = exe.execute_b::<PjRtBuffer>(args)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+
+    // -- typed entry points ---------------------------------------------------
+
+    /// One SGD step.  `x` is `(M, d)` row-major, `y` one-hot `(M, C)`,
+    /// `coef` the per-slot loss coefficients (§4.1), `lr` the step size.
+    /// On success `params` is replaced by the updated parameters.
+    pub fn train_step(
+        &self,
+        params: &mut ParamSet,
+        x: &[f32],
+        y: &[f32],
+        coef: &[f32],
+        lr: f32,
+    ) -> Result<StepOutput> {
+        let m = self.manifest.batch_train;
+        anyhow::ensure!(coef.len() == m, "coef len {} != batch {m}", coef.len());
+        let mut args = Vec::with_capacity(2 * self.manifest.layers.len() + 4);
+        self.params_to_buffers(params, &mut args)?;
+        args.push(self.buf_2d(x, m, self.manifest.input_dim)?);
+        args.push(self.buf_2d(y, m, self.manifest.n_classes)?);
+        args.push(self.buf_1d(coef)?);
+        args.push(self.buf_1d(&[lr])?);
+        let exe = self.train_step.as_ref().context("train_step not loaded")?;
+        let outputs = self.run(exe, &args)?;
+        let np = 2 * self.manifest.layers.len();
+        anyhow::ensure!(outputs.len() == np + 1, "train_step returned {} values", outputs.len());
+        *params = self.literals_to_params(&outputs[..np])?;
+        let loss = outputs[np].get_first_element::<f32>()?;
+        Ok(StepOutput { loss })
+    }
+
+    /// One ASGD peer step (paper §6): returns the weighted minibatch
+    /// gradient (flattened, for `WeightStore::apply_grad`) together with
+    /// the per-example squared gradient norms of the unweighted loss.
+    pub fn peer_step(
+        &self,
+        params: &ParamSet,
+        x: &[f32],
+        y: &[f32],
+        coef: &[f32],
+    ) -> Result<PeerOutput> {
+        let m = self.manifest.batch_train;
+        anyhow::ensure!(coef.len() == m, "coef len {} != batch {m}", coef.len());
+        let mut args = Vec::with_capacity(2 * self.manifest.layers.len() + 3);
+        self.params_to_buffers(params, &mut args)?;
+        args.push(self.buf_2d(x, m, self.manifest.input_dim)?);
+        args.push(self.buf_2d(y, m, self.manifest.n_classes)?);
+        args.push(self.buf_1d(coef)?);
+        let exe = self.peer_step.as_ref().context("peer_step not loaded")?;
+        let outputs = self.run(exe, &args)?;
+        let np = 2 * self.manifest.layers.len();
+        anyhow::ensure!(
+            outputs.len() == np + 2,
+            "peer_step returned {} values",
+            outputs.len()
+        );
+        let mut grad_flat = Vec::with_capacity(self.manifest.n_params);
+        for lit in &outputs[..np] {
+            grad_flat.extend(lit.to_vec::<f32>()?);
+        }
+        Ok(PeerOutput {
+            grad_flat,
+            loss: outputs[np].get_first_element::<f32>()?,
+            sqnorms: outputs[np + 1].to_vec::<f32>()?,
+        })
+    }
+
+    /// Per-example gradient norms over a scoring batch of size `batch_score`.
+    pub fn grad_norms(&self, params: &ParamSet, x: &[f32], y: &[f32]) -> Result<ScoreOutput> {
+        let b = self.manifest.batch_score;
+        let mut args = Vec::with_capacity(2 * self.manifest.layers.len() + 2);
+        self.params_to_buffers(params, &mut args)?;
+        args.push(self.buf_2d(x, b, self.manifest.input_dim)?);
+        args.push(self.buf_2d(y, b, self.manifest.n_classes)?);
+        let exe = self.grad_norms.as_ref().context("grad_norms not loaded")?;
+        let outputs = self.run(exe, &args)?;
+        anyhow::ensure!(outputs.len() == 2, "grad_norms returned {} values", outputs.len());
+        Ok(ScoreOutput {
+            sqnorms: outputs[0].to_vec::<f32>()?,
+            losses: outputs[1].to_vec::<f32>()?,
+        })
+    }
+
+    /// Sum-loss and correct-count over an eval batch of size `batch_eval`.
+    pub fn eval_step(&self, params: &ParamSet, x: &[f32], y: &[f32]) -> Result<EvalOutput> {
+        let e = self.manifest.batch_eval;
+        let mut args = Vec::with_capacity(2 * self.manifest.layers.len() + 2);
+        self.params_to_buffers(params, &mut args)?;
+        args.push(self.buf_2d(x, e, self.manifest.input_dim)?);
+        args.push(self.buf_2d(y, e, self.manifest.n_classes)?);
+        let exe = self.eval_step.as_ref().context("eval_step not loaded")?;
+        let outputs = self.run(exe, &args)?;
+        anyhow::ensure!(outputs.len() == 2, "eval_step returned {} values", outputs.len());
+        Ok(EvalOutput {
+            sum_loss: outputs[0].get_first_element::<f32>()?,
+            n_correct: outputs[1].get_first_element::<f32>()?,
+        })
+    }
+
+    /// `||grad of mean CE||^2` over a batch of size `batch_train` — the
+    /// §B.2 estimator component for `||g_TRUE||^2`.
+    pub fn grad_mean_sqnorm(&self, params: &ParamSet, x: &[f32], y: &[f32]) -> Result<f32> {
+        let m = self.manifest.batch_train;
+        let mut args = Vec::with_capacity(2 * self.manifest.layers.len() + 2);
+        self.params_to_buffers(params, &mut args)?;
+        args.push(self.buf_2d(x, m, self.manifest.input_dim)?);
+        args.push(self.buf_2d(y, m, self.manifest.n_classes)?);
+        let exe = self.grad_mean_sqnorm.as_ref().context("grad_mean_sqnorm not loaded")?;
+        let outputs = self.run(exe, &args)?;
+        anyhow::ensure!(outputs.len() == 1);
+        Ok(outputs[0].get_first_element::<f32>()?)
+    }
+}

@@ -1,0 +1,196 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime.  One `manifest.json` per model config describes layer
+//! shapes, the shape-specialised batch sizes, and the HLO artifact files.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerSpec {
+    pub d_in: usize,
+    pub d_out: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Config name (`tiny`, `small`, `paper`, ...).
+    pub config: String,
+    /// Directory the manifest was loaded from (artifact files live here).
+    pub dir: PathBuf,
+    /// Layer widths `input -> hidden... -> classes`.
+    pub dims: Vec<usize>,
+    pub layers: Vec<LayerSpec>,
+    pub n_params: usize,
+    pub input_dim: usize,
+    pub n_classes: usize,
+    /// Master SGD minibatch size M.
+    pub batch_train: usize,
+    /// Worker scoring batch size B.
+    pub batch_score: usize,
+    /// Evaluation batch size E.
+    pub batch_eval: usize,
+    /// entry point name -> artifact file name.
+    pub artifacts: Vec<(String, String)>,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let json = Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        Self::from_json(&json, dir)
+    }
+
+    fn from_json(json: &Json, dir: &Path) -> Result<Manifest> {
+        let dims: Vec<usize> = json
+            .req_arr("dims")?
+            .iter()
+            .map(|v| v.as_usize().context("dims entry"))
+            .collect::<Result<_>>()?;
+        anyhow::ensure!(dims.len() >= 2, "need at least input+output dims");
+        let layers: Vec<LayerSpec> = json
+            .req_arr("layers")?
+            .iter()
+            .map(|l| {
+                let w = l.req_arr("w_shape")?;
+                anyhow::ensure!(w.len() == 2, "w_shape must be 2-d");
+                Ok(LayerSpec {
+                    d_in: w[0].as_usize().context("w_shape[0]")?,
+                    d_out: w[1].as_usize().context("w_shape[1]")?,
+                })
+            })
+            .collect::<Result<_>>()?;
+        anyhow::ensure!(layers.len() == dims.len() - 1, "layer count mismatch");
+        let artifacts = json
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .context("missing artifacts object")?
+            .iter()
+            .map(|(name, spec)| Ok((name.clone(), spec.req_str("file")?.to_string())))
+            .collect::<Result<Vec<_>>>()?;
+        let m = Manifest {
+            config: json.req_str("config")?.to_string(),
+            dir: dir.to_path_buf(),
+            n_params: json.req_usize("n_params")?,
+            input_dim: json.req_usize("input_dim")?,
+            n_classes: json.req_usize("n_classes")?,
+            batch_train: json.req_usize("batch_train")?,
+            batch_score: json.req_usize("batch_score")?,
+            batch_eval: json.req_usize("batch_eval")?,
+            dims,
+            layers,
+            artifacts,
+        };
+        // Cross-validate the parameter count against layer shapes.
+        let computed: usize = m.layers.iter().map(|l| l.d_in * l.d_out + l.d_out).sum();
+        anyhow::ensure!(
+            computed == m.n_params,
+            "n_params {} disagrees with layer shapes {}",
+            m.n_params,
+            computed
+        );
+        anyhow::ensure!(m.input_dim == m.dims[0], "input_dim/dims mismatch");
+        anyhow::ensure!(
+            m.n_classes == *m.dims.last().unwrap(),
+            "n_classes/dims mismatch"
+        );
+        Ok(m)
+    }
+
+    /// Absolute path of an artifact by entry-point name.
+    pub fn artifact_path(&self, name: &str) -> Result<PathBuf> {
+        let file = self
+            .artifacts
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, f)| f)
+            .with_context(|| format!("manifest has no artifact {name:?}"))?;
+        Ok(self.dir.join(file))
+    }
+
+    /// A manifest not backed by files — for unit tests of components that
+    /// only need shapes (e.g. `ParamSet`).
+    pub fn synthetic_for_tests(layers: Vec<LayerSpec>) -> Manifest {
+        let mut dims = vec![layers[0].d_in];
+        dims.extend(layers.iter().map(|l| l.d_out));
+        let n_params = layers.iter().map(|l| l.d_in * l.d_out + l.d_out).sum();
+        Manifest {
+            config: "synthetic".into(),
+            dir: PathBuf::new(),
+            input_dim: dims[0],
+            n_classes: *dims.last().unwrap(),
+            dims,
+            layers,
+            n_params,
+            batch_train: 8,
+            batch_score: 16,
+            batch_eval: 16,
+            artifacts: Vec::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "config": "tiny",
+        "dims": [64, 32, 32, 10],
+        "dtype": "f32",
+        "n_classes": 10,
+        "input_dim": 64,
+        "n_layers": 3,
+        "n_params": 3466,
+        "layers": [
+            {"w_shape": [64, 32], "b_shape": [32]},
+            {"w_shape": [32, 32], "b_shape": [32]},
+            {"w_shape": [32, 10], "b_shape": [10]}
+        ],
+        "batch_train": 8,
+        "batch_score": 16,
+        "batch_eval": 16,
+        "artifacts": {
+            "train_step": {"file": "train_step.hlo.txt", "sha256": "x", "bytes": 1},
+            "grad_norms": {"file": "grad_norms.hlo.txt", "sha256": "x", "bytes": 1}
+        },
+        "calling_convention": "flat-params-first"
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let json = Json::parse(SAMPLE).unwrap();
+        let m = Manifest::from_json(&json, Path::new("/art/tiny")).unwrap();
+        assert_eq!(m.config, "tiny");
+        assert_eq!(m.layers.len(), 3);
+        assert_eq!(m.layers[0], LayerSpec { d_in: 64, d_out: 32 });
+        assert_eq!(m.n_params, 3466);
+        assert_eq!(
+            m.artifact_path("train_step").unwrap(),
+            Path::new("/art/tiny/train_step.hlo.txt")
+        );
+        assert!(m.artifact_path("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_inconsistent_param_count() {
+        let bad = SAMPLE.replace("3466", "9999");
+        let json = Json::parse(&bad).unwrap();
+        assert!(Manifest::from_json(&json, Path::new("/x")).is_err());
+    }
+
+    #[test]
+    fn synthetic_counts() {
+        let m = Manifest::synthetic_for_tests(vec![
+            LayerSpec { d_in: 4, d_out: 2 },
+            LayerSpec { d_in: 2, d_out: 3 },
+        ]);
+        assert_eq!(m.dims, vec![4, 2, 3]);
+        assert_eq!(m.n_params, 4 * 2 + 2 + 2 * 3 + 3);
+    }
+}

@@ -1,0 +1,24 @@
+//! Runtime layer: the bridge from AOT artifacts (HLO text lowered by
+//! `python/compile/aot.py`) to executable PJRT computations.
+//!
+//! * [`Manifest`] — parses `manifest.json`, the shape contract with the
+//!   python compile path.
+//! * [`Engine`] — compiles the four entry points once and exposes typed
+//!   step functions (`train_step`, `grad_norms`, `eval_step`,
+//!   `grad_mean_sqnorm`).  Python never runs at this point; the rust
+//!   binary is self-contained.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, EvalOutput, PeerOutput, ScoreOutput, StepOutput};
+pub use manifest::{LayerSpec, Manifest};
+
+use std::path::PathBuf;
+
+/// Locate the artifacts directory for `config`, honouring the
+/// `ISSGD_ARTIFACTS` env var and falling back to `./artifacts`.
+pub fn artifacts_dir(config: &str) -> PathBuf {
+    let base = std::env::var("ISSGD_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+    PathBuf::from(base).join(config)
+}

@@ -1,0 +1,177 @@
+//! Adaptive smoothing (§B.3, the paper's "not explored" suggestion).
+//!
+//! The paper's fixed additive constant `c` trades variance reduction for
+//! stability, but the right `c` depends on the current weight distribution:
+//! early in training the weights are heavy-tailed (small `c` is fine);
+//! after convergence a few stragglers dominate and a larger `c` is needed.
+//! The paper suggests choosing `c` to hit a target *entropy* of the
+//! sampling distribution — "with a smoothing constant sufficiently large,
+//! we can bring this entropy down to any target level".
+//!
+//! We implement exactly that: [`smoothing_for_entropy`] finds, by bisection
+//! on `c`, the additive constant whose smoothed distribution has the
+//! requested normalised entropy (1.0 = uniform = plain SGD, lower = sharper
+//! = closer to raw ISSGD).  Entropy of the smoothed multinomial is
+//! monotonically non-decreasing in `c`, which makes bisection exact.
+
+/// Shannon entropy (nats) of the normalised weight vector.
+pub fn entropy(weights: &[f64]) -> f64 {
+    let total: f64 = weights.iter().sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    let mut h = 0.0;
+    for &w in weights {
+        if w > 0.0 {
+            let p = w / total;
+            h -= p * p.ln();
+        }
+    }
+    h
+}
+
+/// Entropy normalised to `[0, 1]` by the uniform maximum `ln(n)` over the
+/// *positive-weight support*.
+pub fn normalized_entropy(weights: &[f64]) -> f64 {
+    let n = weights.iter().filter(|&&w| w > 0.0).count();
+    if n <= 1 {
+        return 1.0;
+    }
+    entropy(weights) / (n as f64).ln()
+}
+
+/// Find the additive smoothing constant that brings the normalised entropy
+/// of `weights + c` up to `target` (in `[0, 1]`).
+///
+/// Returns 0.0 if the raw weights already meet the target.  Weights equal
+/// to zero stay zero only if `c = 0`; with smoothing they re-enter the
+/// support (matching the paper, where the constant is added to *all*
+/// probability weights).
+pub fn smoothing_for_entropy(weights: &[f64], target: f64, tol: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&target), "target entropy {target} not in [0,1]");
+    assert!(tol > 0.0);
+    if weights.len() <= 1 {
+        return 0.0;
+    }
+    let h = |c: f64| {
+        let smoothed: Vec<f64> = weights.iter().map(|&w| w + c).collect();
+        normalized_entropy(&smoothed)
+    };
+    if h(0.0) >= target {
+        return 0.0;
+    }
+    // Bracket: entropy(c→∞) → 1.  Grow the upper bound geometrically from
+    // the mean weight scale.
+    let mean = weights.iter().sum::<f64>() / weights.len() as f64;
+    let mut lo = 0.0;
+    let mut hi = mean.max(1e-12);
+    let mut guard = 0;
+    while h(hi) < target {
+        hi *= 4.0;
+        guard += 1;
+        if guard > 200 {
+            return hi; // target ~1.0 with adversarial weights; best effort
+        }
+    }
+    // Bisection (entropy is monotone non-decreasing in c).
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if h(mid) < target {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+        if hi - lo <= tol * hi.max(1e-12) {
+            break;
+        }
+    }
+    hi
+}
+
+/// Effective sample size ratio of an importance-sampling proposal — the
+/// standard IS health diagnostic: `ESS/N = (Σw)² / (N Σw²)`, 1.0 for
+/// uniform, → 1/N when one weight dominates.  The master logs this to
+/// expose "time bomb" states (§B.3) before they bite.
+pub fn effective_sample_size_ratio(weights: &[f64]) -> f64 {
+    let n = weights.len();
+    if n == 0 {
+        return 1.0;
+    }
+    let sum: f64 = weights.iter().sum();
+    let sumsq: f64 = weights.iter().map(|w| w * w).sum();
+    if sumsq <= 0.0 {
+        return 1.0;
+    }
+    (sum * sum) / (n as f64 * sumsq)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entropy_of_uniform_is_ln_n() {
+        let w = vec![2.0; 8];
+        assert!((entropy(&w) - (8f64).ln()).abs() < 1e-12);
+        assert!((normalized_entropy(&w) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn entropy_of_point_mass_is_zero() {
+        let w = vec![0.0, 5.0, 0.0];
+        assert_eq!(entropy(&w), 0.0);
+    }
+
+    #[test]
+    fn smoothing_monotonically_raises_entropy() {
+        let w = vec![0.01, 0.02, 10.0, 0.005];
+        let h0 = normalized_entropy(&w);
+        let h1 = normalized_entropy(&w.iter().map(|x| x + 1.0).collect::<Vec<_>>());
+        let h2 = normalized_entropy(&w.iter().map(|x| x + 100.0).collect::<Vec<_>>());
+        assert!(h0 < h1 && h1 < h2);
+        assert!(h2 > 0.99);
+    }
+
+    #[test]
+    fn solver_hits_target_entropy() {
+        let w = vec![0.001, 0.01, 50.0, 0.1, 0.002, 3.0];
+        for target in [0.5, 0.8, 0.95] {
+            let c = smoothing_for_entropy(&w, target, 1e-6);
+            let smoothed: Vec<f64> = w.iter().map(|x| x + c).collect();
+            let got = normalized_entropy(&smoothed);
+            assert!(
+                (got - target).abs() < 0.01,
+                "target {target}: c={c}, entropy {got}"
+            );
+        }
+    }
+
+    #[test]
+    fn solver_returns_zero_if_already_above_target() {
+        let w = vec![1.0, 1.1, 0.9, 1.05];
+        assert_eq!(smoothing_for_entropy(&w, 0.5, 1e-6), 0.0);
+    }
+
+    #[test]
+    fn ess_uniform_is_one_point_mass_is_tiny() {
+        assert!((effective_sample_size_ratio(&[3.0; 10]) - 1.0).abs() < 1e-12);
+        let mut w = vec![0.0; 100];
+        w[7] = 1.0;
+        assert!((effective_sample_size_ratio(&w) - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ess_degrades_with_skew() {
+        let a = effective_sample_size_ratio(&[1.0, 1.0, 1.0, 1.0]);
+        let b = effective_sample_size_ratio(&[1.0, 1.0, 1.0, 10.0]);
+        let c = effective_sample_size_ratio(&[1.0, 1.0, 1.0, 1000.0]);
+        assert!(a > b && b > c);
+    }
+
+    #[test]
+    fn empty_and_singleton_edge_cases() {
+        assert_eq!(effective_sample_size_ratio(&[]), 1.0);
+        assert_eq!(smoothing_for_entropy(&[5.0], 0.9, 1e-6), 0.0);
+        assert_eq!(normalized_entropy(&[5.0]), 1.0);
+    }
+}

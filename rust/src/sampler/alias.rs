@@ -1,0 +1,174 @@
+//! Walker's alias method: O(N) build, O(1) multinomial sampling.
+//!
+//! The alias table is the right sampler when the proposal is *frozen* for
+//! many draws — e.g. exact-mode ISSGD, where all weights refresh at a
+//! barrier and the master then draws a whole epoch of minibatches.  The
+//! Fenwick tree (`fenwick.rs`) wins when weights mutate continuously; the
+//! crossover is measured in `benches/sampler.rs`.
+
+use crate::util::rng::Pcg64;
+
+#[derive(Debug, Clone)]
+pub struct AliasSampler {
+    /// Acceptance probability of each slot's own index.
+    prob: Vec<f64>,
+    /// Fallback index taken when the acceptance test fails.
+    alias: Vec<usize>,
+    /// Slots with nonzero original weight (sampling must never return a
+    /// zero-weight index even via fp slack in the split).
+    nonzero: Vec<bool>,
+}
+
+impl AliasSampler {
+    /// Build from non-negative weights.  Returns `None` if total mass is 0.
+    pub fn new(weights: &[f64]) -> Option<Self> {
+        let n = weights.len();
+        let total: f64 = weights.iter().sum();
+        if n == 0 || total <= 0.0 {
+            return None;
+        }
+        for &w in weights {
+            assert!(w.is_finite() && w >= 0.0, "weight {w} invalid");
+        }
+        // Scale to mean 1, then split into small (<1) and large (>=1).
+        let mut scaled: Vec<f64> = weights.iter().map(|&w| w * n as f64 / total).collect();
+        let mut prob = vec![0.0; n];
+        let mut alias = vec![0usize; n];
+        let mut small: Vec<usize> = Vec::with_capacity(n);
+        let mut large: Vec<usize> = Vec::with_capacity(n);
+        for (i, &s) in scaled.iter().enumerate() {
+            if s < 1.0 {
+                small.push(i);
+            } else {
+                large.push(i);
+            }
+        }
+        while let (Some(&s), Some(&l)) = (small.last(), large.last()) {
+            small.pop();
+            prob[s] = scaled[s];
+            alias[s] = l;
+            scaled[l] = (scaled[l] + scaled[s]) - 1.0;
+            if scaled[l] < 1.0 {
+                large.pop();
+                small.push(l);
+            }
+        }
+        // Leftovers (fp residue) get probability 1 of themselves.
+        for &i in small.iter().chain(large.iter()) {
+            prob[i] = 1.0;
+            alias[i] = i;
+        }
+        Some(AliasSampler {
+            prob,
+            alias,
+            nonzero: weights.iter().map(|&w| w > 0.0).collect(),
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+
+    /// O(1) draw.
+    pub fn sample(&self, rng: &mut Pcg64) -> usize {
+        loop {
+            let slot = rng.next_below(self.prob.len() as u64) as usize;
+            let idx = if rng.next_f64() < self.prob[slot] {
+                slot
+            } else {
+                self.alias[slot]
+            };
+            // Zero-weight indices can only be hit through fp residue in the
+            // table build; rejecting them keeps the support exact.
+            if self.nonzero[idx] {
+                return idx;
+            }
+        }
+    }
+
+    pub fn sample_many(&self, rng: &mut Pcg64, k: usize) -> Vec<usize> {
+        (0..k).map(|_| self.sample(rng)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frequencies_match_weights() {
+        let w = [1.0, 2.0, 4.0, 0.0, 8.0, 0.5];
+        let s = AliasSampler::new(&w).unwrap();
+        let mut rng = Pcg64::seeded(10);
+        let n = 80_000;
+        let mut counts = vec![0usize; w.len()];
+        for _ in 0..n {
+            counts[s.sample(&mut rng)] += 1;
+        }
+        assert_eq!(counts[3], 0);
+        let total: f64 = w.iter().sum();
+        for (i, &wi) in w.iter().enumerate() {
+            let got = counts[i] as f64 / n as f64;
+            assert!(
+                (got - wi / total).abs() < 0.01,
+                "index {i}: got {got} want {}",
+                wi / total
+            );
+        }
+    }
+
+    #[test]
+    fn zero_total_is_none() {
+        assert!(AliasSampler::new(&[0.0, 0.0]).is_none());
+        assert!(AliasSampler::new(&[]).is_none());
+    }
+
+    #[test]
+    fn uniform_weights() {
+        let s = AliasSampler::new(&[1.0; 7]).unwrap();
+        let mut rng = Pcg64::seeded(11);
+        let mut counts = [0usize; 7];
+        for _ in 0..70_000 {
+            counts[s.sample(&mut rng)] += 1;
+        }
+        for &c in &counts {
+            let got = c as f64 / 70_000.0;
+            assert!((got - 1.0 / 7.0).abs() < 0.01);
+        }
+    }
+
+    #[test]
+    fn extreme_skew() {
+        let mut w = vec![1e-9; 100];
+        w[42] = 1e9;
+        let s = AliasSampler::new(&w).unwrap();
+        let mut rng = Pcg64::seeded(12);
+        let hits = (0..1000).filter(|_| s.sample(&mut rng) == 42).count();
+        assert!(hits > 990, "hits {hits}");
+    }
+
+    #[test]
+    fn agrees_with_fenwick_distribution() {
+        use crate::sampler::fenwick::FenwickSampler;
+        let w = [0.3, 1.7, 0.0, 2.4, 0.6];
+        let a = AliasSampler::new(&w).unwrap();
+        let f = FenwickSampler::new(&w);
+        let mut ra = Pcg64::seeded(13);
+        let mut rf = Pcg64::seeded(14);
+        let n = 50_000;
+        let mut ca = vec![0f64; 5];
+        let mut cf = vec![0f64; 5];
+        for _ in 0..n {
+            ca[a.sample(&mut ra)] += 1.0;
+            cf[f.sample(&mut rf).unwrap()] += 1.0;
+        }
+        for i in 0..5 {
+            let diff = (ca[i] - cf[i]).abs() / n as f64;
+            assert!(diff < 0.01, "index {i}: alias {} vs fenwick {}", ca[i], cf[i]);
+        }
+    }
+}

@@ -1,0 +1,201 @@
+//! Fenwick (binary indexed) tree over non-negative weights, supporting
+//! O(log N) point updates and O(log N) multinomial sampling by prefix-sum
+//! descent.
+//!
+//! This is the master's default sampler: worker weight pushes arrive
+//! continuously, so the proposal distribution changes between every
+//! minibatch — an alias table (O(N) rebuild) would pay the full rebuild
+//! cost per step, while the Fenwick tree absorbs point updates for free.
+//! The crossover is measured in `benches/sampler.rs`.
+
+use crate::util::rng::Pcg64;
+
+#[derive(Debug, Clone)]
+pub struct FenwickSampler {
+    /// 1-based Fenwick array of partial sums (f64 to keep cumulative error
+    /// harmless even for N ~ 10^6 weights).
+    tree: Vec<f64>,
+    /// Current raw weights (needed to compute deltas and to read back).
+    weights: Vec<f64>,
+    /// log2 ceiling of capacity, cached for the descent.
+    log2: u32,
+}
+
+impl FenwickSampler {
+    /// Build from initial weights (all must be finite and >= 0).
+    pub fn new(weights: &[f64]) -> Self {
+        let n = weights.len();
+        let mut s = FenwickSampler {
+            tree: vec![0.0; n + 1],
+            weights: vec![0.0; n],
+            log2: usize::BITS - n.next_power_of_two().leading_zeros(),
+        };
+        for (i, &w) in weights.iter().enumerate() {
+            s.update(i, w);
+        }
+        s
+    }
+
+    pub fn len(&self) -> usize {
+        self.weights.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.weights.is_empty()
+    }
+
+    pub fn weight(&self, i: usize) -> f64 {
+        self.weights[i]
+    }
+
+    /// Total weight mass.
+    pub fn total(&self) -> f64 {
+        self.prefix_sum(self.weights.len())
+    }
+
+    /// Sum of weights `[0, end)`.
+    pub fn prefix_sum(&self, end: usize) -> f64 {
+        let mut i = end;
+        let mut acc = 0.0;
+        while i > 0 {
+            acc += self.tree[i];
+            i &= i - 1;
+        }
+        acc
+    }
+
+    /// Set weight `i` to `w` in O(log N).
+    pub fn update(&mut self, i: usize, w: f64) {
+        assert!(w.is_finite() && w >= 0.0, "weight {w} invalid");
+        let delta = w - self.weights[i];
+        self.weights[i] = w;
+        let mut j = i + 1;
+        while j < self.tree.len() {
+            self.tree[j] += delta;
+            j += j & j.wrapping_neg();
+        }
+    }
+
+    /// Sample one index with probability proportional to its weight.
+    ///
+    /// Uses the classic bit-descent: O(log N) with no division. Returns
+    /// `None` if the total mass is zero.
+    pub fn sample(&self, rng: &mut Pcg64) -> Option<usize> {
+        let total = self.total();
+        if total <= 0.0 {
+            return None;
+        }
+        let mut target = rng.next_f64() * total;
+        let mut pos = 0usize;
+        let mut step = 1usize << self.log2;
+        while step > 0 {
+            let next = pos + step;
+            if next < self.tree.len() && self.tree[next] < target {
+                target -= self.tree[next];
+                pos = next;
+            }
+            step >>= 1;
+        }
+        // pos is the count of elements strictly before the sampled one.
+        // Cumulative fp error can land us on a zero-weight slot or one past
+        // the end; walk to the nearest valid index.
+        let mut idx = pos.min(self.weights.len() - 1);
+        if self.weights[idx] == 0.0 {
+            idx = (0..self.weights.len())
+                .map(|d| (idx + d) % self.weights.len())
+                .find(|&j| self.weights[j] > 0.0)?;
+        }
+        Some(idx)
+    }
+
+    /// Sample `k` indices with replacement.
+    pub fn sample_many(&self, rng: &mut Pcg64, k: usize) -> Vec<usize> {
+        (0..k).filter_map(|_| self.sample(rng)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefix_sums_match_naive() {
+        let w = [1.0, 0.5, 2.0, 0.0, 3.25, 1.0, 0.0, 4.0, 0.125];
+        let s = FenwickSampler::new(&w);
+        let mut acc = 0.0;
+        for i in 0..=w.len() {
+            assert!((s.prefix_sum(i) - acc).abs() < 1e-12);
+            if i < w.len() {
+                acc += w[i];
+            }
+        }
+        assert!((s.total() - acc).abs() < 1e-12);
+    }
+
+    #[test]
+    fn updates_change_sums() {
+        let mut s = FenwickSampler::new(&[1.0, 1.0, 1.0]);
+        s.update(1, 5.0);
+        assert_eq!(s.weight(1), 5.0);
+        assert!((s.total() - 7.0).abs() < 1e-12);
+        s.update(1, 0.0);
+        assert!((s.total() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sampling_frequencies_match_weights() {
+        let w = [1.0, 2.0, 4.0, 0.0, 8.0];
+        let s = FenwickSampler::new(&w);
+        let mut rng = Pcg64::seeded(1);
+        let mut counts = [0usize; 5];
+        let n = 60_000;
+        for _ in 0..n {
+            counts[s.sample(&mut rng).unwrap()] += 1;
+        }
+        assert_eq!(counts[3], 0);
+        let total: f64 = w.iter().sum();
+        for i in [0, 1, 2, 4] {
+            let expect = w[i] / total;
+            let got = counts[i] as f64 / n as f64;
+            assert!(
+                (got - expect).abs() < 0.01,
+                "index {i}: got {got}, expect {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_mass_returns_none() {
+        let s = FenwickSampler::new(&[0.0, 0.0]);
+        let mut rng = Pcg64::seeded(2);
+        assert_eq!(s.sample(&mut rng), None);
+    }
+
+    #[test]
+    fn single_element() {
+        let s = FenwickSampler::new(&[0.5]);
+        let mut rng = Pcg64::seeded(3);
+        for _ in 0..10 {
+            assert_eq!(s.sample(&mut rng), Some(0));
+        }
+    }
+
+    #[test]
+    fn never_samples_zero_weight() {
+        let mut w = vec![0.0; 257];
+        w[0] = 1.0;
+        w[256] = 1.0;
+        let s = FenwickSampler::new(&w);
+        let mut rng = Pcg64::seeded(4);
+        for _ in 0..2000 {
+            let i = s.sample(&mut rng).unwrap();
+            assert!(i == 0 || i == 256, "sampled zero-weight index {i}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid")]
+    fn rejects_negative_weight() {
+        FenwickSampler::new(&[1.0]).update(0, -1.0);
+    }
+}

@@ -1,0 +1,207 @@
+//! Importance-sampling machinery: multinomial samplers over the training
+//! set, the paper's probability-weight smoothing (§B.3), and the staleness
+//! filter (§B.1).
+//!
+//! The master composes these as: raw `ω̃_n` from the weight store →
+//! staleness filter → `+c` smoothing → multinomial draw of a minibatch
+//! (with replacement) → loss coefficients `coef_m = mean(ω̃) / ω̃_{i_m}`.
+
+pub mod adaptive;
+pub mod alias;
+pub mod fenwick;
+
+pub use adaptive::{effective_sample_size_ratio, normalized_entropy, smoothing_for_entropy};
+pub use alias::AliasSampler;
+pub use fenwick::FenwickSampler;
+
+use crate::util::rng::Pcg64;
+
+/// The paper's §B.3 additive smoothing: `ω̃_n ← ω̃_n + c`.
+///
+/// `c = 0` is pure ISSGD; `c → ∞` recovers uniform SGD.  Smoothing bounds
+/// the loss coefficients (`coef ≤ mean(ω̃+c)/c`), defusing the "time bomb"
+/// of a stale tiny weight meeting a now-large gradient.
+#[derive(Debug, Clone, Copy)]
+pub struct Smoothing {
+    pub constant: f64,
+}
+
+impl Smoothing {
+    pub fn new(constant: f64) -> Self {
+        assert!(constant >= 0.0 && constant.is_finite());
+        Smoothing { constant }
+    }
+
+    #[inline]
+    pub fn apply(&self, w: f64) -> f64 {
+        w + self.constant
+    }
+
+    pub fn apply_all(&self, ws: &mut [f64]) {
+        for w in ws {
+            *w += self.constant;
+        }
+    }
+}
+
+/// §B.1 staleness filter: keep only weights refreshed within `threshold`
+/// of `now` (both in abstract "ticks" — wall-clock nanos in live runs,
+/// master-step counts in simulated runs).  Filtered-out examples keep a
+/// weight of 0 (never sampled) — the paper argues this is fair because
+/// every index is equally likely to have been refreshed recently.
+#[derive(Debug, Clone, Copy)]
+pub struct StalenessFilter {
+    /// Maximum allowed age; `None` disables filtering.
+    pub threshold: Option<u64>,
+}
+
+impl StalenessFilter {
+    pub fn disabled() -> Self {
+        StalenessFilter { threshold: None }
+    }
+
+    pub fn with_threshold(threshold: u64) -> Self {
+        StalenessFilter {
+            threshold: Some(threshold),
+        }
+    }
+
+    /// Whether a weight stamped at `stamp` is usable at time `now`.
+    #[inline]
+    pub fn keep(&self, stamp: u64, now: u64) -> bool {
+        match self.threshold {
+            None => true,
+            Some(t) => now.saturating_sub(stamp) <= t,
+        }
+    }
+
+    /// Apply in place: zero out weights older than the threshold.
+    /// Returns the fraction kept.
+    pub fn filter(&self, weights: &mut [f64], stamps: &[u64], now: u64) -> f64 {
+        assert_eq!(weights.len(), stamps.len());
+        if self.threshold.is_none() || weights.is_empty() {
+            return 1.0;
+        }
+        let mut kept = 0usize;
+        for (w, &s) in weights.iter_mut().zip(stamps) {
+            if self.keep(s, now) {
+                kept += 1;
+            } else {
+                *w = 0.0;
+            }
+        }
+        kept as f64 / weights.len() as f64
+    }
+}
+
+/// Draw an importance-sampled minibatch and its loss coefficients.
+///
+/// `weights` must already be smoothed/filtered.  Returns `(indices, coefs,
+/// mean_weight)` where `coefs[m] = mean(weights)/weights[i_m]` — the §4.1
+/// scaling with `Z = (1/N) Σ ω̃` folded in, so `train_step`'s
+/// `mean(coef · CE)` is exactly the paper's minibatch loss.  Falls back to
+/// uniform (all-ones coefs) if total mass is zero.
+pub fn draw_minibatch(
+    sampler: &FenwickSampler,
+    rng: &mut Pcg64,
+    m: usize,
+) -> (Vec<usize>, Vec<f32>, f64) {
+    let n = sampler.len();
+    let total = sampler.total();
+    if total <= 0.0 {
+        let indices = rng.sample_with_replacement(n, m);
+        return (indices, vec![1.0; m], 0.0);
+    }
+    let mean_w = total / n as f64;
+    let mut indices = Vec::with_capacity(m);
+    let mut coefs = Vec::with_capacity(m);
+    for _ in 0..m {
+        let i = sampler
+            .sample(rng)
+            .expect("total mass positive but sample failed");
+        indices.push(i);
+        coefs.push((mean_w / sampler.weight(i)) as f32);
+    }
+    (indices, coefs, mean_w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoothing_limits() {
+        let s = Smoothing::new(10.0);
+        assert_eq!(s.apply(0.0), 10.0);
+        let mut ws = vec![0.0, 1.0, 5.0];
+        s.apply_all(&mut ws);
+        assert_eq!(ws, vec![10.0, 11.0, 15.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn smoothing_rejects_negative() {
+        Smoothing::new(-1.0);
+    }
+
+    #[test]
+    fn staleness_keeps_fresh_only() {
+        let f = StalenessFilter::with_threshold(4);
+        let mut w = vec![1.0, 1.0, 1.0, 1.0];
+        let stamps = vec![10, 5, 2, 8];
+        let kept = f.filter(&mut w, &stamps, 10);
+        assert_eq!(w, vec![1.0, 0.0, 0.0, 1.0]); // ages 0, 5, 8, 2
+        assert!((kept - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn disabled_filter_keeps_all() {
+        let f = StalenessFilter::disabled();
+        let mut w = vec![1.0, 2.0];
+        let kept = f.filter(&mut w, &[0, 0], u64::MAX);
+        assert_eq!(kept, 1.0);
+        assert_eq!(w, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn minibatch_coefs_are_is_scaling() {
+        let weights = [1.0, 2.0, 3.0, 4.0];
+        let s = FenwickSampler::new(&weights);
+        let mut rng = Pcg64::seeded(5);
+        let (idx, coefs, mean_w) = draw_minibatch(&s, &mut rng, 16);
+        assert_eq!(idx.len(), 16);
+        assert!((mean_w - 2.5).abs() < 1e-12);
+        for (i, c) in idx.iter().zip(&coefs) {
+            assert!((*c as f64 - 2.5 / weights[*i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn minibatch_estimator_is_unbiased_in_expectation() {
+        // E[coef * f(i)] over the proposal == mean f — check empirically
+        // with f(i) = i^2.
+        let weights = [0.5, 1.0, 2.0, 4.0];
+        let s = FenwickSampler::new(&weights);
+        let mut rng = Pcg64::seeded(6);
+        let f = |i: usize| (i * i) as f64;
+        let truth: f64 = (0..4).map(f).sum::<f64>() / 4.0;
+        let mut acc = 0.0;
+        let rounds = 40_000;
+        for _ in 0..rounds {
+            let (idx, coefs, _) = draw_minibatch(&s, &mut rng, 1);
+            acc += coefs[0] as f64 * f(idx[0]);
+        }
+        let est = acc / rounds as f64;
+        assert!((est - truth).abs() < 0.08, "est {est} truth {truth}");
+    }
+
+    #[test]
+    fn zero_mass_falls_back_to_uniform() {
+        let s = FenwickSampler::new(&[0.0; 8]);
+        let mut rng = Pcg64::seeded(7);
+        let (idx, coefs, mean_w) = draw_minibatch(&s, &mut rng, 5);
+        assert_eq!(idx.len(), 5);
+        assert!(coefs.iter().all(|&c| c == 1.0));
+        assert_eq!(mean_w, 0.0);
+    }
+}

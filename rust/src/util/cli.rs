@@ -1,0 +1,160 @@
+//! Tiny declarative CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! and subcommands (handled by the caller by peeking at the first
+//! positional).  Typed getters parse on access and report readable errors.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("missing required option --{0}")]
+    Missing(String),
+    #[error("invalid value for --{0}: {1:?} ({2})")]
+    Invalid(String, String, String),
+}
+
+/// Option names that take a value; anything else starting with `--` is a
+/// boolean flag.  Keeping this explicit catches typos like `--seeds` vs
+/// `--seed` at parse time instead of silently mis-grouping.
+pub fn parse(argv: &[String], value_opts: &[&str]) -> Result<Args, String> {
+    let mut args = Args::default();
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(body) = a.strip_prefix("--") {
+            if let Some((k, v)) = body.split_once('=') {
+                if !value_opts.contains(&k) {
+                    return Err(format!("unknown option --{k}"));
+                }
+                args.opts.insert(k.to_string(), v.to_string());
+            } else if value_opts.contains(&body) {
+                i += 1;
+                let v = argv
+                    .get(i)
+                    .ok_or_else(|| format!("option --{body} expects a value"))?;
+                args.opts.insert(body.to_string(), v.clone());
+            } else {
+                args.flags.push(body.to_string());
+            }
+        } else {
+            args.positional.push(a.clone());
+        }
+        i += 1;
+    }
+    Ok(args)
+}
+
+impl Args {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e: T::Err| CliError::Invalid(name.into(), v.into(), e.to_string())),
+        }
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str, CliError> {
+        self.get(name).ok_or_else(|| CliError::Missing(name.into()))
+    }
+
+    /// Comma-separated list option, e.g. `--workers 1,2,4`.
+    pub fn get_list_parse<T: std::str::FromStr>(
+        &self,
+        name: &str,
+        default: &[T],
+    ) -> Result<Vec<T>, CliError>
+    where
+        T: Clone,
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim().parse().map_err(|e: T::Err| {
+                        CliError::Invalid(name.into(), p.into(), e.to_string())
+                    })
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = parse(
+            &argv("train --steps 100 --lr=0.01 --verbose extra"),
+            &["steps", "lr"],
+        )
+        .unwrap();
+        assert_eq!(a.positional(), &["train", "extra"]);
+        assert_eq!(a.get_parse("steps", 0usize).unwrap(), 100);
+        assert_eq!(a.get_parse("lr", 0.0f64).unwrap(), 0.01);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse(&argv("--steps nan-ish"), &["steps"]).unwrap();
+        assert!(a.get_parse("steps", 5usize).is_err());
+        let a = parse(&argv(""), &["steps"]).unwrap();
+        assert_eq!(a.get_parse("steps", 5usize).unwrap(), 5);
+        assert!(a.require("steps").is_err());
+    }
+
+    #[test]
+    fn unknown_value_opt_with_equals_rejected() {
+        assert!(parse(&argv("--nope=3"), &["steps"]).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(parse(&argv("--steps"), &["steps"]).is_err());
+    }
+
+    #[test]
+    fn list_parse() {
+        let a = parse(&argv("--workers 1,2,8"), &["workers"]).unwrap();
+        assert_eq!(a.get_list_parse("workers", &[3usize]).unwrap(), vec![1, 2, 8]);
+        let b = parse(&argv(""), &["workers"]).unwrap();
+        assert_eq!(b.get_list_parse("workers", &[3usize]).unwrap(), vec![3]);
+    }
+}

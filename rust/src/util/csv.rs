@@ -1,0 +1,107 @@
+//! Tiny CSV reader for the experiment result files (header + numeric
+//! columns).  No quoting/escaping — our writers never emit any — but
+//! malformed rows are reported with line numbers rather than silently
+//! skipped.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A parsed numeric CSV: named columns of equal length.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub columns: Vec<String>,
+    /// Column-major data.
+    pub data: Vec<Vec<f64>>,
+}
+
+impl Table {
+    pub fn parse(text: &str) -> Result<Table> {
+        let mut lines = text.lines().enumerate();
+        let (_, header) = lines.next().context("empty CSV")?;
+        let columns: Vec<String> = header.split(',').map(|s| s.trim().to_string()).collect();
+        anyhow::ensure!(!columns.is_empty(), "no columns");
+        let mut data = vec![Vec::new(); columns.len()];
+        for (lineno, line) in lines {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let cells: Vec<&str> = line.split(',').collect();
+            anyhow::ensure!(
+                cells.len() == columns.len(),
+                "line {}: {} cells, header has {}",
+                lineno + 1,
+                cells.len(),
+                columns.len()
+            );
+            for (col, cell) in cells.iter().enumerate() {
+                let v: f64 = cell
+                    .trim()
+                    .parse()
+                    .with_context(|| format!("line {}, column {:?}", lineno + 1, columns[col]))?;
+                data[col].push(v);
+            }
+        }
+        Ok(Table { columns, data })
+    }
+
+    pub fn load(path: &Path) -> Result<Table> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text).with_context(|| path.display().to_string())
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.data.first().map(Vec::len).unwrap_or(0)
+    }
+
+    pub fn column(&self, name: &str) -> Option<&[f64]> {
+        self.columns
+            .iter()
+            .position(|c| c == name)
+            .map(|i| self.data[i].as_slice())
+    }
+
+    /// Column names ending in `suffix` (e.g. `_median`).
+    pub fn columns_with_suffix(&self, suffix: &str) -> Vec<&str> {
+        self.columns
+            .iter()
+            .filter(|c| c.ends_with(suffix))
+            .map(String::as_str)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic() {
+        let t = Table::parse("step,a,b\n0,1.5,2\n10,2.5,4\n").unwrap();
+        assert_eq!(t.columns, vec!["step", "a", "b"]);
+        assert_eq!(t.n_rows(), 2);
+        assert_eq!(t.column("a").unwrap(), &[1.5, 2.5]);
+        assert_eq!(t.column("missing"), None);
+    }
+
+    #[test]
+    fn skips_blank_lines_and_trims() {
+        let t = Table::parse("x, y \n1, 2\n\n3, 4\n").unwrap();
+        assert_eq!(t.columns, vec!["x", "y"]);
+        assert_eq!(t.n_rows(), 2);
+    }
+
+    #[test]
+    fn reports_bad_rows() {
+        assert!(Table::parse("a,b\n1\n").is_err());
+        assert!(Table::parse("a,b\n1,x\n").is_err());
+        assert!(Table::parse("").is_err());
+    }
+
+    #[test]
+    fn suffix_selection() {
+        let t = Table::parse("step,a_median,a_q1,b_median\n0,1,2,3\n").unwrap();
+        assert_eq!(t.columns_with_suffix("_median"), vec!["a_median", "b_median"]);
+    }
+}

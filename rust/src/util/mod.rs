@@ -1,0 +1,13 @@
+//! Infrastructure substrates that would normally come from crates.io but
+//! are rebuilt in-tree for this offline, self-contained reproduction:
+//! RNG (`rand` substitute), JSON (`serde_json` substitute), CLI parsing
+//! (`clap` substitute), logging (`env_logger` substitute) and timing/stat
+//! helpers (part of the `criterion` substitute in `crate::bench`).
+
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod logging;
+pub mod plot;
+pub mod rng;
+pub mod timer;

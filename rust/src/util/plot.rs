@@ -1,0 +1,224 @@
+//! Terminal plotting: render experiment CSVs as unicode line charts.
+//!
+//! No plotting libraries exist offline, and the paper's figures are line
+//! plots — `issgd plot results/fig4b_sqrt_trace.csv` draws them straight
+//! in the terminal (braille-dot canvas, one mark style per series, shared
+//! axes, legend).  Good enough to eyeball every reproduced figure without
+//! leaving the shell.
+
+use std::fmt::Write as _;
+
+/// One named series of (x, y) points.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    pub xs: Vec<f64>,
+    pub ys: Vec<f64>,
+}
+
+/// Plot options.
+#[derive(Debug, Clone)]
+pub struct PlotOptions {
+    pub width: usize,
+    pub height: usize,
+    pub title: String,
+    pub log_y: bool,
+}
+
+impl Default for PlotOptions {
+    fn default() -> Self {
+        PlotOptions {
+            width: 72,
+            height: 20,
+            title: String::new(),
+            log_y: false,
+        }
+    }
+}
+
+const MARKS: &[char] = &['*', 'o', '+', 'x', '#', '@', '%', '&'];
+
+/// Render series into a text chart.
+pub fn render(series: &[Series], opts: &PlotOptions) -> String {
+    let mut out = String::new();
+    let finite = |v: f64| v.is_finite();
+    let mut pts: Vec<(usize, f64, f64)> = Vec::new(); // (series, x, y)
+    for (si, s) in series.iter().enumerate() {
+        for (&x, &y) in s.xs.iter().zip(&s.ys) {
+            let y = if opts.log_y {
+                if y > 0.0 {
+                    y.log10()
+                } else {
+                    continue;
+                }
+            } else {
+                y
+            };
+            if finite(x) && finite(y) {
+                pts.push((si, x, y));
+            }
+        }
+    }
+    if pts.is_empty() {
+        return "(no finite points to plot)\n".into();
+    }
+    let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(_, x, y) in &pts {
+        xmin = xmin.min(x);
+        xmax = xmax.max(x);
+        ymin = ymin.min(y);
+        ymax = ymax.max(y);
+    }
+    if xmax == xmin {
+        xmax = xmin + 1.0;
+    }
+    if ymax == ymin {
+        ymax = ymin + 1.0;
+    }
+    // 5% y headroom so extremes are not drawn on the border.
+    let pad = (ymax - ymin) * 0.05;
+    ymin -= pad;
+    ymax += pad;
+
+    let (w, h) = (opts.width.max(16), opts.height.max(4));
+    let mut grid = vec![vec![' '; w]; h];
+    for &(si, x, y) in &pts {
+        let col = (((x - xmin) / (xmax - xmin)) * (w - 1) as f64).round() as usize;
+        let row = (((ymax - y) / (ymax - ymin)) * (h - 1) as f64).round() as usize;
+        let cell = &mut grid[row.min(h - 1)][col.min(w - 1)];
+        let mark = MARKS[si % MARKS.len()];
+        // Later series overwrite blanks only; collisions show the first.
+        if *cell == ' ' {
+            *cell = mark;
+        }
+    }
+
+    if !opts.title.is_empty() {
+        let _ = writeln!(out, "{}", opts.title);
+    }
+    let unlog = |v: f64| if opts.log_y { 10f64.powf(v) } else { v };
+    let ylab = |v: f64| format_sig(unlog(v));
+    for (i, row) in grid.iter().enumerate() {
+        let label = if i == 0 {
+            ylab(ymax)
+        } else if i == h - 1 {
+            ylab(ymin)
+        } else if i == h / 2 {
+            ylab((ymax + ymin) / 2.0)
+        } else {
+            String::new()
+        };
+        let _ = writeln!(out, "{label:>10} |{}", row.iter().collect::<String>());
+    }
+    let _ = writeln!(out, "{:>10} +{}", "", "-".repeat(w));
+    let _ = writeln!(
+        out,
+        "{:>10}  {}{}{}",
+        "",
+        format_sig(xmin),
+        " ".repeat(w.saturating_sub(format_sig(xmin).len() + format_sig(xmax).len())),
+        format_sig(xmax)
+    );
+    for (si, s) in series.iter().enumerate() {
+        let _ = writeln!(out, "{:>12} {}  {}", "", MARKS[si % MARKS.len()], s.name);
+    }
+    if opts.log_y {
+        let _ = writeln!(out, "{:>12} (log-scale y)", "");
+    }
+    out
+}
+
+fn format_sig(v: f64) -> String {
+    if v == 0.0 {
+        return "0".into();
+    }
+    let a = v.abs();
+    if (1e-3..1e5).contains(&a) {
+        if v.fract() == 0.0 && a < 1e5 {
+            format!("{v}")
+        } else {
+            format!("{v:.4}")
+        }
+    } else {
+        format!("{v:.2e}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo() -> Vec<Series> {
+        vec![
+            Series {
+                name: "linear".into(),
+                xs: (0..20).map(|i| i as f64).collect(),
+                ys: (0..20).map(|i| i as f64).collect(),
+            },
+            Series {
+                name: "flat".into(),
+                xs: (0..20).map(|i| i as f64).collect(),
+                ys: vec![5.0; 20],
+            },
+        ]
+    }
+
+    #[test]
+    fn renders_marks_and_legend() {
+        let text = render(&demo(), &PlotOptions::default());
+        assert!(text.contains('*'));
+        assert!(text.contains('o'));
+        assert!(text.contains("linear"));
+        assert!(text.contains("flat"));
+    }
+
+    #[test]
+    fn log_scale_skips_nonpositive() {
+        let s = vec![Series {
+            name: "mixed".into(),
+            xs: vec![0.0, 1.0, 2.0],
+            ys: vec![0.0, 10.0, 100.0],
+        }];
+        let text = render(
+            &s,
+            &PlotOptions {
+                log_y: true,
+                ..Default::default()
+            },
+        );
+        assert!(text.contains("log-scale"));
+        assert!(text.contains('*'));
+    }
+
+    #[test]
+    fn empty_input_is_graceful() {
+        let text = render(&[], &PlotOptions::default());
+        assert!(text.contains("no finite points"));
+        let nan_series = vec![Series {
+            name: "nan".into(),
+            xs: vec![f64::NAN],
+            ys: vec![f64::NAN],
+        }];
+        assert!(render(&nan_series, &PlotOptions::default()).contains("no finite points"));
+    }
+
+    #[test]
+    fn extremes_land_on_first_and_last_rows() {
+        let s = vec![Series {
+            name: "two".into(),
+            xs: vec![0.0, 1.0],
+            ys: vec![0.0, 1.0],
+        }];
+        let opts = PlotOptions {
+            width: 20,
+            height: 6,
+            ..Default::default()
+        };
+        let text = render(&s, &opts);
+        let rows: Vec<&str> = text.lines().filter(|l| l.contains('|')).collect();
+        assert_eq!(rows.len(), 6);
+        // y padding keeps extremes off the exact border rows but inside.
+        assert!(rows.iter().any(|r| r.contains('*')));
+    }
+}

@@ -1,0 +1,147 @@
+//! Wall-clock measurement helpers used by the coordinator's metrics and by
+//! the bench harness (criterion is unavailable offline — see `crate::bench`).
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch accumulating named phase durations.
+#[derive(Debug, Default)]
+pub struct PhaseTimer {
+    phases: Vec<(String, Duration)>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure and record it under `name`.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.phases.push((name.to_string(), t0.elapsed()));
+        out
+    }
+
+    pub fn total(&self) -> Duration {
+        self.phases.iter().map(|(_, d)| *d).sum()
+    }
+
+    /// Aggregate duration of all phases with this name.
+    pub fn of(&self, name: &str) -> Duration {
+        self.phases
+            .iter()
+            .filter(|(n, _)| n == name)
+            .map(|(_, d)| *d)
+            .sum()
+    }
+
+    pub fn report(&self) -> String {
+        let total = self.total().as_secs_f64().max(1e-12);
+        let mut names: Vec<&str> = self.phases.iter().map(|(n, _)| n.as_str()).collect();
+        names.dedup();
+        let mut uniq: Vec<&str> = Vec::new();
+        for n in names {
+            if !uniq.contains(&n) {
+                uniq.push(n);
+            }
+        }
+        let mut out = String::new();
+        for name in uniq {
+            let d = self.of(name).as_secs_f64();
+            out.push_str(&format!(
+                "{name:24} {:10.3} ms  {:5.1}%\n",
+                d * 1e3,
+                100.0 * d / total
+            ));
+        }
+        out
+    }
+}
+
+/// Online summary statistics (Welford) over a stream of samples.
+#[derive(Debug, Clone, Default)]
+pub struct Stats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Stats {
+    pub fn new() -> Self {
+        Stats {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_moments() {
+        let mut s = Stats::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.push(x);
+        }
+        assert_eq!(s.count(), 8);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.std() - (32.0f64 / 7.0).sqrt()).abs() < 1e-12);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+    }
+
+    #[test]
+    fn phase_timer_accumulates() {
+        let mut t = PhaseTimer::new();
+        t.time("a", || std::thread::sleep(Duration::from_millis(2)));
+        t.time("b", || {});
+        t.time("a", || {});
+        assert!(t.of("a") >= Duration::from_millis(2));
+        assert!(t.total() >= t.of("a"));
+        assert!(t.report().contains("a"));
+    }
+}

@@ -1,0 +1,212 @@
+//! Variance monitors: the paper's Tr(Σ(q)) estimators for the three
+//! proposals compared in §4/§5 and Figure 4.
+//!
+//! Given per-example gradient norms ‖g(x_n)‖ under the *current* parameters
+//! and the (possibly stale, possibly smoothed) probability weights ω̃_n the
+//! master actually samples with:
+//!
+//!   Tr(Σ(q_IDEAL)) = (mean_n ‖g_n‖)²                    − ‖g_TRUE‖²   (eq 7)
+//!   Tr(Σ(q_UNIF))  =  mean_n ‖g_n‖²                     − ‖g_TRUE‖²   (eq 8)
+//!   Tr(Σ(q_STALE)) = (mean_n ω̃_n)(mean_n ‖g_n‖²/ω̃_n)   − ‖g_TRUE‖²   (eq 9)
+//!
+//! ‖g_TRUE‖² is common to all three, so the *ordering* is insensitive to
+//! how it is approximated (§B.2) — we expose both the raw second moments
+//! and the ‖g_TRUE‖²-corrected values.
+
+/// One Tr(Σ) measurement for the three proposals.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct VarianceReport {
+    /// Raw second-moment term of eq. 7 (before subtracting ‖g_TRUE‖²).
+    pub ideal_raw: f64,
+    /// Raw term of eq. 9.
+    pub stale_raw: f64,
+    /// Raw term of eq. 8.
+    pub unif_raw: f64,
+    /// The ‖g_TRUE‖² estimate used for the corrected values.
+    pub g_true_sq: f64,
+    /// Fraction of examples with usable (positive) stale weights.
+    pub kept_frac: f64,
+}
+
+impl VarianceReport {
+    pub fn ideal(&self) -> f64 {
+        (self.ideal_raw - self.g_true_sq).max(0.0)
+    }
+    pub fn stale(&self) -> f64 {
+        (self.stale_raw - self.g_true_sq).max(0.0)
+    }
+    pub fn unif(&self) -> f64 {
+        (self.unif_raw - self.g_true_sq).max(0.0)
+    }
+
+    /// The §4.2 sanity ordering on the raw terms (always true
+    /// mathematically for ideal ≤ stale by Cauchy-Schwarz; stale ≤ unif
+    /// only when the weights still carry signal).
+    pub fn ordering_holds(&self) -> bool {
+        self.ideal_raw <= self.stale_raw * (1.0 + 1e-9) + 1e-12
+    }
+}
+
+/// Compute the three Tr(Σ) raw terms from current squared gradient norms
+/// `sqnorms[n] = ‖g(x_n)‖²` and the sampling weights `stale_weights` the
+/// master is actually using (post smoothing/staleness-filter).
+///
+/// Indices whose stale weight is zero (filtered out, §B.1) are excluded
+/// from all three averages, mirroring the paper's practice of restricting
+/// the proposal to the kept subset.
+pub fn trace_sigma(sqnorms: &[f64], stale_weights: &[f64], g_true_sq: f64) -> VarianceReport {
+    assert_eq!(sqnorms.len(), stale_weights.len());
+    let mut n_kept = 0usize;
+    let (mut sum_norm, mut sum_sq, mut sum_w, mut sum_ratio) = (0.0, 0.0, 0.0, 0.0);
+    for (&sq, &w) in sqnorms.iter().zip(stale_weights) {
+        if w <= 0.0 {
+            continue;
+        }
+        n_kept += 1;
+        let norm = sq.max(0.0).sqrt();
+        sum_norm += norm;
+        sum_sq += sq.max(0.0);
+        sum_w += w;
+        sum_ratio += sq.max(0.0) / w;
+    }
+    if n_kept == 0 {
+        return VarianceReport {
+            ideal_raw: 0.0,
+            stale_raw: 0.0,
+            unif_raw: 0.0,
+            g_true_sq,
+            kept_frac: 0.0,
+        };
+    }
+    let n = n_kept as f64;
+    VarianceReport {
+        ideal_raw: (sum_norm / n).powi(2),
+        stale_raw: (sum_w / n) * (sum_ratio / n),
+        unif_raw: sum_sq / n,
+        g_true_sq,
+        kept_frac: n / sqnorms.len() as f64,
+    }
+}
+
+/// Running §B.2 estimator of ‖g_TRUE‖²: averages per-minibatch
+/// ‖mean-gradient‖² values, which upper-bounds the true value and decays
+/// to it as training converges.
+#[derive(Debug, Clone, Default)]
+pub struct GTrueEstimator {
+    sum: f64,
+    count: u64,
+}
+
+impl GTrueEstimator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, minibatch_sqnorm: f64) {
+        self.sum += minibatch_sqnorm.max(0.0);
+        self.count += 1;
+    }
+
+    /// Current estimate (0 before any observation — the conservative
+    /// choice: raw terms are then reported uncorrected).
+    pub fn estimate(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Forget history (call when parameters changed enough that old
+    /// minibatch gradients are no longer representative).
+    pub fn reset(&mut self) {
+        self.sum = 0.0;
+        self.count = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_equals_stale_when_weights_are_norms() {
+        // If ω̃_n = ‖g_n‖ exactly, eq 9 reduces to eq 7.
+        let sqnorms = vec![1.0, 4.0, 9.0, 16.0];
+        let weights: Vec<f64> = sqnorms.iter().map(|s: &f64| s.sqrt()).collect();
+        let r = trace_sigma(&sqnorms, &weights, 0.0);
+        assert!((r.ideal_raw - r.stale_raw).abs() < 1e-12);
+        assert_eq!(r.kept_frac, 1.0);
+    }
+
+    #[test]
+    fn uniform_weights_reduce_stale_to_unif() {
+        // If ω̃_n = const, eq 9 reduces to eq 8.
+        let sqnorms = vec![1.0, 4.0, 9.0, 16.0];
+        let r = trace_sigma(&sqnorms, &[7.0; 4], 0.0);
+        assert!((r.stale_raw - r.unif_raw).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ordering_ideal_le_stale_le_unif_for_reasonable_weights() {
+        // Stale-but-correlated weights: ideal ≤ stale ≤ unif (§4.2).
+        let sqnorms = vec![0.25, 1.0, 4.0, 25.0, 100.0];
+        let stale: Vec<f64> = sqnorms.iter().map(|s: &f64| s.sqrt() * 1.3 + 0.1).collect();
+        let r = trace_sigma(&sqnorms, &stale, 0.0);
+        assert!(r.ideal_raw <= r.stale_raw + 1e-12);
+        assert!(r.stale_raw <= r.unif_raw + 1e-12);
+        assert!(r.ordering_holds());
+    }
+
+    #[test]
+    fn adversarial_weights_break_upper_ordering() {
+        // Paper §4.2: random/anti-correlated weights CAN exceed uniform.
+        let sqnorms = vec![100.0, 0.01];
+        let stale = vec![0.01, 100.0]; // exactly wrong
+        let r = trace_sigma(&sqnorms, &stale, 0.0);
+        assert!(r.stale_raw > r.unif_raw);
+        // ...but ideal ≤ stale always holds (Cauchy-Schwarz).
+        assert!(r.ideal_raw <= r.stale_raw);
+    }
+
+    #[test]
+    fn filtered_indices_are_excluded() {
+        let sqnorms = vec![1.0, 4.0, 9.0, 16.0];
+        let stale = vec![1.0, 0.0, 3.0, 0.0];
+        let r = trace_sigma(&sqnorms, &stale, 0.0);
+        assert_eq!(r.kept_frac, 0.5);
+        // unif over kept subset {0, 2}: (1 + 9)/2
+        assert!((r.unif_raw - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn correction_subtracts_g_true() {
+        let r = trace_sigma(&[4.0, 4.0], &[2.0, 2.0], 1.5);
+        assert!((r.unif() - 2.5).abs() < 1e-12);
+        assert!((r.unif_raw - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn correction_clamps_at_zero() {
+        let r = trace_sigma(&[1.0], &[1.0], 100.0);
+        assert_eq!(r.unif(), 0.0);
+    }
+
+    #[test]
+    fn g_true_estimator_averages() {
+        let mut e = GTrueEstimator::new();
+        assert_eq!(e.estimate(), 0.0);
+        e.push(2.0);
+        e.push(4.0);
+        assert!((e.estimate() - 3.0).abs() < 1e-12);
+        e.reset();
+        assert_eq!(e.estimate(), 0.0);
+    }
+
+    #[test]
+    fn empty_kept_set_is_all_zero() {
+        let r = trace_sigma(&[1.0, 2.0], &[0.0, 0.0], 0.5);
+        assert_eq!(r.kept_frac, 0.0);
+        assert_eq!(r.ideal_raw, 0.0);
+    }
+}

@@ -1,0 +1,108 @@
+//! TCP client: a [`WeightStore`] implementation backed by a remote server.
+//!
+//! One `TcpStream` per client, requests are strictly request/response, and
+//! the stream sits behind a `Mutex` so a client handle can be shared across
+//! threads (each actor normally owns its own client, though — connections
+//! are cheap at this scale).
+
+use std::net::TcpStream;
+use std::sync::Mutex;
+
+use anyhow::{bail, Result};
+
+use super::protocol::{read_frame, write_frame, Request, Response};
+use super::{StoreStats, WeightSnapshot, WeightStore};
+
+pub struct Client {
+    stream: Mutex<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        Ok(Client {
+            stream: Mutex::new(stream),
+        })
+    }
+
+    fn call(&self, req: Request) -> Result<Response> {
+        let mut stream = self.stream.lock().unwrap();
+        write_frame(&mut *stream, &req.encode())?;
+        let frame = read_frame(&mut *stream)?;
+        Response::decode(&frame)?.into_result()
+    }
+
+    /// Ask the remote server to stop accepting connections.
+    pub fn shutdown_server(&self) -> Result<()> {
+        match self.call(Request::Shutdown)? {
+            Response::Ok => Ok(()),
+            other => bail!("unexpected response to shutdown: {other:?}"),
+        }
+    }
+}
+
+impl WeightStore for Client {
+    fn push_params(&self, version: u64, bytes: Vec<u8>) -> Result<()> {
+        match self.call(Request::PushParams { version, bytes })? {
+            Response::Ok => Ok(()),
+            other => bail!("unexpected response: {other:?}"),
+        }
+    }
+
+    fn fetch_params(&self, than: u64) -> Result<Option<(u64, Vec<u8>)>> {
+        match self.call(Request::FetchParams { than })? {
+            Response::Params(p) => Ok(p),
+            other => bail!("unexpected response: {other:?}"),
+        }
+    }
+
+    fn params_version(&self) -> Result<u64> {
+        match self.call(Request::ParamsVersion)? {
+            Response::Version(v) => Ok(v),
+            other => bail!("unexpected response: {other:?}"),
+        }
+    }
+
+    fn push_weights(&self, start: usize, weights: &[f32], param_version: u64) -> Result<()> {
+        match self.call(Request::PushWeights {
+            start: start as u64,
+            param_version,
+            weights: weights.to_vec(),
+        })? {
+            Response::Ok => Ok(()),
+            other => bail!("unexpected response: {other:?}"),
+        }
+    }
+
+    fn fetch_weights(&self) -> Result<WeightSnapshot> {
+        match self.call(Request::FetchWeights)? {
+            Response::Weights(snap) => Ok(snap),
+            other => bail!("unexpected response: {other:?}"),
+        }
+    }
+
+    fn apply_grad(&self, scale: f32, grad: &[f32]) -> Result<u64> {
+        match self.call(Request::ApplyGrad {
+            scale,
+            grad: grad.to_vec(),
+        })? {
+            Response::Version(v) => Ok(v),
+            other => bail!("unexpected response: {other:?}"),
+        }
+    }
+
+    fn now(&self) -> Result<u64> {
+        match self.call(Request::Now)? {
+            Response::Now(t) => Ok(t),
+            other => bail!("unexpected response: {other:?}"),
+        }
+    }
+
+    fn stats(&self) -> Result<StoreStats> {
+        match self.call(Request::Stats)? {
+            Response::Stats(s) => Ok(s),
+            other => bail!("unexpected response: {other:?}"),
+        }
+    }
+}

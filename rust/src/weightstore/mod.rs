@@ -1,0 +1,350 @@
+//! The paper's *database* actor (§4.2) — the mailbox decoupling master and
+//! workers.  Alain et al. used Redis; we build the equivalent in-tree:
+//!
+//! * [`MemStore`] — the storage engine: versioned parameter blob +
+//!   per-example probability weights with staleness stamps, behind a
+//!   `RwLock` (weights) and `Mutex` (params) so concurrent workers never
+//!   block each other on reads.
+//! * [`server`]/[`client`] — a thread-per-connection TCP layer with a
+//!   length-prefixed binary protocol, so master and workers can run as
+//!   separate OS processes like the paper's deployment.  Both implement
+//!   the same [`WeightStore`] trait, so the coordinator is oblivious to
+//!   which transport it talks to ("fire and forget", §4.2).
+//!
+//! Staleness bookkeeping: every weight push carries the parameter
+//! `version` it was computed from; the store stamps it with its own
+//! monotonic nanosecond clock.  The master's staleness filter (§B.1) can
+//! therefore operate in wall-clock mode (the paper's "4 seconds") or in
+//! version mode (exact-mode sanity checks).
+
+pub mod client;
+pub mod protocol;
+pub mod server;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, RwLock};
+use std::time::Instant;
+
+use anyhow::Result;
+
+/// Everything the master needs to build a proposal distribution.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct WeightSnapshot {
+    /// Un-normalised probability weights `ω̃_n` (gradient norms).
+    pub weights: Vec<f64>,
+    /// Store-clock (ns) when each weight was last pushed.
+    pub stamps: Vec<u64>,
+    /// Parameter version each weight was computed from.
+    pub param_versions: Vec<u64>,
+}
+
+impl WeightSnapshot {
+    pub fn len(&self) -> usize {
+        self.weights.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.weights.is_empty()
+    }
+}
+
+/// Store-side aggregate counters (exposed for experiments/monitoring).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    pub param_pushes: u64,
+    pub param_fetches: u64,
+    pub weight_pushes: u64,
+    pub weights_written: u64,
+    pub snapshot_fetches: u64,
+    pub grad_applies: u64,
+}
+
+/// The master/worker-facing interface of the database actor.
+pub trait WeightStore: Send + Sync {
+    /// Publish a new parameter blob under a monotonically increasing
+    /// version (master → workers).  Pushing a version ≤ current is an
+    /// error: versions define staleness.
+    fn push_params(&self, version: u64, bytes: Vec<u8>) -> Result<()>;
+
+    /// Fetch the parameter blob if its version is `> than`.  Returns
+    /// `None` when the caller is already up to date — workers poll this
+    /// cheaply without re-downloading ~76 MB of `paper`-config weights.
+    fn fetch_params(&self, than: u64) -> Result<Option<(u64, Vec<u8>)>>;
+
+    /// Latest published parameter version (0 = nothing published yet).
+    fn params_version(&self) -> Result<u64>;
+
+    /// Write a contiguous run of weights starting at example `start`,
+    /// tagged with the parameter version they were computed from
+    /// (workers → master).
+    fn push_weights(&self, start: usize, weights: &[f32], param_version: u64) -> Result<()>;
+
+    /// Snapshot all weights + staleness metadata (master).
+    fn fetch_weights(&self) -> Result<WeightSnapshot>;
+
+    /// Parameter-server op (ASGD/peer mode, paper §6): apply
+    /// ``params -= scale * grad`` elementwise on the stored f32 parameter
+    /// blob and bump the version.  The store treats parameters as an
+    /// opaque f32 vector — no model knowledge needed.  Errors if no
+    /// parameters have been published or sizes mismatch.
+    fn apply_grad(&self, scale: f32, grad: &[f32]) -> Result<u64>;
+
+    /// Store-clock in nanoseconds (monotonic, starts near 0).
+    fn now(&self) -> Result<u64>;
+
+    /// Aggregate op counters.
+    fn stats(&self) -> Result<StoreStats>;
+}
+
+struct ParamSlot {
+    version: u64,
+    bytes: Vec<u8>,
+}
+
+/// In-process storage engine (also the backend behind the TCP server).
+pub struct MemStore {
+    params: Mutex<ParamSlot>,
+    weights: RwLock<WeightSnapshot>,
+    start: Instant,
+    param_pushes: AtomicU64,
+    param_fetches: AtomicU64,
+    weight_pushes: AtomicU64,
+    weights_written: AtomicU64,
+    snapshot_fetches: AtomicU64,
+    grad_applies: AtomicU64,
+}
+
+impl MemStore {
+    /// Create a store tracking `n` examples, all weights initialised to
+    /// `init_weight` (the paper starts from uniform — every example must
+    /// be samplable before the first worker sweep completes).
+    pub fn new(n: usize, init_weight: f64) -> Self {
+        MemStore {
+            params: Mutex::new(ParamSlot {
+                version: 0,
+                bytes: Vec::new(),
+            }),
+            weights: RwLock::new(WeightSnapshot {
+                weights: vec![init_weight; n],
+                stamps: vec![0; n],
+                param_versions: vec![0; n],
+            }),
+            start: Instant::now(),
+            param_pushes: AtomicU64::new(0),
+            param_fetches: AtomicU64::new(0),
+            weight_pushes: AtomicU64::new(0),
+            weights_written: AtomicU64::new(0),
+            snapshot_fetches: AtomicU64::new(0),
+            grad_applies: AtomicU64::new(0),
+        }
+    }
+
+    pub fn n_examples(&self) -> usize {
+        self.weights.read().unwrap().weights.len()
+    }
+}
+
+impl WeightStore for MemStore {
+    fn push_params(&self, version: u64, bytes: Vec<u8>) -> Result<()> {
+        let mut slot = self.params.lock().unwrap();
+        anyhow::ensure!(
+            version > slot.version,
+            "parameter version must increase: {} -> {}",
+            slot.version,
+            version
+        );
+        slot.version = version;
+        slot.bytes = bytes;
+        self.param_pushes.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn fetch_params(&self, than: u64) -> Result<Option<(u64, Vec<u8>)>> {
+        let slot = self.params.lock().unwrap();
+        self.param_fetches.fetch_add(1, Ordering::Relaxed);
+        if slot.version > than {
+            Ok(Some((slot.version, slot.bytes.clone())))
+        } else {
+            Ok(None)
+        }
+    }
+
+    fn params_version(&self) -> Result<u64> {
+        Ok(self.params.lock().unwrap().version)
+    }
+
+    fn push_weights(&self, start: usize, weights: &[f32], param_version: u64) -> Result<()> {
+        let now = self.now()?;
+        let mut snap = self.weights.write().unwrap();
+        anyhow::ensure!(
+            start + weights.len() <= snap.weights.len(),
+            "weight range {}..{} out of bounds (n = {})",
+            start,
+            start + weights.len(),
+            snap.weights.len()
+        );
+        for (i, &w) in weights.iter().enumerate() {
+            anyhow::ensure!(w.is_finite() && w >= 0.0, "weight {w} invalid at {}", start + i);
+            snap.weights[start + i] = w as f64;
+            snap.stamps[start + i] = now;
+            snap.param_versions[start + i] = param_version;
+        }
+        self.weight_pushes.fetch_add(1, Ordering::Relaxed);
+        self.weights_written
+            .fetch_add(weights.len() as u64, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn fetch_weights(&self) -> Result<WeightSnapshot> {
+        self.snapshot_fetches.fetch_add(1, Ordering::Relaxed);
+        Ok(self.weights.read().unwrap().clone())
+    }
+
+    fn apply_grad(&self, scale: f32, grad: &[f32]) -> Result<u64> {
+        anyhow::ensure!(scale.is_finite(), "scale {scale} invalid");
+        let mut slot = self.params.lock().unwrap();
+        anyhow::ensure!(slot.version > 0, "no parameters published yet");
+        anyhow::ensure!(
+            slot.bytes.len() == grad.len() * 4,
+            "gradient has {} values, parameter blob holds {}",
+            grad.len(),
+            slot.bytes.len() / 4
+        );
+        for (chunk, g) in slot.bytes.chunks_exact_mut(4).zip(grad) {
+            let v = f32::from_le_bytes(chunk.try_into().unwrap()) - scale * g;
+            chunk.copy_from_slice(&v.to_le_bytes());
+        }
+        slot.version += 1;
+        self.grad_applies.fetch_add(1, Ordering::Relaxed);
+        Ok(slot.version)
+    }
+
+    fn now(&self) -> Result<u64> {
+        Ok(self.start.elapsed().as_nanos() as u64)
+    }
+
+    fn stats(&self) -> Result<StoreStats> {
+        Ok(StoreStats {
+            param_pushes: self.param_pushes.load(Ordering::Relaxed),
+            param_fetches: self.param_fetches.load(Ordering::Relaxed),
+            weight_pushes: self.weight_pushes.load(Ordering::Relaxed),
+            weights_written: self.weights_written.load(Ordering::Relaxed),
+            snapshot_fetches: self.snapshot_fetches.load(Ordering::Relaxed),
+            grad_applies: self.grad_applies.load(Ordering::Relaxed),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn params_roundtrip_and_versioning() {
+        let s = MemStore::new(4, 1.0);
+        assert_eq!(s.params_version().unwrap(), 0);
+        assert!(s.fetch_params(0).unwrap().is_none());
+        s.push_params(1, vec![1, 2, 3]).unwrap();
+        let (v, b) = s.fetch_params(0).unwrap().unwrap();
+        assert_eq!((v, b), (1, vec![1, 2, 3]));
+        assert!(s.fetch_params(1).unwrap().is_none()); // up to date
+        assert!(s.push_params(1, vec![]).is_err()); // must increase
+        s.push_params(5, vec![9]).unwrap();
+        assert_eq!(s.params_version().unwrap(), 5);
+    }
+
+    #[test]
+    fn weights_init_and_push() {
+        let s = MemStore::new(5, 2.5);
+        let snap = s.fetch_weights().unwrap();
+        assert_eq!(snap.weights, vec![2.5; 5]);
+        s.push_weights(1, &[7.0, 8.0], 3).unwrap();
+        let snap = s.fetch_weights().unwrap();
+        assert_eq!(snap.weights, vec![2.5, 7.0, 8.0, 2.5, 2.5]);
+        assert_eq!(snap.param_versions, vec![0, 3, 3, 0, 0]);
+        assert!(snap.stamps[1] > 0);
+    }
+
+    #[test]
+    fn rejects_out_of_bounds_and_bad_values() {
+        let s = MemStore::new(3, 1.0);
+        assert!(s.push_weights(2, &[1.0, 1.0], 1).is_err());
+        assert!(s.push_weights(0, &[f32::NAN], 1).is_err());
+        assert!(s.push_weights(0, &[-1.0], 1).is_err());
+    }
+
+    #[test]
+    fn stats_count_ops() {
+        let s = MemStore::new(3, 1.0);
+        s.push_params(1, vec![0]).unwrap();
+        s.fetch_params(0).unwrap();
+        s.push_weights(0, &[1.0, 2.0], 1).unwrap();
+        s.fetch_weights().unwrap();
+        let st = s.stats().unwrap();
+        assert_eq!(st.param_pushes, 1);
+        assert_eq!(st.param_fetches, 1);
+        assert_eq!(st.weight_pushes, 1);
+        assert_eq!(st.weights_written, 2);
+        assert_eq!(st.snapshot_fetches, 1);
+    }
+
+    #[test]
+    fn apply_grad_is_elementwise_sgd() {
+        let s = MemStore::new(2, 1.0);
+        // params = [1.0, 2.0, -3.0]
+        let mut blob = Vec::new();
+        for v in [1.0f32, 2.0, -3.0] {
+            blob.extend(v.to_le_bytes());
+        }
+        s.push_params(1, blob).unwrap();
+        let v = s.apply_grad(0.5, &[2.0, -2.0, 4.0]).unwrap();
+        assert_eq!(v, 2);
+        let (ver, bytes) = s.fetch_params(0).unwrap().unwrap();
+        assert_eq!(ver, 2);
+        let got: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        assert_eq!(got, vec![0.0, 3.0, -5.0]);
+        assert_eq!(s.stats().unwrap().grad_applies, 1);
+    }
+
+    #[test]
+    fn apply_grad_validates() {
+        let s = MemStore::new(2, 1.0);
+        assert!(s.apply_grad(0.1, &[1.0]).is_err()); // no params yet
+        s.push_params(1, vec![0u8; 8]).unwrap();
+        assert!(s.apply_grad(0.1, &[1.0]).is_err()); // size mismatch
+        assert!(s.apply_grad(f32::NAN, &[1.0, 1.0]).is_err());
+    }
+
+    #[test]
+    fn clock_is_monotonic() {
+        let s = MemStore::new(1, 0.0);
+        let a = s.now().unwrap();
+        let b = s.now().unwrap();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn concurrent_pushers_do_not_lose_writes() {
+        use std::sync::Arc;
+        let s = Arc::new(MemStore::new(1000, 0.0));
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let s = Arc::clone(&s);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..250 {
+                    let idx = t * 250 + i;
+                    s.push_weights(idx, &[(idx + 1) as f32], 1).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let snap = s.fetch_weights().unwrap();
+        for (i, &w) in snap.weights.iter().enumerate() {
+            assert_eq!(w, (i + 1) as f64);
+        }
+    }
+}

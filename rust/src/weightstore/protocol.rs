@@ -1,0 +1,447 @@
+//! Wire protocol for the TCP weight store: length-prefixed binary frames.
+//!
+//! Frame layout: `u32 little-endian payload length` + payload.  The payload
+//! starts with a one-byte opcode followed by fixed-width little-endian
+//! fields.  No varints, no schema evolution — the protocol is internal to
+//! one release of this binary on both ends, so simplicity wins (this is
+//! also roughly what the paper got from Redis: opaque blobs under keys).
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use super::{StoreStats, WeightSnapshot};
+
+/// Hard cap on frame size (128 MiB) — a corrupted length prefix must not
+/// make the peer try to allocate the universe.
+pub const MAX_FRAME: usize = 128 << 20;
+
+/// Client → server requests.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    PushParams { version: u64, bytes: Vec<u8> },
+    FetchParams { than: u64 },
+    ParamsVersion,
+    PushWeights { start: u64, param_version: u64, weights: Vec<f32> },
+    FetchWeights,
+    /// Parameter-server op: params -= scale * grad (ASGD peers, §6).
+    ApplyGrad { scale: f32, grad: Vec<f32> },
+    Now,
+    Stats,
+    /// Ask the server process to exit its accept loop.
+    Shutdown,
+}
+
+/// Server → client responses.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Ok,
+    Err(String),
+    Params(Option<(u64, Vec<u8>)>),
+    Version(u64),
+    Weights(WeightSnapshot),
+    Now(u64),
+    Stats(StoreStats),
+}
+
+// ---------------------------------------------------------------------------
+// primitives
+// ---------------------------------------------------------------------------
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("truncated frame: need {n} bytes at {}", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    #[allow(dead_code)]
+    fn f64_scalar(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn bytes(&mut self) -> Result<Vec<u8>> {
+        let len = self.u64()? as usize;
+        Ok(self.take(len)?.to_vec())
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let len = self.u64()? as usize;
+        let raw = self.take(len * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn u64s(&mut self) -> Result<Vec<u64>> {
+        let len = self.u64()? as usize;
+        let raw = self.take(len * 8)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn f64s(&mut self) -> Result<Vec<f64>> {
+        let len = self.u64()? as usize;
+        let raw = self.take(len * 8)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!("{} trailing bytes in frame", self.buf.len() - self.pos);
+        }
+        Ok(())
+    }
+}
+
+fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
+    out.extend((b.len() as u64).to_le_bytes());
+    out.extend(b);
+}
+
+fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    out.extend((xs.len() as u64).to_le_bytes());
+    for x in xs {
+        out.extend(x.to_le_bytes());
+    }
+}
+
+fn put_u64s(out: &mut Vec<u8>, xs: &[u64]) {
+    out.extend((xs.len() as u64).to_le_bytes());
+    for x in xs {
+        out.extend(x.to_le_bytes());
+    }
+}
+
+fn put_f64s(out: &mut Vec<u8>, xs: &[f64]) {
+    out.extend((xs.len() as u64).to_le_bytes());
+    for x in xs {
+        out.extend(x.to_le_bytes());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// encode / decode
+// ---------------------------------------------------------------------------
+
+impl Request {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut p = Vec::new();
+        match self {
+            Request::PushParams { version, bytes } => {
+                p.push(0x01);
+                p.extend(version.to_le_bytes());
+                put_bytes(&mut p, bytes);
+            }
+            Request::FetchParams { than } => {
+                p.push(0x02);
+                p.extend(than.to_le_bytes());
+            }
+            Request::ParamsVersion => p.push(0x03),
+            Request::PushWeights {
+                start,
+                param_version,
+                weights,
+            } => {
+                p.push(0x04);
+                p.extend(start.to_le_bytes());
+                p.extend(param_version.to_le_bytes());
+                put_f32s(&mut p, weights);
+            }
+            Request::FetchWeights => p.push(0x05),
+            Request::ApplyGrad { scale, grad } => {
+                p.push(0x08);
+                p.extend(scale.to_le_bytes());
+                put_f32s(&mut p, grad);
+            }
+            Request::Now => p.push(0x06),
+            Request::Stats => p.push(0x07),
+            Request::Shutdown => p.push(0x0F),
+        }
+        p
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Request> {
+        let mut c = Cursor::new(buf);
+        let op = c.u8()?;
+        let req = match op {
+            0x01 => Request::PushParams {
+                version: c.u64()?,
+                bytes: c.bytes()?,
+            },
+            0x02 => Request::FetchParams { than: c.u64()? },
+            0x03 => Request::ParamsVersion,
+            0x04 => Request::PushWeights {
+                start: c.u64()?,
+                param_version: c.u64()?,
+                weights: c.f32s()?,
+            },
+            0x05 => Request::FetchWeights,
+            0x08 => Request::ApplyGrad {
+                scale: {
+                    let raw = c.take(4)?;
+                    f32::from_le_bytes(raw.try_into().unwrap())
+                },
+                grad: c.f32s()?,
+            },
+            0x06 => Request::Now,
+            0x07 => Request::Stats,
+            0x0F => Request::Shutdown,
+            _ => bail!("unknown request opcode {op:#04x}"),
+        };
+        c.done()?;
+        Ok(req)
+    }
+}
+
+impl Response {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut p = Vec::new();
+        match self {
+            Response::Ok => p.push(0x80),
+            Response::Err(msg) => {
+                p.push(0x81);
+                put_bytes(&mut p, msg.as_bytes());
+            }
+            Response::Params(opt) => {
+                p.push(0x82);
+                match opt {
+                    None => p.push(0),
+                    Some((v, b)) => {
+                        p.push(1);
+                        p.extend(v.to_le_bytes());
+                        put_bytes(&mut p, b);
+                    }
+                }
+            }
+            Response::Version(v) => {
+                p.push(0x83);
+                p.extend(v.to_le_bytes());
+            }
+            Response::Weights(snap) => {
+                p.push(0x84);
+                put_f64s(&mut p, &snap.weights);
+                put_u64s(&mut p, &snap.stamps);
+                put_u64s(&mut p, &snap.param_versions);
+            }
+            Response::Now(t) => {
+                p.push(0x85);
+                p.extend(t.to_le_bytes());
+            }
+            Response::Stats(s) => {
+                p.push(0x86);
+                for v in [
+                    s.param_pushes,
+                    s.param_fetches,
+                    s.weight_pushes,
+                    s.weights_written,
+                    s.snapshot_fetches,
+                    s.grad_applies,
+                ] {
+                    p.extend(v.to_le_bytes());
+                }
+            }
+        }
+        p
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Response> {
+        let mut c = Cursor::new(buf);
+        let op = c.u8()?;
+        let resp = match op {
+            0x80 => Response::Ok,
+            0x81 => Response::Err(String::from_utf8_lossy(&c.bytes()?).into_owned()),
+            0x82 => {
+                let has = c.u8()? != 0;
+                if has {
+                    Response::Params(Some((c.u64()?, c.bytes()?)))
+                } else {
+                    Response::Params(None)
+                }
+            }
+            0x83 => Response::Version(c.u64()?),
+            0x84 => {
+                let weights = c.f64s()?;
+                let stamps = c.u64s()?;
+                let param_versions = c.u64s()?;
+                anyhow::ensure!(
+                    weights.len() == stamps.len() && stamps.len() == param_versions.len(),
+                    "snapshot arrays disagree on length"
+                );
+                Response::Weights(WeightSnapshot {
+                    weights,
+                    stamps,
+                    param_versions,
+                })
+            }
+            0x85 => Response::Now(c.u64()?),
+            0x86 => Response::Stats(StoreStats {
+                param_pushes: c.u64()?,
+                param_fetches: c.u64()?,
+                weight_pushes: c.u64()?,
+                weights_written: c.u64()?,
+                snapshot_fetches: c.u64()?,
+                grad_applies: c.u64()?,
+            }),
+            _ => bail!("unknown response opcode {op:#04x}"),
+        };
+        c.done()?;
+        Ok(resp)
+    }
+
+    /// Map an error response into a rust error.
+    pub fn into_result(self) -> Result<Response> {
+        match self {
+            Response::Err(msg) => bail!("store error: {msg}"),
+            other => Ok(other),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// framing
+// ---------------------------------------------------------------------------
+
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<()> {
+    anyhow::ensure!(payload.len() <= MAX_FRAME, "frame too large: {}", payload.len());
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+pub fn read_frame(r: &mut impl Read) -> Result<Vec<u8>> {
+    let mut len_buf = [0u8; 4];
+    r.read_exact(&mut len_buf).context("reading frame length")?;
+    let len = u32::from_le_bytes(len_buf) as usize;
+    anyhow::ensure!(len <= MAX_FRAME, "frame length {len} exceeds cap");
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).context("reading frame body")?;
+    Ok(payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_req(req: Request) {
+        let enc = req.encode();
+        assert_eq!(Request::decode(&enc).unwrap(), req);
+    }
+
+    fn roundtrip_resp(resp: Response) {
+        let enc = resp.encode();
+        assert_eq!(Response::decode(&enc).unwrap(), resp);
+    }
+
+    #[test]
+    fn requests_roundtrip() {
+        roundtrip_req(Request::PushParams {
+            version: 7,
+            bytes: vec![1, 2, 3, 255],
+        });
+        roundtrip_req(Request::FetchParams { than: 42 });
+        roundtrip_req(Request::ParamsVersion);
+        roundtrip_req(Request::PushWeights {
+            start: 100,
+            param_version: 3,
+            weights: vec![1.5, -0.0, 3.25e-8],
+        });
+        roundtrip_req(Request::FetchWeights);
+        roundtrip_req(Request::ApplyGrad {
+            scale: 0.125,
+            grad: vec![1.0, -2.0, 3.5],
+        });
+        roundtrip_req(Request::Now);
+        roundtrip_req(Request::Stats);
+        roundtrip_req(Request::Shutdown);
+    }
+
+    #[test]
+    fn responses_roundtrip() {
+        roundtrip_resp(Response::Ok);
+        roundtrip_resp(Response::Err("boom".into()));
+        roundtrip_resp(Response::Params(None));
+        roundtrip_resp(Response::Params(Some((9, vec![7; 100]))));
+        roundtrip_resp(Response::Version(11));
+        roundtrip_resp(Response::Weights(WeightSnapshot {
+            weights: vec![0.5, 2.0],
+            stamps: vec![10, 20],
+            param_versions: vec![1, 2],
+        }));
+        roundtrip_resp(Response::Now(123456789));
+        roundtrip_resp(Response::Stats(StoreStats {
+            param_pushes: 1,
+            param_fetches: 2,
+            weight_pushes: 3,
+            weights_written: 4,
+            snapshot_fetches: 5,
+            grad_applies: 6,
+        }));
+    }
+
+    #[test]
+    fn rejects_truncation_and_trailing() {
+        let enc = Request::PushWeights {
+            start: 0,
+            param_version: 0,
+            weights: vec![1.0, 2.0],
+        }
+        .encode();
+        assert!(Request::decode(&enc[..enc.len() - 1]).is_err());
+        let mut extra = enc.clone();
+        extra.push(0);
+        assert!(Request::decode(&extra).is_err());
+        assert!(Request::decode(&[0xEE]).is_err());
+    }
+
+    #[test]
+    fn framing_roundtrip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r).unwrap(), b"hello");
+        assert_eq!(read_frame(&mut r).unwrap(), b"");
+    }
+
+    #[test]
+    fn frame_length_cap_enforced() {
+        let bad = (MAX_FRAME as u32 + 1).to_le_bytes();
+        let mut stream: Vec<u8> = bad.to_vec();
+        stream.extend([0u8; 16]);
+        assert!(read_frame(&mut &stream[..]).is_err());
+    }
+
+    #[test]
+    fn err_response_into_result() {
+        assert!(Response::Err("x".into()).into_result().is_err());
+        assert!(Response::Ok.into_result().is_ok());
+    }
+}

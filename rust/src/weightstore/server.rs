@@ -1,0 +1,134 @@
+//! TCP server exposing a [`MemStore`] to remote masters/workers.
+//!
+//! Thread-per-connection over std::net (tokio is unavailable offline, and
+//! the connection count here is tiny: one master + a handful of workers).
+//! The accept loop exits when any client sends `Shutdown`, letting
+//! integration tests and the `issgd db-server` subcommand terminate
+//! cleanly.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::protocol::{read_frame, write_frame, Request, Response};
+use super::{MemStore, WeightStore};
+use crate::log_debug;
+
+pub struct Server {
+    listener: TcpListener,
+    store: Arc<MemStore>,
+    stop: Arc<AtomicBool>,
+}
+
+impl Server {
+    /// Bind to `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port).
+    pub fn bind(addr: &str, store: Arc<MemStore>) -> Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        Ok(Server {
+            listener,
+            store,
+            stop: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    /// The actual bound address (resolves ephemeral ports).
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Serve until a client sends `Shutdown`.  Each connection gets its own
+    /// thread; per-request errors are answered as `Response::Err`, i/o
+    /// errors drop the connection (the peer retries or dies, its choice).
+    pub fn serve(self) -> Result<()> {
+        // The accept loop is unblocked on shutdown by a self-connection
+        // made from the handler thread that received Shutdown.
+        for conn in self.listener.incoming() {
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let stream = match conn {
+                Ok(s) => s,
+                Err(e) => {
+                    log_debug!("db", "accept error: {e}");
+                    continue;
+                }
+            };
+            let store = Arc::clone(&self.store);
+            let stop = Arc::clone(&self.stop);
+            let addr = self.local_addr()?;
+            std::thread::spawn(move || {
+                if let Err(e) = handle_connection(stream, &store, &stop, addr) {
+                    log_debug!("db", "connection ended: {e}");
+                }
+            });
+        }
+        Ok(())
+    }
+
+    /// Serve in a background thread; returns `(addr, join-handle)`.
+    pub fn serve_in_background(self) -> Result<(std::net::SocketAddr, std::thread::JoinHandle<()>)> {
+        let addr = self.local_addr()?;
+        let handle = std::thread::spawn(move || {
+            if let Err(e) = self.serve() {
+                crate::log_error!("db", "server error: {e}");
+            }
+        });
+        Ok((addr, handle))
+    }
+}
+
+fn handle_connection(
+    mut stream: TcpStream,
+    store: &MemStore,
+    stop: &AtomicBool,
+    self_addr: std::net::SocketAddr,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    loop {
+        let frame = match read_frame(&mut stream) {
+            Ok(f) => f,
+            Err(_) => return Ok(()), // peer closed
+        };
+        let req = Request::decode(&frame)?;
+        if matches!(req, Request::Shutdown) {
+            stop.store(true, Ordering::SeqCst);
+            write_frame(&mut stream, &Response::Ok.encode())?;
+            // Poke the accept loop so it observes the stop flag.
+            let _ = TcpStream::connect(self_addr);
+            return Ok(());
+        }
+        let resp = dispatch(store, req);
+        write_frame(&mut stream, &resp.encode())?;
+    }
+}
+
+fn dispatch(store: &MemStore, req: Request) -> Response {
+    let result: Result<Response> = (|| {
+        Ok(match req {
+            Request::PushParams { version, bytes } => {
+                store.push_params(version, bytes)?;
+                Response::Ok
+            }
+            Request::FetchParams { than } => Response::Params(store.fetch_params(than)?),
+            Request::ParamsVersion => Response::Version(store.params_version()?),
+            Request::PushWeights {
+                start,
+                param_version,
+                weights,
+            } => {
+                store.push_weights(start as usize, &weights, param_version)?;
+                Response::Ok
+            }
+            Request::FetchWeights => Response::Weights(store.fetch_weights()?),
+            Request::ApplyGrad { scale, grad } => {
+                Response::Version(store.apply_grad(scale, &grad)?)
+            }
+            Request::Now => Response::Now(store.now()?),
+            Request::Stats => Response::Stats(store.stats()?),
+            Request::Shutdown => unreachable!("handled by caller"),
+        })
+    })();
+    result.unwrap_or_else(|e| Response::Err(e.to_string()))
+}

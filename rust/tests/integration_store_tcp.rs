@@ -1,0 +1,132 @@
+//! Integration: the TCP weight store — server/client round-trips,
+//! concurrent clients, error propagation, shutdown, and a full
+//! master+worker session running over TCP instead of shared memory.
+
+use std::sync::Arc;
+
+use issgd::weightstore::client::Client;
+use issgd::weightstore::server::Server;
+use issgd::weightstore::{MemStore, WeightStore};
+
+fn spawn_store(n: usize) -> (String, std::thread::JoinHandle<()>) {
+    let store = Arc::new(MemStore::new(n, 1.0));
+    let server = Server::bind("127.0.0.1:0", store).unwrap();
+    let (addr, handle) = server.serve_in_background().unwrap();
+    (addr.to_string(), handle)
+}
+
+#[test]
+fn params_roundtrip_over_tcp() {
+    let (addr, handle) = spawn_store(8);
+    {
+        let c = Client::connect(&addr).unwrap();
+        assert_eq!(c.params_version().unwrap(), 0);
+        assert!(c.fetch_params(0).unwrap().is_none());
+        let blob: Vec<u8> = (0..=255).collect();
+        c.push_params(3, blob.clone()).unwrap();
+        let (v, b) = c.fetch_params(0).unwrap().unwrap();
+        assert_eq!(v, 3);
+        assert_eq!(b, blob);
+        assert!(c.fetch_params(3).unwrap().is_none());
+        c.shutdown_server().unwrap();
+    }
+    handle.join().unwrap();
+}
+
+#[test]
+fn weights_roundtrip_over_tcp() {
+    let (addr, handle) = spawn_store(10);
+    {
+        let c = Client::connect(&addr).unwrap();
+        c.push_weights(2, &[0.5, 1.5, 2.5], 7).unwrap();
+        let snap = c.fetch_weights().unwrap();
+        assert_eq!(snap.weights.len(), 10);
+        assert_eq!(&snap.weights[2..5], &[0.5, 1.5, 2.5]);
+        assert_eq!(snap.param_versions[3], 7);
+        assert_eq!(snap.param_versions[0], 0);
+        assert!(snap.stamps[2] > 0);
+        let now = c.now().unwrap();
+        assert!(now >= snap.stamps[2]);
+        c.shutdown_server().unwrap();
+    }
+    handle.join().unwrap();
+}
+
+#[test]
+fn server_side_errors_propagate() {
+    let (addr, handle) = spawn_store(4);
+    {
+        let c = Client::connect(&addr).unwrap();
+        // Out-of-bounds write must come back as an error, not a hang.
+        let err = c.push_weights(3, &[1.0, 1.0], 1).unwrap_err();
+        assert!(err.to_string().contains("out of bounds"), "{err}");
+        // Version must increase.
+        c.push_params(2, vec![1]).unwrap();
+        assert!(c.push_params(2, vec![2]).is_err());
+        // Connection still usable after an error response.
+        assert_eq!(c.params_version().unwrap(), 2);
+        c.shutdown_server().unwrap();
+    }
+    handle.join().unwrap();
+}
+
+#[test]
+fn concurrent_clients_share_state() {
+    let (addr, handle) = spawn_store(100);
+    let mut joins = Vec::new();
+    for t in 0..4u64 {
+        let addr = addr.clone();
+        joins.push(std::thread::spawn(move || {
+            let c = Client::connect(&addr).unwrap();
+            for i in 0..25usize {
+                let idx = t as usize * 25 + i;
+                c.push_weights(idx, &[(idx + 1) as f32], 1).unwrap();
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let c = Client::connect(&addr).unwrap();
+    let snap = c.fetch_weights().unwrap();
+    for (i, &w) in snap.weights.iter().enumerate() {
+        assert_eq!(w, (i + 1) as f64, "lost write at {i}");
+    }
+    let stats = c.stats().unwrap();
+    assert_eq!(stats.weight_pushes, 100);
+    assert_eq!(stats.weights_written, 100);
+    c.shutdown_server().unwrap();
+    handle.join().unwrap();
+}
+
+#[test]
+fn full_training_session_over_tcp() {
+    use issgd::config::RunConfig;
+    use issgd::coordinator::{run_live, LiveOptions, Master};
+
+    let mut cfg = RunConfig::tiny_test();
+    cfg.steps = 10;
+    let n_weights = Master::store_size(&cfg);
+    let store = Arc::new(MemStore::new(n_weights, cfg.init_weight));
+    let server = Server::bind("127.0.0.1:0", store).unwrap();
+    let (addr, handle) = server.serve_in_background().unwrap();
+
+    let out = run_live(
+        &cfg,
+        &LiveOptions {
+            store_addr: Some(addr.to_string()),
+            worker_throttle: Some(std::time::Duration::from_millis(1)),
+            wait_for_first_scores: true,
+        },
+    )
+    .unwrap();
+    assert_eq!(out.rec.get("train_loss").len(), 10);
+    assert!(out.scored > 0);
+    assert!(out.store_stats.weight_pushes > 0);
+
+    Client::connect(&addr.to_string())
+        .unwrap()
+        .shutdown_server()
+        .unwrap();
+    handle.join().unwrap();
+}

@@ -1,0 +1,296 @@
+//! Property-based tests over the coordinator substrates (proptest is not
+//! available offline, so `prop` below is a miniature equivalent: seeded
+//! random cases, failure reporting with the case seed for reproduction).
+//!
+//! Invariants covered:
+//!  * Fenwick and alias samplers draw from exactly the weight distribution
+//!    (χ²-style tolerance) and agree with each other.
+//!  * Fenwick prefix sums match a naive scan after arbitrary updates.
+//!  * Importance-sampling coefficients make the minibatch estimator
+//!    unbiased for arbitrary positive weight vectors.
+//!  * Tr(Σ) estimators: ideal ≤ stale for any weights (Cauchy-Schwarz),
+//!    equality when weights ∝ norms; smoothing → ∞ drives stale → unif.
+//!  * Wire protocol round-trips arbitrary messages byte-exactly.
+//!  * JSON round-trips arbitrary values.
+//!  * Synthetic data shards compose to the full dataset.
+
+use issgd::sampler::{draw_minibatch, AliasSampler, FenwickSampler};
+use issgd::util::json::Json;
+use issgd::util::rng::Pcg64;
+use issgd::variance::trace_sigma;
+use issgd::weightstore::protocol::{Request, Response};
+use issgd::weightstore::WeightSnapshot;
+
+/// Run `cases` random property cases; panic with the case seed on failure.
+fn prop(name: &str, cases: u64, mut f: impl FnMut(&mut Pcg64)) {
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ case.wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Pcg64::seeded(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property {name:?} failed on case {case} (seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+fn random_weights(rng: &mut Pcg64, max_len: usize) -> Vec<f64> {
+    let n = 1 + rng.next_below(max_len as u64) as usize;
+    (0..n)
+        .map(|_| {
+            // Mix zeros, small and large weights.
+            match rng.next_below(4) {
+                0 => 0.0,
+                1 => rng.next_f64() * 1e-3,
+                2 => rng.next_f64(),
+                _ => rng.next_f64() * 1e3,
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn fenwick_prefix_sums_match_naive_after_updates() {
+    prop("fenwick-prefix", 40, |rng| {
+        let mut w = random_weights(rng, 200);
+        let mut s = FenwickSampler::new(&w);
+        // Apply a burst of random point updates.
+        for _ in 0..50 {
+            let i = rng.next_below(w.len() as u64) as usize;
+            let nv = rng.next_f64() * 10.0;
+            w[i] = nv;
+            s.update(i, nv);
+        }
+        let mut acc = 0.0;
+        for i in 0..w.len() {
+            acc += w[i];
+            let got = s.prefix_sum(i + 1);
+            assert!(
+                (got - acc).abs() <= 1e-9 * acc.abs().max(1.0),
+                "prefix {i}: {got} vs {acc}"
+            );
+        }
+    });
+}
+
+#[test]
+fn fenwick_and_alias_agree_on_distribution() {
+    prop("sampler-agreement", 8, |rng| {
+        let mut w = random_weights(rng, 30);
+        if w.iter().sum::<f64>() <= 0.0 {
+            w[0] = 1.0;
+        }
+        let total: f64 = w.iter().sum();
+        let fen = FenwickSampler::new(&w);
+        let alias = AliasSampler::new(&w).unwrap();
+        let draws = 30_000;
+        let mut cf = vec![0f64; w.len()];
+        let mut ca = vec![0f64; w.len()];
+        for _ in 0..draws {
+            cf[fen.sample(rng).unwrap()] += 1.0;
+            ca[alias.sample(rng)] += 1.0;
+        }
+        for i in 0..w.len() {
+            let expect = w[i] / total;
+            let got_f = cf[i] / draws as f64;
+            let got_a = ca[i] / draws as f64;
+            let tol = 0.02 + 3.0 * (expect * (1.0 - expect) / draws as f64).sqrt();
+            assert!((got_f - expect).abs() < tol, "fenwick idx {i}: {got_f} vs {expect}");
+            assert!((got_a - expect).abs() < tol, "alias idx {i}: {got_a} vs {expect}");
+            if w[i] == 0.0 {
+                assert_eq!(cf[i], 0.0);
+                assert_eq!(ca[i], 0.0);
+            }
+        }
+    });
+}
+
+#[test]
+fn importance_estimator_unbiased_for_arbitrary_weights() {
+    // E_q[coef * f(i)] must equal mean_i f(i) for any positive weights.
+    prop("is-unbiased", 6, |rng| {
+        let n = 3 + rng.next_below(10) as usize;
+        let w: Vec<f64> = (0..n).map(|_| 0.05 + rng.next_f64() * 5.0).collect();
+        let f: Vec<f64> = (0..n).map(|_| rng.next_f64() * 10.0 - 5.0).collect();
+        let truth: f64 = f.iter().sum::<f64>() / n as f64;
+        let s = FenwickSampler::new(&w);
+        let rounds = 60_000;
+        let mut acc = 0.0;
+        for _ in 0..rounds {
+            let (idx, coefs, _) = draw_minibatch(&s, rng, 1);
+            acc += coefs[0] as f64 * f[idx[0]];
+        }
+        let est = acc / rounds as f64;
+        // Standard error of the IS estimator with these weights:
+        let mean_w: f64 = w.iter().sum::<f64>() / n as f64;
+        let second: f64 = (0..n)
+            .map(|i| w[i] / (n as f64 * mean_w) * (mean_w / w[i] * f[i]).powi(2))
+            .sum();
+        let se = ((second - truth * truth).max(0.0) / rounds as f64).sqrt();
+        assert!(
+            (est - truth).abs() < 6.0 * se + 0.02,
+            "est {est} truth {truth} se {se}"
+        );
+    });
+}
+
+#[test]
+fn variance_ideal_never_exceeds_stale() {
+    // Cauchy-Schwarz: (mean ||g||)² ≤ (mean w)(mean ||g||²/w) for ANY w>0.
+    prop("var-cauchy-schwarz", 60, |rng| {
+        let n = 2 + rng.next_below(50) as usize;
+        let sqnorms: Vec<f64> = (0..n).map(|_| rng.next_f64() * 100.0).collect();
+        let weights: Vec<f64> = (0..n).map(|_| 1e-6 + rng.next_f64() * 10.0).collect();
+        let r = trace_sigma(&sqnorms, &weights, 0.0);
+        assert!(
+            r.ideal_raw <= r.stale_raw * (1.0 + 1e-9) + 1e-9,
+            "ideal {} > stale {}",
+            r.ideal_raw,
+            r.stale_raw
+        );
+    });
+}
+
+#[test]
+fn variance_optimal_weights_reach_the_bound() {
+    prop("var-optimality", 40, |rng| {
+        let n = 2 + rng.next_below(30) as usize;
+        let sqnorms: Vec<f64> = (0..n).map(|_| 0.01 + rng.next_f64() * 50.0).collect();
+        let optimal: Vec<f64> = sqnorms.iter().map(|s| s.sqrt()).collect();
+        let r = trace_sigma(&sqnorms, &optimal, 0.0);
+        assert!(
+            (r.ideal_raw - r.stale_raw).abs() <= 1e-9 * r.ideal_raw.max(1.0),
+            "optimal weights should achieve the ideal bound"
+        );
+        // ...and any perturbation can only increase the stale term.
+        let perturbed: Vec<f64> = optimal
+            .iter()
+            .map(|w| w * (0.5 + rng.next_f64()))
+            .collect();
+        let r2 = trace_sigma(&sqnorms, &perturbed, 0.0);
+        assert!(r2.stale_raw >= r.stale_raw * (1.0 - 1e-9));
+    });
+}
+
+#[test]
+fn variance_smoothing_limit_is_uniform() {
+    // w + c with c → ∞ behaves like uniform weights: stale → unif.
+    prop("var-smoothing-limit", 40, |rng| {
+        let n = 2 + rng.next_below(30) as usize;
+        let sqnorms: Vec<f64> = (0..n).map(|_| rng.next_f64() * 10.0).collect();
+        let base: Vec<f64> = (0..n).map(|_| rng.next_f64()).collect();
+        let smoothed: Vec<f64> = base.iter().map(|w| w + 1e9).collect();
+        let r = trace_sigma(&sqnorms, &smoothed, 0.0);
+        assert!(
+            (r.stale_raw - r.unif_raw).abs() <= 1e-6 * r.unif_raw.max(1e-12),
+            "stale {} vs unif {}",
+            r.stale_raw,
+            r.unif_raw
+        );
+    });
+}
+
+#[test]
+fn protocol_roundtrips_random_messages() {
+    prop("protocol-roundtrip", 60, |rng| {
+        let n = rng.next_below(100) as usize;
+        let weights: Vec<f32> = (0..n).map(|_| rng.next_f32() * 100.0).collect();
+        let req = Request::PushWeights {
+            start: rng.next_u64() % 10_000,
+            param_version: rng.next_u64() % 1000,
+            weights,
+        };
+        assert_eq!(Request::decode(&req.encode()).unwrap(), req);
+
+        let m = rng.next_below(50) as usize;
+        let snap = WeightSnapshot {
+            weights: (0..m).map(|_| rng.next_f64()).collect(),
+            stamps: (0..m).map(|_| rng.next_u64()).collect(),
+            param_versions: (0..m).map(|_| rng.next_u64() % 64).collect(),
+        };
+        let resp = Response::Weights(snap);
+        assert_eq!(Response::decode(&resp.encode()).unwrap(), resp);
+
+        let blob: Vec<u8> = (0..rng.next_below(300)).map(|_| rng.next_u64() as u8).collect();
+        let req = Request::PushParams {
+            version: rng.next_u64(),
+            bytes: blob,
+        };
+        assert_eq!(Request::decode(&req.encode()).unwrap(), req);
+    });
+}
+
+#[test]
+fn protocol_rejects_random_mutations() {
+    // Flipping the opcode or truncating must never decode into a *different
+    // valid* message silently mis-sized fields — it must error or decode to
+    // the same payload type with different contents, never panic.
+    prop("protocol-fuzz", 60, |rng| {
+        let req = Request::PushWeights {
+            start: 5,
+            param_version: 9,
+            weights: vec![1.0, 2.0, 3.0],
+        };
+        let mut enc = req.encode();
+        let cut = 1 + rng.next_below(enc.len() as u64 - 1) as usize;
+        let _ = Request::decode(&enc[..cut]); // must not panic
+        let idx = rng.next_below(enc.len() as u64) as usize;
+        enc[idx] ^= 1 << rng.next_below(8);
+        let _ = Request::decode(&enc); // must not panic
+    });
+}
+
+#[test]
+fn json_roundtrips_random_values() {
+    fn random_json(rng: &mut Pcg64, depth: usize) -> Json {
+        match if depth == 0 { rng.next_below(4) } else { rng.next_below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.next_f64() < 0.5),
+            2 => Json::Num((rng.next_u64() % 1_000_000) as f64 / 8.0),
+            3 => {
+                let len = rng.next_below(12) as usize;
+                let s: String = (0..len)
+                    .map(|_| {
+                        let c = rng.next_below(96) as u8 + 32;
+                        c as char
+                    })
+                    .collect();
+                Json::Str(s)
+            }
+            4 => Json::Arr((0..rng.next_below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => {
+                let mut map = std::collections::BTreeMap::new();
+                for i in 0..rng.next_below(5) {
+                    map.insert(format!("k{i}"), random_json(rng, depth - 1));
+                }
+                Json::Obj(map)
+            }
+        }
+    }
+    prop("json-roundtrip", 80, |rng| {
+        let v = random_json(rng, 3);
+        let compact = Json::parse(&v.to_string()).unwrap();
+        assert_eq!(compact, v);
+        let pretty = Json::parse(&v.to_pretty()).unwrap();
+        assert_eq!(pretty, v);
+    });
+}
+
+#[test]
+fn synth_shards_compose_to_full_dataset() {
+    use issgd::data::{shards, Dataset, SynthDataset, SynthSpec};
+    prop("shard-compose", 6, |rng| {
+        let n = 50 + rng.next_below(200) as usize;
+        let k = 1 + rng.next_below(8) as usize;
+        let seed = rng.next_u64();
+        let full = SynthDataset::generate(seed, SynthSpec::tiny(n));
+        for shard in shards(n, k) {
+            let part =
+                SynthDataset::generate_range(seed, SynthSpec::tiny(n), shard.start, shard.end);
+            for (i, g) in shard.indices().enumerate() {
+                assert_eq!(part.features(i), full.features(g));
+                assert_eq!(part.label(i), full.label(g));
+            }
+        }
+    });
+}
