@@ -6,8 +6,11 @@
 //! rebuild cost; full minibatch draw.
 
 use issgd::bench::Harness;
+use issgd::config::StalenessUnit;
+use issgd::coordinator::ProposalMaintainer;
 use issgd::sampler::{draw_minibatch, AliasSampler, FenwickSampler};
 use issgd::util::rng::Pcg64;
+use issgd::weightstore::WeightDelta;
 
 fn weights(n: usize, rng: &mut Pcg64) -> Vec<f64> {
     (0..n).map(|_| 0.01 + rng.next_f64() * 10.0).collect()
@@ -54,11 +57,54 @@ fn main() {
     h.bench_throughput("draw_minibatch/m=128/n=16384", 128, || {
         std::hint::black_box(draw_minibatch(&fen, &mut rng, 128));
     });
-    // Fenwick rebuild from a fresh snapshot (what the master does per step
-    // today; see EXPERIMENTS.md §Perf).
+    // Fenwick rebuild from a fresh snapshot (what the master did per step
+    // before the delta-aware store; kept as the baseline).
     h.bench(&format!("fenwick/build/n={}", 1 << 14), || {
         std::hint::black_box(FenwickSampler::new(&w));
     });
+
+    // -- master proposal maintenance ---------------------------------------
+    //
+    // Absorbing a k-entry delta must cost O(k log N), not O(N): at fixed
+    // churn k the absorb time should barely move across a 64x range of N,
+    // while the old full-rebuild baseline scales linearly with N.
+    let k = 1_024usize;
+    for &n in &[1usize << 14, 1 << 17, 1 << 20] {
+        let w = weights(n, &mut rng);
+        let mut p = ProposalMaintainer::new(n, 10.0, None, StalenessUnit::Versions);
+        p.absorb(
+            &WeightDelta {
+                seq: 1,
+                n: n as u64,
+                full: true,
+                indices: (0..n as u64).collect(),
+                weights: w.clone(),
+                stamps: vec![0; n],
+                param_versions: vec![0; n],
+            },
+            0,
+        )
+        .unwrap();
+        let mut off = 0usize;
+        let mut seq = 1u64;
+        h.bench_throughput(&format!("proposal/absorb/n={n}/k={k}"), k as u64, || {
+            seq += 1;
+            let delta = WeightDelta {
+                seq,
+                n: n as u64,
+                full: false,
+                indices: (off..off + k).map(|i| i as u64).collect(),
+                weights: (0..k).map(|i| 0.01 + (i % 13) as f64).collect(),
+                stamps: vec![seq; k],
+                param_versions: vec![seq; k],
+            };
+            p.absorb(&delta, seq).unwrap();
+            off = (off + k) % n;
+        });
+        h.bench(&format!("proposal/full_rebuild/n={n}"), || {
+            std::hint::black_box(FenwickSampler::new(&w));
+        });
+    }
 
     h.finish();
 }

@@ -1,10 +1,12 @@
 //! Substrate bench: the weight store — in-proc engine vs TCP transport
-//! (DESIGN.md §6 ablation "in-proc vs TCP round-trip overhead").
+//! (DESIGN.md §6 ablation "in-proc vs TCP round-trip overhead"), plus the
+//! delta-vs-snapshot ablation behind the master's incremental fetch.
 
 use std::sync::Arc;
 
 use issgd::bench::Harness;
 use issgd::weightstore::client::Client;
+use issgd::weightstore::protocol::Response;
 use issgd::weightstore::server::Server;
 use issgd::weightstore::{MemStore, WeightStore};
 
@@ -54,6 +56,46 @@ fn main() {
     });
     client.shutdown_server().unwrap();
     handle.join().unwrap();
+
+    // -- delta vs snapshot (the master's per-step fetch) -------------------
+    //
+    // One "master step" at N = 100k with 1% weight churn: workers refresh
+    // `churn` contiguous weights, the master pulls.  The old path cloned
+    // the full 3×N snapshot; the delta path moves only the changed rows.
+    let n_big = 100_000usize;
+    let churn = n_big / 100;
+    let big = MemStore::new(n_big, 1.0);
+    let fresh: Vec<f32> = (0..churn).map(|i| 1.0 + (i % 7) as f32).collect();
+    // Absorb the initial full table so the steady state is measured.
+    let mut cursor = big.fetch_weights_since(0).unwrap().seq;
+    let mut off = 0usize;
+    h.bench(&format!("memstore/step_snapshot/n={n_big}"), || {
+        big.push_weights(off, &fresh, 1).unwrap();
+        off = (off + churn) % n_big;
+        std::hint::black_box(big.fetch_weights().unwrap());
+    });
+    h.bench(&format!("memstore/step_delta/n={n_big}/churn=1%"), || {
+        big.push_weights(off, &fresh, 1).unwrap();
+        off = (off + churn) % n_big;
+        let d = big.fetch_weights_since(cursor).unwrap();
+        cursor = d.seq;
+        std::hint::black_box(d);
+    });
+    // Wire-level bytes for one master step of each strategy.
+    big.push_weights(off, &fresh, 1).unwrap();
+    let delta = big.fetch_weights_since(cursor).unwrap();
+    let delta_bytes = Response::WeightsDelta(delta).encode().len();
+    let snap_bytes = Response::Weights(big.fetch_weights().unwrap()).encode().len();
+    println!(
+        "weightstore/bytes_per_step: snapshot {} B vs delta {} B ({:.1}x fewer)",
+        snap_bytes,
+        delta_bytes,
+        snap_bytes as f64 / delta_bytes as f64
+    );
+    assert!(
+        snap_bytes >= 10 * delta_bytes,
+        "delta fetch must move >=10x fewer bytes than a snapshot at 1% churn"
+    );
 
     h.finish();
 }

@@ -2,11 +2,14 @@
 //! weight store, per paper §4.
 //!
 //! Per step the master: (1) periodically publishes its parameters to the
-//! store ("fire and forget"), (2) pulls the probability-weight snapshot,
-//! applies the §B.1 staleness filter and §B.3 smoothing, (3) draws a
-//! minibatch from the multinomial proposal, (4) executes the AOT
-//! `train_step` with the importance coefficients, and (5) on configured
-//! cadences evaluates prediction error and the Figure-4 variance monitors.
+//! store ("fire and forget"), (2) pulls the *delta* of probability weights
+//! written since its cursor and folds it into a persistent
+//! [`ProposalMaintainer`] — staleness filter (§B.1) and smoothing (§B.3)
+//! maintained incrementally, O(changes · log N) instead of an O(N)
+//! snapshot clone + sampler rebuild — (3) draws a minibatch from the
+//! multinomial proposal, (4) executes the AOT `train_step` with the
+//! importance coefficients, and (5) on configured cadences evaluates
+//! prediction error and the Figure-4 variance monitors.
 
 use std::sync::Arc;
 
@@ -17,13 +20,12 @@ use crate::data::{split_indices, BatchBuilder, Dataset, SplitSpec, SynthDataset,
 use crate::metrics::RunRecorder;
 use crate::model::ParamSet;
 use crate::runtime::Engine;
-use crate::sampler::{
-    draw_minibatch, effective_sample_size_ratio, smoothing_for_entropy, FenwickSampler,
-    Smoothing, StalenessFilter,
-};
+use crate::sampler::{draw_minibatch, smoothing_for_entropy, Smoothing, StalenessFilter};
 use crate::util::rng::Pcg64;
 use crate::variance::{trace_sigma, GTrueEstimator, VarianceReport};
 use crate::weightstore::WeightStore;
+
+use super::proposal::ProposalMaintainer;
 
 /// Which split to evaluate.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -50,6 +52,9 @@ pub struct Master {
     rng: Pcg64,
     batch: BatchBuilder,
     gtrue: GTrueEstimator,
+    /// Persistent proposal state: mirrors the store via deltas and keeps
+    /// the Fenwick sampler maintained with point updates.
+    proposal: ProposalMaintainer,
     /// Count of swallowed store failures (fire-and-forget resilience).
     pub store_errors: u64,
 }
@@ -84,6 +89,12 @@ impl Master {
         let mut rng = Pcg64::new(cfg.seed, 0x3A57E5);
         let params = ParamSet::init_he(manifest, &mut rng);
         let batch = BatchBuilder::new(manifest.batch_train, manifest.input_dim, manifest.n_classes);
+        let proposal = ProposalMaintainer::new(
+            train_idx.len(),
+            cfg.smoothing,
+            cfg.staleness_threshold,
+            cfg.staleness_unit,
+        );
         Ok(Master {
             cfg,
             data,
@@ -98,6 +109,7 @@ impl Master {
             rng,
             batch,
             gtrue: GTrueEstimator::new(),
+            proposal,
             store_errors: 0,
         })
     }
@@ -177,16 +189,27 @@ impl Master {
         Ok((weights, kept_frac))
     }
 
-    /// The smoothing constant for this step: the fixed §B.3 constant, or
-    /// the entropy-targeted adaptive constant (§B.3's suggested extension)
-    /// solved on the kept weights.
-    fn smoothing_for_step(&self, raw: &[Option<f64>]) -> f64 {
-        match self.cfg.adaptive_entropy {
-            None => self.cfg.smoothing,
-            Some(target) => {
-                let kept: Vec<f64> = raw.iter().filter_map(|w| *w).collect();
-                smoothing_for_entropy(&kept, target, 1e-4)
-            }
+    /// Pull the weight delta written since our cursor and fold it into the
+    /// persistent proposal — the O(changes · log N) replacement for the old
+    /// per-step snapshot clone + sampler rebuild.
+    ///
+    /// Store failures are swallowed ("fire and forget", §4.2): the master
+    /// keeps sampling from the last synced proposal, which stays a valid
+    /// (merely staler) importance distribution; before the first successful
+    /// sync the proposal is empty and `draw_minibatch` degrades to uniform
+    /// SGD.
+    fn sync_proposal(&mut self) {
+        let synced = (|| -> Result<()> {
+            let now = match self.cfg.staleness_unit {
+                StalenessUnit::Nanos => self.store.now()?,
+                StalenessUnit::Versions => self.version,
+            };
+            let delta = self.store.fetch_weights_since(self.proposal.cursor())?;
+            self.proposal.absorb(&delta, now)
+        })();
+        if let Err(e) = synced {
+            self.store_errors += 1;
+            crate::log_warn!("master", "weight delta fetch failed (keeping last proposal): {e}");
         }
     }
 
@@ -195,32 +218,27 @@ impl Master {
         let m = self.batch.batch();
         let (positions, coefs) = match self.cfg.trainer {
             TrainerKind::Issgd => {
-                // Degrade to uniform sampling if the store is unreachable —
-                // an unbiased fallback (it is exactly regular SGD).
-                let (raw, kept) = match self.raw_filtered_weights() {
-                    Ok(v) => v,
-                    Err(e) => {
-                        self.store_errors += 1;
-                        crate::log_warn!("master", "weight fetch failed (uniform fallback): {e}");
-                        (vec![Some(1.0); self.train_idx.len()], 1.0)
-                    }
-                };
-                self.rec.record("kept_frac", self.step, kept);
-                let c = self.smoothing_for_step(&raw);
-                if self.cfg.adaptive_entropy.is_some() {
+                self.sync_proposal();
+                self.rec
+                    .record("kept_frac", self.step, self.proposal.kept_fraction());
+                if let Some(target) = self.cfg.adaptive_entropy {
+                    // Adaptive entropy re-solves the constant on the kept
+                    // weights; a changed constant re-smooths in O(N) — this
+                    // mode trades the incremental win for entropy control.
+                    let c = smoothing_for_entropy(&self.proposal.kept_raw(), target, 1e-4);
+                    self.proposal.set_smoothing(c);
                     self.rec.record("smoothing_c", self.step, c);
                 }
-                let smooth = Smoothing::new(c);
-                let weights: Vec<f64> = raw
-                    .iter()
-                    .map(|w| w.map(|w| smooth.apply(w)).unwrap_or(0.0))
-                    .collect();
                 if self.step % 10 == 0 {
-                    self.rec
-                        .record("ess", self.step, effective_sample_size_ratio(&weights));
+                    self.rec.record("ess", self.step, self.proposal.ess_ratio());
+                    self.rec.record(
+                        "proposal_changes",
+                        self.step,
+                        self.proposal.last_changes() as f64,
+                    );
                 }
-                let sampler = FenwickSampler::new(&weights);
-                let (positions, coefs, _) = draw_minibatch(&sampler, &mut self.rng, m);
+                let (positions, coefs, _) =
+                    draw_minibatch(self.proposal.sampler(), &mut self.rng, m);
                 (positions, coefs)
             }
             TrainerKind::UniformSgd => {
@@ -229,15 +247,20 @@ impl Master {
             }
         };
         // Staleness diagnostics: how old (in versions) are the weights of
-        // the sampled examples?
+        // the sampled examples?  Reads the proposal's raw mirror — the old
+        // code cloned a *second* full snapshot from the store for this.
         if self.cfg.trainer == TrainerKind::Issgd && self.step % 10 == 0 {
-            if let Ok(snap) = self.store.fetch_weights() {
-            let lag: f64 = positions
-                .iter()
-                .map(|&p| (self.version.saturating_sub(snap.param_versions[p])) as f64)
-                .sum::<f64>()
-                / positions.len().max(1) as f64;
-            self.rec.record("sampled_version_lag", self.step, lag);
+            // cursor > 0 ⇔ at least one successful sync: before that the
+            // mirror is all zeros and the lag would be fabricated (the old
+            // code likewise skipped the metric when its fetch failed).
+            if self.proposal.cursor() > 0 {
+                let raw = self.proposal.raw();
+                let lag: f64 = positions
+                    .iter()
+                    .map(|&p| (self.version.saturating_sub(raw.param_versions[p])) as f64)
+                    .sum::<f64>()
+                    / positions.len().max(1) as f64;
+                self.rec.record("sampled_version_lag", self.step, lag);
             }
         }
         let global: Vec<usize> = positions.iter().map(|&p| self.train_idx[p]).collect();
@@ -248,8 +271,10 @@ impl Master {
         Ok(out.loss)
     }
 
-    /// Mean loss + prediction error over (a capped number of full batches
-    /// of) a split.
+    /// Mean loss + prediction error over (a capped number of batches of) a
+    /// split.  Exact: the final partial batch is padded (the AOT artifact's
+    /// batch shape is fixed) but padding is measured and subtracted, so no
+    /// example is double-counted and the divisor is the true example count.
     pub fn evaluate(&mut self, engine: &Engine, split: EvalSplit) -> Result<(f64, f64)> {
         let idx: &[usize] = match split {
             EvalSplit::Train => &self.train_idx,
@@ -259,22 +284,34 @@ impl Master {
         let manifest = engine.manifest();
         let e = manifest.batch_eval;
         let mut batch = BatchBuilder::new(e, manifest.input_dim, manifest.n_classes);
-        let n_full = (idx.len() / e).max(1);
-        let n_batches = if self.cfg.eval_max_batches == 0 {
-            n_full
-        } else {
-            n_full.min(self.cfg.eval_max_batches)
-        };
         let (mut sum_loss, mut sum_correct, mut count) = (0f64, 0f64, 0usize);
-        for b in 0..n_batches {
-            let start = b * e;
-            let chunk: Vec<usize> = (0..e).map(|i| idx[(start + i) % idx.len()]).collect();
-            batch.fill(self.data.as_ref(), &chunk);
-            let out = engine.eval_step(&self.params, &batch.x, &batch.y)?;
-            sum_loss += out.sum_loss as f64;
-            sum_correct += out.n_correct as f64;
-            count += e;
+        for (start, c) in eval_batch_plan(idx.len(), e, self.cfg.eval_max_batches) {
+            let chunk = &idx[start..start + c];
+            if c == e {
+                batch.fill(self.data.as_ref(), chunk);
+                let out = engine.eval_step(&self.params, &batch.x, &batch.y)?;
+                sum_loss += out.sum_loss as f64;
+                sum_correct += out.n_correct as f64;
+            } else {
+                // Partial tail: pad every free slot with one row and
+                // measure that row's exact per-example contribution with a
+                // batch made only of it, then subtract the padding.
+                let pad = chunk[0];
+                batch.fill(self.data.as_ref(), &vec![pad; e]);
+                let pout = engine.eval_step(&self.params, &batch.x, &batch.y)?;
+                let pad_loss = pout.sum_loss as f64 / e as f64;
+                let pad_correct = pout.n_correct as f64 / e as f64;
+                let mut slots = chunk.to_vec();
+                slots.resize(e, pad);
+                batch.fill(self.data.as_ref(), &slots);
+                let out = engine.eval_step(&self.params, &batch.x, &batch.y)?;
+                let extra = (e - c) as f64;
+                sum_loss += out.sum_loss as f64 - extra * pad_loss;
+                sum_correct += out.n_correct as f64 - extra * pad_correct;
+            }
+            count += c;
         }
+        anyhow::ensure!(count > 0, "evaluation split is empty");
         let mean_loss = sum_loss / count as f64;
         let err = 1.0 - sum_correct / count as f64;
         Ok((mean_loss, err))
@@ -387,5 +424,71 @@ impl Master {
         }
         self.monitor_variance(engine)?;
         Ok(())
+    }
+}
+
+/// Exact, non-wrapping evaluation batches: `(start, count)` chunks of up
+/// to `batch` covering `[0, n)` in order, capped at `max_batches`
+/// (0 = no cap).  Only the final chunk may be short — the old plan wrapped
+/// indices modulo the split and double-counted whenever `n % batch != 0`.
+pub fn eval_batch_plan(n: usize, batch: usize, max_batches: usize) -> Vec<(usize, usize)> {
+    if n == 0 || batch == 0 {
+        return Vec::new();
+    }
+    let total = n.div_ceil(batch);
+    let take = if max_batches == 0 {
+        total
+    } else {
+        total.min(max_batches)
+    };
+    (0..take)
+        .map(|b| {
+            let start = b * batch;
+            (start, batch.min(n - start))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_plan_covers_divisible_split_exactly() {
+        let plan = eval_batch_plan(12, 4, 0);
+        assert_eq!(plan, vec![(0, 4), (4, 4), (8, 4)]);
+        assert_eq!(plan.iter().map(|&(_, c)| c).sum::<usize>(), 12);
+    }
+
+    #[test]
+    fn eval_plan_handles_partial_tail_without_wrapping() {
+        let plan = eval_batch_plan(10, 4, 0);
+        assert_eq!(plan, vec![(0, 4), (4, 4), (8, 2)]);
+        // Every index covered exactly once.
+        let mut seen = vec![0usize; 10];
+        for (start, c) in plan {
+            for i in start..start + c {
+                seen[i] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&k| k == 1));
+    }
+
+    #[test]
+    fn eval_plan_small_split_is_one_short_batch() {
+        assert_eq!(eval_batch_plan(3, 8, 0), vec![(0, 3)]);
+    }
+
+    #[test]
+    fn eval_plan_respects_cap() {
+        assert_eq!(eval_batch_plan(100, 10, 3), vec![(0, 10), (10, 10), (20, 10)]);
+        // The cap can include the partial tail.
+        assert_eq!(eval_batch_plan(15, 10, 2), vec![(0, 10), (10, 5)]);
+    }
+
+    #[test]
+    fn eval_plan_degenerate_inputs() {
+        assert!(eval_batch_plan(0, 8, 0).is_empty());
+        assert!(eval_batch_plan(8, 0, 0).is_empty());
     }
 }

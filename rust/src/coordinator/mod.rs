@@ -16,11 +16,13 @@
 pub mod live;
 pub mod master;
 pub mod peer;
+pub mod proposal;
 pub mod sim;
 pub mod worker;
 
 pub use live::{run_live, LiveOptions};
 pub use peer::{run_asgd_sim, AsgdOutcome, PeerState};
 pub use master::{EvalSplit, Master};
+pub use proposal::ProposalMaintainer;
 pub use sim::{run_sim, run_sim_with_engine, SimOutcome};
 pub use worker::WorkerState;

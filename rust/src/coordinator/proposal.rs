@@ -1,0 +1,539 @@
+//! Incremental proposal maintenance for the master (the hot path the
+//! delta-aware store exists for).
+//!
+//! The old master cloned the store's full `WeightSnapshot` (3×N vectors)
+//! and rebuilt a [`FenwickSampler`] from scratch on *every* training step —
+//! O(N) bytes and O(N) work per step, which §4.2's "synchronization is not
+//! free" argument says is exactly the cost that must stay below the compute
+//! importance sampling saves.  [`ProposalMaintainer`] instead owns a
+//! persistent sampler and mirrors the store through
+//! [`WeightDelta`]s: each step applies O(k) changed entries as O(k log N)
+//! Fenwick point updates.
+//!
+//! Staleness (§B.1) is also incremental: every kept entry schedules an
+//! expiry tick (`stamp + threshold`) on a min-heap; advancing the clock
+//! pops only the entries that actually crossed the threshold and zeroes
+//! them in the sampler.  Heap records are lazily invalidated — a refreshed
+//! entry simply has a newer record, and stale records are skipped when
+//! popped — so the amortised cost per step is O(changes · log N), never
+//! O(N).
+//!
+//! Smoothing (§B.3) is folded into the stored sampler weights
+//! (`raw + c` for kept entries, `0` for filtered ones).  Changing the
+//! constant (the adaptive-entropy extension) rebuilds the proposal in
+//! O(N) — that mode trades the incremental win for entropy control and is
+//! documented as such in `Master::train_one_step`.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use anyhow::Result;
+
+use crate::config::StalenessUnit;
+use crate::sampler::{FenwickSampler, Smoothing, StalenessFilter};
+use crate::weightstore::{WeightDelta, WeightSnapshot};
+
+pub struct ProposalMaintainer {
+    /// Mirror of the store's raw table (weights, stamps, param versions).
+    raw: WeightSnapshot,
+    /// Smoothed + staleness-filtered sampling weights.
+    sampler: FenwickSampler,
+    /// Store write-sequence this mirror reflects (next fetch cursor).
+    cursor: u64,
+    smoothing: f64,
+    threshold: Option<u64>,
+    unit: StalenessUnit,
+    /// Min-heap of `(expiry_tick, index)`; lazily invalidated on refresh.
+    expiry: BinaryHeap<Reverse<(u64, usize)>>,
+    /// Whether each entry currently passes the staleness filter.
+    kept: Vec<bool>,
+    n_kept: usize,
+    /// Running Σw² of the sampler weights (ESS diagnostic in O(1)).
+    sum_sq: f64,
+    /// Latest staleness clock observed (never moves backwards).
+    now: u64,
+    /// Point updates applied by the last `absorb` (delta entries plus
+    /// expiries) — the per-step maintenance cost, exposed for benches.
+    last_changes: usize,
+}
+
+impl ProposalMaintainer {
+    pub fn new(
+        n: usize,
+        smoothing: f64,
+        threshold: Option<u64>,
+        unit: StalenessUnit,
+    ) -> ProposalMaintainer {
+        ProposalMaintainer {
+            raw: WeightSnapshot {
+                weights: vec![0.0; n],
+                stamps: vec![0; n],
+                param_versions: vec![0; n],
+            },
+            // All-zero until the first absorb: draw_minibatch falls back to
+            // uniform, which is plain SGD — the unbiased degradation mode.
+            sampler: FenwickSampler::new(&vec![0.0; n]),
+            cursor: 0,
+            smoothing,
+            threshold,
+            unit,
+            expiry: BinaryHeap::new(),
+            kept: vec![false; n],
+            n_kept: 0,
+            sum_sq: 0.0,
+            now: 0,
+            last_changes: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.raw.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.raw.is_empty()
+    }
+
+    /// Cursor to pass to the next `fetch_weights_since` call.
+    pub fn cursor(&self) -> u64 {
+        self.cursor
+    }
+
+    pub fn sampler(&self) -> &FenwickSampler {
+        &self.sampler
+    }
+
+    /// The mirrored raw table (staleness diagnostics read this instead of
+    /// re-fetching a snapshot from the store).
+    pub fn raw(&self) -> &WeightSnapshot {
+        &self.raw
+    }
+
+    pub fn smoothing(&self) -> f64 {
+        self.smoothing
+    }
+
+    /// Fraction of entries currently passing the staleness filter.
+    pub fn kept_fraction(&self) -> f64 {
+        if self.raw.is_empty() {
+            1.0
+        } else {
+            self.n_kept as f64 / self.raw.len() as f64
+        }
+    }
+
+    /// Point updates applied by the last `absorb` (cost diagnostic).
+    pub fn last_changes(&self) -> usize {
+        self.last_changes
+    }
+
+    /// `ESS/N = (Σw)² / (N Σw²)` of the current proposal, maintained
+    /// incrementally (mirrors `sampler::effective_sample_size_ratio`).
+    pub fn ess_ratio(&self) -> f64 {
+        let n = self.raw.len();
+        if n == 0 {
+            return 1.0;
+        }
+        let sum_sq = self.sum_sq.max(0.0);
+        if sum_sq <= 0.0 {
+            return 1.0;
+        }
+        let total = self.sampler.total();
+        (total * total) / (n as f64 * sum_sq)
+    }
+
+    /// Raw weights of the currently-kept entries (input to the
+    /// adaptive-entropy smoothing solver).
+    pub fn kept_raw(&self) -> Vec<f64> {
+        (0..self.raw.len())
+            .filter(|&i| self.kept[i])
+            .map(|i| self.raw.weights[i])
+            .collect()
+    }
+
+    /// The staleness tick of entry `i` in the configured unit.
+    fn tick(&self, i: usize) -> u64 {
+        match self.unit {
+            StalenessUnit::Nanos => self.raw.stamps[i],
+            StalenessUnit::Versions => self.raw.param_versions[i],
+        }
+    }
+
+    /// The §B.1 filter — the same abstraction `Master::effective_weights`
+    /// uses, so the live proposal and the variance monitors can't drift.
+    fn filter(&self) -> StalenessFilter {
+        match self.threshold {
+            None => StalenessFilter::disabled(),
+            Some(t) => StalenessFilter::with_threshold(t),
+        }
+    }
+
+    /// The §B.3 smoothing under the current constant.
+    fn smooth(&self) -> Smoothing {
+        Smoothing::new(self.smoothing)
+    }
+
+    /// Set entry `i`'s sampling weight, maintaining Σw² and the kept count.
+    fn set_sampler_weight(&mut self, i: usize, v: f64, keep: bool) {
+        let old = self.sampler.weight(i);
+        self.sum_sq += v * v - old * old;
+        if keep != self.kept[i] {
+            self.kept[i] = keep;
+            if keep {
+                self.n_kept += 1;
+            } else {
+                self.n_kept -= 1;
+            }
+        }
+        self.sampler.update(i, v);
+    }
+
+    /// Install one freshly-written entry: update the raw mirror, apply the
+    /// filter + smoothing to the sampler, and schedule its expiry.
+    fn apply_entry(&mut self, i: usize, w: f64, stamp: u64, param_version: u64) {
+        self.raw.weights[i] = w;
+        self.raw.stamps[i] = stamp;
+        self.raw.param_versions[i] = param_version;
+        let tick = self.tick(i);
+        if self.filter().keep(tick, self.now) {
+            let smoothed = self.smooth().apply(w);
+            self.set_sampler_weight(i, smoothed, true);
+            if let Some(t) = self.threshold {
+                self.expiry.push(Reverse((tick.saturating_add(t), i)));
+            }
+        } else {
+            self.set_sampler_weight(i, 0.0, false);
+        }
+    }
+
+    /// Evict entries whose staleness crossed the threshold.  Pops only
+    /// records at or past their expiry — O(evicted · log N), not O(N).
+    fn expire(&mut self) -> usize {
+        if self.threshold.is_none() {
+            return 0;
+        }
+        let mut evicted = 0;
+        while let Some(&Reverse((e, i))) = self.expiry.peek() {
+            if e >= self.now {
+                break;
+            }
+            self.expiry.pop();
+            if !self.kept[i] {
+                continue;
+            }
+            if self.filter().keep(self.tick(i), self.now) {
+                // Refreshed since this record was queued; its newer record
+                // (at `tick + t >= now`) is still in the heap.
+                continue;
+            }
+            self.set_sampler_weight(i, 0.0, false);
+            evicted += 1;
+        }
+        evicted
+    }
+
+    /// Recompute filter + smoothing + sampler wholesale from the raw
+    /// mirror — O(N); used for full deltas and smoothing changes (also
+    /// resets accumulated fp drift in Σw²).
+    fn rebuild_from_raw(&mut self) {
+        let n = self.raw.len();
+        let filter = self.filter();
+        let smooth = self.smooth();
+        let mut weights = vec![0.0; n];
+        self.n_kept = 0;
+        self.expiry.clear();
+        for i in 0..n {
+            let tick = self.tick(i);
+            let keep = filter.keep(tick, self.now);
+            self.kept[i] = keep;
+            if keep {
+                weights[i] = smooth.apply(self.raw.weights[i]);
+                self.n_kept += 1;
+                if let Some(t) = self.threshold {
+                    self.expiry.push(Reverse((tick.saturating_add(t), i)));
+                }
+            }
+        }
+        self.sum_sq = weights.iter().map(|w| w * w).sum();
+        self.sampler = FenwickSampler::new(&weights);
+    }
+
+    /// Fold a store delta into the proposal and advance the staleness
+    /// clock to `now`.  Incremental deltas cost
+    /// O((entries + expiries) · log N); full deltas rebuild in O(N).
+    pub fn absorb(&mut self, delta: &WeightDelta, now: u64) -> Result<()> {
+        anyhow::ensure!(
+            delta.n as usize == self.raw.len(),
+            "delta tracks {} entries but proposal holds {}",
+            delta.n,
+            self.raw.len()
+        );
+        anyhow::ensure!(
+            delta.indices.len() == delta.weights.len()
+                && delta.weights.len() == delta.stamps.len()
+                && delta.stamps.len() == delta.param_versions.len(),
+            "delta columns disagree on length"
+        );
+        self.now = self.now.max(now);
+        if delta.full {
+            // Reuse the canonical delta application (it re-validates and
+            // bounds-checks), then recompute filter + sampler wholesale.
+            delta.apply_to(&mut self.raw)?;
+            self.rebuild_from_raw();
+            self.last_changes = delta.len();
+        } else {
+            for &idx in &delta.indices {
+                anyhow::ensure!(
+                    (idx as usize) < self.raw.len(),
+                    "delta index {idx} out of bounds (n = {})",
+                    self.raw.len()
+                );
+            }
+            for (k, &idx) in delta.indices.iter().enumerate() {
+                self.apply_entry(
+                    idx as usize,
+                    delta.weights[k],
+                    delta.stamps[k],
+                    delta.param_versions[k],
+                );
+            }
+            let evicted = self.expire();
+            self.last_changes = delta.len() + evicted;
+        }
+        self.cursor = delta.seq;
+        Ok(())
+    }
+
+    /// Change the §B.3 smoothing constant.  No-op when unchanged; a real
+    /// change re-smooths every kept entry (O(N)) — the price of the
+    /// adaptive-entropy mode.
+    pub fn set_smoothing(&mut self, c: f64) {
+        if c == self.smoothing {
+            return;
+        }
+        self.smoothing = c;
+        self.rebuild_from_raw();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn full_delta(seq: u64, weights: &[f64], stamps: &[u64], versions: &[u64]) -> WeightDelta {
+        WeightDelta {
+            seq,
+            n: weights.len() as u64,
+            full: true,
+            indices: (0..weights.len() as u64).collect(),
+            weights: weights.to_vec(),
+            stamps: stamps.to_vec(),
+            param_versions: versions.to_vec(),
+        }
+    }
+
+    fn sparse_delta(
+        seq: u64,
+        n: usize,
+        entries: &[(usize, f64, u64, u64)],
+    ) -> WeightDelta {
+        WeightDelta {
+            seq,
+            n: n as u64,
+            full: false,
+            indices: entries.iter().map(|e| e.0 as u64).collect(),
+            weights: entries.iter().map(|e| e.1).collect(),
+            stamps: entries.iter().map(|e| e.2).collect(),
+            param_versions: entries.iter().map(|e| e.3).collect(),
+        }
+    }
+
+    /// Ground truth: what the old per-step full recomputation produced.
+    fn expected_weights(
+        raw: &[f64],
+        ticks: &[u64],
+        now: u64,
+        threshold: Option<u64>,
+        c: f64,
+    ) -> Vec<f64> {
+        raw.iter()
+            .zip(ticks)
+            .map(|(&w, &s)| match threshold {
+                Some(t) if now.saturating_sub(s) > t => 0.0,
+                _ => w + c,
+            })
+            .collect()
+    }
+
+    fn assert_matches(p: &ProposalMaintainer, expect: &[f64]) {
+        assert_eq!(p.sampler().len(), expect.len());
+        for (i, &e) in expect.iter().enumerate() {
+            assert!(
+                (p.sampler().weight(i) - e).abs() < 1e-9,
+                "weight {i}: {} vs {e}",
+                p.sampler().weight(i)
+            );
+        }
+        let kept = expect.iter().filter(|&&w| w > 0.0).count();
+        // kept tracks the filter, not positivity — with c = 0 a kept entry
+        // can have weight 0, so only check when smoothing is positive.
+        if p.smoothing() > 0.0 {
+            assert_eq!((p.kept_fraction() * expect.len() as f64).round() as usize, kept);
+        }
+    }
+
+    #[test]
+    fn starts_empty_and_uniform_safe() {
+        let p = ProposalMaintainer::new(8, 1.0, None, StalenessUnit::Versions);
+        assert_eq!(p.cursor(), 0);
+        assert_eq!(p.sampler().total(), 0.0);
+        assert_eq!(p.kept_fraction(), 0.0);
+        assert_eq!(p.ess_ratio(), 1.0);
+    }
+
+    #[test]
+    fn full_delta_installs_smoothed_weights() {
+        let mut p = ProposalMaintainer::new(4, 2.0, None, StalenessUnit::Versions);
+        let d = full_delta(5, &[1.0, 0.0, 3.0, 2.0], &[0; 4], &[0; 4]);
+        p.absorb(&d, 0).unwrap();
+        assert_eq!(p.cursor(), 5);
+        assert_matches(&p, &[3.0, 2.0, 5.0, 4.0]);
+        assert!((p.kept_fraction() - 1.0).abs() < 1e-12);
+        assert_eq!(p.last_changes(), 4);
+    }
+
+    #[test]
+    fn sparse_delta_applies_point_updates() {
+        let mut p = ProposalMaintainer::new(5, 0.5, None, StalenessUnit::Versions);
+        p.absorb(&full_delta(1, &[1.0; 5], &[0; 5], &[0; 5]), 0).unwrap();
+        p.absorb(&sparse_delta(2, 5, &[(1, 4.0, 0, 1), (3, 0.0, 0, 1)]), 0)
+            .unwrap();
+        assert_eq!(p.cursor(), 2);
+        assert_matches(&p, &[1.5, 4.5, 1.5, 0.5, 1.5]);
+        assert_eq!(p.last_changes(), 2);
+    }
+
+    #[test]
+    fn staleness_expires_entries_without_deltas() {
+        // Threshold 10 in version units; entries stamped at version 0.
+        let mut p = ProposalMaintainer::new(3, 1.0, Some(10), StalenessUnit::Versions);
+        p.absorb(&full_delta(1, &[2.0; 3], &[0; 3], &[0; 3]), 0).unwrap();
+        assert!((p.kept_fraction() - 1.0).abs() < 1e-12);
+        // now = 10: age 10 <= threshold, everything still kept.
+        p.absorb(&sparse_delta(1, 3, &[]), 10).unwrap();
+        assert_matches(&p, &[3.0, 3.0, 3.0]);
+        // now = 11: age 11 > threshold, all evicted by the expiry heap.
+        p.absorb(&sparse_delta(1, 3, &[]), 11).unwrap();
+        assert_matches(&p, &[0.0, 0.0, 0.0]);
+        assert_eq!(p.kept_fraction(), 0.0);
+        assert_eq!(p.last_changes(), 3); // three expiries
+    }
+
+    #[test]
+    fn refresh_reinstates_evicted_entries() {
+        let mut p = ProposalMaintainer::new(2, 1.0, Some(5), StalenessUnit::Versions);
+        p.absorb(&full_delta(1, &[1.0, 1.0], &[0; 2], &[0; 2]), 0).unwrap();
+        p.absorb(&sparse_delta(1, 2, &[]), 20).unwrap();
+        assert_eq!(p.kept_fraction(), 0.0);
+        // A new push stamped at version 18 (age 2) brings entry 0 back.
+        p.absorb(&sparse_delta(2, 2, &[(0, 7.0, 0, 18)]), 20).unwrap();
+        assert_matches(&p, &[8.0, 0.0]);
+        assert!((p.kept_fraction() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn refreshed_entry_survives_its_stale_heap_record() {
+        let mut p = ProposalMaintainer::new(1, 0.0, Some(5), StalenessUnit::Versions);
+        p.absorb(&full_delta(1, &[1.0], &[0], &[0]), 0).unwrap();
+        // Refresh at version 8 before the first record (expiry 5) fires.
+        p.absorb(&sparse_delta(2, 1, &[(0, 2.0, 0, 8)]), 8).unwrap();
+        // now = 10 pops the stale (expiry 5) record; the entry must stay
+        // (age 2, new record expires at 13).
+        p.absorb(&sparse_delta(2, 1, &[]), 10).unwrap();
+        assert_matches(&p, &[2.0]);
+        // now = 14 pops the live record and evicts for real.
+        p.absorb(&sparse_delta(2, 1, &[]), 14).unwrap();
+        assert_matches(&p, &[0.0]);
+    }
+
+    #[test]
+    fn incremental_matches_scratch_recomputation() {
+        // Random deltas + advancing clock: the maintained sampler must equal
+        // the old full recomputation at every step.
+        let n = 64;
+        let threshold = Some(30u64);
+        let c = 0.25;
+        let mut p = ProposalMaintainer::new(n, c, threshold, StalenessUnit::Nanos);
+        let mut raw = vec![0.0f64; n];
+        let mut stamps = vec![0u64; n];
+        let mut rng = Pcg64::seeded(42);
+        p.absorb(&full_delta(1, &raw, &stamps, &vec![0; n]), 0).unwrap();
+        let mut now = 0u64;
+        for round in 0..200u64 {
+            now += rng.next_below(8);
+            let k = rng.next_below(6) as usize;
+            let entries: Vec<(usize, f64, u64, u64)> = (0..k)
+                .map(|_| {
+                    let i = rng.next_below(n as u64) as usize;
+                    let w = rng.next_f64() * 10.0;
+                    let stamp = now.saturating_sub(rng.next_below(40));
+                    (i, w, stamp, round)
+                })
+                .collect();
+            for &(i, w, stamp, _) in &entries {
+                raw[i] = w;
+                stamps[i] = stamp;
+            }
+            p.absorb(&sparse_delta(round + 2, n, &entries), now).unwrap();
+            let expect = expected_weights(&raw, &stamps, now, threshold, c);
+            assert_matches(&p, &expect);
+            // ESS must agree with the from-scratch diagnostic.
+            let scratch = crate::sampler::effective_sample_size_ratio(&expect);
+            assert!(
+                (p.ess_ratio() - scratch).abs() < 1e-6,
+                "round {round}: ess {} vs {scratch}",
+                p.ess_ratio()
+            );
+        }
+    }
+
+    #[test]
+    fn set_smoothing_resmooths_everything() {
+        let mut p = ProposalMaintainer::new(3, 1.0, None, StalenessUnit::Versions);
+        p.absorb(&full_delta(1, &[1.0, 2.0, 3.0], &[0; 3], &[0; 3]), 0).unwrap();
+        p.set_smoothing(10.0);
+        assert_matches(&p, &[11.0, 12.0, 13.0]);
+        p.set_smoothing(0.0);
+        assert_matches(&p, &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn rejects_size_mismatch_and_bad_indices() {
+        let mut p = ProposalMaintainer::new(3, 1.0, None, StalenessUnit::Versions);
+        assert!(p.absorb(&full_delta(1, &[1.0; 4], &[0; 4], &[0; 4]), 0).is_err());
+        assert!(p
+            .absorb(&sparse_delta(1, 3, &[(3, 1.0, 0, 0)]), 0)
+            .is_err());
+        let mut bad = sparse_delta(1, 3, &[(0, 1.0, 0, 0)]);
+        bad.stamps.pop();
+        assert!(p.absorb(&bad, 0).is_err());
+    }
+
+    #[test]
+    fn empty_proposal_is_safe() {
+        let mut p = ProposalMaintainer::new(0, 1.0, None, StalenessUnit::Versions);
+        assert_eq!(p.kept_fraction(), 1.0);
+        assert_eq!(p.ess_ratio(), 1.0);
+        p.absorb(
+            &WeightDelta {
+                seq: 1,
+                full: true,
+                ..WeightDelta::default()
+            },
+            0,
+        )
+        .unwrap();
+        assert_eq!(p.cursor(), 1);
+    }
+}

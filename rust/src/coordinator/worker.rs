@@ -39,6 +39,8 @@ pub struct WorkerState {
     pub batches_done: u64,
     /// Total examples scored (monitoring).
     pub examples_scored: u64,
+    /// Transient store failures survived in live mode (monitoring).
+    pub store_errors: u64,
     /// Reusable weight staging buffer.
     push_buf: Vec<f32>,
 }
@@ -69,32 +71,49 @@ impl WorkerState {
             batch,
             batches_done: 0,
             examples_scored: 0,
+            store_errors: 0,
             push_buf: Vec::new(),
         }
+    }
+
+    /// Store half of a parameter refresh: fetch a newer blob if one
+    /// exists.  Failures here are transport-transient.
+    fn fetch_newer_params(&self) -> Result<Option<(u64, Vec<u8>)>> {
+        self.store.fetch_params(self.version)
+    }
+
+    /// Decode half of a parameter refresh.  A blob that does not decode is
+    /// a deterministic failure (wrong model/config on the store) — callers
+    /// must not retry it.
+    fn install_params(&mut self, engine: &Engine, version: u64, bytes: &[u8]) -> Result<()> {
+        self.params = Some(ParamSet::from_bytes(engine.manifest(), bytes)?);
+        self.version = version;
+        Ok(())
     }
 
     /// Pull newer parameters if the store has them.  Returns true if the
     /// local copy changed.
     pub fn refresh_params(&mut self, engine: &Engine) -> Result<bool> {
-        match self.store.fetch_params(self.version)? {
+        match self.fetch_newer_params()? {
             None => Ok(false),
             Some((version, bytes)) => {
-                self.params = Some(ParamSet::from_bytes(engine.manifest(), &bytes)?);
-                self.version = version;
+                self.install_params(engine, version, &bytes)?;
                 Ok(true)
             }
         }
     }
 
-    /// Score the next batch of shard positions and push ‖g‖ weights.
-    /// No-op (returns 0) until parameters have been published.
-    pub fn score_next_batch(&mut self, engine: &Engine) -> Result<usize> {
+    /// Engine half of a scoring round: compute ‖g‖ for the next batch of
+    /// shard positions into the staging buffer.  Returns `(start, count)`
+    /// for [`WorkerState::push_scores`], or `None` when there is nothing
+    /// to score yet.  Engine failures propagate — they are deterministic.
+    fn compute_scores(&mut self, engine: &Engine) -> Result<Option<(usize, usize)>> {
         let params = match &self.params {
-            None => return Ok(0),
+            None => return Ok(None),
             Some(p) => p,
         };
         if self.shard.is_empty() {
-            return Ok(0);
+            return Ok(None);
         }
         let b = self.batch.batch();
         let count = (self.shard.end - self.cursor).min(b);
@@ -106,15 +125,34 @@ impl WorkerState {
         self.push_buf.clear();
         self.push_buf
             .extend(out.sqnorms[..count].iter().map(|&sq| sq.max(0.0).sqrt()));
+        Ok(Some((self.cursor, count)))
+    }
+
+    /// Store half of a scoring round: push the staged weights and advance
+    /// the cursor.  On failure the cursor does not move, so the same batch
+    /// is re-scored on retry.
+    fn push_scores(&mut self, start: usize, count: usize) -> Result<()> {
         self.store
-            .push_weights(self.cursor, &self.push_buf, self.version)?;
-        self.cursor += count;
+            .push_weights(start, &self.push_buf, self.version)?;
+        self.cursor = start + count;
         if self.cursor >= self.shard.end {
             self.cursor = self.shard.start;
         }
         self.batches_done += 1;
         self.examples_scored += count as u64;
-        Ok(count)
+        Ok(())
+    }
+
+    /// Score the next batch of shard positions and push ‖g‖ weights.
+    /// No-op (returns 0) until parameters have been published.
+    pub fn score_next_batch(&mut self, engine: &Engine) -> Result<usize> {
+        match self.compute_scores(engine)? {
+            None => Ok(0),
+            Some((start, count)) => {
+                self.push_scores(start, count)?;
+                Ok(count)
+            }
+        }
     }
 
     /// Sim-mode driver: refresh params once, then score `k` batches.
@@ -148,21 +186,68 @@ impl WorkerState {
     /// Live-mode loop: poll for parameters and keep sweeping until `stop`.
     /// `throttle` inserts a pause between batches to emulate slower
     /// workers (and to keep a single-core host responsive).
+    ///
+    /// The topology is fire-and-forget (§4.2): a transient *store* failure
+    /// must degrade freshness, never kill the scoring thread.  Store-op
+    /// errors (param fetch, weight push) are counted in `store_errors` and
+    /// retried after an exponential backoff that resets on the next
+    /// successful round.  Engine failures are deterministic — retrying
+    /// would spin forever on the same batch — so they still propagate and
+    /// end the thread (reaped by `run_live`'s caller).
     pub fn run_live(
         &mut self,
         engine: &Engine,
         stop: &AtomicBool,
         throttle: Option<std::time::Duration>,
     ) -> Result<()> {
+        const BACKOFF_MIN: std::time::Duration = std::time::Duration::from_millis(1);
+        const BACKOFF_MAX: std::time::Duration = std::time::Duration::from_millis(500);
+        let mut backoff = BACKOFF_MIN;
         while !stop.load(Ordering::Relaxed) {
-            self.refresh_params(engine)?;
-            if self.params.is_none() {
-                std::thread::sleep(std::time::Duration::from_millis(1));
-                continue;
-            }
-            self.score_next_batch(engine)?;
-            if let Some(d) = throttle {
-                std::thread::sleep(d);
+            let store_err: Option<(&str, anyhow::Error)> = match self.fetch_newer_params() {
+                Err(e) => Some(("param fetch", e)),
+                Ok(blob) => {
+                    if let Some((version, bytes)) = blob {
+                        // A non-decoding blob is deterministic — propagate.
+                        self.install_params(engine, version, &bytes)?;
+                    }
+                    match self.compute_scores(engine)? {
+                        None => {
+                            // No parameters published yet — wait for the master.
+                            backoff = BACKOFF_MIN;
+                            std::thread::sleep(std::time::Duration::from_millis(1));
+                            None
+                        }
+                        Some((start, count)) => match self.push_scores(start, count) {
+                            Ok(()) => {
+                                backoff = BACKOFF_MIN;
+                                if let Some(d) = throttle {
+                                    std::thread::sleep(d);
+                                }
+                                None
+                            }
+                            Err(e) => Some(("weight push", e)),
+                        },
+                    }
+                }
+            };
+            if let Some((stage, e)) = store_err {
+                self.store_errors += 1;
+                crate::log_warn!(
+                    "worker",
+                    "worker-{} {stage} failed (retry in {:?}): {e}",
+                    self.id,
+                    backoff
+                );
+                // Sleep in slices so a stop request is honoured promptly
+                // even mid-backoff.
+                let mut waited = std::time::Duration::ZERO;
+                while waited < backoff && !stop.load(Ordering::Relaxed) {
+                    let slice = (backoff - waited).min(std::time::Duration::from_millis(10));
+                    std::thread::sleep(slice);
+                    waited += slice;
+                }
+                backoff = (backoff * 2).min(BACKOFF_MAX);
             }
         }
         Ok(())

@@ -23,17 +23,28 @@ pub struct FenwickSampler {
 
 impl FenwickSampler {
     /// Build from initial weights (all must be finite and >= 0).
+    ///
+    /// O(N) bulk construction: seed each node with its own weight, then
+    /// push every node's partial sum into its Fenwick parent once —
+    /// instead of N point updates at O(log N) each.
     pub fn new(weights: &[f64]) -> Self {
         let n = weights.len();
-        let mut s = FenwickSampler {
-            tree: vec![0.0; n + 1],
-            weights: vec![0.0; n],
-            log2: usize::BITS - n.next_power_of_two().leading_zeros(),
-        };
+        let mut tree = vec![0.0; n + 1];
         for (i, &w) in weights.iter().enumerate() {
-            s.update(i, w);
+            assert!(w.is_finite() && w >= 0.0, "weight {w} invalid");
+            tree[i + 1] = w;
         }
-        s
+        for i in 1..=n {
+            let parent = i + (i & i.wrapping_neg());
+            if parent <= n {
+                tree[parent] += tree[i];
+            }
+        }
+        FenwickSampler {
+            tree,
+            weights: weights.to_vec(),
+            log2: usize::BITS - n.next_power_of_two().leading_zeros(),
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -81,6 +92,11 @@ impl FenwickSampler {
     /// Uses the classic bit-descent: O(log N) with no division. Returns
     /// `None` if the total mass is zero.
     pub fn sample(&self, rng: &mut Pcg64) -> Option<usize> {
+        // Explicit, not just a consequence of zero total: the descent
+        // below would underflow at `weights.len() - 1` on an empty tree.
+        if self.weights.is_empty() {
+            return None;
+        }
         let total = self.total();
         if total <= 0.0 {
             return None;
@@ -197,5 +213,46 @@ mod tests {
     #[should_panic(expected = "invalid")]
     fn rejects_negative_weight() {
         FenwickSampler::new(&[1.0]).update(0, -1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid")]
+    fn bulk_build_rejects_invalid_weight() {
+        FenwickSampler::new(&[1.0, f64::NAN]);
+    }
+
+    #[test]
+    fn empty_sampler_is_safe() {
+        let s = FenwickSampler::new(&[]);
+        assert!(s.is_empty());
+        assert_eq!(s.len(), 0);
+        assert_eq!(s.total(), 0.0);
+        let mut rng = Pcg64::seeded(9);
+        assert_eq!(s.sample(&mut rng), None);
+        assert!(s.sample_many(&mut rng, 4).is_empty());
+    }
+
+    #[test]
+    fn bulk_build_matches_point_updates() {
+        // The O(N) construction must produce the exact tree the O(N log N)
+        // point-update path built — compare across sizes that exercise
+        // power-of-two boundaries.
+        for n in [1usize, 2, 3, 7, 8, 9, 63, 64, 65, 200] {
+            let mut rng = Pcg64::seeded(n as u64);
+            let w: Vec<f64> = (0..n)
+                .map(|i| if i % 5 == 0 { 0.0 } else { rng.next_f64() * 10.0 })
+                .collect();
+            let bulk = FenwickSampler::new(&w);
+            let mut incremental = FenwickSampler::new(&vec![0.0; n]);
+            for (i, &v) in w.iter().enumerate() {
+                incremental.update(i, v);
+            }
+            for end in 0..=n {
+                assert!(
+                    (bulk.prefix_sum(end) - incremental.prefix_sum(end)).abs() < 1e-9,
+                    "n={n} end={end}"
+                );
+            }
+        }
     }
 }

@@ -11,7 +11,7 @@ use std::sync::Mutex;
 use anyhow::{bail, Result};
 
 use super::protocol::{read_frame, write_frame, Request, Response};
-use super::{StoreStats, WeightSnapshot, WeightStore};
+use super::{StoreStats, WeightDelta, WeightSnapshot, WeightStore};
 
 pub struct Client {
     stream: Mutex<TcpStream>,
@@ -78,6 +78,13 @@ impl WeightStore for Client {
     fn fetch_weights(&self) -> Result<WeightSnapshot> {
         match self.call(Request::FetchWeights)? {
             Response::Weights(snap) => Ok(snap),
+            other => bail!("unexpected response: {other:?}"),
+        }
+    }
+
+    fn fetch_weights_since(&self, seq: u64) -> Result<WeightDelta> {
+        match self.call(Request::FetchWeightsSince { seq })? {
+            Response::WeightsDelta(delta) => Ok(delta),
             other => bail!("unexpected response: {other:?}"),
         }
     }

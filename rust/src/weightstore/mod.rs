@@ -2,14 +2,54 @@
 //! workers.  Alain et al. used Redis; we build the equivalent in-tree:
 //!
 //! * [`MemStore`] — the storage engine: versioned parameter blob +
-//!   per-example probability weights with staleness stamps, behind a
-//!   `RwLock` (weights) and `Mutex` (params) so concurrent workers never
-//!   block each other on reads.
+//!   per-example probability weights with staleness stamps.  The weight
+//!   table is striped across contiguous [`RwLock`] shards so concurrent
+//!   worker pushes to different regions never serialize on one global
+//!   write lock, and every write is tagged with a monotonic
+//!   **write sequence** so the master can fetch *deltas* instead of full
+//!   snapshots.
 //! * [`server`]/[`client`] — a thread-per-connection TCP layer with a
 //!   length-prefixed binary protocol, so master and workers can run as
 //!   separate OS processes like the paper's deployment.  Both implement
 //!   the same [`WeightStore`] trait, so the coordinator is oblivious to
 //!   which transport it talks to ("fire and forget", §4.2).
+//!
+//! # Delta / sequence semantics
+//!
+//! The store keeps one global write-sequence counter.  Each
+//! [`WeightStore::push_weights`] call acquires the write locks of *every*
+//! shard its run touches (in ascending order — deadlock-free against other
+//! writers and the all-shards snapshot reader), claims the next sequence
+//! value while holding them, and stamps every written entry with it, so a
+//! push is atomic: readers never observe half of one.
+//! [`WeightStore::fetch_weights_since`]`(seq)` returns a [`WeightDelta`]
+//! containing
+//!
+//! * every entry whose last write-sequence is `> seq`, and
+//! * a new cursor `delta.seq` — the global counter observed *before* the
+//!   shards were scanned.
+//!
+//! Guarantees:
+//!
+//! * **No lost updates.**  Every write with sequence `<= delta.seq` is
+//!   included in the delta (the claim happens under the shard write lock,
+//!   so a reader that observed the claimed counter value will block on the
+//!   shard until the entries are actually written).
+//! * **Idempotent replay.**  Entries carry absolute values (not diffs), so
+//!   an entry that races past the cursor may be delivered twice — applying
+//!   it twice is harmless.  Replaying deltas from any cursor onto the
+//!   snapshot taken at that cursor reconstructs the current table exactly.
+//! * **Full fallback.**  `seq == 0` (a fresh consumer) or a cursor from
+//!   the future (a consumer of a restarted store) returns the entire
+//!   table with `delta.full == true`.  The initial table state carries
+//!   write sequence 1, so a consumer that synced a fresh store holds
+//!   cursor 1 — never the ambiguous 0 — and all later fetches are
+//!   incremental.
+//!
+//! The master's per-step proposal maintenance therefore moves O(changes)
+//! bytes and does O(changes · log N) sampler updates, instead of cloning
+//! 3×N vectors and rebuilding from scratch every step
+//! (see `coordinator::proposal`).
 //!
 //! Staleness bookkeeping: every weight push carries the parameter
 //! `version` it was computed from; the store stamps it with its own
@@ -47,6 +87,89 @@ impl WeightSnapshot {
     }
 }
 
+/// The incremental counterpart of [`WeightSnapshot`]: the entries written
+/// since a caller-provided cursor, in column layout (`indices[i]` was set
+/// to `weights[i]`/`stamps[i]`/`param_versions[i]`).
+///
+/// See the module docs for the cursor contract.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct WeightDelta {
+    /// New cursor: pass this to the next `fetch_weights_since` call.
+    pub seq: u64,
+    /// Total number of examples the store tracks (size check for appliers).
+    pub n: u64,
+    /// True when `entries` cover the whole table (cursor 0 or unservable).
+    pub full: bool,
+    /// Example indices of the changed entries.
+    pub indices: Vec<u64>,
+    /// New weight of each changed entry.
+    pub weights: Vec<f64>,
+    /// Store-clock stamp of each changed entry.
+    pub stamps: Vec<u64>,
+    /// Parameter version of each changed entry.
+    pub param_versions: Vec<u64>,
+}
+
+impl WeightDelta {
+    /// Number of changed entries carried.
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    /// Overwrite `snap` with this delta's entries.  A `full` delta resizes
+    /// the snapshot; an incremental one requires matching sizes.
+    pub fn apply_to(&self, snap: &mut WeightSnapshot) -> Result<()> {
+        let n = self.n as usize;
+        if self.full {
+            // Resizing to `n` is only safe because a full delta must carry
+            // the whole table (the decoder enforces the same invariant).
+            anyhow::ensure!(
+                self.indices.len() == n,
+                "full delta carries {} entries for a table of {n}",
+                self.indices.len()
+            );
+            snap.weights.clear();
+            snap.weights.resize(n, 0.0);
+            snap.stamps.clear();
+            snap.stamps.resize(n, 0);
+            snap.param_versions.clear();
+            snap.param_versions.resize(n, 0);
+        }
+        anyhow::ensure!(
+            snap.len() == n,
+            "delta tracks {} entries but snapshot holds {}",
+            n,
+            snap.len()
+        );
+        anyhow::ensure!(
+            self.indices.len() == self.weights.len()
+                && self.weights.len() == self.stamps.len()
+                && self.stamps.len() == self.param_versions.len(),
+            "delta columns disagree on length"
+        );
+        for (k, &idx) in self.indices.iter().enumerate() {
+            let i = idx as usize;
+            anyhow::ensure!(i < n, "delta index {i} out of bounds (n = {n})");
+            snap.weights[i] = self.weights[k];
+            snap.stamps[i] = self.stamps[k];
+            snap.param_versions[i] = self.param_versions[k];
+        }
+        Ok(())
+    }
+
+    /// Materialise a `full` delta as a snapshot.
+    pub fn to_snapshot(&self) -> Result<WeightSnapshot> {
+        anyhow::ensure!(self.full, "to_snapshot requires a full delta");
+        let mut snap = WeightSnapshot::default();
+        self.apply_to(&mut snap)?;
+        Ok(snap)
+    }
+}
+
 /// Store-side aggregate counters (exposed for experiments/monitoring).
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct StoreStats {
@@ -56,6 +179,10 @@ pub struct StoreStats {
     pub weights_written: u64,
     pub snapshot_fetches: u64,
     pub grad_applies: u64,
+    /// `fetch_weights_since` calls served.
+    pub delta_fetches: u64,
+    /// Entries shipped across all delta fetches (the O(changes) traffic).
+    pub delta_entries: u64,
 }
 
 /// The master/worker-facing interface of the database actor.
@@ -81,6 +208,11 @@ pub trait WeightStore: Send + Sync {
     /// Snapshot all weights + staleness metadata (master).
     fn fetch_weights(&self) -> Result<WeightSnapshot>;
 
+    /// Entries written since `seq` plus a new cursor — the master's
+    /// incremental fetch.  `seq == 0` returns the full table.  See the
+    /// module docs for the exact cursor contract.
+    fn fetch_weights_since(&self, seq: u64) -> Result<WeightDelta>;
+
     /// Parameter-server op (ASGD/peer mode, paper §6): apply
     /// ``params -= scale * grad`` elementwise on the stored f32 parameter
     /// blob and bump the version.  The store treats parameters as an
@@ -100,10 +232,35 @@ struct ParamSlot {
     bytes: Vec<u8>,
 }
 
+/// One contiguous stripe of the weight table.
+struct WeightShard {
+    /// Global index of this shard's entry 0.
+    base: usize,
+    weights: Vec<f64>,
+    stamps: Vec<u64>,
+    param_versions: Vec<u64>,
+    /// Write sequence of each entry's last write (0 = initial value only).
+    write_seqs: Vec<u64>,
+    /// Highest write sequence recorded in this shard — lets delta fetches
+    /// skip untouched shards without scanning their entries.
+    max_seq: u64,
+}
+
+/// Number of lock stripes the weight table is split into.  Contiguous
+/// striping (not modulo) because workers push contiguous shard runs: a
+/// push then touches at most ⌈run/chunk⌉ locks instead of all of them.
+const WEIGHT_SHARDS: usize = 16;
+
 /// In-process storage engine (also the backend behind the TCP server).
 pub struct MemStore {
     params: Mutex<ParamSlot>,
-    weights: RwLock<WeightSnapshot>,
+    shards: Vec<RwLock<WeightShard>>,
+    /// Entries per shard (the last shard may be shorter).
+    chunk: usize,
+    /// Total tracked examples.
+    n: usize,
+    /// Global write-sequence counter; claimed under a shard's write lock.
+    next_seq: AtomicU64,
     start: Instant,
     param_pushes: AtomicU64,
     param_fetches: AtomicU64,
@@ -111,6 +268,8 @@ pub struct MemStore {
     weights_written: AtomicU64,
     snapshot_fetches: AtomicU64,
     grad_applies: AtomicU64,
+    delta_fetches: AtomicU64,
+    delta_entries: AtomicU64,
 }
 
 impl MemStore {
@@ -118,16 +277,33 @@ impl MemStore {
     /// `init_weight` (the paper starts from uniform — every example must
     /// be samplable before the first worker sweep completes).
     pub fn new(n: usize, init_weight: f64) -> Self {
+        let chunk = n.div_ceil(WEIGHT_SHARDS).max(1);
+        let mut shards = Vec::new();
+        let mut base = 0;
+        while base < n || (n == 0 && shards.is_empty()) {
+            let len = chunk.min(n - base);
+            shards.push(RwLock::new(WeightShard {
+                base,
+                weights: vec![init_weight; len],
+                stamps: vec![0; len],
+                param_versions: vec![0; len],
+                // The initial state is "write" 1, so a consumer that has
+                // absorbed the fresh table holds cursor 1 — distinct from
+                // cursor 0, which means "send me everything".
+                write_seqs: vec![1; len],
+                max_seq: 1,
+            }));
+            base += chunk;
+        }
         MemStore {
             params: Mutex::new(ParamSlot {
                 version: 0,
                 bytes: Vec::new(),
             }),
-            weights: RwLock::new(WeightSnapshot {
-                weights: vec![init_weight; n],
-                stamps: vec![0; n],
-                param_versions: vec![0; n],
-            }),
+            shards,
+            chunk,
+            n,
+            next_seq: AtomicU64::new(1),
             start: Instant::now(),
             param_pushes: AtomicU64::new(0),
             param_fetches: AtomicU64::new(0),
@@ -135,11 +311,18 @@ impl MemStore {
             weights_written: AtomicU64::new(0),
             snapshot_fetches: AtomicU64::new(0),
             grad_applies: AtomicU64::new(0),
+            delta_fetches: AtomicU64::new(0),
+            delta_entries: AtomicU64::new(0),
         }
     }
 
     pub fn n_examples(&self) -> usize {
-        self.weights.read().unwrap().weights.len()
+        self.n
+    }
+
+    /// Current global write sequence (diagnostics/tests).
+    pub fn write_seq(&self) -> u64 {
+        self.next_seq.load(Ordering::Acquire)
     }
 }
 
@@ -173,20 +356,46 @@ impl WeightStore for MemStore {
     }
 
     fn push_weights(&self, start: usize, weights: &[f32], param_version: u64) -> Result<()> {
-        let now = self.now()?;
-        let mut snap = self.weights.write().unwrap();
         anyhow::ensure!(
-            start + weights.len() <= snap.weights.len(),
+            start + weights.len() <= self.n,
             "weight range {}..{} out of bounds (n = {})",
             start,
             start + weights.len(),
-            snap.weights.len()
+            self.n
         );
+        // Validate before taking any lock: a bad value must not leave a
+        // half-applied run behind.
         for (i, &w) in weights.iter().enumerate() {
             anyhow::ensure!(w.is_finite() && w >= 0.0, "weight {w} invalid at {}", start + i);
-            snap.weights[start + i] = w as f64;
-            snap.stamps[start + i] = now;
-            snap.param_versions[start + i] = param_version;
+        }
+        let now = self.now()?;
+        if !weights.is_empty() {
+            let end = start + weights.len();
+            // Hold EVERY touched shard's write lock for the whole run
+            // (ascending order, so writers can't deadlock each other or
+            // the all-shards snapshot reader): a push is atomic — no
+            // reader observes half of it — and one sequence value covers
+            // it.  Claiming under the locks keeps the no-lost-updates
+            // guarantee: a reader that loaded a cursor ≥ `seq` blocks on
+            // these shards until the entries below are visible.
+            let first = start / self.chunk;
+            let last = (end - 1) / self.chunk;
+            let mut guards: Vec<_> = (first..=last)
+                .map(|s| self.shards[s].write().unwrap())
+                .collect();
+            let seq = self.next_seq.fetch_add(1, Ordering::AcqRel) + 1;
+            for sh in guards.iter_mut() {
+                let lo = start.max(sh.base);
+                let hi = end.min(sh.base + sh.weights.len());
+                for j in lo..hi {
+                    let k = j - sh.base;
+                    sh.weights[k] = weights[j - start] as f64;
+                    sh.stamps[k] = now;
+                    sh.param_versions[k] = param_version;
+                    sh.write_seqs[k] = seq;
+                }
+                sh.max_seq = sh.max_seq.max(seq);
+            }
         }
         self.weight_pushes.fetch_add(1, Ordering::Relaxed);
         self.weights_written
@@ -196,7 +405,57 @@ impl WeightStore for MemStore {
 
     fn fetch_weights(&self) -> Result<WeightSnapshot> {
         self.snapshot_fetches.fetch_add(1, Ordering::Relaxed);
-        Ok(self.weights.read().unwrap().clone())
+        // Acquire every shard read lock before copying: snapshots stay
+        // point-in-time atomic (pushes hold all their touched shard locks,
+        // so none can be observed half-applied).  Deadlock-free because
+        // every multi-lock acquirer — this reader and push_weights — takes
+        // shard locks in ascending index order.  Delta fetches deliberately
+        // don't pay this: their cursor contract already tolerates per-shard
+        // scan races.
+        let guards: Vec<_> = self.shards.iter().map(|l| l.read().unwrap()).collect();
+        let mut snap = WeightSnapshot {
+            weights: Vec::with_capacity(self.n),
+            stamps: Vec::with_capacity(self.n),
+            param_versions: Vec::with_capacity(self.n),
+        };
+        for sh in &guards {
+            snap.weights.extend_from_slice(&sh.weights);
+            snap.stamps.extend_from_slice(&sh.stamps);
+            snap.param_versions.extend_from_slice(&sh.param_versions);
+        }
+        Ok(snap)
+    }
+
+    fn fetch_weights_since(&self, seq: u64) -> Result<WeightDelta> {
+        // Cursor FIRST, scan second: writes sequenced at or below the
+        // cursor are guaranteed visible to the scan (see module docs);
+        // writes racing past it are at worst re-delivered next time.
+        let cursor = self.next_seq.load(Ordering::Acquire);
+        let full = seq == 0 || seq > cursor;
+        let mut delta = WeightDelta {
+            seq: cursor,
+            n: self.n as u64,
+            full,
+            ..WeightDelta::default()
+        };
+        for lock in &self.shards {
+            let sh = lock.read().unwrap();
+            if !full && sh.max_seq <= seq {
+                continue;
+            }
+            for k in 0..sh.weights.len() {
+                if full || sh.write_seqs[k] > seq {
+                    delta.indices.push((sh.base + k) as u64);
+                    delta.weights.push(sh.weights[k]);
+                    delta.stamps.push(sh.stamps[k]);
+                    delta.param_versions.push(sh.param_versions[k]);
+                }
+            }
+        }
+        self.delta_fetches.fetch_add(1, Ordering::Relaxed);
+        self.delta_entries
+            .fetch_add(delta.len() as u64, Ordering::Relaxed);
+        Ok(delta)
     }
 
     fn apply_grad(&self, scale: f32, grad: &[f32]) -> Result<u64> {
@@ -230,6 +489,8 @@ impl WeightStore for MemStore {
             weights_written: self.weights_written.load(Ordering::Relaxed),
             snapshot_fetches: self.snapshot_fetches.load(Ordering::Relaxed),
             grad_applies: self.grad_applies.load(Ordering::Relaxed),
+            delta_fetches: self.delta_fetches.load(Ordering::Relaxed),
+            delta_entries: self.delta_entries.load(Ordering::Relaxed),
         })
     }
 }
@@ -273,18 +534,29 @@ mod tests {
     }
 
     #[test]
+    fn bad_value_leaves_no_partial_write() {
+        let s = MemStore::new(3, 1.0);
+        assert!(s.push_weights(0, &[5.0, f32::NAN, 5.0], 1).is_err());
+        assert_eq!(s.fetch_weights().unwrap().weights, vec![1.0; 3]);
+        assert_eq!(s.write_seq(), 1); // only the init "write"
+    }
+
+    #[test]
     fn stats_count_ops() {
         let s = MemStore::new(3, 1.0);
         s.push_params(1, vec![0]).unwrap();
         s.fetch_params(0).unwrap();
         s.push_weights(0, &[1.0, 2.0], 1).unwrap();
         s.fetch_weights().unwrap();
+        s.fetch_weights_since(0).unwrap();
         let st = s.stats().unwrap();
         assert_eq!(st.param_pushes, 1);
         assert_eq!(st.param_fetches, 1);
         assert_eq!(st.weight_pushes, 1);
         assert_eq!(st.weights_written, 2);
         assert_eq!(st.snapshot_fetches, 1);
+        assert_eq!(st.delta_fetches, 1);
+        assert_eq!(st.delta_entries, 3); // seq 0 => full table
     }
 
     #[test]
@@ -346,5 +618,134 @@ mod tests {
         for (i, &w) in snap.weights.iter().enumerate() {
             assert_eq!(w, (i + 1) as f64);
         }
+    }
+
+    // -- delta semantics ----------------------------------------------------
+
+    #[test]
+    fn delta_seq_zero_is_full_table() {
+        let s = MemStore::new(7, 2.0);
+        let d = s.fetch_weights_since(0).unwrap();
+        assert!(d.full);
+        assert_eq!(d.n, 7);
+        assert_eq!(d.len(), 7);
+        assert_eq!(d.seq, 1); // the init state is write 1
+        assert_eq!(d.indices, (0..7u64).collect::<Vec<_>>());
+        assert_eq!(d.to_snapshot().unwrap(), s.fetch_weights().unwrap());
+    }
+
+    #[test]
+    fn delta_returns_only_changes_since_cursor() {
+        let s = MemStore::new(100, 1.0);
+        let cursor = s.fetch_weights_since(0).unwrap().seq;
+        assert_eq!(cursor, 1);
+        s.push_weights(10, &[3.0, 4.0], 5).unwrap();
+        s.push_weights(90, &[9.0], 6).unwrap();
+        let d = s.fetch_weights_since(cursor).unwrap();
+        assert!(!d.full);
+        assert_eq!(d.indices, vec![10, 11, 90]);
+        assert_eq!(d.weights, vec![3.0, 4.0, 9.0]);
+        assert_eq!(d.param_versions, vec![5, 5, 6]);
+        // Idle store: the next delta is empty and the cursor is stable.
+        let d2 = s.fetch_weights_since(d.seq).unwrap();
+        assert!(d2.is_empty());
+        assert_eq!(d2.seq, d.seq);
+    }
+
+    #[test]
+    fn delta_rewrite_of_same_entry_carries_latest_value() {
+        let s = MemStore::new(8, 0.0);
+        let cursor = s.fetch_weights_since(0).unwrap().seq;
+        s.push_weights(3, &[1.0], 1).unwrap();
+        s.push_weights(3, &[2.0], 2).unwrap();
+        let d = s.fetch_weights_since(cursor).unwrap();
+        assert_eq!(d.indices, vec![3]);
+        assert_eq!(d.weights, vec![2.0]);
+        assert_eq!(d.param_versions, vec![2]);
+    }
+
+    #[test]
+    fn delta_future_cursor_falls_back_to_full() {
+        let s = MemStore::new(4, 1.0);
+        s.push_weights(0, &[5.0], 1).unwrap();
+        let d = s.fetch_weights_since(u64::MAX).unwrap();
+        assert!(d.full);
+        assert_eq!(d.len(), 4);
+    }
+
+    #[test]
+    fn delta_apply_to_tracks_snapshot() {
+        let s = MemStore::new(50, 1.5);
+        let mut mirror = WeightSnapshot::default();
+        let d = s.fetch_weights_since(0).unwrap();
+        d.apply_to(&mut mirror).unwrap();
+        let mut cursor = d.seq;
+        for round in 0..10u64 {
+            let start = (round as usize * 7) % 40;
+            let vals: Vec<f32> = (0..5).map(|i| (round * 10 + i) as f32).collect();
+            s.push_weights(start, &vals, round + 1).unwrap();
+            let d = s.fetch_weights_since(cursor).unwrap();
+            d.apply_to(&mut mirror).unwrap();
+            cursor = d.seq;
+        }
+        assert_eq!(mirror, s.fetch_weights().unwrap());
+    }
+
+    #[test]
+    fn delta_spanning_multiple_shards_is_complete() {
+        // 100 entries over 16 shards => chunk 7: a 40-long run crosses
+        // several shard boundaries and must come back whole.
+        let s = MemStore::new(100, 0.0);
+        let cursor = s.fetch_weights_since(0).unwrap().seq;
+        let vals: Vec<f32> = (0..40).map(|i| i as f32 + 1.0).collect();
+        s.push_weights(30, &vals, 1).unwrap();
+        let d = s.fetch_weights_since(cursor).unwrap();
+        assert_eq!(d.indices, (30..70u64).collect::<Vec<_>>());
+        assert_eq!(d.weights, (0..40).map(|i| i as f64 + 1.0).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn delta_reader_never_misses_concurrent_writes() {
+        use std::sync::Arc;
+        let s = Arc::new(MemStore::new(600, 0.0));
+        let mut mirror = WeightSnapshot::default();
+        let d = s.fetch_weights_since(0).unwrap();
+        d.apply_to(&mut mirror).unwrap();
+        let mut cursor = d.seq;
+        let mut handles = Vec::new();
+        for t in 0..3u64 {
+            let s = Arc::clone(&s);
+            handles.push(std::thread::spawn(move || {
+                // Overlapping ranges on purpose: last write wins, and the
+                // reader must converge on whatever that is.
+                for i in 0..200usize {
+                    let idx = (t as usize * 150 + i) % 600;
+                    s.push_weights(idx, &[(t * 1000 + i as u64) as f32], t + 1).unwrap();
+                }
+            }));
+        }
+        // Race the reader against the writers.
+        for _ in 0..50 {
+            let d = s.fetch_weights_since(cursor).unwrap();
+            d.apply_to(&mut mirror).unwrap();
+            cursor = d.seq;
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // Drain whatever remains and compare against the ground truth.
+        let d = s.fetch_weights_since(cursor).unwrap();
+        d.apply_to(&mut mirror).unwrap();
+        assert_eq!(mirror, s.fetch_weights().unwrap());
+    }
+
+    #[test]
+    fn empty_store_delta_is_empty_full() {
+        let s = MemStore::new(0, 1.0);
+        let d = s.fetch_weights_since(0).unwrap();
+        assert!(d.full);
+        assert_eq!(d.n, 0);
+        assert!(d.is_empty());
+        assert!(s.fetch_weights().unwrap().is_empty());
     }
 }

@@ -10,7 +10,7 @@ use std::io::{Read, Write};
 
 use anyhow::{bail, Context, Result};
 
-use super::{StoreStats, WeightSnapshot};
+use super::{StoreStats, WeightDelta, WeightSnapshot};
 
 /// Hard cap on frame size (128 MiB) — a corrupted length prefix must not
 /// make the peer try to allocate the universe.
@@ -24,6 +24,8 @@ pub enum Request {
     ParamsVersion,
     PushWeights { start: u64, param_version: u64, weights: Vec<f32> },
     FetchWeights,
+    /// Incremental fetch: entries written since `seq` (0 = full table).
+    FetchWeightsSince { seq: u64 },
     /// Parameter-server op: params -= scale * grad (ASGD peers, §6).
     ApplyGrad { scale: f32, grad: Vec<f32> },
     Now,
@@ -40,6 +42,7 @@ pub enum Response {
     Params(Option<(u64, Vec<u8>)>),
     Version(u64),
     Weights(WeightSnapshot),
+    WeightsDelta(WeightDelta),
     Now(u64),
     Stats(StoreStats),
 }
@@ -175,6 +178,10 @@ impl Request {
                 put_f32s(&mut p, weights);
             }
             Request::FetchWeights => p.push(0x05),
+            Request::FetchWeightsSince { seq } => {
+                p.push(0x09);
+                p.extend(seq.to_le_bytes());
+            }
             Request::ApplyGrad { scale, grad } => {
                 p.push(0x08);
                 p.extend(scale.to_le_bytes());
@@ -203,6 +210,7 @@ impl Request {
                 weights: c.f32s()?,
             },
             0x05 => Request::FetchWeights,
+            0x09 => Request::FetchWeightsSince { seq: c.u64()? },
             0x08 => Request::ApplyGrad {
                 scale: {
                     let raw = c.take(4)?;
@@ -250,6 +258,16 @@ impl Response {
                 put_u64s(&mut p, &snap.stamps);
                 put_u64s(&mut p, &snap.param_versions);
             }
+            Response::WeightsDelta(delta) => {
+                p.push(0x87);
+                p.extend(delta.seq.to_le_bytes());
+                p.extend(delta.n.to_le_bytes());
+                p.push(delta.full as u8);
+                put_u64s(&mut p, &delta.indices);
+                put_f64s(&mut p, &delta.weights);
+                put_u64s(&mut p, &delta.stamps);
+                put_u64s(&mut p, &delta.param_versions);
+            }
             Response::Now(t) => {
                 p.push(0x85);
                 p.extend(t.to_le_bytes());
@@ -263,6 +281,8 @@ impl Response {
                     s.weights_written,
                     s.snapshot_fetches,
                     s.grad_applies,
+                    s.delta_fetches,
+                    s.delta_entries,
                 ] {
                     p.extend(v.to_le_bytes());
                 }
@@ -300,6 +320,42 @@ impl Response {
                     param_versions,
                 })
             }
+            0x87 => {
+                let seq = c.u64()?;
+                let n = c.u64()?;
+                let full = c.u8()? != 0;
+                let indices = c.u64s()?;
+                let weights = c.f64s()?;
+                let stamps = c.u64s()?;
+                let param_versions = c.u64s()?;
+                anyhow::ensure!(
+                    indices.len() == weights.len()
+                        && weights.len() == stamps.len()
+                        && stamps.len() == param_versions.len(),
+                    "delta columns disagree on length"
+                );
+                // A full delta by definition carries the whole table, so
+                // its `n` is backed by frame-capped column data.  Without
+                // this check a corrupted tiny frame could claim
+                // full + n≈usize::MAX and make apply_to's resize allocate
+                // the universe.  (Incremental deltas never resize, so a
+                // large `n` is legitimate there — big tables are exactly
+                // the delta path's reason to exist.)
+                anyhow::ensure!(
+                    !full || indices.len() as u64 == n,
+                    "full delta carries {} entries for a table of {n}",
+                    indices.len()
+                );
+                Response::WeightsDelta(WeightDelta {
+                    seq,
+                    n,
+                    full,
+                    indices,
+                    weights,
+                    stamps,
+                    param_versions,
+                })
+            }
             0x85 => Response::Now(c.u64()?),
             0x86 => Response::Stats(StoreStats {
                 param_pushes: c.u64()?,
@@ -308,6 +364,8 @@ impl Response {
                 weights_written: c.u64()?,
                 snapshot_fetches: c.u64()?,
                 grad_applies: c.u64()?,
+                delta_fetches: c.u64()?,
+                delta_entries: c.u64()?,
             }),
             _ => bail!("unknown response opcode {op:#04x}"),
         };
@@ -374,6 +432,8 @@ mod tests {
             weights: vec![1.5, -0.0, 3.25e-8],
         });
         roundtrip_req(Request::FetchWeights);
+        roundtrip_req(Request::FetchWeightsSince { seq: 0 });
+        roundtrip_req(Request::FetchWeightsSince { seq: u64::MAX });
         roundtrip_req(Request::ApplyGrad {
             scale: 0.125,
             grad: vec![1.0, -2.0, 3.5],
@@ -395,6 +455,21 @@ mod tests {
             stamps: vec![10, 20],
             param_versions: vec![1, 2],
         }));
+        roundtrip_resp(Response::WeightsDelta(WeightDelta {
+            seq: 99,
+            n: 1000,
+            full: false,
+            indices: vec![3, 700, 999],
+            weights: vec![0.25, 1.5, -0.0],
+            stamps: vec![11, 22, 33],
+            param_versions: vec![1, 2, 3],
+        }));
+        roundtrip_resp(Response::WeightsDelta(WeightDelta {
+            seq: 0,
+            n: 0,
+            full: true,
+            ..WeightDelta::default()
+        }));
         roundtrip_resp(Response::Now(123456789));
         roundtrip_resp(Response::Stats(StoreStats {
             param_pushes: 1,
@@ -403,6 +478,8 @@ mod tests {
             weights_written: 4,
             snapshot_fetches: 5,
             grad_applies: 6,
+            delta_fetches: 7,
+            delta_entries: 8,
         }));
     }
 
@@ -419,6 +496,62 @@ mod tests {
         extra.push(0);
         assert!(Request::decode(&extra).is_err());
         assert!(Request::decode(&[0xEE]).is_err());
+    }
+
+    #[test]
+    fn delta_frames_reject_truncation_and_trailing() {
+        let enc = Response::WeightsDelta(WeightDelta {
+            seq: 12,
+            n: 50,
+            full: false,
+            indices: vec![1, 2],
+            weights: vec![0.5, 1.5],
+            stamps: vec![9, 10],
+            param_versions: vec![3, 4],
+        })
+        .encode();
+        // Every strict prefix must fail cleanly, never panic.
+        for cut in 0..enc.len() {
+            assert!(Response::decode(&enc[..cut]).is_err(), "prefix {cut} decoded");
+        }
+        let mut extra = enc.clone();
+        extra.push(0);
+        assert!(Response::decode(&extra).is_err());
+
+        let enc = Request::FetchWeightsSince { seq: 7 }.encode();
+        assert!(Request::decode(&enc[..enc.len() - 1]).is_err());
+        let mut extra = enc;
+        extra.push(0);
+        assert!(Request::decode(&extra).is_err());
+    }
+
+    #[test]
+    fn delta_rejects_absurd_table_size() {
+        // A tiny frame claiming a near-usize::MAX table must not decode
+        // (the consumer would try to allocate it on apply).
+        let mut p = vec![0x87u8];
+        p.extend(1u64.to_le_bytes()); // seq
+        p.extend(u64::MAX.to_le_bytes()); // n
+        p.push(1); // full
+        put_u64s(&mut p, &[]);
+        put_f64s(&mut p, &[]);
+        put_u64s(&mut p, &[]);
+        put_u64s(&mut p, &[]);
+        assert!(Response::decode(&p).is_err());
+    }
+
+    #[test]
+    fn delta_rejects_mismatched_columns() {
+        // Hand-craft a frame whose index column is longer than the rest.
+        let mut p = vec![0x87u8];
+        p.extend(5u64.to_le_bytes()); // seq
+        p.extend(10u64.to_le_bytes()); // n
+        p.push(0); // full = false
+        put_u64s(&mut p, &[1, 2, 3]); // 3 indices
+        put_f64s(&mut p, &[0.5]); // ...but 1 weight
+        put_u64s(&mut p, &[7]);
+        put_u64s(&mut p, &[1]);
+        assert!(Response::decode(&p).is_err());
     }
 
     #[test]

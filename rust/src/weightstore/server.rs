@@ -122,6 +122,9 @@ fn dispatch(store: &MemStore, req: Request) -> Response {
                 Response::Ok
             }
             Request::FetchWeights => Response::Weights(store.fetch_weights()?),
+            Request::FetchWeightsSince { seq } => {
+                Response::WeightsDelta(store.fetch_weights_since(seq)?)
+            }
             Request::ApplyGrad { scale, grad } => {
                 Response::Version(store.apply_grad(scale, &grad)?)
             }

@@ -359,6 +359,10 @@ impl WeightStore for FlakyStore {
         self.maybe_fail()?;
         self.inner.fetch_weights()
     }
+    fn fetch_weights_since(&self, seq: u64) -> anyhow::Result<issgd::weightstore::WeightDelta> {
+        self.maybe_fail()?;
+        self.inner.fetch_weights_since(seq)
+    }
     fn apply_grad(&self, scale: f32, grad: &[f32]) -> anyhow::Result<u64> {
         self.maybe_fail()?;
         self.inner.apply_grad(scale, grad)
@@ -390,6 +394,53 @@ fn master_survives_flaky_store() {
     assert!(
         losses.last().unwrap().value < losses.first().unwrap().value * 0.5,
         "training did not survive the flaky store"
+    );
+}
+
+#[test]
+fn evaluate_handles_partial_final_batch_exactly() {
+    use issgd::coordinator::EvalSplit;
+    use issgd::data::{split_indices, BatchBuilder, SplitSpec};
+
+    let e = engine();
+    let eb = e.manifest().batch_eval;
+    let mut cfg = base_cfg();
+    cfg.eval_max_batches = 0; // whole split
+    // Pick an example count whose valid split has a partial final batch —
+    // the configuration where the old wrapping path double-counted.
+    cfg.n_examples = (cfg.n_examples..cfg.n_examples + 64 * eb)
+        .find(|&n| {
+            let (_, va, _) = split_indices(n, SplitSpec::default());
+            va.len() > eb && va.len() % eb != 0
+        })
+        .expect("no split size with a partial eval batch in range");
+    let store: Arc<MemStore> = Arc::new(MemStore::new(Master::store_size(&cfg), cfg.init_weight));
+    let mut master = Master::new(cfg, &e, store).unwrap();
+    assert!(master.valid_idx.len() % eb != 0);
+
+    let (loss, err) = master.evaluate(&e, EvalSplit::Valid).unwrap();
+
+    // Ground truth: per-example metrics via all-duplicate batches (every
+    // slot the same row, so sum/e isolates that row's exact contribution).
+    let manifest = e.manifest();
+    let mut bb = BatchBuilder::new(eb, manifest.input_dim, manifest.n_classes);
+    let (mut tl, mut tc) = (0f64, 0f64);
+    for &g in &master.valid_idx {
+        bb.fill(master.data.as_ref(), &vec![g; eb]);
+        let out = e.eval_step(&master.params, &bb.x, &bb.y).unwrap();
+        tl += out.sum_loss as f64 / eb as f64;
+        tc += out.n_correct as f64 / eb as f64;
+    }
+    let n = master.valid_idx.len() as f64;
+    let true_loss = tl / n;
+    let true_err = 1.0 - tc / n;
+    assert!(
+        (loss - true_loss).abs() < 1e-3 * true_loss.abs().max(1.0),
+        "mean loss {loss} vs exact {true_loss}"
+    );
+    assert!(
+        (err - true_err).abs() < 1e-6,
+        "prediction error {err} vs exact {true_err}"
     );
 }
 

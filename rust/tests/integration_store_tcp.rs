@@ -53,6 +53,42 @@ fn weights_roundtrip_over_tcp() {
 }
 
 #[test]
+fn delta_fetch_over_tcp_tracks_snapshot() {
+    let (addr, handle) = spawn_store(64);
+    {
+        let c = Client::connect(&addr).unwrap();
+        // Fresh consumer: seq 0 returns the full table.
+        let d = c.fetch_weights_since(0).unwrap();
+        assert!(d.full);
+        assert_eq!(d.n, 64);
+        assert_eq!(d.len(), 64);
+        let mut mirror = d.to_snapshot().unwrap();
+        let mut cursor = d.seq;
+        assert_eq!(mirror, c.fetch_weights().unwrap());
+        // Incremental: only the changed rows travel.
+        c.push_weights(5, &[2.5, 3.5], 4).unwrap();
+        c.push_weights(40, &[9.0], 5).unwrap();
+        let d = c.fetch_weights_since(cursor).unwrap();
+        assert!(!d.full);
+        assert_eq!(d.indices, vec![5, 6, 40]);
+        assert_eq!(d.weights, vec![2.5, 3.5, 9.0]);
+        assert_eq!(d.param_versions, vec![4, 4, 5]);
+        d.apply_to(&mut mirror).unwrap();
+        cursor = d.seq;
+        assert_eq!(mirror, c.fetch_weights().unwrap());
+        // Idle: empty delta, stable cursor.
+        let d = c.fetch_weights_since(cursor).unwrap();
+        assert!(d.is_empty());
+        assert_eq!(d.seq, cursor);
+        let stats = c.stats().unwrap();
+        assert_eq!(stats.delta_fetches, 3);
+        assert_eq!(stats.delta_entries, 64 + 3);
+        c.shutdown_server().unwrap();
+    }
+    handle.join().unwrap();
+}
+
+#[test]
 fn server_side_errors_propagate() {
     let (addr, handle) = spawn_store(4);
     {

@@ -19,7 +19,7 @@ use issgd::util::json::Json;
 use issgd::util::rng::Pcg64;
 use issgd::variance::trace_sigma;
 use issgd::weightstore::protocol::{Request, Response};
-use issgd::weightstore::WeightSnapshot;
+use issgd::weightstore::{MemStore, WeightDelta, WeightSnapshot, WeightStore};
 
 /// Run `cases` random property cases; panic with the case seed on failure.
 fn prop(name: &str, cases: u64, mut f: impl FnMut(&mut Pcg64)) {
@@ -217,6 +217,114 @@ fn protocol_roundtrips_random_messages() {
             bytes: blob,
         };
         assert_eq!(Request::decode(&req.encode()).unwrap(), req);
+    });
+}
+
+#[test]
+fn delta_replay_from_any_seq_reconstructs_snapshot() {
+    // For any cursor ever handed out: snapshot-at-cursor + delta-since-cursor
+    // must equal the final table exactly.
+    prop("delta-replay", 20, |rng| {
+        let n = 1 + rng.next_below(300) as usize;
+        let store = MemStore::new(n, rng.next_f64());
+        // Checkpoints: (cursor, snapshot consistent with that cursor).
+        let mut checkpoints: Vec<(u64, WeightSnapshot)> = Vec::new();
+        let d0 = store.fetch_weights_since(0).unwrap();
+        checkpoints.push((d0.seq, d0.to_snapshot().unwrap()));
+        for round in 0..30u64 {
+            let start = rng.next_below(n as u64) as usize;
+            let len = 1 + rng.next_below((n - start).min(40) as u64 + 1) as usize;
+            let len = len.min(n - start);
+            let vals: Vec<f32> = (0..len).map(|_| rng.next_f32().abs()).collect();
+            store.push_weights(start, &vals, round + 1).unwrap();
+            if rng.next_below(3) == 0 {
+                // Checkpoint mid-stream: a full snapshot plus the cursor
+                // current at the same (quiescent) moment.
+                let snap = store.fetch_weights().unwrap();
+                let cursor = store.write_seq();
+                checkpoints.push((cursor, snap));
+            }
+        }
+        let truth = store.fetch_weights().unwrap();
+        for (cursor, mut snap) in checkpoints {
+            let delta = store.fetch_weights_since(cursor).unwrap();
+            delta.apply_to(&mut snap).unwrap();
+            assert_eq!(snap, truth, "replay from seq {cursor} diverged");
+        }
+        // And a stale consumer that replays everything from zero.
+        let fresh = store.fetch_weights_since(0).unwrap().to_snapshot().unwrap();
+        assert_eq!(fresh, truth);
+    });
+}
+
+#[test]
+fn delta_replay_survives_concurrent_pushers() {
+    // A reader chases the cursor while writers hammer overlapping ranges;
+    // after the writers finish, one final delta must land the reader's
+    // mirror exactly on the store's table (no lost or phantom writes).
+    prop("delta-concurrent", 6, |rng| {
+        use std::sync::Arc;
+        let n = 200 + rng.next_below(400) as usize;
+        let store = Arc::new(MemStore::new(n, 0.0));
+        let d0 = store.fetch_weights_since(0).unwrap();
+        let mut mirror = d0.to_snapshot().unwrap();
+        let mut cursor = d0.seq;
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let store = Arc::clone(&store);
+            let seed = rng.next_u64();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Pcg64::seeded(seed);
+                for round in 0..120u64 {
+                    let start = rng.next_below(n as u64) as usize;
+                    let len = 1 + rng.next_below(30).min((n - start - 1) as u64) as usize;
+                    let vals: Vec<f32> = (0..len)
+                        .map(|i| (t * 1_000_000 + round * 100 + i as u64) as f32)
+                        .collect();
+                    store.push_weights(start, &vals, round + 1).unwrap();
+                }
+            }));
+        }
+        for _ in 0..40 {
+            let d = store.fetch_weights_since(cursor).unwrap();
+            d.apply_to(&mut mirror).unwrap();
+            cursor = d.seq;
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let d = store.fetch_weights_since(cursor).unwrap();
+        d.apply_to(&mut mirror).unwrap();
+        assert_eq!(mirror, store.fetch_weights().unwrap());
+    });
+}
+
+#[test]
+fn protocol_roundtrips_random_deltas() {
+    prop("delta-protocol-roundtrip", 40, |rng| {
+        let k = rng.next_below(60) as usize;
+        // A full delta must carry exactly n entries (decoder invariant).
+        let full = rng.next_below(2) == 1;
+        let n = if full { k as u64 } else { rng.next_u64() % 1_000_000 };
+        let delta = WeightDelta {
+            seq: rng.next_u64(),
+            n,
+            full,
+            indices: (0..k as u64).map(|_| rng.next_u64() % 1_000_000).collect(),
+            weights: (0..k).map(|_| rng.next_f64() * 100.0).collect(),
+            stamps: (0..k).map(|_| rng.next_u64()).collect(),
+            param_versions: (0..k).map(|_| rng.next_u64() % 512).collect(),
+        };
+        let resp = Response::WeightsDelta(delta);
+        assert_eq!(Response::decode(&resp.encode()).unwrap(), resp);
+
+        let req = Request::FetchWeightsSince { seq: rng.next_u64() };
+        assert_eq!(Request::decode(&req.encode()).unwrap(), req);
+
+        // Truncations must error, never panic.
+        let enc = resp.encode();
+        let cut = rng.next_below(enc.len() as u64) as usize;
+        assert!(Response::decode(&enc[..cut]).is_err());
     });
 }
 
