@@ -1,0 +1,77 @@
+//! Proposal-maintenance bench: the peer/ASGD hot loop before and after the
+//! port to `ProposalMaintainer`.
+//!
+//! One "peer step" at N = 100k with a minibatch's worth of churn: the old
+//! path fetched the full snapshot, ran two O(N) passes (scored-mean prior,
+//! smoothing) and rebuilt a `FenwickSampler` from scratch; the new path
+//! pulls the delta since its cursor and absorbs O(changes · log N) point
+//! updates into the shared maintainer.  The assert at the end is the PR's
+//! acceptance criterion: absorb must beat the rebuild, with a wide margin
+//! to spare.
+
+use issgd::bench::Harness;
+use issgd::config::StalenessUnit;
+use issgd::coordinator::ProposalMaintainer;
+use issgd::sampler::{FenwickSampler, Smoothing};
+use issgd::weightstore::{MemStore, WeightStore};
+
+fn main() {
+    let mut h = Harness::from_env("proposal");
+    let n = 100_000usize;
+    let m = 16usize; // one peer minibatch of weight churn per step
+    let store = MemStore::new(n, 1.0);
+    let vals: Vec<f32> = (0..m).map(|i| 1.0 + (i % 7) as f32).collect();
+
+    // -- old peer path: snapshot + two O(N) passes + sampler rebuild ------
+    let mut off = 0usize;
+    let rebuild = h.bench(&format!("peer_step_rebuild/n={n}"), || {
+        store.push_weights(off, &vals, 1).unwrap();
+        off = (off + m) % (n - m);
+        let snap = store.fetch_weights().unwrap();
+        let smooth = Smoothing::new(1.0);
+        let scored: Vec<f64> = snap
+            .param_versions
+            .iter()
+            .zip(&snap.weights)
+            .filter(|(&v, _)| v > 0)
+            .map(|(_, &w)| w)
+            .collect();
+        let prior = if scored.is_empty() {
+            1.0
+        } else {
+            scored.iter().sum::<f64>() / scored.len() as f64
+        };
+        let weights: Vec<f64> = snap
+            .weights
+            .iter()
+            .zip(&snap.param_versions)
+            .map(|(&w, &v)| smooth.apply(if v > 0 { w } else { prior }))
+            .collect();
+        std::hint::black_box(FenwickSampler::new(&weights));
+    });
+
+    // -- new peer path: delta fetch + incremental absorb ------------------
+    let mut p = ProposalMaintainer::with_coverage_prior(n, 1.0, None, StalenessUnit::Versions);
+    let d = store.fetch_weights_since(0).unwrap();
+    p.absorb(&d, 0).unwrap();
+    let absorb = h.bench(&format!("peer_step_absorb/n={n}/k={m}"), || {
+        store.push_weights(off, &vals, 1).unwrap();
+        off = (off + m) % (n - m);
+        let d = store.fetch_weights_since(p.cursor()).unwrap();
+        p.absorb(&d, 0).unwrap();
+        std::hint::black_box(p.last_changes());
+    });
+
+    println!(
+        "proposal/peer_step: rebuild {:?} vs absorb {:?} ({:.1}x faster)",
+        rebuild.median,
+        absorb.median,
+        rebuild.median.as_secs_f64() / absorb.median.as_secs_f64().max(1e-12)
+    );
+    assert!(
+        absorb.median * 2 < rebuild.median,
+        "incremental peer-step absorb must beat the O(N) rebuild at N={n}"
+    );
+
+    h.finish();
+}

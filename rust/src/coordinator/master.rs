@@ -20,12 +20,18 @@ use crate::data::{split_indices, BatchBuilder, Dataset, SplitSpec, SynthDataset,
 use crate::metrics::RunRecorder;
 use crate::model::ParamSet;
 use crate::runtime::Engine;
-use crate::sampler::{draw_minibatch, smoothing_for_entropy, Smoothing, StalenessFilter};
+use crate::sampler::{smoothing_for_entropy, Smoothing, StalenessFilter};
 use crate::util::rng::Pcg64;
 use crate::variance::{trace_sigma, GTrueEstimator, VarianceReport};
 use crate::weightstore::WeightStore;
 
 use super::proposal::ProposalMaintainer;
+
+/// Adaptive-entropy drift band: the O(N) smoothing re-solve fires when the
+/// maintained (O(1)) entropy falls this far below the target...
+const ADAPTIVE_ENTROPY_LOW_TOL: f64 = 5e-3;
+/// ...or rises this far above it while a positive constant is active.
+const ADAPTIVE_ENTROPY_HIGH_TOL: f64 = 2e-2;
 
 /// Which split to evaluate.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -222,12 +228,24 @@ impl Master {
                 self.rec
                     .record("kept_frac", self.step, self.proposal.kept_fraction());
                 if let Some(target) = self.cfg.adaptive_entropy {
-                    // Adaptive entropy re-solves the constant on the kept
-                    // weights; a changed constant re-smooths in O(N) — this
-                    // mode trades the incremental win for entropy control.
-                    let c = smoothing_for_entropy(&self.proposal.kept_raw(), target, 1e-4);
-                    self.proposal.set_smoothing(c);
-                    self.rec.record("smoothing_c", self.step, c);
+                    // Adaptive entropy: the maintainer tracks Σ v ln v
+                    // incrementally, so the current normalised entropy is
+                    // O(1).  Only when it drifts off target do we pay the
+                    // O(N) re-solve + re-smooth — the fast path survives a
+                    // moving constant.  The band is asymmetric: dropping
+                    // below target (the §B.3 "time bomb" direction) triggers
+                    // almost immediately, while an over-smoothed proposal
+                    // (merely conservative) is allowed more slack.
+                    let h = self.proposal.normalized_entropy();
+                    let drifted = h + ADAPTIVE_ENTROPY_LOW_TOL < target
+                        || (self.proposal.smoothing() > 0.0
+                            && h > target + ADAPTIVE_ENTROPY_HIGH_TOL);
+                    if drifted {
+                        let c = smoothing_for_entropy(&self.proposal.kept_raw(), target, 1e-4);
+                        self.proposal.set_smoothing(c);
+                    }
+                    self.rec
+                        .record("smoothing_c", self.step, self.proposal.smoothing());
                 }
                 if self.step % 10 == 0 {
                     self.rec.record("ess", self.step, self.proposal.ess_ratio());
@@ -237,8 +255,7 @@ impl Master {
                         self.proposal.last_changes() as f64,
                     );
                 }
-                let (positions, coefs, _) =
-                    draw_minibatch(self.proposal.sampler(), &mut self.rng, m);
+                let (positions, coefs, _) = self.proposal.draw_minibatch(&mut self.rng, m);
                 (positions, coefs)
             }
             TrainerKind::UniformSgd => {

@@ -16,25 +16,52 @@
 //!   from the shared weights (ISSGD+ASGD) — run the `peer_step` artifact,
 //!   push the gradient, and push the per-example norms that came for free.
 //!
+//! # Incremental proposal maintenance
+//!
+//! ISSGD+ASGD peers keep their proposal synced the same way the master
+//! does: a [`ProposalMaintainer`] in coverage-prior mode mirrors the store
+//! through `fetch_weights_since(cursor)` deltas, so one peer step costs
+//! O(changes · log N) Fenwick point updates instead of the old full
+//! `fetch_weights()` snapshot + `FenwickSampler::new` rebuild (O(N) bytes
+//! and work per step — the overhead that 1803.00942 identifies as the
+//! reason importance sampling rarely pays off).  The coverage-correction
+//! prior (never-scored entries priced at the mean of scored weights) is
+//! folded into the maintainer as two running sums, so it moves with every
+//! delta at no extra cost.
+//!
+//! Each `PeerState` holds an `Arc<Mutex<ProposalMaintainer>>`: the
+//! in-process `run_asgd_sim` hands every peer the *same* maintainer (one
+//! mirror, one cursor, lock-guarded — all peers observe the same store so
+//! sharing is both correct and memory-frugal), while a distributed
+//! deployment gives each peer its own maintainer whose private cursor
+//! advances independently — the store's cursor contract is per-consumer
+//! (see `WeightStore::fetch_weights_since`).
+//!
+//! Weight write-back is *coalesced*: the sampled positions are sorted,
+//! de-duplicated (last slot wins, matching sequential push order) and
+//! contiguous runs are pushed as single `push_weights` calls — one store
+//! round-trip, one write-sequence bump, and one delta entry per run
+//! instead of per example.
+//!
 //! `run_asgd_sim` drives the peers in a deterministic round-robin with a
 //! configurable fetch cadence, so gradients are genuinely stale (a peer
 //! computes on params that other peers have since updated) while runs
 //! remain reproducible.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
-use crate::config::{RunConfig, TrainerKind};
+use crate::config::{RunConfig, StalenessUnit, TrainerKind};
 use crate::data::{BatchBuilder, SynthDataset};
 use crate::metrics::RunRecorder;
 use crate::model::ParamSet;
 use crate::runtime::Engine;
-use crate::sampler::{draw_minibatch, FenwickSampler, Smoothing};
 use crate::util::rng::Pcg64;
 use crate::weightstore::{MemStore, WeightStore};
 
 use super::master::{EvalSplit, Master};
+use super::proposal::ProposalMaintainer;
 
 /// One ASGD peer.
 pub struct PeerState {
@@ -44,15 +71,20 @@ pub struct PeerState {
     store: Arc<dyn WeightStore>,
     params: Option<ParamSet>,
     pub version: u64,
-    /// Use importance sampling from the shared weights (ISSGD+ASGD) or
-    /// uniform minibatches (plain ASGD).
-    pub use_is: bool,
-    smoothing: f64,
+    /// Delta-synced proposal (ISSGD+ASGD); `None` = uniform minibatches
+    /// (plain ASGD).  Shared between in-process peers, per-peer when
+    /// distributed — the store cursor lives inside the maintainer.
+    proposal: Option<Arc<Mutex<ProposalMaintainer>>>,
     lr: f32,
     rng: Pcg64,
     batch: BatchBuilder,
     coef_buf: Vec<f32>,
+    /// Scratch for sorting/coalescing weight write-backs.
+    push_buf: Vec<(usize, f32)>,
+    run_buf: Vec<f32>,
     pub steps_done: u64,
+    /// `push_weights` round-trips avoided by run coalescing.
+    pub push_calls_saved: u64,
 }
 
 impl PeerState {
@@ -63,8 +95,7 @@ impl PeerState {
         data: Arc<SynthDataset>,
         train_idx: Arc<Vec<usize>>,
         store: Arc<dyn WeightStore>,
-        use_is: bool,
-        smoothing: f64,
+        proposal: Option<Arc<Mutex<ProposalMaintainer>>>,
         lr: f32,
         seed: u64,
     ) -> PeerState {
@@ -75,14 +106,22 @@ impl PeerState {
             store,
             params: None,
             version: 0,
-            use_is,
-            smoothing,
+            proposal,
             lr,
             rng: Pcg64::new(seed, 0x9EE5 + id as u64),
             batch: BatchBuilder::new(manifest.batch_train, manifest.input_dim, manifest.n_classes),
             coef_buf: Vec::new(),
+            push_buf: Vec::new(),
+            run_buf: Vec::new(),
             steps_done: 0,
+            push_calls_saved: 0,
         }
+    }
+
+    /// Whether this peer importance-samples (ISSGD+ASGD) or draws
+    /// uniformly (plain ASGD).
+    pub fn use_is(&self) -> bool {
+        self.proposal.is_some()
     }
 
     /// Pull newer parameters if available.
@@ -106,41 +145,21 @@ impl PeerState {
         };
         let m = self.batch.batch();
         let n = self.train_idx.len();
-        let (positions, coefs) = if self.use_is {
-            let snap = self.store.fetch_weights()?;
-            let smooth = Smoothing::new(self.smoothing);
-            // Coverage correction: unlike the master/worker topology, peers
-            // only score the examples they happen to sample, so early on
-            // most weights are still the placeholder init value — which is
-            // NOT a gradient norm, and treating it as one mis-calibrates
-            // the importance correction badly enough to diverge.  Examples
-            // never scored (param_version == 0) get the *mean of scored
-            // weights* as their prior: they are sampled at an average rate
-            // and their coefficient stays ~1 until real information about
-            // them exists.
-            let scored: Vec<f64> = snap
-                .param_versions
-                .iter()
-                .zip(&snap.weights)
-                .filter(|(&v, _)| v > 0)
-                .map(|(_, &w)| w)
-                .collect();
-            let prior = if scored.is_empty() {
-                1.0
-            } else {
-                scored.iter().sum::<f64>() / scored.len() as f64
-            };
-            let weights: Vec<f64> = snap
-                .weights
-                .iter()
-                .zip(&snap.param_versions)
-                .map(|(&w, &v)| smooth.apply(if v > 0 { w } else { prior }))
-                .collect();
-            let sampler = FenwickSampler::new(&weights);
-            let (pos, coefs, _) = draw_minibatch(&sampler, &mut self.rng, m);
-            (pos, coefs)
-        } else {
-            (self.rng.sample_with_replacement(n, m), vec![1.0f32; m])
+        let (positions, coefs) = match &self.proposal {
+            Some(shared) => {
+                // Advance the maintainer's cursor and absorb only the
+                // entries written since — O(changes · log N), no snapshot.
+                let mut prop = shared.lock().unwrap();
+                let now = match prop.unit() {
+                    StalenessUnit::Nanos => self.store.now()?,
+                    StalenessUnit::Versions => self.version,
+                };
+                let delta = self.store.fetch_weights_since(prop.cursor())?;
+                prop.absorb(&delta, now)?;
+                let (pos, coefs, _) = prop.draw_minibatch(&mut self.rng, m);
+                (pos, coefs)
+            }
+            None => (self.rng.sample_with_replacement(n, m), vec![1.0f32; m]),
         };
         let global: Vec<usize> = positions.iter().map(|&p| self.train_idx[p]).collect();
         self.batch.fill(self.data.as_ref(), &global);
@@ -151,13 +170,45 @@ impl PeerState {
         self.store.apply_grad(self.lr, &out.grad_flat)?;
         // Share the importance weights that came for free (§6) — only for
         // the examples this minibatch touched, like the worker scoring path
-        // but with zero extra compute.
+        // but with zero extra compute.  Runs of contiguous positions are
+        // pushed in one call: a minibatch used to cost m round-trips and m
+        // write-sequence bumps; coalescing pays one per run.
+        self.push_buf.clear();
         for (slot, &pos) in positions.iter().enumerate() {
             let sq = out.sqnorms[slot].max(0.0);
             if sq > 0.0 {
-                self.store.push_weights(pos, &[sq.sqrt()], self.version)?;
+                self.push_buf.push((pos, sq.sqrt()));
             }
         }
+        // Stable sort keeps slot order within a position, so after dedup
+        // the surviving value is the last slot's — the same value the old
+        // one-push-per-example loop left behind.
+        self.push_buf.sort_by_key(|e| e.0);
+        self.push_buf.dedup_by(|next, kept| {
+            if next.0 == kept.0 {
+                kept.1 = next.1;
+                true
+            } else {
+                false
+            }
+        });
+        let entries = self.push_buf.len();
+        let mut calls = 0u64;
+        let mut i = 0;
+        while i < entries {
+            let start = self.push_buf[i].0;
+            self.run_buf.clear();
+            self.run_buf.push(self.push_buf[i].1);
+            let mut j = i + 1;
+            while j < entries && self.push_buf[j].0 == self.push_buf[j - 1].0 + 1 {
+                self.run_buf.push(self.push_buf[j].1);
+                j += 1;
+            }
+            self.store.push_weights(start, &self.run_buf, self.version)?;
+            calls += 1;
+            i = j;
+        }
+        self.push_calls_saved += entries as u64 - calls;
         self.steps_done += 1;
         Ok(Some(out.loss))
     }
@@ -180,6 +231,14 @@ pub struct AsgdOutcome {
 /// combination (`Issgd`).  `cfg.steps` counts *total* gradient
 /// contributions across peers, making loss-vs-gradient-budget comparable
 /// with the master/worker topology.
+///
+/// ISSGD peers share one lock-guarded [`ProposalMaintainer`] (one store
+/// mirror, one delta cursor).  Evaluation triggers whenever a round of
+/// peer steps *crosses* an `eval_every` boundary — rounds advance by
+/// `n_workers` steps, so the old `total % eval_every == 0` gate silently
+/// skipped every evaluation when the two weren't aligned — and fetches
+/// server parameters through a version cursor, so an unchanged blob is
+/// neither re-downloaded nor re-decoded.
 pub fn run_asgd_sim(cfg: &RunConfig, engine: &Engine) -> Result<AsgdOutcome> {
     cfg.validate()?;
     let store: Arc<MemStore> = Arc::new(MemStore::new(Master::store_size(cfg), cfg.init_weight));
@@ -191,6 +250,19 @@ pub fn run_asgd_sim(cfg: &RunConfig, engine: &Engine) -> Result<AsgdOutcome> {
 
     let manifest = engine.manifest();
     let use_is = cfg.trainer == TrainerKind::Issgd;
+    // One shared maintainer for all in-process peers.  No staleness
+    // threshold: peer mode relies on the coverage prior, not §B.1
+    // filtering (matching the original per-step rebuild semantics).
+    let proposal = if use_is {
+        Some(Arc::new(Mutex::new(ProposalMaintainer::with_coverage_prior(
+            Master::store_size(cfg),
+            cfg.smoothing,
+            None,
+            StalenessUnit::Versions,
+        ))))
+    } else {
+        None
+    };
     let mut peers: Vec<PeerState> = (0..cfg.n_workers)
         .map(|id| {
             PeerState::new(
@@ -199,8 +271,7 @@ pub fn run_asgd_sim(cfg: &RunConfig, engine: &Engine) -> Result<AsgdOutcome> {
                 Arc::clone(&eval_master.data),
                 Arc::new(eval_master.train_idx.clone()),
                 store_dyn.clone(),
-                use_is,
-                cfg.smoothing,
+                proposal.clone(),
                 cfg.lr,
                 cfg.seed,
             )
@@ -209,7 +280,11 @@ pub fn run_asgd_sim(cfg: &RunConfig, engine: &Engine) -> Result<AsgdOutcome> {
 
     let mut rec = RunRecorder::new();
     let mut total_steps = 0u64;
+    // Version cursor for evaluation parameter fetches: unchanged server
+    // params skip the blob download + decode (mirrors `refresh_params`).
+    let mut eval_version = 0u64;
     while total_steps < cfg.steps {
+        let round_start = total_steps;
         for peer in &mut peers {
             if total_steps >= cfg.steps {
                 break;
@@ -223,21 +298,24 @@ pub fn run_asgd_sim(cfg: &RunConfig, engine: &Engine) -> Result<AsgdOutcome> {
                 total_steps += 1;
             }
         }
-        // Evaluate with the *server's* current parameters.
-        if cfg.eval_every > 0 && total_steps % cfg.eval_every == 0 {
-            if let Some((_v, bytes)) = store_dyn.fetch_params(0)? {
+        // Evaluate with the *server's* current parameters whenever this
+        // round crossed an eval boundary (rounds advance by n_workers
+        // steps, so exact `% eval_every == 0` hits can't be relied on).
+        if cfg.eval_every > 0 && round_start / cfg.eval_every != total_steps / cfg.eval_every {
+            if let Some((v, bytes)) = store_dyn.fetch_params(eval_version)? {
                 eval_master.params = ParamSet::from_bytes(manifest, &bytes)?;
-                let (l, e) = eval_master.evaluate(engine, EvalSplit::Train)?;
-                let (_tl, te) = eval_master.evaluate(engine, EvalSplit::Test)?;
-                rec.record("eval_train_loss", total_steps, l);
-                rec.record("eval_train_err", total_steps, e);
-                rec.record("eval_test_err", total_steps, te);
+                eval_version = v;
             }
+            let (l, e) = eval_master.evaluate(engine, EvalSplit::Train)?;
+            let (_tl, te) = eval_master.evaluate(engine, EvalSplit::Test)?;
+            rec.record("eval_train_loss", total_steps, l);
+            rec.record("eval_train_err", total_steps, e);
+            rec.record("eval_test_err", total_steps, te);
         }
     }
 
-    // Final evaluation with server params.
-    if let Some((_v, bytes)) = store_dyn.fetch_params(0)? {
+    // Final evaluation with server params (cursor: skip if already fresh).
+    if let Some((_v, bytes)) = store_dyn.fetch_params(eval_version)? {
         eval_master.params = ParamSet::from_bytes(manifest, &bytes)?;
     }
     let final_err = (
@@ -245,10 +323,12 @@ pub fn run_asgd_sim(cfg: &RunConfig, engine: &Engine) -> Result<AsgdOutcome> {
         eval_master.evaluate(engine, EvalSplit::Valid)?.1,
         eval_master.evaluate(engine, EvalSplit::Test)?.1,
     );
+    let mut store_stats = store.stats()?;
+    store_stats.push_calls_saved = peers.iter().map(|p| p.push_calls_saved).sum();
     Ok(AsgdOutcome {
         rec,
         final_err,
         total_peer_steps: total_steps,
-        store_stats: store.stats()?,
+        store_stats,
     })
 }

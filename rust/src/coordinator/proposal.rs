@@ -1,5 +1,5 @@
-//! Incremental proposal maintenance for the master (the hot path the
-//! delta-aware store exists for).
+//! Incremental proposal maintenance — the hot path the delta-aware store
+//! exists for, shared by *both* training topologies.
 //!
 //! The old master cloned the store's full `WeightSnapshot` (3×N vectors)
 //! and rebuilt a [`FenwickSampler`] from scratch on *every* training step —
@@ -21,8 +21,25 @@
 //! Smoothing (§B.3) is folded into the stored sampler weights
 //! (`raw + c` for kept entries, `0` for filtered ones).  Changing the
 //! constant (the adaptive-entropy extension) rebuilds the proposal in
-//! O(N) — that mode trades the incremental win for entropy control and is
-//! documented as such in `Master::train_one_step`.
+//! O(N), but the maintainer also tracks `Σ v ln v` of the sampler weights
+//! incrementally, so [`ProposalMaintainer::normalized_entropy`] is O(1)
+//! and the master only pays the O(N) re-solve when the entropy actually
+//! drifts off target (see `Master::train_one_step`).
+//!
+//! # Coverage-prior mode (peer/ASGD topology, §6)
+//!
+//! Peers only score the examples they happen to sample, so early in
+//! training most store entries still hold the placeholder init value —
+//! which is *not* a gradient norm.  [`ProposalMaintainer::with_coverage_prior`]
+//! gives every never-scored entry (`param_version == 0`) the **mean of the
+//! scored weights** as its prior, so unscored examples are sampled at an
+//! average rate with coefficient ~1 until real information exists.  The
+//! prior is maintained as two running sums (scored count + scored weight
+//! total), and the unscored entries live in a second indicator Fenwick
+//! tree, so a moving prior re-prices the whole unscored mass in O(1) —
+//! the old peer implementation recomputed it with two O(N) passes per
+//! step.  [`ProposalMaintainer::draw_minibatch`] samples the resulting
+//! mixture exactly.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -31,12 +48,25 @@ use anyhow::Result;
 
 use crate::config::StalenessUnit;
 use crate::sampler::{FenwickSampler, Smoothing, StalenessFilter};
+use crate::util::rng::Pcg64;
 use crate::weightstore::{WeightDelta, WeightSnapshot};
+
+/// `v · ln v`, continuously extended to 0 at `v = 0` (entropy summand).
+#[inline]
+fn wlogw(v: f64) -> f64 {
+    if v > 0.0 {
+        v * v.ln()
+    } else {
+        0.0
+    }
+}
 
 pub struct ProposalMaintainer {
     /// Mirror of the store's raw table (weights, stamps, param versions).
     raw: WeightSnapshot,
-    /// Smoothed + staleness-filtered sampling weights.
+    /// Smoothed + staleness-filtered sampling weights.  In coverage-prior
+    /// mode this tree holds only the *scored* entries; unscored mass lives
+    /// in `unscored_kept`.
     sampler: FenwickSampler,
     /// Store write-sequence this mirror reflects (next fetch cursor).
     cursor: u64,
@@ -50,11 +80,23 @@ pub struct ProposalMaintainer {
     n_kept: usize,
     /// Running Σw² of the sampler weights (ESS diagnostic in O(1)).
     sum_sq: f64,
+    /// Running Σ v·ln v of the sampler weights (entropy in O(1)).
+    sum_wlogw: f64,
+    /// Count of strictly-positive sampler weights (entropy support size).
+    n_pos: usize,
     /// Latest staleness clock observed (never moves backwards).
     now: u64,
     /// Point updates applied by the last `absorb` (delta entries plus
     /// expiries) — the per-step maintenance cost, exposed for benches.
     last_changes: usize,
+    /// Coverage-prior mode: count of entries scored at least once
+    /// (`param_version > 0`) and the sum of their raw weights.
+    scored_count: usize,
+    scored_total: f64,
+    /// Indicator tree (weight 1) over kept-and-never-scored entries —
+    /// `Some` iff coverage-prior mode is on.  Sampling it uniformly picks
+    /// an unscored entry in O(log N).
+    unscored_kept: Option<FenwickSampler>,
 }
 
 impl ProposalMaintainer {
@@ -63,6 +105,28 @@ impl ProposalMaintainer {
         smoothing: f64,
         threshold: Option<u64>,
         unit: StalenessUnit,
+    ) -> ProposalMaintainer {
+        Self::build(n, smoothing, threshold, unit, false)
+    }
+
+    /// A maintainer for the peer/ASGD topology: never-scored entries
+    /// (`param_version == 0`) get the mean of the scored raw weights as
+    /// their prior (1.0 before anything is scored), maintained in O(1).
+    pub fn with_coverage_prior(
+        n: usize,
+        smoothing: f64,
+        threshold: Option<u64>,
+        unit: StalenessUnit,
+    ) -> ProposalMaintainer {
+        Self::build(n, smoothing, threshold, unit, true)
+    }
+
+    fn build(
+        n: usize,
+        smoothing: f64,
+        threshold: Option<u64>,
+        unit: StalenessUnit,
+        coverage_prior: bool,
     ) -> ProposalMaintainer {
         ProposalMaintainer {
             raw: WeightSnapshot {
@@ -81,8 +145,17 @@ impl ProposalMaintainer {
             kept: vec![false; n],
             n_kept: 0,
             sum_sq: 0.0,
+            sum_wlogw: 0.0,
+            n_pos: 0,
             now: 0,
             last_changes: 0,
+            scored_count: 0,
+            scored_total: 0.0,
+            unscored_kept: if coverage_prior {
+                Some(FenwickSampler::new(&vec![0.0; n]))
+            } else {
+                None
+            },
         }
     }
 
@@ -113,6 +186,17 @@ impl ProposalMaintainer {
         self.smoothing
     }
 
+    /// The staleness unit this maintainer's clock advances in (consumers
+    /// use it to decide what `now` value to pass to `absorb`).
+    pub fn unit(&self) -> StalenessUnit {
+        self.unit
+    }
+
+    /// Whether coverage-prior mode is on.
+    pub fn has_coverage_prior(&self) -> bool {
+        self.unscored_kept.is_some()
+    }
+
     /// Fraction of entries currently passing the staleness filter.
     pub fn kept_fraction(&self) -> f64 {
         if self.raw.is_empty() {
@@ -127,6 +211,52 @@ impl ProposalMaintainer {
         self.last_changes
     }
 
+    /// Coverage prior: mean raw weight of the scored entries, 1.0 while
+    /// nothing has been scored yet (coefficient ~1 territory).
+    pub fn prior(&self) -> f64 {
+        if self.scored_count == 0 {
+            1.0
+        } else {
+            // max(0): incremental ± updates can drift a hair below zero.
+            self.scored_total.max(0.0) / self.scored_count as f64
+        }
+    }
+
+    /// `(count, per-entry weight)` of the unscored-but-kept mass.
+    fn unscored_terms(&self) -> (f64, f64) {
+        match &self.unscored_kept {
+            None => (0.0, 0.0),
+            Some(tree) => {
+                let u = tree.total();
+                if u <= 0.0 {
+                    (0.0, 0.0)
+                } else {
+                    (u, self.smooth().apply(self.prior()))
+                }
+            }
+        }
+    }
+
+    /// Total proposal mass, including the prior-priced unscored entries.
+    pub fn total_mass(&self) -> f64 {
+        let (u, p) = self.unscored_terms();
+        self.sampler.total() + u * p
+    }
+
+    /// The sampling weight entry `i` is currently drawn with: 0 if
+    /// filtered out, the prior-priced value if unscored (coverage-prior
+    /// mode), the smoothed raw weight otherwise.
+    pub fn effective_weight(&self, i: usize) -> f64 {
+        if !self.kept[i] {
+            return 0.0;
+        }
+        if self.unscored_kept.is_some() && self.raw.param_versions[i] == 0 {
+            self.smooth().apply(self.prior())
+        } else {
+            self.sampler.weight(i)
+        }
+    }
+
     /// `ESS/N = (Σw)² / (N Σw²)` of the current proposal, maintained
     /// incrementally (mirrors `sampler::effective_sample_size_ratio`).
     pub fn ess_ratio(&self) -> f64 {
@@ -134,12 +264,35 @@ impl ProposalMaintainer {
         if n == 0 {
             return 1.0;
         }
-        let sum_sq = self.sum_sq.max(0.0);
+        let (u, p) = self.unscored_terms();
+        let sum_sq = (self.sum_sq + u * p * p).max(0.0);
         if sum_sq <= 0.0 {
             return 1.0;
         }
-        let total = self.sampler.total();
+        let total = self.sampler.total() + u * p;
         (total * total) / (n as f64 * sum_sq)
+    }
+
+    /// Normalised entropy of the current proposal in O(1), maintained
+    /// alongside the sampler (mirrors `sampler::normalized_entropy` on the
+    /// effective weights): `H = ln S − (Σ v ln v)/S`, divided by the log
+    /// of the positive-support size.
+    pub fn normalized_entropy(&self) -> f64 {
+        let (u, p) = self.unscored_terms();
+        let total = self.sampler.total() + u * p;
+        if total <= 0.0 {
+            return 1.0;
+        }
+        let mut e = self.sum_wlogw;
+        let mut n_pos = self.n_pos as f64;
+        if u > 0.0 && p > 0.0 {
+            e += u * wlogw(p);
+            n_pos += u;
+        }
+        if n_pos <= 1.0 {
+            return 1.0;
+        }
+        ((total.ln() - e / total) / n_pos.ln()).max(0.0)
     }
 
     /// Raw weights of the currently-kept entries (input to the
@@ -149,6 +302,49 @@ impl ProposalMaintainer {
             .filter(|&i| self.kept[i])
             .map(|i| self.raw.weights[i])
             .collect()
+    }
+
+    /// Draw an importance-sampled minibatch from the maintained proposal.
+    ///
+    /// Without coverage-prior mode this is exactly
+    /// [`crate::sampler::draw_minibatch`] on the maintained sampler (same
+    /// RNG consumption, so master traces are unchanged).  With it, the
+    /// proposal is the exact mixture of the scored tree and the uniform
+    /// prior-priced unscored mass; coefficients use the effective weight
+    /// of whichever component the index came from.
+    pub fn draw_minibatch(&self, rng: &mut Pcg64, m: usize) -> (Vec<usize>, Vec<f32>, f64) {
+        let Some(unscored) = &self.unscored_kept else {
+            return crate::sampler::draw_minibatch(&self.sampler, rng, m);
+        };
+        let n = self.raw.len();
+        let (u, p) = self.unscored_terms();
+        let scored_mass = self.sampler.total();
+        let total = scored_mass + u * p;
+        if total <= 0.0 {
+            let indices = rng.sample_with_replacement(n, m);
+            return (indices, vec![1.0; m], 0.0);
+        }
+        let mean_w = total / n as f64;
+        let mut indices = Vec::with_capacity(m);
+        let mut coefs = Vec::with_capacity(m);
+        for _ in 0..m {
+            let r = rng.next_f64() * total;
+            let (i, w) = if r < scored_mass {
+                let i = self
+                    .sampler
+                    .sample(rng)
+                    .expect("scored mass positive but sample failed");
+                (i, self.sampler.weight(i))
+            } else {
+                let i = unscored
+                    .sample(rng)
+                    .expect("unscored mass positive but sample failed");
+                (i, p)
+            };
+            indices.push(i);
+            coefs.push((mean_w / w) as f32);
+        }
+        (indices, coefs, mean_w)
     }
 
     /// The staleness tick of entry `i` in the configured unit.
@@ -173,10 +369,8 @@ impl ProposalMaintainer {
         Smoothing::new(self.smoothing)
     }
 
-    /// Set entry `i`'s sampling weight, maintaining Σw² and the kept count.
-    fn set_sampler_weight(&mut self, i: usize, v: f64, keep: bool) {
-        let old = self.sampler.weight(i);
-        self.sum_sq += v * v - old * old;
+    /// Flip entry `i`'s kept flag, maintaining the count.
+    fn set_kept(&mut self, i: usize, keep: bool) {
         if keep != self.kept[i] {
             self.kept[i] = keep;
             if keep {
@@ -185,24 +379,66 @@ impl ProposalMaintainer {
                 self.n_kept -= 1;
             }
         }
+    }
+
+    /// Set entry `i`'s weight in the scored tree, maintaining Σw²,
+    /// Σ v ln v, and the positive-support count.
+    fn set_scored_weight(&mut self, i: usize, v: f64) {
+        let old = self.sampler.weight(i);
+        if old == v {
+            return;
+        }
+        self.sum_sq += v * v - old * old;
+        self.sum_wlogw += wlogw(v) - wlogw(old);
+        match (old > 0.0, v > 0.0) {
+            (false, true) => self.n_pos += 1,
+            (true, false) => self.n_pos -= 1,
+            _ => {}
+        }
         self.sampler.update(i, v);
     }
 
-    /// Install one freshly-written entry: update the raw mirror, apply the
-    /// filter + smoothing to the sampler, and schedule its expiry.
+    /// Install one freshly-written entry: update the raw mirror and the
+    /// scored sums, apply the filter + smoothing to the right tree, and
+    /// schedule its expiry.
     fn apply_entry(&mut self, i: usize, w: f64, stamp: u64, param_version: u64) {
+        let old_w = self.raw.weights[i];
+        let was_scored = self.raw.param_versions[i] > 0;
         self.raw.weights[i] = w;
         self.raw.stamps[i] = stamp;
         self.raw.param_versions[i] = param_version;
+        let prior_mode = self.unscored_kept.is_some();
+        if prior_mode {
+            match (was_scored, param_version > 0) {
+                (false, true) => {
+                    self.scored_count += 1;
+                    self.scored_total += w;
+                }
+                (true, true) => self.scored_total += w - old_w,
+                (true, false) => {
+                    self.scored_count -= 1;
+                    self.scored_total -= old_w;
+                }
+                (false, false) => {}
+            }
+        }
         let tick = self.tick(i);
-        if self.filter().keep(tick, self.now) {
-            let smoothed = self.smooth().apply(w);
-            self.set_sampler_weight(i, smoothed, true);
+        let keep = self.filter().keep(tick, self.now);
+        self.set_kept(i, keep);
+        if keep {
             if let Some(t) = self.threshold {
                 self.expiry.push(Reverse((tick.saturating_add(t), i)));
             }
+        }
+        let scored = !prior_mode || param_version > 0;
+        let v = if keep && scored {
+            self.smooth().apply(w)
         } else {
-            self.set_sampler_weight(i, 0.0, false);
+            0.0
+        };
+        self.set_scored_weight(i, v);
+        if let Some(tree) = self.unscored_kept.as_mut() {
+            tree.update(i, if keep && !scored { 1.0 } else { 0.0 });
         }
     }
 
@@ -226,36 +462,58 @@ impl ProposalMaintainer {
                 // (at `tick + t >= now`) is still in the heap.
                 continue;
             }
-            self.set_sampler_weight(i, 0.0, false);
+            self.set_kept(i, false);
+            self.set_scored_weight(i, 0.0);
+            if let Some(tree) = self.unscored_kept.as_mut() {
+                tree.update(i, 0.0);
+            }
             evicted += 1;
         }
         evicted
     }
 
-    /// Recompute filter + smoothing + sampler wholesale from the raw
+    /// Recompute filter + smoothing + trees wholesale from the raw
     /// mirror — O(N); used for full deltas and smoothing changes (also
-    /// resets accumulated fp drift in Σw²).
+    /// resets accumulated fp drift in the running sums).
     fn rebuild_from_raw(&mut self) {
         let n = self.raw.len();
         let filter = self.filter();
         let smooth = self.smooth();
+        let prior_mode = self.unscored_kept.is_some();
         let mut weights = vec![0.0; n];
+        let mut indicator = vec![0.0; n];
         self.n_kept = 0;
+        self.scored_count = 0;
+        self.scored_total = 0.0;
         self.expiry.clear();
         for i in 0..n {
             let tick = self.tick(i);
             let keep = filter.keep(tick, self.now);
             self.kept[i] = keep;
+            let scored = !prior_mode || self.raw.param_versions[i] > 0;
+            if prior_mode && self.raw.param_versions[i] > 0 {
+                self.scored_count += 1;
+                self.scored_total += self.raw.weights[i];
+            }
             if keep {
-                weights[i] = smooth.apply(self.raw.weights[i]);
                 self.n_kept += 1;
+                if scored {
+                    weights[i] = smooth.apply(self.raw.weights[i]);
+                } else {
+                    indicator[i] = 1.0;
+                }
                 if let Some(t) = self.threshold {
                     self.expiry.push(Reverse((tick.saturating_add(t), i)));
                 }
             }
         }
         self.sum_sq = weights.iter().map(|w| w * w).sum();
+        self.sum_wlogw = weights.iter().map(|&w| wlogw(w)).sum();
+        self.n_pos = weights.iter().filter(|&&w| w > 0.0).count();
         self.sampler = FenwickSampler::new(&weights);
+        if prior_mode {
+            self.unscored_kept = Some(FenwickSampler::new(&indicator));
+        }
     }
 
     /// Fold a store delta into the proposal and advance the staleness
@@ -306,7 +564,8 @@ impl ProposalMaintainer {
 
     /// Change the §B.3 smoothing constant.  No-op when unchanged; a real
     /// change re-smooths every kept entry (O(N)) — the price of the
-    /// adaptive-entropy mode.
+    /// adaptive-entropy mode, paid only when the maintained entropy drifts
+    /// off target.
     pub fn set_smoothing(&mut self, c: f64) {
         if c == self.smoothing {
             return;
@@ -366,6 +625,26 @@ mod tests {
             .collect()
     }
 
+    /// Ground truth for coverage-prior mode: the old peer-step rebuild
+    /// (prior = mean of scored raw weights, applied to unscored entries).
+    fn expected_prior_weights(raw: &[f64], versions: &[u64], c: f64) -> Vec<f64> {
+        let scored: Vec<f64> = versions
+            .iter()
+            .zip(raw)
+            .filter(|(&v, _)| v > 0)
+            .map(|(_, &w)| w)
+            .collect();
+        let prior = if scored.is_empty() {
+            1.0
+        } else {
+            scored.iter().sum::<f64>() / scored.len() as f64
+        };
+        raw.iter()
+            .zip(versions)
+            .map(|(&w, &v)| if v > 0 { w + c } else { prior + c })
+            .collect()
+    }
+
     fn assert_matches(p: &ProposalMaintainer, expect: &[f64]) {
         assert_eq!(p.sampler().len(), expect.len());
         for (i, &e) in expect.iter().enumerate() {
@@ -390,6 +669,7 @@ mod tests {
         assert_eq!(p.sampler().total(), 0.0);
         assert_eq!(p.kept_fraction(), 0.0);
         assert_eq!(p.ess_ratio(), 1.0);
+        assert_eq!(p.normalized_entropy(), 1.0);
     }
 
     #[test]
@@ -488,14 +768,132 @@ mod tests {
             p.absorb(&sparse_delta(round + 2, n, &entries), now).unwrap();
             let expect = expected_weights(&raw, &stamps, now, threshold, c);
             assert_matches(&p, &expect);
-            // ESS must agree with the from-scratch diagnostic.
+            // ESS and entropy must agree with the from-scratch diagnostics.
             let scratch = crate::sampler::effective_sample_size_ratio(&expect);
             assert!(
                 (p.ess_ratio() - scratch).abs() < 1e-6,
                 "round {round}: ess {} vs {scratch}",
                 p.ess_ratio()
             );
+            let scratch_h = crate::sampler::normalized_entropy(&expect);
+            assert!(
+                (p.normalized_entropy() - scratch_h).abs() < 1e-6,
+                "round {round}: entropy {} vs {scratch_h}",
+                p.normalized_entropy()
+            );
         }
+    }
+
+    #[test]
+    fn coverage_prior_matches_scratch_rebuild() {
+        // The prior-mode maintainer must reproduce, at every step, exactly
+        // what the old peer code computed with two O(N) passes per step.
+        let n = 48;
+        let c = 0.5;
+        let mut p = ProposalMaintainer::with_coverage_prior(n, c, None, StalenessUnit::Versions);
+        let mut raw = vec![1.0f64; n]; // store init_weight
+        let mut versions = vec![0u64; n];
+        let mut rng = Pcg64::seeded(7);
+        p.absorb(&full_delta(1, &raw, &vec![0; n], &versions), 0).unwrap();
+        for round in 0..150u64 {
+            let k = rng.next_below(5) as usize;
+            let entries: Vec<(usize, f64, u64, u64)> = (0..k)
+                .map(|_| {
+                    let i = rng.next_below(n as u64) as usize;
+                    (i, rng.next_f64() * 4.0, 0, 1 + rng.next_below(9))
+                })
+                .collect();
+            for &(i, w, _, v) in &entries {
+                raw[i] = w;
+                versions[i] = v;
+            }
+            p.absorb(&sparse_delta(round + 2, n, &entries), 0).unwrap();
+            let expect = expected_prior_weights(&raw, &versions, c);
+            let total: f64 = expect.iter().sum();
+            assert!(
+                (p.total_mass() - total).abs() < 1e-6 * total.max(1.0),
+                "round {round}: mass {} vs {total}",
+                p.total_mass()
+            );
+            for i in 0..n {
+                assert!(
+                    (p.effective_weight(i) - expect[i]).abs() < 1e-6,
+                    "round {round} entry {i}: {} vs {}",
+                    p.effective_weight(i),
+                    expect[i]
+                );
+            }
+            let scratch_ess = crate::sampler::effective_sample_size_ratio(&expect);
+            assert!(
+                (p.ess_ratio() - scratch_ess).abs() < 1e-6,
+                "round {round}: ess {} vs {scratch_ess}",
+                p.ess_ratio()
+            );
+            let scratch_h = crate::sampler::normalized_entropy(&expect);
+            assert!(
+                (p.normalized_entropy() - scratch_h).abs() < 1e-6,
+                "round {round}: entropy {} vs {scratch_h}",
+                p.normalized_entropy()
+            );
+        }
+        // By now most entries are scored; the drawn coefficients must be
+        // the IS scaling against the effective weights.
+        let expect = expected_prior_weights(&raw, &versions, c);
+        let mean_w = expect.iter().sum::<f64>() / n as f64;
+        let (idx, coefs, got_mean) = p.draw_minibatch(&mut rng, 64);
+        assert!((got_mean - mean_w).abs() < 1e-6 * mean_w);
+        for (i, cf) in idx.iter().zip(&coefs) {
+            assert!(
+                (*cf as f64 - mean_w / expect[*i]).abs() < 1e-4,
+                "coef for {i}: {cf} vs {}",
+                mean_w / expect[*i]
+            );
+        }
+    }
+
+    #[test]
+    fn coverage_prior_unscored_defaults_to_one() {
+        // Nothing scored yet: every entry prices at prior 1.0 + c, so the
+        // draw is uniform with coefficients exactly 1.
+        let n = 16;
+        let mut p = ProposalMaintainer::with_coverage_prior(n, 2.0, None, StalenessUnit::Versions);
+        // Store init: weights 0.7 (placeholder — must be ignored), v = 0.
+        p.absorb(&full_delta(1, &vec![0.7; n], &vec![0; n], &vec![0; n]), 0)
+            .unwrap();
+        assert!((p.prior() - 1.0).abs() < 1e-12);
+        for i in 0..n {
+            assert!((p.effective_weight(i) - 3.0).abs() < 1e-12);
+        }
+        let mut rng = Pcg64::seeded(3);
+        let (_, coefs, _) = p.draw_minibatch(&mut rng, 32);
+        assert!(coefs.iter().all(|&c| (c - 1.0).abs() < 1e-6));
+        // Scoring one entry moves the prior to that entry's weight.
+        p.absorb(&sparse_delta(2, n, &[(4, 5.0, 0, 3)]), 0).unwrap();
+        assert!((p.prior() - 5.0).abs() < 1e-12);
+        assert!((p.effective_weight(4) - 7.0).abs() < 1e-12);
+        assert!((p.effective_weight(0) - 7.0).abs() < 1e-12); // prior-priced
+    }
+
+    #[test]
+    fn coverage_prior_draw_samples_both_components() {
+        // Half scored with large weights, half unscored: both kinds must
+        // appear among draws, with frequencies favouring the heavy side.
+        let n = 8;
+        let mut p = ProposalMaintainer::with_coverage_prior(n, 0.0, None, StalenessUnit::Versions);
+        p.absorb(&full_delta(1, &vec![1.0; n], &vec![0; n], &vec![0; n]), 0)
+            .unwrap();
+        let scored: Vec<(usize, f64, u64, u64)> =
+            (0..4).map(|i| (i, 9.0, 0, 1)).collect();
+        p.absorb(&sparse_delta(2, n, &scored), 0).unwrap();
+        // prior = 9 ⇒ all effective weights 9: uniform across both trees.
+        let mut rng = Pcg64::seeded(11);
+        let (idx, coefs, _) = p.draw_minibatch(&mut rng, 4000);
+        let unscored_hits = idx.iter().filter(|&&i| i >= 4).count();
+        assert!(
+            (1400..2600).contains(&unscored_hits),
+            "mixture imbalance: {unscored_hits}/4000 unscored"
+        );
+        assert!(coefs.iter().all(|&c| (c - 1.0).abs() < 1e-6));
     }
 
     #[test]

@@ -122,6 +122,10 @@ impl WeightDelta {
 
     /// Overwrite `snap` with this delta's entries.  A `full` delta resizes
     /// the snapshot; an incremental one requires matching sizes.
+    ///
+    /// All validation happens before any mutation: a malformed delta never
+    /// leaves the snapshot half-applied (`ProposalMaintainer::absorb`
+    /// keeps its raw mirror only because this call is all-or-nothing).
     pub fn apply_to(&self, snap: &mut WeightSnapshot) -> Result<()> {
         let n = self.n as usize;
         if self.full {
@@ -132,6 +136,27 @@ impl WeightDelta {
                 "full delta carries {} entries for a table of {n}",
                 self.indices.len()
             );
+        } else {
+            anyhow::ensure!(
+                snap.len() == n,
+                "delta tracks {} entries but snapshot holds {}",
+                n,
+                snap.len()
+            );
+        }
+        anyhow::ensure!(
+            self.indices.len() == self.weights.len()
+                && self.weights.len() == self.stamps.len()
+                && self.stamps.len() == self.param_versions.len(),
+            "delta columns disagree on length"
+        );
+        for &idx in &self.indices {
+            anyhow::ensure!(
+                (idx as usize) < n,
+                "delta index {idx} out of bounds (n = {n})"
+            );
+        }
+        if self.full {
             snap.weights.clear();
             snap.weights.resize(n, 0.0);
             snap.stamps.clear();
@@ -139,21 +164,8 @@ impl WeightDelta {
             snap.param_versions.clear();
             snap.param_versions.resize(n, 0);
         }
-        anyhow::ensure!(
-            snap.len() == n,
-            "delta tracks {} entries but snapshot holds {}",
-            n,
-            snap.len()
-        );
-        anyhow::ensure!(
-            self.indices.len() == self.weights.len()
-                && self.weights.len() == self.stamps.len()
-                && self.stamps.len() == self.param_versions.len(),
-            "delta columns disagree on length"
-        );
         for (k, &idx) in self.indices.iter().enumerate() {
             let i = idx as usize;
-            anyhow::ensure!(i < n, "delta index {i} out of bounds (n = {n})");
             snap.weights[i] = self.weights[k];
             snap.stamps[i] = self.stamps[k];
             snap.param_versions[i] = self.param_versions[k];
@@ -183,6 +195,12 @@ pub struct StoreStats {
     pub delta_fetches: u64,
     /// Entries shipped across all delta fetches (the O(changes) traffic).
     pub delta_entries: u64,
+    /// `push_weights` round-trips avoided by client-side run coalescing
+    /// (peer mode sorts a minibatch's positions and pushes contiguous runs
+    /// in one call).  The store itself cannot observe avoided calls, so
+    /// this is folded in by the driver that owns the clients — raw
+    /// `WeightStore::stats` reads report 0.
+    pub push_calls_saved: u64,
 }
 
 /// The master/worker-facing interface of the database actor.
@@ -208,9 +226,18 @@ pub trait WeightStore: Send + Sync {
     /// Snapshot all weights + staleness metadata (master).
     fn fetch_weights(&self) -> Result<WeightSnapshot>;
 
-    /// Entries written since `seq` plus a new cursor — the master's
-    /// incremental fetch.  `seq == 0` returns the full table.  See the
-    /// module docs for the exact cursor contract.
+    /// Entries written since `seq` plus a new cursor — the incremental
+    /// fetch behind both training topologies.  `seq == 0` returns the full
+    /// table.  See the module docs for the exact cursor contract.
+    ///
+    /// **Cursors are per-consumer state.**  The store keeps no registry of
+    /// readers: each consumer (master, peer, monitor, …) stores the
+    /// `delta.seq` it last absorbed and passes it back on its next call.
+    /// Any number of consumers may interleave fetches from different
+    /// cursors against concurrent writers; each independently converges on
+    /// the same table (entries are absolute values, so re-delivery across
+    /// racing fetches is idempotent).  A cursor from a dead consumer costs
+    /// the store nothing — there is nothing to GC or time out.
     fn fetch_weights_since(&self, seq: u64) -> Result<WeightDelta>;
 
     /// Parameter-server op (ASGD/peer mode, paper §6): apply
@@ -491,6 +518,7 @@ impl WeightStore for MemStore {
             grad_applies: self.grad_applies.load(Ordering::Relaxed),
             delta_fetches: self.delta_fetches.load(Ordering::Relaxed),
             delta_entries: self.delta_entries.load(Ordering::Relaxed),
+            push_calls_saved: 0,
         })
     }
 }
@@ -737,6 +765,36 @@ mod tests {
         let d = s.fetch_weights_since(cursor).unwrap();
         d.apply_to(&mut mirror).unwrap();
         assert_eq!(mirror, s.fetch_weights().unwrap());
+    }
+
+    #[test]
+    fn malformed_delta_leaves_snapshot_untouched() {
+        // apply_to must validate everything before mutating: an
+        // out-of-bounds index errors with the snapshot byte-identical.
+        let s = MemStore::new(4, 1.0);
+        s.push_weights(1, &[3.0], 2).unwrap();
+        let mut snap = s.fetch_weights().unwrap();
+        let before = snap.clone();
+        let bad = WeightDelta {
+            seq: 9,
+            n: 4,
+            full: false,
+            indices: vec![0, 7], // 7 is out of bounds
+            weights: vec![5.0, 6.0],
+            stamps: vec![1, 1],
+            param_versions: vec![1, 1],
+        };
+        assert!(bad.apply_to(&mut snap).is_err());
+        assert_eq!(snap, before);
+        // Same for a full delta: no clear/resize before validation.
+        let mut bad_full = bad.clone();
+        bad_full.full = true;
+        bad_full.indices = vec![0, 9];
+        bad_full.weights = vec![5.0, 6.0];
+        // full requires indices.len() == n; make lengths match n = 2.
+        bad_full.n = 2;
+        assert!(bad_full.apply_to(&mut snap).is_err());
+        assert_eq!(snap, before);
     }
 
     #[test]

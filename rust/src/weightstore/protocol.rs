@@ -283,6 +283,7 @@ impl Response {
                     s.grad_applies,
                     s.delta_fetches,
                     s.delta_entries,
+                    s.push_calls_saved,
                 ] {
                     p.extend(v.to_le_bytes());
                 }
@@ -366,6 +367,7 @@ impl Response {
                 grad_applies: c.u64()?,
                 delta_fetches: c.u64()?,
                 delta_entries: c.u64()?,
+                push_calls_saved: c.u64()?,
             }),
             _ => bail!("unknown response opcode {op:#04x}"),
         };
@@ -480,6 +482,7 @@ mod tests {
             grad_applies: 6,
             delta_fetches: 7,
             delta_entries: 8,
+            push_calls_saved: 9,
         }));
     }
 

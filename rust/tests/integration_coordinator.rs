@@ -295,6 +295,128 @@ fn asgd_peer_modes_train() {
 }
 
 #[test]
+fn asgd_eval_gate_fires_on_unaligned_rounds() {
+    // Rounds advance by n_workers steps, so with n_workers = 3 and
+    // eval_every = 10 the old `total % eval_every == 0` gate never fired.
+    // The boundary-crossing gate must evaluate once per crossed boundary.
+    use issgd::coordinator::peer::run_asgd_sim;
+    let e = engine();
+    let mut cfg = base_cfg();
+    cfg.trainer = TrainerKind::UniformSgd;
+    cfg.steps = 30;
+    cfg.n_workers = 3;
+    cfg.eval_every = 10;
+    let out = run_asgd_sim(&cfg, &e).unwrap();
+    let steps: Vec<u64> = out.rec.get("eval_train_err").iter().map(|s| s.step).collect();
+    assert_eq!(
+        steps,
+        vec![12, 21, 30],
+        "evaluations must fire at the first round end past each boundary"
+    );
+}
+
+#[test]
+fn peer_weight_pushes_are_coalesced() {
+    // Every sampled example's weight still lands, but sorted contiguous
+    // runs share one push call / write-sequence bump.
+    use issgd::coordinator::peer::run_asgd_sim;
+    let e = engine();
+    let mut cfg = base_cfg();
+    cfg.trainer = TrainerKind::Issgd;
+    cfg.steps = 40;
+    cfg.n_workers = 2;
+    cfg.param_push_every = 4;
+    let out = run_asgd_sim(&cfg, &e).unwrap();
+    let st = out.store_stats;
+    assert!(st.push_calls_saved > 0, "no runs coalesced across 40 IS steps");
+    // Conservation: calls made + calls saved == entries written.
+    assert_eq!(st.weight_pushes + st.push_calls_saved, st.weights_written);
+}
+
+#[test]
+fn peer_proposal_matches_scratch_rebuild() {
+    // The shared delta-synced maintainer must hold exactly the proposal
+    // the old peer code rebuilt from a full snapshot every step — and
+    // PeerState::step must never fetch a snapshot to get there.
+    use issgd::config::StalenessUnit;
+    use issgd::coordinator::{PeerState, ProposalMaintainer};
+    use issgd::sampler::Smoothing;
+    use std::sync::Mutex;
+
+    let e = engine();
+    let mut cfg = base_cfg();
+    cfg.trainer = TrainerKind::Issgd;
+    cfg.n_workers = 2;
+    let store: Arc<MemStore> = Arc::new(MemStore::new(Master::store_size(&cfg), cfg.init_weight));
+    let store_dyn: Arc<dyn WeightStore> = store.clone();
+    let master = Master::new(cfg.clone(), &e, store_dyn.clone()).unwrap();
+    store_dyn.push_params(1, master.params.to_bytes()).unwrap();
+    let snapshots_before = store.stats().unwrap().snapshot_fetches;
+
+    let prop = Arc::new(Mutex::new(ProposalMaintainer::with_coverage_prior(
+        Master::store_size(&cfg),
+        cfg.smoothing,
+        None,
+        StalenessUnit::Versions,
+    )));
+    let mut peers: Vec<PeerState> = (0..cfg.n_workers)
+        .map(|id| {
+            PeerState::new(
+                id,
+                e.manifest(),
+                Arc::clone(&master.data),
+                Arc::new(master.train_idx.clone()),
+                store_dyn.clone(),
+                Some(Arc::clone(&prop)),
+                cfg.lr,
+                cfg.seed,
+            )
+        })
+        .collect();
+    for _ in 0..8 {
+        for p in &mut peers {
+            p.refresh_params(&e).unwrap();
+            p.step(&e).unwrap();
+        }
+    }
+    let st = store.stats().unwrap();
+    assert_eq!(
+        st.snapshot_fetches, snapshots_before,
+        "peer steps must sync via deltas, never full snapshots"
+    );
+    assert!(st.delta_fetches > 0, "peers never fetched a delta");
+
+    let mut p = prop.lock().unwrap();
+    // Drain the writes of the final steps, then compare against the old
+    // O(N) rebuild: smoothed scored weights, scored-mean prior elsewhere.
+    let d = store.fetch_weights_since(p.cursor()).unwrap();
+    p.absorb(&d, 0).unwrap();
+    let snap = store.fetch_weights().unwrap();
+    let smooth = Smoothing::new(cfg.smoothing);
+    let scored: Vec<f64> = snap
+        .param_versions
+        .iter()
+        .zip(&snap.weights)
+        .filter(|(&v, _)| v > 0)
+        .map(|(_, &w)| w)
+        .collect();
+    assert!(!scored.is_empty(), "peers never scored anything");
+    let prior = scored.iter().sum::<f64>() / scored.len() as f64;
+    for i in 0..snap.len() {
+        let expect = smooth.apply(if snap.param_versions[i] > 0 {
+            snap.weights[i]
+        } else {
+            prior
+        });
+        assert!(
+            (p.effective_weight(i) - expect).abs() < 1e-6 * expect.max(1.0),
+            "entry {i}: maintained {} vs scratch {expect}",
+            p.effective_weight(i)
+        );
+    }
+}
+
+#[test]
 fn adaptive_smoothing_tracks_entropy_target() {
     let e = engine();
     let mut cfg = base_cfg();

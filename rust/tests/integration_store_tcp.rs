@@ -89,6 +89,45 @@ fn delta_fetch_over_tcp_tracks_snapshot() {
 }
 
 #[test]
+fn two_tcp_consumers_with_independent_cursors_converge() {
+    // The cursor is client-side state (see WeightStore::fetch_weights_since):
+    // two connections advancing private cursors at different cadences must
+    // each reconstruct the same table.
+    use issgd::weightstore::WeightSnapshot;
+    let (addr, handle) = spawn_store(50);
+    {
+        let c1 = Client::connect(&addr).unwrap();
+        let c2 = Client::connect(&addr).unwrap();
+        let mut m1 = WeightSnapshot::default();
+        let mut m2 = WeightSnapshot::default();
+        let (mut s1, mut s2) = (0u64, 0u64);
+        for round in 0..12u64 {
+            c1.push_weights((round as usize * 3) % 40, &[round as f32, 1.0], round + 1)
+                .unwrap();
+            if round % 2 == 0 {
+                let d = c1.fetch_weights_since(s1).unwrap();
+                d.apply_to(&mut m1).unwrap();
+                s1 = d.seq;
+            }
+            if round % 3 == 0 {
+                let d = c2.fetch_weights_since(s2).unwrap();
+                d.apply_to(&mut m2).unwrap();
+                s2 = d.seq;
+            }
+        }
+        let d = c1.fetch_weights_since(s1).unwrap();
+        d.apply_to(&mut m1).unwrap();
+        let d = c2.fetch_weights_since(s2).unwrap();
+        d.apply_to(&mut m2).unwrap();
+        let truth = c1.fetch_weights().unwrap();
+        assert_eq!(m1, truth);
+        assert_eq!(m2, truth);
+        c1.shutdown_server().unwrap();
+    }
+    handle.join().unwrap();
+}
+
+#[test]
 fn server_side_errors_propagate() {
     let (addr, handle) = spawn_store(4);
     {

@@ -300,6 +300,66 @@ fn delta_replay_survives_concurrent_pushers() {
 }
 
 #[test]
+fn multi_consumer_cursors_reconstruct_identically() {
+    // ROADMAP item: several masters/consumers sharing one store.  Cursors
+    // are client-side state, so any number of consumers may interleave
+    // `fetch_weights_since` calls at different cadences — each must
+    // independently converge on the same table.
+    use issgd::config::StalenessUnit;
+    use issgd::coordinator::ProposalMaintainer;
+    prop("multi-consumer", 8, |rng| {
+        let n = 40 + rng.next_below(160) as usize;
+        let store = MemStore::new(n, 1.0);
+        // Three consumers: a plain snapshot mirror, a master-mode
+        // maintainer, and a peer-mode (coverage-prior) maintainer.
+        let mut mirror = WeightSnapshot::default();
+        let mut mirror_cursor = 0u64;
+        let mut pa = ProposalMaintainer::new(n, 0.5, None, StalenessUnit::Versions);
+        let mut pb =
+            ProposalMaintainer::with_coverage_prior(n, 0.5, None, StalenessUnit::Versions);
+        for round in 0..80u64 {
+            let start = rng.next_below(n as u64) as usize;
+            let len = 1 + rng.next_below((n - start).min(12) as u64) as usize;
+            let vals: Vec<f32> = (0..len).map(|_| rng.next_f32().abs()).collect();
+            store.push_weights(start, &vals, round + 1).unwrap();
+            if round % 2 == 0 {
+                let d = store.fetch_weights_since(mirror_cursor).unwrap();
+                d.apply_to(&mut mirror).unwrap();
+                mirror_cursor = d.seq;
+            }
+            if round % 3 == 0 {
+                let d = store.fetch_weights_since(pa.cursor()).unwrap();
+                pa.absorb(&d, 0).unwrap();
+            }
+            if round % 5 == 0 {
+                let d = store.fetch_weights_since(pb.cursor()).unwrap();
+                pb.absorb(&d, 0).unwrap();
+            }
+        }
+        // Drain each cursor; every consumer lands on the same table.
+        let truth = store.fetch_weights().unwrap();
+        let d = store.fetch_weights_since(mirror_cursor).unwrap();
+        d.apply_to(&mut mirror).unwrap();
+        let d = store.fetch_weights_since(pa.cursor()).unwrap();
+        pa.absorb(&d, 0).unwrap();
+        let d = store.fetch_weights_since(pb.cursor()).unwrap();
+        pb.absorb(&d, 0).unwrap();
+        assert_eq!(mirror, truth);
+        assert_eq!(*pa.raw(), truth);
+        assert_eq!(*pb.raw(), truth);
+        // The master-mode sampler must equal its from-scratch rebuild.
+        for i in 0..n {
+            let expect = truth.weights[i] + 0.5;
+            assert!(
+                (pa.sampler().weight(i) - expect).abs() < 1e-9,
+                "consumer A weight {i}: {} vs {expect}",
+                pa.sampler().weight(i)
+            );
+        }
+    });
+}
+
+#[test]
 fn protocol_roundtrips_random_deltas() {
     prop("delta-protocol-roundtrip", 40, |rng| {
         let k = rng.next_below(60) as usize;
