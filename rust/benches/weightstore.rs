@@ -6,6 +6,7 @@ use std::sync::Arc;
 
 use issgd::bench::Harness;
 use issgd::weightstore::client::Client;
+use issgd::weightstore::faulty::{FaultSpec, FaultyStore};
 use issgd::weightstore::protocol::Response;
 use issgd::weightstore::server::Server;
 use issgd::weightstore::{MemStore, WeightStore};
@@ -95,6 +96,31 @@ fn main() {
     assert!(
         snap_bytes >= 10 * delta_bytes,
         "delta fetch must move >=10x fewer bytes than a snapshot at 1% churn"
+    );
+
+    // -- FaultyStore decorator overhead ------------------------------------
+    //
+    // The chaos decorator sits on the hot path in fault-injection tests;
+    // with a quiet spec it must be a near-free passthrough (one atomic
+    // tick + one branch per op, no RNG draw).
+    let plain = MemStore::new(n, 1.0);
+    let mut v = 0u64;
+    let direct = h.bench_throughput("memstore/plain_push/256", 256, || {
+        v += 1;
+        plain.push_weights(0, &weights, v).unwrap();
+    });
+    let wrapped = FaultyStore::new(
+        Arc::new(MemStore::new(n, 1.0)) as Arc<dyn WeightStore>,
+        FaultSpec::quiet(1),
+    );
+    let mut v = 0u64;
+    let decorated = h.bench_throughput("faulty/quiet_push/256", 256, || {
+        v += 1;
+        wrapped.push_weights(0, &weights, v).unwrap();
+    });
+    println!(
+        "weightstore/faulty_overhead: plain {:?} vs quiet-decorated {:?}",
+        direct.median, decorated.median
     );
 
     h.finish();

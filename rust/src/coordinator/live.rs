@@ -5,7 +5,8 @@
 //! Every thread compiles its own [`Engine`] (PJRT client handles are not
 //! `Send`), mirroring the paper's one-GPU-per-actor topology.  The master
 //! never waits on workers ("fire and forget", §4.2) — relaxed mode only;
-//! exact mode is a simulation-side tool (`sim.rs`).
+//! exact mode is a simulation-side tool (`sim.rs`).  The peer/ASGD
+//! counterpart of this mode lives in [`super::peer_live`].
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;

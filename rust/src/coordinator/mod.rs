@@ -5,23 +5,38 @@
 //! * [`master::Master`] — runs ISSGD / uniform SGD against a weight store.
 //! * [`worker::WorkerState`] — scores per-example gradient norms and keeps
 //!   the store fresh.
-//! * the *database* actor lives in [`crate::weightstore`].
+//! * [`peer::PeerState`] — a §6 peer: gradient contributions + co-computed
+//!   importance weights against a parameter server (no master/worker
+//!   split).
+//! * the *database* actor lives in [`crate::weightstore`]
+//!   ([`crate::weightstore::faulty::FaultyStore`] is its sanctioned
+//!   chaos decorator).
 //!
-//! Orchestration modes:
+//! Orchestration modes — master/worker topology:
 //! * [`sim::run_sim`] — deterministic single-thread interleave (the
 //!   experiment drivers' workhorse; bit-reproducible staleness).
 //! * [`live::run_live`] — real threads, real clocks, optional TCP store
 //!   (the paper's deployment shape).
+//!
+//! Orchestration modes — peer/ASGD topology (the same triad):
+//! * [`peer::run_asgd_sim`] — deterministic round-robin, one shared
+//!   proposal maintainer.
+//! * [`peer_live::run_peer_live`] — one OS thread per peer, per-peer
+//!   maintainers and delta cursors (real cursor divergence); its
+//!   `lockstep` option pins the store-op order for bit-reproducible
+//!   chaos runs and live-vs-sim equivalence checks.
 
 pub mod live;
 pub mod master;
 pub mod peer;
+pub mod peer_live;
 pub mod proposal;
 pub mod sim;
 pub mod worker;
 
 pub use live::{run_live, LiveOptions};
-pub use peer::{run_asgd_sim, AsgdOutcome, PeerState};
+pub use peer::{run_asgd_sim, AsgdOutcome, PeerState, PeerStats};
+pub use peer_live::{run_peer_live, PeerLiveOptions};
 pub use master::{EvalSplit, Master};
 pub use proposal::ProposalMaintainer;
 pub use sim::{run_sim, run_sim_with_engine, SimOutcome};

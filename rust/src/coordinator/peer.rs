@@ -46,7 +46,9 @@
 //! `run_asgd_sim` drives the peers in a deterministic round-robin with a
 //! configurable fetch cadence, so gradients are genuinely stale (a peer
 //! computes on params that other peers have since updated) while runs
-//! remain reproducible.
+//! remain reproducible.  The same [`PeerState`] also powers the live
+//! threaded topology (`super::peer_live::run_peer_live`), where every peer
+//! is a real OS thread with its *own* maintainer and delta cursor.
 
 use std::sync::{Arc, Mutex};
 
@@ -79,12 +81,26 @@ pub struct PeerState {
     rng: Pcg64,
     batch: BatchBuilder,
     coef_buf: Vec<f32>,
-    /// Scratch for sorting/coalescing weight write-backs.
-    push_buf: Vec<(usize, f32)>,
+    /// Scratch for sorting/coalescing weight write-backs
+    /// (position, weight, param version at emission).
+    push_buf: Vec<(usize, f32, u64)>,
     run_buf: Vec<f32>,
+    /// Scratch for staging a minibatch's weight entries (reused so the
+    /// steady-state step allocates nothing).
+    entry_buf: Vec<(usize, f32)>,
+    /// Weight entries whose push failed transiently, queued for retry on
+    /// the next step (merged newest-wins, so a stale retry can never
+    /// overwrite a fresher value).  Each entry keeps the param version it
+    /// was *measured* under, so a late retry never masquerades as fresh
+    /// to the §B.1 staleness filter.  Bounded by the table size: the
+    /// merge dedups positions every step.
+    pending: Vec<(usize, f32, u64)>,
     pub steps_done: u64,
     /// `push_weights` round-trips avoided by run coalescing.
     pub push_calls_saved: u64,
+    /// Transient store failures survived (monitoring, mirrors
+    /// `WorkerState::store_errors`).
+    pub store_errors: u64,
 }
 
 impl PeerState {
@@ -113,9 +129,17 @@ impl PeerState {
             coef_buf: Vec::new(),
             push_buf: Vec::new(),
             run_buf: Vec::new(),
+            entry_buf: Vec::new(),
+            pending: Vec::new(),
             steps_done: 0,
             push_calls_saved: 0,
+            store_errors: 0,
         }
+    }
+
+    /// Weight entries queued for retry after transient push failures.
+    pub fn pending_pushes(&self) -> usize {
+        self.pending.len()
     }
 
     /// Whether this peer importance-samples (ISSGD+ASGD) or draws
@@ -170,56 +194,128 @@ impl PeerState {
         self.store.apply_grad(self.lr, &out.grad_flat)?;
         // Share the importance weights that came for free (§6) — only for
         // the examples this minibatch touched, like the worker scoring path
-        // but with zero extra compute.  Runs of contiguous positions are
-        // pushed in one call: a minibatch used to cost m round-trips and m
-        // write-sequence bumps; coalescing pays one per run.
-        self.push_buf.clear();
+        // but with zero extra compute.  `entry_buf` is moved out and back
+        // so the borrow checker allows the `&mut self` flush call without
+        // a per-step allocation.
+        let mut entries = std::mem::take(&mut self.entry_buf);
+        entries.clear();
         for (slot, &pos) in positions.iter().enumerate() {
             let sq = out.sqnorms[slot].max(0.0);
             if sq > 0.0 {
-                self.push_buf.push((pos, sq.sqrt()));
+                entries.push((pos, sq.sqrt()));
             }
         }
-        // Stable sort keeps slot order within a position, so after dedup
-        // the surviving value is the last slot's — the same value the old
-        // one-push-per-example loop left behind.
+        self.flush_weight_pushes(&entries);
+        self.entry_buf = entries;
+        self.steps_done += 1;
+        Ok(Some(out.loss))
+    }
+
+    /// Coalesced, fault-tolerant weight write-back.  Retry-queued entries
+    /// from earlier failed pushes are merged in first (newest value wins on
+    /// a position conflict), then runs of contiguous positions are pushed
+    /// as single `push_weights` calls: a minibatch used to cost m
+    /// round-trips and m write-sequence bumps; coalescing pays one per run.
+    ///
+    /// A transient push failure (§4.2 fire-and-forget) is counted in
+    /// `store_errors` and the whole run re-queued in `pending` — values are
+    /// absolute, so a late retry is idempotent, and the newest-wins merge
+    /// guarantees a stale retry can never clobber a fresher write from
+    /// this peer.  No weight update is lost or double-applied.  Retried
+    /// entries keep the param version they were *measured* under (runs
+    /// split on version boundaries), so the §B.1 staleness filter sees a
+    /// late delivery as exactly as old as it is.
+    pub fn flush_weight_pushes(&mut self, entries: &[(usize, f32)]) {
+        let version = self.version;
+        self.push_buf.clear();
+        // Pending (older) first, fresh entries after: the stable sort below
+        // keeps that order within a position, so dedup keeps the freshest.
+        self.push_buf.append(&mut self.pending);
+        self.push_buf
+            .extend(entries.iter().map(|&(pos, w)| (pos, w, version)));
+        // Stable sort keeps insertion order within a position, so after
+        // dedup the surviving value is the last-inserted — the same value
+        // the old one-push-per-example loop left behind.
         self.push_buf.sort_by_key(|e| e.0);
         self.push_buf.dedup_by(|next, kept| {
             if next.0 == kept.0 {
                 kept.1 = next.1;
+                kept.2 = next.2;
                 true
             } else {
                 false
             }
         });
-        let entries = self.push_buf.len();
-        let mut calls = 0u64;
+        let total = self.push_buf.len();
         let mut i = 0;
-        while i < entries {
-            let start = self.push_buf[i].0;
+        while i < total {
+            let (start, first_w, run_version) = self.push_buf[i];
             self.run_buf.clear();
-            self.run_buf.push(self.push_buf[i].1);
+            self.run_buf.push(first_w);
             let mut j = i + 1;
-            while j < entries && self.push_buf[j].0 == self.push_buf[j - 1].0 + 1 {
+            while j < total
+                && self.push_buf[j].0 == self.push_buf[j - 1].0 + 1
+                && self.push_buf[j].2 == run_version
+            {
                 self.run_buf.push(self.push_buf[j].1);
                 j += 1;
             }
-            self.store.push_weights(start, &self.run_buf, self.version)?;
-            calls += 1;
+            match self.store.push_weights(start, &self.run_buf, run_version) {
+                Ok(()) => {
+                    // One call covered the whole run.
+                    self.push_calls_saved += self.run_buf.len() as u64 - 1;
+                }
+                Err(e) => {
+                    self.store_errors += 1;
+                    crate::log_warn!(
+                        "peer",
+                        "peer-{} weight push failed (run queued for retry): {e}",
+                        self.id
+                    );
+                    for (k, &w) in self.run_buf.iter().enumerate() {
+                        self.pending.push((start + k, w, run_version));
+                    }
+                }
+            }
             i = j;
         }
-        self.push_calls_saved += entries as u64 - calls;
-        self.steps_done += 1;
-        Ok(Some(out.loss))
     }
 }
 
-/// Outcome of an ASGD/peer simulation (mirrors `SimOutcome`).
+/// Per-peer shutdown counters (shared by the sim and the live threaded
+/// topology — `coordinator::peer_live`).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct PeerStats {
+    pub id: usize,
+    /// Gradient contributions this peer made.
+    pub steps: u64,
+    /// `push_weights` round-trips avoided by run coalescing.
+    pub push_calls_saved: u64,
+    /// Transient store failures survived.
+    pub store_errors: u64,
+    /// Delta cursor of the peer's (or shared) maintainer after the final
+    /// drain (0 = uniform peer, no maintainer).
+    pub final_cursor: u64,
+    /// How far the cursor trailed the store's write sequence when the peer
+    /// stopped stepping (0 = fully synced; the cursor-divergence stat).
+    pub cursor_lag: u64,
+}
+
+/// Outcome of an ASGD/peer run (mirrors `SimOutcome`; produced by both
+/// [`run_asgd_sim`] and `peer_live::run_peer_live`).
 pub struct AsgdOutcome {
     pub rec: RunRecorder,
     pub final_err: (f64, f64, f64),
     pub total_peer_steps: u64,
     pub store_stats: crate::weightstore::StoreStats,
+    /// Per-peer counters at shutdown.
+    pub peers: Vec<PeerStats>,
+    /// ESS/N of the final drained proposal (1.0 for uniform peers).
+    pub final_ess: f64,
+    /// Effective sampling weight of every entry in the final drained
+    /// proposal (empty for uniform peers) — the live-vs-sim equivalence
+    /// probe.
+    pub final_weights: Vec<f64>,
 }
 
 /// Deterministic ASGD / ISSGD+ASGD simulation.
@@ -250,15 +346,16 @@ pub fn run_asgd_sim(cfg: &RunConfig, engine: &Engine) -> Result<AsgdOutcome> {
 
     let manifest = engine.manifest();
     let use_is = cfg.trainer == TrainerKind::Issgd;
-    // One shared maintainer for all in-process peers.  No staleness
-    // threshold: peer mode relies on the coverage prior, not §B.1
-    // filtering (matching the original per-step rebuild semantics).
+    // One shared maintainer for all in-process peers.  The staleness
+    // threshold composes with the coverage prior (filtered-out stale
+    // entries fall back to the prior mass — see `proposal`'s module docs);
+    // `None` keeps the original prior-only semantics.
     let proposal = if use_is {
         Some(Arc::new(Mutex::new(ProposalMaintainer::with_coverage_prior(
             Master::store_size(cfg),
             cfg.smoothing,
-            None,
-            StalenessUnit::Versions,
+            cfg.staleness_threshold,
+            cfg.staleness_unit,
         ))))
     } else {
         None
@@ -323,6 +420,39 @@ pub fn run_asgd_sim(cfg: &RunConfig, engine: &Engine) -> Result<AsgdOutcome> {
         eval_master.evaluate(engine, EvalSplit::Valid)?.1,
         eval_master.evaluate(engine, EvalSplit::Test)?.1,
     );
+    // Drain the shared maintainer so the reported proposal reflects every
+    // write (the live-vs-sim equivalence probe reads this).
+    let mut final_ess = 1.0;
+    let mut final_weights = Vec::new();
+    let mut final_cursor = 0u64;
+    let mut cursor_lag = 0u64;
+    if let Some(shared) = &proposal {
+        let mut prop = shared.lock().unwrap();
+        let now = match prop.unit() {
+            StalenessUnit::Nanos => store_dyn.now()?,
+            StalenessUnit::Versions => store_dyn.params_version()?,
+        };
+        let before = prop.cursor();
+        let delta = store_dyn.fetch_weights_since(before)?;
+        cursor_lag = delta.seq.saturating_sub(before);
+        prop.absorb(&delta, now)?;
+        final_cursor = prop.cursor();
+        final_ess = prop.ess_ratio();
+        final_weights = (0..prop.len()).map(|i| prop.effective_weight(i)).collect();
+    }
+    let peers_stats: Vec<PeerStats> = peers
+        .iter()
+        .map(|p| PeerStats {
+            id: p.id,
+            steps: p.steps_done,
+            push_calls_saved: p.push_calls_saved,
+            store_errors: p.store_errors,
+            // The sim shares one maintainer, so every peer reports the
+            // shared drained cursor.
+            final_cursor,
+            cursor_lag,
+        })
+        .collect();
     let mut store_stats = store.stats()?;
     store_stats.push_calls_saved = peers.iter().map(|p| p.push_calls_saved).sum();
     Ok(AsgdOutcome {
@@ -330,5 +460,8 @@ pub fn run_asgd_sim(cfg: &RunConfig, engine: &Engine) -> Result<AsgdOutcome> {
         final_err,
         total_peer_steps: total_steps,
         store_stats,
+        peers: peers_stats,
+        final_ess,
+        final_weights,
     })
 }

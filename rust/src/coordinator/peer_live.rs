@@ -1,0 +1,523 @@
+//! Live peer/ASGD cluster: every peer is a real OS thread — the §6
+//! topology under genuine concurrency, mirroring [`super::live::run_live`]
+//! for the master/worker topology.
+//!
+//! Differences from [`super::peer::run_asgd_sim`]:
+//!
+//! * Each peer owns its engine (PJRT client handles are not `Send`), its
+//!   **own** coverage-prior [`ProposalMaintainer`], and its **own** delta
+//!   cursor against the shared [`WeightStore`] — the store's cursor
+//!   contract is per-consumer, so N peers mean N independently-advancing
+//!   cursors that genuinely diverge under load.  (The sim shares one
+//!   lock-guarded maintainer; here sharing would serialize the threads and
+//!   hide exactly the divergence this mode exists to exercise.)
+//! * Transient store failures never kill a peer thread (§4.2
+//!   fire-and-forget): gradient pushes are retried next loop after an
+//!   exponential backoff, weight pushes ride `PeerState`'s pending-retry
+//!   queue, and everything is counted in the per-peer
+//!   [`PeerStats`] of the returned [`AsgdOutcome`].
+//! * Shutdown is stop-flag + reap: the driver joins every thread, logs
+//!   panics/errors without failing the run, then *drains* each surviving
+//!   maintainer's cursor so the outcome reports true cursor lag and a
+//!   fully-synced final proposal.
+//!
+//! # Determinism: lockstep mode
+//!
+//! [`PeerLiveOptions::lockstep`] serializes the peers on a rotating turn
+//! token (threads and their store connections stay real — only the store
+//! *op order* is pinned to round-robin).  Given a fixed seed, a run is
+//! then bit-reproducible — including any injected fault schedule from a
+//! [`crate::weightstore::faulty::FaultyStore`], whose seeded decisions
+//! depend only on op order — and its final proposal matches
+//! `run_asgd_sim`'s, which is the live-vs-sim equivalence check in the
+//! integration tests.  Free-running mode (the default) is the production
+//! shape: wall-clock staleness, racy cursors, nondeterministic schedules.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::Result;
+
+use crate::config::{RunConfig, StalenessUnit, TrainerKind};
+use crate::metrics::RunRecorder;
+use crate::model::ParamSet;
+use crate::runtime::{artifacts_dir, Engine};
+use crate::weightstore::{MemStore, WeightStore};
+use crate::{log_info, log_warn};
+
+use super::master::{EvalSplit, Master};
+use super::peer::{AsgdOutcome, PeerState, PeerStats};
+use super::proposal::ProposalMaintainer;
+
+/// Options specific to live peer execution.
+#[derive(Clone, Default)]
+pub struct PeerLiveOptions {
+    /// Inject a pre-built store (tests wrap a [`MemStore`] in a
+    /// `FaultyStore`); it must track `Master::store_size(cfg)` weights.
+    pub store: Option<Arc<dyn WeightStore>>,
+    /// Connect every peer to a remote TCP store instead (mutually
+    /// exclusive with `store`).
+    pub store_addr: Option<String>,
+    /// Serialize peers on a rotating turn token: threads stay real, store
+    /// op order becomes deterministic round-robin (see module docs).
+    pub lockstep: bool,
+    /// Pause between free-running peer steps (keeps small hosts
+    /// responsive; ignored in lockstep mode).
+    pub throttle: Option<std::time::Duration>,
+    /// Abort the run (stop flag + reap) after this much wall time — a
+    /// liveness backstop for chaos tests against misbehaving stores.
+    pub deadline: Option<std::time::Duration>,
+}
+
+const BACKOFF_MIN: std::time::Duration = std::time::Duration::from_millis(1);
+const BACKOFF_MAX: std::time::Duration = std::time::Duration::from_millis(500);
+/// Driver-side drain attempts per peer (each retry re-rolls any injected
+/// fault, so persistent failure means a genuinely dead store).
+const DRAIN_RETRIES: usize = 64;
+
+/// What a peer thread hands back to the driver.
+struct PeerReport {
+    stats: PeerStats,
+    /// (global step index, minibatch loss) — merged into the recorder in
+    /// index order, so lockstep traces are comparable to the sim's.
+    losses: Vec<(u64, f64)>,
+    /// The peer's maintainer, for the driver-side final drain (None for
+    /// uniform/plain-ASGD peers).
+    proposal: Option<ProposalMaintainer>,
+}
+
+/// Rotating turn token for lockstep mode.
+struct Turn {
+    state: Mutex<u64>,
+    cv: Condvar,
+}
+
+impl Turn {
+    fn new() -> Arc<Turn> {
+        Arc::new(Turn {
+            state: Mutex::new(0),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Block until it is `id`'s turn (of `n`) or `stop` flips.  Returns
+    /// false when stopping.
+    fn acquire(&self, id: usize, n: usize, stop: &AtomicBool) -> bool {
+        let mut cur = self.state.lock().unwrap();
+        loop {
+            if stop.load(Ordering::Relaxed) {
+                return false;
+            }
+            if (*cur % n as u64) as usize == id {
+                return true;
+            }
+            // Timed wait so a stop request is honoured even if a notify
+            // was missed.
+            let (guard, _) = self
+                .cv
+                .wait_timeout(cur, std::time::Duration::from_millis(10))
+                .unwrap();
+            cur = guard;
+        }
+    }
+
+    /// Pass the token to the next peer.
+    fn advance(&self) {
+        let mut cur = self.state.lock().unwrap();
+        *cur += 1;
+        drop(cur);
+        self.cv.notify_all();
+    }
+}
+
+/// Run a live threaded peer/ASGD cluster for `cfg`.
+///
+/// `cfg.steps` counts total gradient contributions across peers (matching
+/// [`super::peer::run_asgd_sim`]); in free-running mode the total may
+/// overshoot by up to `n_workers − 1` contributions that were already in
+/// flight when the budget filled.  Periodic evaluation (`cfg.eval_every`)
+/// runs on the driver thread against the server's current parameters;
+/// its sample values are wall-clock racy in free-running mode — set
+/// `eval_every = 0` for bit-reproducible lockstep runs.
+pub fn run_peer_live(cfg: &RunConfig, opts: &PeerLiveOptions) -> Result<AsgdOutcome> {
+    cfg.validate()?;
+    anyhow::ensure!(
+        opts.store.is_none() || opts.store_addr.is_none(),
+        "pass either an injected store or a store address, not both"
+    );
+    let n_weights = Master::store_size(cfg);
+    let mem: Option<Arc<MemStore>> = if opts.store.is_none() && opts.store_addr.is_none() {
+        Some(Arc::new(MemStore::new(n_weights, cfg.init_weight)))
+    } else {
+        None
+    };
+    let connect = |role: &str| -> Result<Arc<dyn WeightStore>> {
+        Ok(match (&opts.store_addr, &opts.store, &mem) {
+            (Some(addr), _, _) => {
+                let c = crate::weightstore::client::Client::connect(addr)?;
+                log_info!(role, "connected to store at {addr}");
+                Arc::new(c)
+            }
+            (None, Some(store), _) => Arc::clone(store),
+            (None, None, Some(mem)) => mem.clone() as Arc<dyn WeightStore>,
+            _ => unreachable!(),
+        })
+    };
+
+    let dims_dir = artifacts_dir(&cfg.model);
+    // Driver engine first — fail fast before spawning anything.  The
+    // driver's Master never trains; it provides data/split/eval plumbing.
+    let driver_engine = Engine::load(&dims_dir)?;
+    let driver_store = connect("peer-driver")?;
+    let mut eval_master = Master::new(cfg.clone(), &driver_engine, driver_store.clone())?;
+    // Publish initial parameters (version 1) so peers can start.
+    driver_store.push_params(1, eval_master.params.to_bytes())?;
+
+    let use_is = cfg.trainer == TrainerKind::Issgd;
+    let n_peers = cfg.n_workers;
+    let stop = Arc::new(AtomicBool::new(false));
+    let total = Arc::new(AtomicU64::new(0));
+    let turn = Turn::new();
+
+    let mut handles = Vec::new();
+    for id in 0..n_peers {
+        let stop = Arc::clone(&stop);
+        let total = Arc::clone(&total);
+        let turn = Arc::clone(&turn);
+        let data = Arc::clone(&eval_master.data);
+        let train_idx = Arc::new(eval_master.train_idx.clone());
+        let store = connect(&format!("peer-{id}"))?;
+        let dir = dims_dir.clone();
+        let cfg = cfg.clone();
+        let lockstep = opts.lockstep;
+        let throttle = opts.throttle;
+        handles.push(std::thread::spawn(move || -> Result<PeerReport> {
+            let engine = Engine::load_entries(&dir, &["peer_step"])?;
+            // Per-peer maintainer + per-peer cursor: cursor divergence
+            // under real concurrency is the point of this mode.
+            let proposal = if use_is {
+                Some(Arc::new(Mutex::new(ProposalMaintainer::with_coverage_prior(
+                    n_weights,
+                    cfg.smoothing,
+                    cfg.staleness_threshold,
+                    cfg.staleness_unit,
+                ))))
+            } else {
+                None
+            };
+            let mut peer = PeerState::new(
+                id,
+                engine.manifest(),
+                data,
+                train_idx,
+                Arc::clone(&store),
+                proposal.clone(),
+                cfg.lr,
+                cfg.seed,
+            );
+            let mut losses = Vec::new();
+            let mut backoff = BACKOFF_MIN;
+            loop {
+                if lockstep {
+                    if !turn.acquire(id, n_peers, &stop) {
+                        break;
+                    }
+                    if total.load(Ordering::SeqCst) >= cfg.steps {
+                        // Pass the token so every waiter gets its exit turn.
+                        turn.advance();
+                        break;
+                    }
+                } else if stop.load(Ordering::Relaxed)
+                    || total.load(Ordering::SeqCst) >= cfg.steps
+                {
+                    break;
+                }
+                // Fetch cadence: stale in between (the ASGD staleness
+                // source), exactly as in the sim.
+                let step_result = (|| -> Result<Option<f32>> {
+                    if peer.steps_done % cfg.param_push_every == 0 {
+                        peer.refresh_params(&engine)?;
+                    }
+                    peer.step(&engine)
+                })();
+                match step_result {
+                    Ok(Some(loss)) => {
+                        let idx = total.fetch_add(1, Ordering::SeqCst);
+                        losses.push((idx, loss as f64));
+                        backoff = BACKOFF_MIN;
+                        if !lockstep {
+                            if let Some(d) = throttle {
+                                std::thread::sleep(d);
+                            }
+                        }
+                    }
+                    Ok(None) => {
+                        // No parameters yet (a transient fetch failure ate
+                        // the initial publish) — retry next turn/loop.
+                        if !lockstep {
+                            std::thread::sleep(std::time::Duration::from_millis(1));
+                        }
+                    }
+                    Err(e) => {
+                        // Transient store failure: §4.2 fire-and-forget —
+                        // degrade, count, back off, never die.  Engine
+                        // errors inside `peer_step` are deterministic and
+                        // would loop forever, but they can only originate
+                        // from the store-fed inputs here, so the blanket
+                        // retry stays safe: the next attempt re-fetches.
+                        peer.store_errors += 1;
+                        log_warn!("peer", "peer-{id} step failed (retrying): {e}");
+                        if !lockstep {
+                            let mut waited = std::time::Duration::ZERO;
+                            while waited < backoff && !stop.load(Ordering::Relaxed) {
+                                let slice =
+                                    (backoff - waited).min(std::time::Duration::from_millis(10));
+                                std::thread::sleep(slice);
+                                waited += slice;
+                            }
+                            backoff = (backoff * 2).min(BACKOFF_MAX);
+                        }
+                    }
+                }
+                if lockstep {
+                    turn.advance();
+                }
+            }
+            let stats = PeerStats {
+                id,
+                steps: peer.steps_done,
+                push_calls_saved: peer.push_calls_saved,
+                store_errors: peer.store_errors,
+                final_cursor: 0,
+                cursor_lag: 0,
+            };
+            drop(peer);
+            let proposal = proposal.and_then(|shared| {
+                Arc::try_unwrap(shared).ok().map(|m| m.into_inner().unwrap())
+            });
+            Ok(PeerReport {
+                stats,
+                losses,
+                proposal,
+            })
+        }));
+    }
+    log_info!(
+        "peer-driver",
+        "live peer cluster up: {} peers, {} total steps{}",
+        n_peers,
+        cfg.steps,
+        if opts.lockstep { " (lockstep)" } else { "" }
+    );
+
+    // Driver loop: watch progress, run boundary-crossing evaluations, and
+    // enforce the deadline.  Stamps use the eval boundary (k·eval_every),
+    // not the racing counter.
+    let started = std::time::Instant::now();
+    let mut rec = RunRecorder::new();
+    let mut eval_version = 0u64;
+    let mut evals_done = 0u64;
+    let mut deadline_hit = false;
+    loop {
+        let t = total.load(Ordering::SeqCst);
+        if t >= cfg.steps || handles.iter().all(|h| h.is_finished()) {
+            break;
+        }
+        if opts.lockstep && handles.iter().any(|h| h.is_finished()) {
+            // A dead peer would wedge the turn token forever; reap early.
+            log_warn!("peer-driver", "a lockstep peer exited early at {t}/{} steps", cfg.steps);
+            break;
+        }
+        if let Some(d) = opts.deadline {
+            if started.elapsed() > d {
+                deadline_hit = true;
+                log_warn!("peer-driver", "deadline {d:?} hit at {t}/{} steps; stopping", cfg.steps);
+                break;
+            }
+        }
+        if cfg.eval_every > 0 && t / cfg.eval_every > evals_done {
+            evals_done = t / cfg.eval_every;
+            let step = evals_done * cfg.eval_every;
+            match eval_at(&mut eval_master, &driver_engine, &driver_store, &mut eval_version) {
+                Ok((l, e, te)) => {
+                    rec.record("eval_train_loss", step, l);
+                    rec.record("eval_train_err", step, e);
+                    rec.record("eval_test_err", step, te);
+                }
+                Err(e) => log_warn!("peer-driver", "evaluation failed (skipping): {e}"),
+            }
+        }
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    stop.store(true, Ordering::Relaxed);
+    turn.cv.notify_all();
+
+    // Reap every peer thread; failures degrade the outcome, never the run.
+    // After a deadline hit, a peer can be wedged inside a store call that
+    // never returns (the TCP client sets no socket timeouts), and an
+    // unconditional join would hang forever — defeating the deadline.
+    // Give such peers a grace period to observe the stop flag, then
+    // detach the stuck ones instead of joining them.
+    if deadline_hit {
+        let grace = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while std::time::Instant::now() < grace && !handles.iter().all(|h| h.is_finished()) {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+    }
+    let mut reports: Vec<PeerReport> = Vec::new();
+    for h in handles {
+        if deadline_hit && !h.is_finished() {
+            log_warn!("peer-driver", "peer thread wedged in a store call; detaching it");
+            continue;
+        }
+        match h.join() {
+            Ok(Ok(report)) => reports.push(report),
+            Ok(Err(e)) => log_warn!("peer-driver", "peer thread failed: {e}"),
+            Err(_) => log_warn!("peer-driver", "peer thread panicked"),
+        }
+    }
+    anyhow::ensure!(!reports.is_empty(), "every peer thread failed");
+    anyhow::ensure!(
+        !deadline_hit || total.load(Ordering::SeqCst) > 0,
+        "deadline hit before any peer contributed a step"
+    );
+
+    // Drain each surviving maintainer: record how far its cursor trailed
+    // the store (the divergence stat), then catch it up so the reported
+    // proposal reflects every write.  Retries ride out injected faults.
+    let mut final_ess = 1.0;
+    let mut final_weights: Vec<f64> = Vec::new();
+    // Whether the published final proposal came from a settled drain (a
+    // still-faulting store can leave a maintainer stuck mid-sync; prefer
+    // any peer whose drain settled over one that didn't).
+    let mut final_settled = false;
+    for report in reports.iter_mut() {
+        let Some(prop) = report.proposal.as_mut() else {
+            continue;
+        };
+        let before = prop.cursor();
+        // Highest store cursor observed across attempts: `top − before` is
+        // how far this peer had fallen behind by shutdown.
+        let mut top_seq = before;
+        // A fault-injected fetch can return "no progress" (empty delta,
+        // cursor unchanged) and look exactly like an idle store, so one
+        // quiet fetch proves nothing; two consecutive quiet fetches is the
+        // convergence signal (residual injection makes that a coin flip
+        // squared — and the chaos tests schedule their outages to end
+        // before shutdown anyway).
+        let mut quiet = 0;
+        let mut drained = false;
+        for _ in 0..DRAIN_RETRIES {
+            let at = prop.cursor();
+            let attempt = (|| -> Result<(u64, usize)> {
+                let now = match prop.unit() {
+                    StalenessUnit::Nanos => driver_store.now()?,
+                    StalenessUnit::Versions => driver_store.params_version()?,
+                };
+                let delta = driver_store.fetch_weights_since(at)?;
+                let out = (delta.seq, delta.len());
+                prop.absorb(&delta, now)?;
+                Ok(out)
+            })();
+            match attempt {
+                Ok((seq, len)) => {
+                    top_seq = top_seq.max(seq);
+                    if len == 0 && seq == at {
+                        quiet += 1;
+                    } else {
+                        quiet = 0;
+                    }
+                    if quiet >= 2 {
+                        drained = true;
+                        break;
+                    }
+                }
+                Err(_) => quiet = 0,
+            }
+        }
+        report.stats.final_cursor = prop.cursor();
+        report.stats.cursor_lag = top_seq.saturating_sub(before);
+        if !drained {
+            log_warn!(
+                "peer-driver",
+                "peer-{} cursor drain did not settle (cursor {})",
+                report.stats.id,
+                prop.cursor()
+            );
+        }
+        if final_weights.is_empty() || (drained && !final_settled) {
+            final_settled = drained;
+            final_ess = prop.ess_ratio();
+            final_weights = (0..prop.len()).map(|i| prop.effective_weight(i)).collect();
+        }
+    }
+
+    // Merge per-peer loss samples in global step order.
+    let mut samples: Vec<(u64, f64)> = reports
+        .iter()
+        .flat_map(|r| r.losses.iter().copied())
+        .collect();
+    samples.sort_by_key(|s| s.0);
+    for (idx, loss) in &samples {
+        rec.record("train_loss", *idx, *loss);
+    }
+
+    // Final evaluation with the server's current parameters.  The store
+    // may still be injecting faults at shutdown: retry the fetch, and on
+    // persistent failure evaluate with the last successfully fetched
+    // params instead of discarding the whole run.  (A blob that fails to
+    // *decode* is deterministic and still propagates.)
+    for attempt in 0..DRAIN_RETRIES {
+        match driver_store.fetch_params(eval_version) {
+            Ok(Some((v, bytes))) => {
+                eval_master.params = ParamSet::from_bytes(driver_engine.manifest(), &bytes)?;
+                eval_version = v;
+                break;
+            }
+            Ok(None) => break,
+            Err(e) => log_warn!(
+                "peer-driver",
+                "final param fetch failed (attempt {attempt}, retrying): {e}"
+            ),
+        }
+    }
+    let final_err = (
+        eval_master.evaluate(&driver_engine, EvalSplit::Train)?.1,
+        eval_master.evaluate(&driver_engine, EvalSplit::Valid)?.1,
+        eval_master.evaluate(&driver_engine, EvalSplit::Test)?.1,
+    );
+    let mut store_stats = match driver_store.stats() {
+        Ok(s) => s,
+        Err(e) => {
+            log_warn!("peer-driver", "final stats fetch failed (reporting zeros): {e}");
+            crate::weightstore::StoreStats::default()
+        }
+    };
+    store_stats.push_calls_saved = reports.iter().map(|r| r.stats.push_calls_saved).sum();
+    Ok(AsgdOutcome {
+        rec,
+        final_err,
+        total_peer_steps: total.load(Ordering::SeqCst),
+        store_stats,
+        peers: reports.into_iter().map(|r| r.stats).collect(),
+        final_ess,
+        final_weights,
+    })
+}
+
+/// One driver-side evaluation round against the server's current
+/// parameters (version cursor: an unchanged blob skips download+decode).
+fn eval_at(
+    eval_master: &mut Master,
+    engine: &Engine,
+    store: &Arc<dyn WeightStore>,
+    eval_version: &mut u64,
+) -> Result<(f64, f64, f64)> {
+    if let Some((v, bytes)) = store.fetch_params(*eval_version)? {
+        eval_master.params = ParamSet::from_bytes(engine.manifest(), &bytes)?;
+        *eval_version = v;
+    }
+    let (l, e) = eval_master.evaluate(engine, EvalSplit::Train)?;
+    let (_tl, te) = eval_master.evaluate(engine, EvalSplit::Test)?;
+    Ok((l, e, te))
+}

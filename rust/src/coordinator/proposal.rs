@@ -40,6 +40,15 @@
 //! the old peer implementation recomputed it with two O(N) passes per
 //! step.  [`ProposalMaintainer::draw_minibatch`] samples the resulting
 //! mixture exactly.
+//!
+//! §B.1 staleness *composes* with the coverage prior: in prior mode a
+//! scored entry whose weight crosses the threshold is not zeroed out of
+//! the proposal (that would un-sample it and re-introduce the coverage
+//! hole the prior exists to close) — it falls back to the prior-priced
+//! unscored mass, i.e. "this measurement is too old to trust" degrades to
+//! "treat it like an unmeasured example".  The prior itself averages only
+//! the *fresh* scored weights.  Every example therefore stays samplable
+//! at all times, which is what keeps the estimator unbiased (§2).
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -89,13 +98,15 @@ pub struct ProposalMaintainer {
     /// Point updates applied by the last `absorb` (delta entries plus
     /// expiries) — the per-step maintenance cost, exposed for benches.
     last_changes: usize,
-    /// Coverage-prior mode: count of entries scored at least once
-    /// (`param_version > 0`) and the sum of their raw weights.
+    /// Coverage-prior mode: count of entries that are scored
+    /// (`param_version > 0`) *and* currently pass the staleness filter,
+    /// and the sum of their raw weights (stale measurements don't feed
+    /// the prior).
     scored_count: usize,
     scored_total: f64,
-    /// Indicator tree (weight 1) over kept-and-never-scored entries —
-    /// `Some` iff coverage-prior mode is on.  Sampling it uniformly picks
-    /// an unscored entry in O(log N).
+    /// Indicator tree (weight 1) over prior-priced entries — never-scored
+    /// *or* scored-but-stale — `Some` iff coverage-prior mode is on.
+    /// Sampling it uniformly picks a prior-priced entry in O(log N).
     unscored_kept: Option<FenwickSampler>,
 }
 
@@ -112,6 +123,9 @@ impl ProposalMaintainer {
     /// A maintainer for the peer/ASGD topology: never-scored entries
     /// (`param_version == 0`) get the mean of the scored raw weights as
     /// their prior (1.0 before anything is scored), maintained in O(1).
+    /// With a staleness `threshold`, scored entries whose age crosses it
+    /// also fall back to the prior mass (see the module docs) — §B.1
+    /// filtering composed with the coverage prior.
     pub fn with_coverage_prior(
         n: usize,
         smoothing: f64,
@@ -211,8 +225,9 @@ impl ProposalMaintainer {
         self.last_changes
     }
 
-    /// Coverage prior: mean raw weight of the scored entries, 1.0 while
-    /// nothing has been scored yet (coefficient ~1 territory).
+    /// Coverage prior: mean raw weight of the fresh scored entries, 1.0
+    /// while nothing (unexpired) has been scored yet (coefficient ~1
+    /// territory).
     pub fn prior(&self) -> f64 {
         if self.scored_count == 0 {
             1.0
@@ -243,17 +258,21 @@ impl ProposalMaintainer {
         self.sampler.total() + u * p
     }
 
-    /// The sampling weight entry `i` is currently drawn with: 0 if
-    /// filtered out, the prior-priced value if unscored (coverage-prior
-    /// mode), the smoothed raw weight otherwise.
+    /// The sampling weight entry `i` is currently drawn with.  Master
+    /// mode: 0 if filtered out, the smoothed raw weight otherwise.
+    /// Coverage-prior mode: the smoothed raw weight when fresh-scored,
+    /// the prior-priced value otherwise (unscored *or* stale — never 0).
     pub fn effective_weight(&self, i: usize) -> f64 {
-        if !self.kept[i] {
-            return 0.0;
-        }
-        if self.unscored_kept.is_some() && self.raw.param_versions[i] == 0 {
-            self.smooth().apply(self.prior())
-        } else {
+        if self.unscored_kept.is_some() {
+            if self.kept[i] && self.raw.param_versions[i] > 0 {
+                self.sampler.weight(i)
+            } else {
+                self.smooth().apply(self.prior())
+            }
+        } else if self.kept[i] {
             self.sampler.weight(i)
+        } else {
+            0.0
         }
     }
 
@@ -398,30 +417,27 @@ impl ProposalMaintainer {
         self.sampler.update(i, v);
     }
 
+    /// Whether entry `i` currently contributes to the prior sums
+    /// (coverage-prior mode invariant: scored *and* passing the filter).
+    fn counts_as_scored(&self, i: usize) -> bool {
+        self.kept[i] && self.raw.param_versions[i] > 0
+    }
+
     /// Install one freshly-written entry: update the raw mirror and the
     /// scored sums, apply the filter + smoothing to the right tree, and
     /// schedule its expiry.
     fn apply_entry(&mut self, i: usize, w: f64, stamp: u64, param_version: u64) {
-        let old_w = self.raw.weights[i];
-        let was_scored = self.raw.param_versions[i] > 0;
+        let prior_mode = self.unscored_kept.is_some();
+        // Retract the old contribution to the prior sums, then re-add the
+        // new one below — simpler than a transition table now that both
+        // scoring *and* freshness can flip in one update.
+        if prior_mode && self.counts_as_scored(i) {
+            self.scored_count -= 1;
+            self.scored_total -= self.raw.weights[i];
+        }
         self.raw.weights[i] = w;
         self.raw.stamps[i] = stamp;
         self.raw.param_versions[i] = param_version;
-        let prior_mode = self.unscored_kept.is_some();
-        if prior_mode {
-            match (was_scored, param_version > 0) {
-                (false, true) => {
-                    self.scored_count += 1;
-                    self.scored_total += w;
-                }
-                (true, true) => self.scored_total += w - old_w,
-                (true, false) => {
-                    self.scored_count -= 1;
-                    self.scored_total -= old_w;
-                }
-                (false, false) => {}
-            }
-        }
         let tick = self.tick(i);
         let keep = self.filter().keep(tick, self.now);
         self.set_kept(i, keep);
@@ -430,15 +446,22 @@ impl ProposalMaintainer {
                 self.expiry.push(Reverse((tick.saturating_add(t), i)));
             }
         }
-        let scored = !prior_mode || param_version > 0;
-        let v = if keep && scored {
-            self.smooth().apply(w)
+        if prior_mode {
+            let in_sampler = keep && param_version > 0;
+            if in_sampler {
+                self.scored_count += 1;
+                self.scored_total += w;
+            }
+            let v = if in_sampler { self.smooth().apply(w) } else { 0.0 };
+            self.set_scored_weight(i, v);
+            if let Some(tree) = self.unscored_kept.as_mut() {
+                // Not fresh-scored ⇒ prior-priced, never dropped: §B.1
+                // composed with the coverage prior (module docs).
+                tree.update(i, if in_sampler { 0.0 } else { 1.0 });
+            }
         } else {
-            0.0
-        };
-        self.set_scored_weight(i, v);
-        if let Some(tree) = self.unscored_kept.as_mut() {
-            tree.update(i, if keep && !scored { 1.0 } else { 0.0 });
+            let v = if keep { self.smooth().apply(w) } else { 0.0 };
+            self.set_scored_weight(i, v);
         }
     }
 
@@ -462,10 +485,21 @@ impl ProposalMaintainer {
                 // (at `tick + t >= now`) is still in the heap.
                 continue;
             }
-            self.set_kept(i, false);
-            self.set_scored_weight(i, 0.0);
-            if let Some(tree) = self.unscored_kept.as_mut() {
-                tree.update(i, 0.0);
+            if self.unscored_kept.is_some() {
+                // Coverage-prior mode: the expired measurement degrades to
+                // the prior mass — the entry stays samplable (module docs).
+                if self.counts_as_scored(i) {
+                    self.scored_count -= 1;
+                    self.scored_total -= self.raw.weights[i];
+                }
+                self.set_kept(i, false);
+                self.set_scored_weight(i, 0.0);
+                if let Some(tree) = self.unscored_kept.as_mut() {
+                    tree.update(i, 1.0);
+                }
+            } else {
+                self.set_kept(i, false);
+                self.set_scored_weight(i, 0.0);
             }
             evicted += 1;
         }
@@ -490,21 +524,23 @@ impl ProposalMaintainer {
             let tick = self.tick(i);
             let keep = filter.keep(tick, self.now);
             self.kept[i] = keep;
-            let scored = !prior_mode || self.raw.param_versions[i] > 0;
-            if prior_mode && self.raw.param_versions[i] > 0 {
-                self.scored_count += 1;
-                self.scored_total += self.raw.weights[i];
-            }
             if keep {
                 self.n_kept += 1;
-                if scored {
-                    weights[i] = smooth.apply(self.raw.weights[i]);
-                } else {
-                    indicator[i] = 1.0;
-                }
                 if let Some(t) = self.threshold {
                     self.expiry.push(Reverse((tick.saturating_add(t), i)));
                 }
+            }
+            if prior_mode {
+                if keep && self.raw.param_versions[i] > 0 {
+                    self.scored_count += 1;
+                    self.scored_total += self.raw.weights[i];
+                    weights[i] = smooth.apply(self.raw.weights[i]);
+                } else {
+                    // Unscored or stale: prior-priced, never dropped.
+                    indicator[i] = 1.0;
+                }
+            } else if keep {
+                weights[i] = smooth.apply(self.raw.weights[i]);
             }
         }
         self.sum_sq = weights.iter().map(|w| w * w).sum();
@@ -894,6 +930,128 @@ mod tests {
             "mixture imbalance: {unscored_hits}/4000 unscored"
         );
         assert!(coefs.iter().all(|&c| (c - 1.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn coverage_prior_staleness_falls_back_to_prior() {
+        // §B.1 composed with the coverage prior: a scored entry whose
+        // weight crosses the threshold is re-priced at the prior mass,
+        // never zeroed — every example stays samplable.
+        let n = 6;
+        let c = 0.5;
+        let mut p =
+            ProposalMaintainer::with_coverage_prior(n, c, Some(5), StalenessUnit::Versions);
+        p.absorb(&full_delta(1, &vec![1.0; n], &vec![0; n], &vec![0; n]), 0)
+            .unwrap();
+        // Score entry 0 at version 2 (already stale at now = 8) and entry
+        // 1 at version 8 (fresh).  Only the fresh one feeds the prior.
+        p.absorb(&sparse_delta(2, n, &[(0, 4.0, 0, 2), (1, 8.0, 0, 8)]), 8)
+            .unwrap();
+        assert!((p.prior() - 8.0).abs() < 1e-12);
+        assert!((p.effective_weight(1) - 8.5).abs() < 1e-12); // fresh: raw + c
+        assert!((p.effective_weight(0) - 8.5).abs() < 1e-12); // stale: prior + c
+        assert!((p.effective_weight(3) - 8.5).abs() < 1e-12); // unscored: prior + c
+        assert!((p.total_mass() - 6.0 * 8.5).abs() < 1e-9);
+        // now = 14: the last fresh measurement expires too; the prior
+        // falls back to 1.0 and the proposal stays strictly positive.
+        p.absorb(&sparse_delta(2, n, &[]), 14).unwrap();
+        assert!((p.prior() - 1.0).abs() < 1e-12);
+        for i in 0..n {
+            assert!(
+                (p.effective_weight(i) - 1.5).abs() < 1e-12,
+                "entry {i}: {} should be prior-priced, never zero",
+                p.effective_weight(i)
+            );
+        }
+        assert!((p.total_mass() - 6.0 * 1.5).abs() < 1e-9);
+        // All-prior proposal is uniform: coefficients are exactly 1.
+        let mut rng = Pcg64::seeded(9);
+        let (_, coefs, _) = p.draw_minibatch(&mut rng, 16);
+        assert!(coefs.iter().all(|&cf| (cf - 1.0).abs() < 1e-6));
+    }
+
+    /// Ground truth for coverage-prior mode WITH a staleness threshold:
+    /// fresh-scored entries keep their smoothed weight, everything else
+    /// (unscored or stale) is priced at the fresh-scored mean.
+    fn expected_prior_staleness_weights(
+        raw: &[f64],
+        versions: &[u64],
+        now: u64,
+        t: u64,
+        c: f64,
+    ) -> Vec<f64> {
+        let fresh = |v: u64| now.saturating_sub(v) <= t;
+        let scored: Vec<f64> = versions
+            .iter()
+            .zip(raw)
+            .filter(|(&v, _)| v > 0 && fresh(v))
+            .map(|(_, &w)| w)
+            .collect();
+        let prior = if scored.is_empty() {
+            1.0
+        } else {
+            scored.iter().sum::<f64>() / scored.len() as f64
+        };
+        raw.iter()
+            .zip(versions)
+            .map(|(&w, &v)| if v > 0 && fresh(v) { w + c } else { prior + c })
+            .collect()
+    }
+
+    #[test]
+    fn coverage_prior_with_staleness_matches_scratch_rebuild() {
+        // Random deltas + advancing clock: the maintained mixture must
+        // equal the from-scratch recomputation at every step.
+        let n = 40;
+        let t = 6u64;
+        let c = 0.25;
+        let mut p =
+            ProposalMaintainer::with_coverage_prior(n, c, Some(t), StalenessUnit::Versions);
+        let mut raw = vec![1.0f64; n];
+        let mut versions = vec![0u64; n];
+        let mut rng = Pcg64::seeded(21);
+        p.absorb(&full_delta(1, &raw, &vec![0; n], &versions), 0).unwrap();
+        let mut now = 0u64;
+        for round in 0..200u64 {
+            now += rng.next_below(3);
+            let k = rng.next_below(5) as usize;
+            let entries: Vec<(usize, f64, u64, u64)> = (0..k)
+                .map(|_| {
+                    let i = rng.next_below(n as u64) as usize;
+                    let w = 0.1 + rng.next_f64() * 4.0;
+                    // Stamp versions around `now`: some fresh, some stale.
+                    let v = 1 + now.saturating_sub(rng.next_below(12));
+                    (i, w, 0, v)
+                })
+                .collect();
+            for &(i, w, _, v) in &entries {
+                raw[i] = w;
+                versions[i] = v;
+            }
+            p.absorb(&sparse_delta(round + 2, n, &entries), now).unwrap();
+            let expect = expected_prior_staleness_weights(&raw, &versions, now, t, c);
+            let total: f64 = expect.iter().sum();
+            assert!(
+                (p.total_mass() - total).abs() < 1e-6 * total.max(1.0),
+                "round {round}: mass {} vs {total}",
+                p.total_mass()
+            );
+            for i in 0..n {
+                assert!(
+                    (p.effective_weight(i) - expect[i]).abs() < 1e-6,
+                    "round {round} entry {i}: {} vs {}",
+                    p.effective_weight(i),
+                    expect[i]
+                );
+                assert!(p.effective_weight(i) > 0.0, "entry {i} dropped to zero");
+            }
+            let scratch_ess = crate::sampler::effective_sample_size_ratio(&expect);
+            assert!(
+                (p.ess_ratio() - scratch_ess).abs() < 1e-6,
+                "round {round}: ess {} vs {scratch_ess}",
+                p.ess_ratio()
+            );
+        }
     }
 
     #[test]

@@ -22,6 +22,7 @@ use anyhow::Result;
 use crate::baseline::sgd_twin;
 use crate::config::{RunConfig, TrainerKind};
 use crate::coordinator::peer::run_asgd_sim;
+use crate::coordinator::peer_live::{run_peer_live, PeerLiveOptions};
 use crate::coordinator::run_sim_with_engine;
 use crate::metrics::{quartiles_across_runs, write_figure_csv, RunRecorder};
 
@@ -68,7 +69,20 @@ pub fn run_comparison(scale: &ExperimentScale) -> Result<Vec<AsgdRow>> {
                     cfg.n_workers = k;
                     // Peers re-fetch every 4 own-steps: genuine staleness.
                     cfg.param_push_every = 4;
-                    let out = run_asgd_sim(&cfg, &engine)?;
+                    // Sim vs live peer topology: the live arm runs one OS
+                    // thread per peer, lockstep so seeds stay comparable.
+                    let out = if scale.live_peers {
+                        run_peer_live(
+                            &cfg,
+                            &PeerLiveOptions {
+                                lockstep: true,
+                                deadline: Some(std::time::Duration::from_secs(600)),
+                                ..PeerLiveOptions::default()
+                            },
+                        )?
+                    } else {
+                        run_asgd_sim(&cfg, &engine)?
+                    };
                     (out.rec, out.final_err)
                 }
             };

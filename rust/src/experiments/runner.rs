@@ -17,6 +17,10 @@ pub struct ExperimentScale {
     pub steps: u64,
     pub n_examples: usize,
     pub model: String,
+    /// Run the ASGD/peer arms through the live threaded topology
+    /// (`run_peer_live`, lockstep for seed-reproducibility) instead of the
+    /// round-robin sim.
+    pub live_peers: bool,
 }
 
 impl Default for ExperimentScale {
@@ -26,6 +30,7 @@ impl Default for ExperimentScale {
             steps: 300,
             n_examples: 2048,
             model: "small".into(),
+            live_peers: false,
         }
     }
 }
@@ -38,6 +43,7 @@ impl ExperimentScale {
             steps: 40,
             n_examples: 512,
             model: "tiny".into(),
+            live_peers: false,
         }
     }
 

@@ -37,7 +37,11 @@ SUBCOMMANDS
                   --model tiny|small|paper  --trainer issgd|sgd  --sync exact|relaxed
                   --steps N --lr F --smoothing F --workers N --seed N
                   --live            use real threads instead of the deterministic sim
+                  --peer            peer/ASGD topology (§6) instead of master/worker;
+                                    with --live every peer is its own OS thread
+                  --lockstep        (peer --live) deterministic round-robin op order
                   --store ADDR      (live) connect to a remote db-server
+                  --throttle-ms N   (live) pause between worker/peer batches
                   --monitor-every N enable the variance monitor
   db-server     run the weight store
                   --addr HOST:PORT  --n-examples N  --init-weight F
@@ -46,6 +50,7 @@ SUBCOMMANDS
                   --n-examples N --seed N
   experiment    regenerate paper artefacts: fig2|fig3|fig4|table1|staleness|asgd|adaptive|all
                   --seeds N --steps N --n-examples N --model NAME
+                  --live-peers      asgd arms run the live threaded peer mode
   plot          render a result CSV as a terminal chart
                   issgd plot results/fig4b_sqrt_trace.csv [--log-y] [--width N] [--height N]
   info          print manifest info for --model
@@ -103,16 +108,21 @@ fn dispatch(argv: &[String]) -> Result<()> {
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = RunConfig::default().apply_args(args)?;
     let live = args.flag("live") || args.get("store").is_some();
+    let peer = args.flag("peer");
     log_info!(
         "cli",
-        "training: model={} trainer={:?} sync={:?} steps={} workers={} ({})",
+        "training: model={} trainer={:?} sync={:?} steps={} workers={} ({}{})",
         cfg.model,
         cfg.trainer,
         cfg.sync,
         cfg.steps,
         cfg.n_workers,
+        if peer { "peer " } else { "" },
         if live { "live" } else { "sim" }
     );
+    if peer {
+        return cmd_train_peer(args, &cfg, live);
+    }
     let outcome = if live {
         let opts = LiveOptions {
             store_addr: args.get("store").map(String::from),
@@ -142,6 +152,52 @@ fn cmd_train(args: &Args) -> Result<()> {
         outcome.store_stats.weights_written,
         outcome.store_stats.snapshot_fetches
     );
+    Ok(())
+}
+
+/// `train --peer`: the §6 peer/ASGD topology — deterministic round-robin
+/// sim, or one OS thread per peer with `--live`.
+fn cmd_train_peer(args: &Args, cfg: &RunConfig, live: bool) -> Result<()> {
+    use issgd::coordinator::{run_asgd_sim, run_peer_live, PeerLiveOptions};
+    use issgd::runtime::Engine;
+
+    let outcome = if live {
+        let opts = PeerLiveOptions {
+            store: None,
+            store_addr: args.get("store").map(String::from),
+            lockstep: args.flag("lockstep"),
+            throttle: match args.get_parse("throttle-ms", 0u64)? {
+                0 => None,
+                ms => Some(std::time::Duration::from_millis(ms)),
+            },
+            deadline: None,
+        };
+        run_peer_live(cfg, &opts)?
+    } else {
+        let engine = Engine::load(&artifacts_dir(&cfg.model))?;
+        run_asgd_sim(cfg, &engine)?
+    };
+    let losses = outcome.rec.get("train_loss");
+    let last = losses.last().map(|s| s.value).unwrap_or(f64::NAN);
+    println!("peer steps:       {}", outcome.total_peer_steps);
+    println!("final train loss: {last:.4}");
+    println!(
+        "final err (train/valid/test): {:.4} / {:.4} / {:.4}",
+        outcome.final_err.0, outcome.final_err.1, outcome.final_err.2
+    );
+    println!("final proposal ESS/N:         {:.4}", outcome.final_ess);
+    println!(
+        "store ops: {} grad applies, {} weight pushes ({} saved by coalescing)",
+        outcome.store_stats.grad_applies,
+        outcome.store_stats.weight_pushes,
+        outcome.store_stats.push_calls_saved
+    );
+    for p in &outcome.peers {
+        println!(
+            "  peer {}: {} steps, {} store errors, cursor lag {}",
+            p.id, p.steps, p.store_errors, p.cursor_lag
+        );
+    }
     Ok(())
 }
 
@@ -214,13 +270,15 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     if let Some(m) = args.get("model") {
         scale.model = m.to_string();
     }
+    scale.live_peers = args.flag("live-peers");
     log_info!(
         "exp",
-        "experiment {which}: model={} seeds={} steps={} n={}",
+        "experiment {which}: model={} seeds={} steps={} n={}{}",
         scale.model,
         scale.seeds,
         scale.steps,
-        scale.n_examples
+        scale.n_examples,
+        if scale.live_peers { " (live peers)" } else { "" }
     );
     match which {
         "fig2" => {

@@ -1,0 +1,529 @@
+//! Deterministic fault injection for any [`WeightStore`] — the sanctioned
+//! chaos entry point.
+//!
+//! [`FaultyStore`] is a decorator: it implements [`WeightStore`], wraps any
+//! inner store (an in-process [`MemStore`], a TCP
+//! [`crate::weightstore::client::Client`], even another `FaultyStore`),
+//! and injects failures the way dslab-style simulators drive distributed
+//! systems — from a *seeded* RNG and a *virtual-time* [`FaultClock`], so a
+//! failure schedule is a pure function of the seed and the op sequence,
+//! never of wall-clock scheduling.  Under a serialized op order (the
+//! lockstep mode of `coordinator::peer_live`, or any single-threaded
+//! driver) the entire chaos run is bit-reproducible.
+//!
+//! Injected fault classes ([`FaultSpec`]):
+//!
+//! * **Transient errors** — fallible ops return `Err` *before* touching
+//!   the inner store, so a failed push leaves no partial write behind.
+//!   Callers built for §4.2 fire-and-forget (worker backoff, peer pending
+//!   retries, the master's swallowed sync) must survive these.
+//! * **Latency** — every op advances the virtual clock by a base cost plus
+//!   a seeded random extra.  Nothing sleeps: latency exists so schedules
+//!   expressed in virtual time (`fault_until`) are deterministic.
+//! * **Delta withholding / reordering** — `fetch_weights_since` may return
+//!   an *empty* delta with the caller's own cursor (no progress: the whole
+//!   batch of writes arrives later), or a random *subset* of the real
+//!   entries, again without advancing the cursor.  Because delta entries
+//!   are absolute values and the cursor never moves past undelivered
+//!   writes, both faults preserve the store's replay contract: consumers
+//!   see writes late and out of order, but never lose one — exactly the
+//!   regime the paper's "factors ... not updated instantly" claim is
+//!   about.  Full deltas (cursor 0 / resync) are never tampered with, so
+//!   a consumer can always bootstrap.
+//!
+//! Faults stop at the `fault_until` virtual-time horizon (if set) or when
+//! [`FaultyStore::set_enabled`]`(false)` is called, which is how
+//! convergence tests model a transient outage followed by recovery.
+//!
+//! Caveat: [`WeightStore::now`] returns the *virtual* clock, but entry
+//! stamps written by the inner store still come from its own clock — wrap
+//! stores only for `StalenessUnit::Versions` runs (all current users) or
+//! ignore wall-clock staleness under injection.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::util::rng::Pcg64;
+
+use super::{StoreStats, WeightDelta, WeightSnapshot, WeightStore};
+
+/// Virtual time shared by a [`FaultyStore`] and its tests: a monotonic
+/// nanosecond counter advanced by store ops, never by wall clocks.
+#[derive(Debug, Default)]
+pub struct FaultClock {
+    nanos: AtomicU64,
+}
+
+impl FaultClock {
+    pub fn new() -> Arc<FaultClock> {
+        Arc::new(FaultClock::default())
+    }
+
+    /// Current virtual time in nanoseconds.
+    pub fn now(&self) -> u64 {
+        self.nanos.load(Ordering::Acquire)
+    }
+
+    /// Advance the clock by `ns`; returns the new time.
+    pub fn advance(&self, ns: u64) -> u64 {
+        self.nanos.fetch_add(ns, Ordering::AcqRel) + ns
+    }
+}
+
+/// The fault schedule of one [`FaultyStore`] — probabilities are rolled
+/// per op from the seeded RNG; all times are virtual nanoseconds.
+#[derive(Debug, Clone)]
+pub struct FaultSpec {
+    /// RNG seed: same seed + same op order ⇒ same injected schedule.
+    pub seed: u64,
+    /// Probability a fallible op returns an injected transient error.
+    pub error_prob: f64,
+    /// Probability a non-full delta fetch is withheld entirely (empty
+    /// delta, cursor unchanged — the writes arrive on a later fetch).
+    pub withhold_prob: f64,
+    /// Probability a non-full delta fetch delivers only a random subset of
+    /// its entries (cursor unchanged — the rest arrive later, reordered
+    /// relative to newer writes).
+    pub partial_prob: f64,
+    /// Virtual ns every op costs.
+    pub op_latency: u64,
+    /// Upper bound on additional seeded per-op latency (0 = none).
+    pub max_extra_latency: u64,
+    /// Inject nothing before this virtual time (0 = immediately) — lets a
+    /// run's setup traffic through before the outage begins.
+    pub fault_from: u64,
+    /// Inject nothing once the virtual clock passes this horizon
+    /// (`None` = faults never expire) — the "transient outage" shape.
+    pub fault_until: Option<u64>,
+}
+
+impl FaultSpec {
+    /// A spec that injects nothing (ops still tick the clock by 1 ns).
+    pub fn quiet(seed: u64) -> FaultSpec {
+        FaultSpec {
+            seed,
+            error_prob: 0.0,
+            withhold_prob: 0.0,
+            partial_prob: 0.0,
+            op_latency: 1,
+            max_extra_latency: 0,
+            fault_from: 0,
+            fault_until: None,
+        }
+    }
+
+    pub fn with_errors(mut self, p: f64) -> FaultSpec {
+        self.error_prob = p;
+        self
+    }
+
+    pub fn with_withholding(mut self, p: f64) -> FaultSpec {
+        self.withhold_prob = p;
+        self
+    }
+
+    pub fn with_partial_deltas(mut self, p: f64) -> FaultSpec {
+        self.partial_prob = p;
+        self
+    }
+
+    pub fn with_latency(mut self, base: u64, max_extra: u64) -> FaultSpec {
+        self.op_latency = base;
+        self.max_extra_latency = max_extra;
+        self
+    }
+
+    pub fn with_fault_until(mut self, horizon: u64) -> FaultSpec {
+        self.fault_until = Some(horizon);
+        self
+    }
+
+    /// Faults are live only inside `[from, until)` virtual ns — the
+    /// "outage in the middle of a healthy run" shape.
+    pub fn with_fault_window(mut self, from: u64, until: u64) -> FaultSpec {
+        self.fault_from = from;
+        self.fault_until = Some(until);
+        self
+    }
+}
+
+/// Injection counters (diagnostics; tests assert the schedule fired).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    pub injected_errors: u64,
+    pub withheld_deltas: u64,
+    pub partial_deltas: u64,
+    /// Ops observed (clock ticks), including ones that then failed.
+    pub ops: u64,
+}
+
+/// The decorator.  See the module docs for semantics.
+pub struct FaultyStore {
+    inner: Arc<dyn WeightStore>,
+    spec: FaultSpec,
+    clock: Arc<FaultClock>,
+    rng: Mutex<Pcg64>,
+    enabled: AtomicBool,
+    injected_errors: AtomicU64,
+    withheld_deltas: AtomicU64,
+    partial_deltas: AtomicU64,
+    ops: AtomicU64,
+}
+
+impl FaultyStore {
+    /// Wrap `inner` with its own fresh [`FaultClock`].
+    pub fn new(inner: Arc<dyn WeightStore>, spec: FaultSpec) -> FaultyStore {
+        Self::with_clock(inner, spec, FaultClock::new())
+    }
+
+    /// Wrap `inner` sharing an externally-owned clock (several stores, one
+    /// timeline).
+    pub fn with_clock(
+        inner: Arc<dyn WeightStore>,
+        spec: FaultSpec,
+        clock: Arc<FaultClock>,
+    ) -> FaultyStore {
+        let rng = Mutex::new(Pcg64::new(spec.seed, 0xFA17));
+        FaultyStore {
+            inner,
+            spec,
+            clock,
+            rng,
+            enabled: AtomicBool::new(true),
+            injected_errors: AtomicU64::new(0),
+            withheld_deltas: AtomicU64::new(0),
+            partial_deltas: AtomicU64::new(0),
+            ops: AtomicU64::new(0),
+        }
+    }
+
+    /// The wrapped store (tests read the ground truth through this).
+    pub fn inner(&self) -> Arc<dyn WeightStore> {
+        Arc::clone(&self.inner)
+    }
+
+    /// The virtual clock driving the schedule.
+    pub fn clock(&self) -> Arc<FaultClock> {
+        Arc::clone(&self.clock)
+    }
+
+    /// Master switch: `false` turns the decorator into a pure passthrough
+    /// (the clock still ticks).
+    pub fn set_enabled(&self, enabled: bool) {
+        self.enabled.store(enabled, Ordering::Release);
+    }
+
+    pub fn fault_stats(&self) -> FaultStats {
+        FaultStats {
+            injected_errors: self.injected_errors.load(Ordering::Relaxed),
+            withheld_deltas: self.withheld_deltas.load(Ordering::Relaxed),
+            partial_deltas: self.partial_deltas.load(Ordering::Relaxed),
+            ops: self.ops.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Whether injection is live at the current virtual time.
+    fn active(&self) -> bool {
+        if !self.enabled.load(Ordering::Acquire) {
+            return false;
+        }
+        let now = self.clock.now();
+        now >= self.spec.fault_from
+            && match self.spec.fault_until {
+                None => true,
+                Some(horizon) => now < horizon,
+            }
+    }
+
+    /// Advance the clock by the op cost (base + seeded extra).
+    fn tick(&self) {
+        self.ops.fetch_add(1, Ordering::Relaxed);
+        let extra = if self.spec.max_extra_latency > 0 && self.active() {
+            self.rng
+                .lock()
+                .unwrap()
+                .next_below(self.spec.max_extra_latency + 1)
+        } else {
+            0
+        };
+        self.clock.advance(self.spec.op_latency.max(1) + extra);
+    }
+
+    /// One seeded Bernoulli roll (false when injection is off).
+    fn roll(&self, p: f64) -> bool {
+        if p <= 0.0 || !self.active() {
+            return false;
+        }
+        self.rng.lock().unwrap().next_f64() < p
+    }
+
+    fn maybe_fail(&self, op: &str) -> Result<()> {
+        if self.roll(self.spec.error_prob) {
+            self.injected_errors.fetch_add(1, Ordering::Relaxed);
+            anyhow::bail!("injected transient {op} failure (virtual t = {} ns)", self.clock.now());
+        }
+        Ok(())
+    }
+}
+
+impl WeightStore for FaultyStore {
+    fn push_params(&self, version: u64, bytes: Vec<u8>) -> Result<()> {
+        self.tick();
+        self.maybe_fail("push_params")?;
+        self.inner.push_params(version, bytes)
+    }
+
+    fn fetch_params(&self, than: u64) -> Result<Option<(u64, Vec<u8>)>> {
+        self.tick();
+        self.maybe_fail("fetch_params")?;
+        self.inner.fetch_params(than)
+    }
+
+    fn params_version(&self) -> Result<u64> {
+        self.tick();
+        self.inner.params_version()
+    }
+
+    fn push_weights(&self, start: usize, weights: &[f32], param_version: u64) -> Result<()> {
+        self.tick();
+        // Fail BEFORE the inner call: an injected push failure must leave
+        // no partial write (callers retry the whole run).
+        self.maybe_fail("push_weights")?;
+        self.inner.push_weights(start, weights, param_version)
+    }
+
+    fn fetch_weights(&self) -> Result<WeightSnapshot> {
+        self.tick();
+        self.maybe_fail("fetch_weights")?;
+        self.inner.fetch_weights()
+    }
+
+    fn fetch_weights_since(&self, seq: u64) -> Result<WeightDelta> {
+        self.tick();
+        self.maybe_fail("fetch_weights_since")?;
+        let delta = self.inner.fetch_weights_since(seq)?;
+        // Full deltas are the bootstrap/resync path — never tampered with,
+        // so a brand-new consumer can always make first contact.
+        if delta.full {
+            return Ok(delta);
+        }
+        if self.roll(self.spec.withhold_prob) {
+            // Withhold the whole batch: the caller's cursor stays at `seq`,
+            // so every write is re-scanned (and delivered) on a later
+            // fetch.  No lost updates — only lateness.
+            self.withheld_deltas.fetch_add(1, Ordering::Relaxed);
+            return Ok(WeightDelta {
+                seq,
+                n: delta.n,
+                full: false,
+                ..WeightDelta::default()
+            });
+        }
+        if !delta.is_empty() && self.roll(self.spec.partial_prob) {
+            // Deliver a random subset now, the rest later: entries are
+            // absolute values, so re-delivery (and arrival reordered
+            // relative to newer writes) is idempotent.  The cursor again
+            // stays at `seq`.
+            self.partial_deltas.fetch_add(1, Ordering::Relaxed);
+            let mut kept = WeightDelta {
+                seq,
+                n: delta.n,
+                full: false,
+                ..WeightDelta::default()
+            };
+            let mut rng = self.rng.lock().unwrap();
+            for k in 0..delta.len() {
+                if rng.next_below(2) == 0 {
+                    kept.indices.push(delta.indices[k]);
+                    kept.weights.push(delta.weights[k]);
+                    kept.stamps.push(delta.stamps[k]);
+                    kept.param_versions.push(delta.param_versions[k]);
+                }
+            }
+            return Ok(kept);
+        }
+        Ok(delta)
+    }
+
+    fn apply_grad(&self, scale: f32, grad: &[f32]) -> Result<u64> {
+        self.tick();
+        self.maybe_fail("apply_grad")?;
+        self.inner.apply_grad(scale, grad)
+    }
+
+    fn now(&self) -> Result<u64> {
+        Ok(self.clock.now())
+    }
+
+    fn stats(&self) -> Result<StoreStats> {
+        self.inner.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::weightstore::MemStore;
+
+    fn wrap(n: usize, spec: FaultSpec) -> (Arc<MemStore>, FaultyStore) {
+        let mem = Arc::new(MemStore::new(n, 1.0));
+        let store = FaultyStore::new(mem.clone() as Arc<dyn WeightStore>, spec);
+        (mem, store)
+    }
+
+    #[test]
+    fn quiet_spec_is_a_passthrough() {
+        let (mem, store) = wrap(8, FaultSpec::quiet(1));
+        store.push_weights(2, &[5.0, 6.0], 3).unwrap();
+        assert_eq!(store.fetch_weights().unwrap(), mem.fetch_weights().unwrap());
+        let d = store.fetch_weights_since(0).unwrap();
+        assert!(d.full);
+        assert_eq!(d.len(), 8);
+        assert_eq!(store.fault_stats().injected_errors, 0);
+        // Every op ticked the clock.
+        assert!(store.clock().now() >= 3);
+    }
+
+    #[test]
+    fn injected_errors_fire_and_leave_inner_untouched() {
+        let (mem, store) = wrap(4, FaultSpec::quiet(7).with_errors(1.0));
+        assert!(store.push_weights(0, &[9.0], 1).is_err());
+        assert_eq!(mem.fetch_weights().unwrap().weights, vec![1.0; 4]);
+        assert_eq!(mem.write_seq(), 1); // nothing reached the inner store
+        assert!(store.fault_stats().injected_errors > 0);
+    }
+
+    #[test]
+    fn withholding_preserves_the_replay_contract() {
+        let (mem, store) = wrap(6, FaultSpec::quiet(3).with_withholding(1.0));
+        let d0 = store.fetch_weights_since(0).unwrap();
+        assert!(d0.full, "full deltas must never be withheld");
+        let mut mirror = d0.to_snapshot().unwrap();
+        let mut cursor = d0.seq;
+        mem.push_weights(1, &[4.0, 5.0], 2).unwrap();
+        // Withheld: empty delta, cursor unchanged.
+        let d = store.fetch_weights_since(cursor).unwrap();
+        assert!(d.is_empty());
+        assert_eq!(d.seq, cursor);
+        assert!(store.fault_stats().withheld_deltas > 0);
+        // Outage over: the writes arrive late but complete.
+        store.set_enabled(false);
+        let d = store.fetch_weights_since(cursor).unwrap();
+        d.apply_to(&mut mirror).unwrap();
+        cursor = d.seq;
+        assert_eq!(mirror, mem.fetch_weights().unwrap());
+        let d = store.fetch_weights_since(cursor).unwrap();
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn partial_deltas_converge_by_redelivery() {
+        let (mem, store) = wrap(32, FaultSpec::quiet(11).with_partial_deltas(1.0));
+        let d0 = store.fetch_weights_since(0).unwrap();
+        let mut mirror = d0.to_snapshot().unwrap();
+        let mut cursor = d0.seq;
+        let vals: Vec<f32> = (0..16).map(|i| i as f32 + 2.0).collect();
+        mem.push_weights(4, &vals, 1).unwrap();
+        // Partial deliveries never advance the cursor, so each fetch
+        // re-scans the same writes; the subset applied is always a subset
+        // of the truth (absolute values).
+        let mut saw_partial = false;
+        for _ in 0..6 {
+            let d = store.fetch_weights_since(cursor).unwrap();
+            if d.seq == cursor && d.len() < 16 {
+                saw_partial = true;
+            }
+            d.apply_to(&mut mirror).unwrap();
+            cursor = d.seq;
+        }
+        assert!(saw_partial, "partial injection never fired");
+        store.set_enabled(false);
+        let d = store.fetch_weights_since(cursor).unwrap();
+        d.apply_to(&mut mirror).unwrap();
+        assert_eq!(mirror, mem.fetch_weights().unwrap());
+    }
+
+    #[test]
+    fn schedule_is_deterministic_in_seed_and_op_order() {
+        let run = |seed: u64| -> (FaultStats, Vec<u64>) {
+            let (mem, store) = wrap(
+                16,
+                FaultSpec::quiet(seed)
+                    .with_errors(0.3)
+                    .with_withholding(0.3)
+                    .with_latency(5, 10),
+            );
+            let mut outcomes = Vec::new();
+            let mut cursor = 0;
+            for i in 0..40u64 {
+                mem.push_weights((i % 16) as usize, &[i as f32], i + 1).unwrap();
+                match store.fetch_weights_since(cursor) {
+                    Ok(d) => {
+                        outcomes.push(d.seq);
+                        cursor = d.seq;
+                    }
+                    Err(_) => outcomes.push(u64::MAX),
+                }
+            }
+            outcomes.push(store.clock().now());
+            (store.fault_stats(), outcomes)
+        };
+        let (sa, oa) = run(42);
+        let (sb, ob) = run(42);
+        assert_eq!(sa, sb);
+        assert_eq!(oa, ob);
+        let (sc, oc) = run(43);
+        assert!(sa != sc || oa != oc, "different seeds gave identical schedules");
+    }
+
+    #[test]
+    fn fault_until_horizon_ends_the_outage() {
+        let (mem, store) = wrap(
+            4,
+            FaultSpec::quiet(5).with_errors(1.0).with_latency(10, 0).with_fault_until(100),
+        );
+        let mut failures = 0;
+        // 10 ns/op: faults stop once the clock crosses 100 ns.
+        for i in 0..30u64 {
+            if store.push_weights(0, &[i as f32 + 1.0], i + 1).is_err() {
+                failures += 1;
+            }
+        }
+        assert!(failures > 0, "horizon never saw a fault");
+        assert!(failures < 30, "faults never expired");
+        // Post-horizon ops all succeed.
+        store.push_weights(1, &[7.0], 99).unwrap();
+        assert_eq!(mem.fetch_weights().unwrap().weights[1], 7.0);
+    }
+
+    #[test]
+    fn fault_window_spares_setup_traffic() {
+        let (_mem, store) = wrap(
+            4,
+            FaultSpec::quiet(9).with_errors(1.0).with_latency(10, 0).with_fault_window(50, 150),
+        );
+        // Before the window: clean.
+        store.push_weights(0, &[1.0], 1).unwrap();
+        // Inside the window (clock at 10, 20, ... crosses 50): faulty.
+        let mut failures = 0;
+        for i in 0..20u64 {
+            if store.push_weights(0, &[i as f32 + 1.0], i + 2).is_err() {
+                failures += 1;
+            }
+        }
+        assert!(failures > 0, "window never activated");
+        // After the horizon: clean again.
+        store.push_weights(0, &[3.0], 99).unwrap();
+    }
+
+    #[test]
+    fn virtual_now_tracks_the_clock() {
+        let (_mem, store) = wrap(2, FaultSpec::quiet(1).with_latency(50, 0));
+        let a = store.now().unwrap();
+        store.params_version().unwrap();
+        let b = store.now().unwrap();
+        assert!(b >= a + 50);
+    }
+}

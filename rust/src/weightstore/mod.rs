@@ -13,6 +13,11 @@
 //!   separate OS processes like the paper's deployment.  Both implement
 //!   the same [`WeightStore`] trait, so the coordinator is oblivious to
 //!   which transport it talks to ("fire and forget", §4.2).
+//! * [`faulty::FaultyStore`] — a fault-injection decorator over any
+//!   [`WeightStore`]: deterministic (seeded RNG + virtual-time clock)
+//!   transient errors, latency, and delta withholding/reordering, so the
+//!   staleness regimes the paper argues about are *testable*, not just
+//!   runnable.
 //!
 //! # Delta / sequence semantics
 //!
@@ -58,6 +63,7 @@
 //! version mode (exact-mode sanity checks).
 
 pub mod client;
+pub mod faulty;
 pub mod protocol;
 pub mod server;
 

@@ -180,3 +180,28 @@ fn execute_path_does_not_leak_memory() {
         grown as f64 / 1e6
     );
 }
+
+#[test]
+fn peer_step_entry_subset_loads_alone() {
+    // Live peer threads compile only the `peer_step` entry point (the
+    // worker analogue of loading just `grad_norms`): the subset must load
+    // and execute, and unloaded entries must error, not panic.
+    let dir = artifacts_dir("tiny");
+    assert!(dir.join("manifest.json").exists(), "run `make artifacts` first");
+    let e = Engine::load_entries(&dir, &["peer_step"]).expect("peer_step-only engine");
+    let m = e.manifest().clone();
+    let data = SynthDataset::generate(42, SynthSpec::tiny(256));
+    let mut rng = Pcg64::seeded(7);
+    let params = ParamSet::init_he(&m, &mut rng);
+    let mut batch = BatchBuilder::new(m.batch_train, m.input_dim, m.n_classes);
+    let idx = rng.sample_with_replacement(data.len(), m.batch_train);
+    batch.fill(&data, &idx);
+    let coef = vec![1.0f32; m.batch_train];
+    let out = e.peer_step(&params, &batch.x, &batch.y, &coef).expect("peer_step");
+    assert!(out.loss.is_finite());
+    assert_eq!(out.grad_flat.len(), m.n_params);
+    assert!(out.sqnorms.iter().all(|s| s.is_finite()));
+    // Entries outside the subset are absent, reported as errors (same
+    // batch shape, so the failure is "not loaded", not a size mismatch).
+    assert!(e.grad_mean_sqnorm(&params, &batch.x, &batch.y).is_err());
+}

@@ -205,3 +205,42 @@ fn full_training_session_over_tcp() {
         .unwrap();
     handle.join().unwrap();
 }
+
+#[test]
+fn faulty_decorator_over_tcp_client_converges() {
+    // FaultyStore wraps ANY WeightStore — here a TCP client — so chaos
+    // schedules compose with the real transport.  A cursor-replaying
+    // consumer behind the decorator must converge once the outage ends.
+    use issgd::weightstore::faulty::{FaultSpec, FaultyStore};
+
+    let (addr, handle) = spawn_store(64);
+    {
+        let oracle = Client::connect(&addr).unwrap();
+        let client: Arc<dyn WeightStore> = Arc::new(Client::connect(&addr).unwrap());
+        let store = FaultyStore::new(
+            client,
+            FaultSpec::quiet(17)
+                .with_errors(0.3)
+                .with_withholding(0.4)
+                .with_partial_deltas(0.4),
+        );
+        let d0 = store.fetch_weights_since(0).unwrap();
+        let mut mirror = d0.to_snapshot().unwrap();
+        let mut cursor = d0.seq;
+        for round in 0..40u64 {
+            oracle
+                .push_weights((round % 60) as usize, &[round as f32 + 1.0, 2.0], round + 1)
+                .unwrap();
+            if let Ok(d) = store.fetch_weights_since(cursor) {
+                d.apply_to(&mut mirror).unwrap();
+                cursor = d.seq;
+            }
+        }
+        store.set_enabled(false);
+        let d = store.fetch_weights_since(cursor).unwrap();
+        d.apply_to(&mut mirror).unwrap();
+        assert_eq!(mirror, oracle.fetch_weights().unwrap());
+        oracle.shutdown_server().unwrap();
+    }
+    handle.join().unwrap();
+}
