@@ -38,6 +38,7 @@ fn main() -> Result<()> {
     let outcome = run_live(
         &cfg,
         &LiveOptions {
+            store: None,
             store_addr: Some(addr.to_string()),
             worker_throttle: Some(std::time::Duration::from_millis(2)),
             wait_for_first_scores: true,

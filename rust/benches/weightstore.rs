@@ -123,5 +123,58 @@ fn main() {
         direct.median, decorated.median
     );
 
+    // -- durable backend (journal + snapshot persistence) ------------------
+    //
+    // The mem-vs-durable push/fetch gap is the journaling tax (one frame
+    // encode + buffered write per push); the compaction bench prices a
+    // full fold-checkpoint-GC cycle at this table size.  These feed the
+    // BENCH_pr4.json perf-trajectory artifact in CI (--json).
+    use issgd::weightstore::durable::{DurableOptions, DurableStore};
+    let dir = std::env::temp_dir().join(format!("issgd-bench-durable-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let dur = DurableStore::create(
+        &dir,
+        n,
+        1.0,
+        DurableOptions {
+            segment_bytes: 8 << 20,
+            compact_after_bytes: 0, // explicit compaction only: priced below
+            fsync: false,
+        },
+    )
+    .unwrap();
+    let mut v = 0u64;
+    let dur_push = h.bench_throughput("durable/push_weights/256", 256, || {
+        v += 1;
+        dur.push_weights(0, &weights, v).unwrap();
+    });
+    println!(
+        "weightstore/durable_overhead: plain {:?} vs journaled {:?} per 256-weight push",
+        direct.median, dur_push.median
+    );
+    // A pinned consumer's steady-state step: push + incremental fetch +
+    // cursor save (the pin is what keeps compaction cursor-safe).
+    let mut cursor = dur.fetch_weights_since(0).unwrap().seq;
+    h.bench(&format!("durable/step_delta/n={n}"), || {
+        dur.push_weights(0, &weights, 1).unwrap();
+        let d = dur.fetch_weights_since(cursor).unwrap();
+        cursor = d.seq;
+        dur.save_cursor("bench", cursor).unwrap();
+        std::hint::black_box(d);
+    });
+    h.bench(&format!("durable/compact/n={n}"), || {
+        dur.push_weights(0, &weights, 1).unwrap();
+        // Advance the pin to the head first, or the stale step_delta
+        // cursor would clamp the fold and the bench would stop measuring
+        // a real fold-checkpoint-GC cycle after its first iteration.
+        dur.save_cursor("bench", dur.write_seq()).unwrap();
+        dur.compact().unwrap();
+    });
+    h.bench(&format!("durable/snapshot_fetch/n={n}"), || {
+        std::hint::black_box(dur.fetch_weights().unwrap());
+    });
+    drop(dur);
+    let _ = std::fs::remove_dir_all(&dir);
+
     h.finish();
 }

@@ -12,7 +12,16 @@
 //! criterion-style, plus optional throughput.  `--quick` (or env
 //! `ISSGD_BENCH_QUICK=1`) shrinks budgets so `cargo bench` stays usable on
 //! a single-core box.
+//!
+//! `--json <path>` additionally **appends** one JSON object per benchmark
+//! (JSON-lines, so several bench binaries sharing one invocation — e.g.
+//! `cargo bench --bench sampler --bench weightstore -- --json out.json` —
+//! accumulate into a single machine-readable file).  CI uploads it as a
+//! perf-trajectory artifact.  Fields: `group`, `name`, `samples`,
+//! `min_ns`/`median_ns`/`mean_ns`/`p95_ns`, and `items_per_sec` when
+//! throughput was declared.
 
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
 #[derive(Debug, Clone)]
@@ -33,6 +42,8 @@ pub struct Harness {
     budget: Duration,
     max_samples: usize,
     results: Vec<BenchResult>,
+    /// Append results here as JSON lines on `finish` (from `--json`).
+    json_path: Option<PathBuf>,
 }
 
 impl Harness {
@@ -43,18 +54,34 @@ impl Harness {
             budget,
             max_samples,
             results: Vec::new(),
+            json_path: None,
         }
     }
 
-    /// Budgets from argv/env: default 2 s per benchmark, `--quick` = 0.3 s.
+    /// Budgets from argv/env: default 2 s per benchmark, `--quick` = 0.3 s;
+    /// `--json <path>` selects the machine-readable sink (module docs).
     pub fn from_env(group: &str) -> Harness {
-        let quick = std::env::args().any(|a| a == "--quick")
+        let argv: Vec<String> = std::env::args().collect();
+        let quick = argv.iter().any(|a| a == "--quick")
             || std::env::var("ISSGD_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
-        if quick {
+        let mut h = if quick {
             Self::new(group, Duration::from_millis(300), 20)
         } else {
             Self::new(group, Duration::from_secs(2), 60)
-        }
+        };
+        h.json_path = argv
+            .iter()
+            .position(|a| a == "--json")
+            .and_then(|i| argv.get(i + 1))
+            .map(PathBuf::from);
+        h
+    }
+
+    /// Route `finish` output to a JSON-lines file (the `--json` flag does
+    /// this for `from_env` harnesses).
+    pub fn with_json(mut self, path: &Path) -> Harness {
+        self.json_path = Some(path.to_path_buf());
+        self
     }
 
     /// Time `f` repeatedly; report stats.  Returns the result for callers
@@ -114,11 +141,41 @@ impl Harness {
         result
     }
 
-    /// Print the closing summary (call last).
+    /// Print the closing summary (call last) and, with a JSON sink
+    /// configured, append the machine-readable results.
     pub fn finish(self) -> Vec<BenchResult> {
         println!("== {} done: {} benchmarks ==", self.group, self.results.len());
+        if let Some(path) = &self.json_path {
+            if let Err(e) = append_json(path, &self.group, &self.results) {
+                eprintln!("bench: could not write {}: {e}", path.display());
+            } else {
+                println!("== {} results appended to {} ==", self.group, path.display());
+            }
+        }
         self.results
     }
+}
+
+fn append_json(path: &Path, group: &str, results: &[BenchResult]) -> anyhow::Result<()> {
+    use crate::util::json::Json;
+    use std::io::Write;
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+    for r in results {
+        let mut pairs = vec![
+            ("group", Json::Str(group.to_string())),
+            ("name", Json::Str(r.name.clone())),
+            ("samples", Json::Num(r.samples as f64)),
+            ("min_ns", Json::Num(r.min.as_nanos() as f64)),
+            ("median_ns", Json::Num(r.median.as_nanos() as f64)),
+            ("mean_ns", Json::Num(r.mean.as_nanos() as f64)),
+            ("p95_ns", Json::Num(r.p95.as_nanos() as f64)),
+        ];
+        if let Some(tp) = r.throughput {
+            pairs.push(("items_per_sec", Json::Num(tp)));
+        }
+        writeln!(f, "{}", Json::obj(pairs).to_string())?;
+    }
+    Ok(())
 }
 
 fn fmt_dur(d: Duration) -> String {
@@ -166,5 +223,33 @@ mod tests {
         });
         assert!(r2.throughput.unwrap() > 0.0);
         assert_eq!(h.finish().len(), 2);
+    }
+
+    #[test]
+    fn json_sink_appends_parseable_lines() {
+        use crate::util::json::Json;
+        let path = std::env::temp_dir().join(format!("issgd-bench-json-{}", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        // Two groups appending to one file, like two bench binaries in one
+        // `cargo bench -- --json` invocation.
+        for group in ["g1", "g2"] {
+            let mut h =
+                Harness::new(group, Duration::from_millis(20), 5).with_json(&path);
+            h.bench_throughput("op", 10, || {
+                std::hint::black_box(1 + 1);
+            });
+            h.finish();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for (line, group) in lines.iter().zip(["g1", "g2"]) {
+            let v = Json::parse(line).unwrap();
+            assert_eq!(v.req_str("group").unwrap(), group);
+            assert!(v.req_f64("median_ns").unwrap() >= 0.0);
+            assert!(v.req_f64("items_per_sec").unwrap() > 0.0);
+            assert!(v.req_str("name").unwrap().starts_with(group));
+        }
+        let _ = std::fs::remove_file(&path);
     }
 }

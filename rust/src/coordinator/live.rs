@@ -24,8 +24,12 @@ use super::sim::SimOutcome;
 use super::worker::WorkerState;
 
 /// Options specific to live execution.
-#[derive(Debug, Clone, Default)]
+#[derive(Clone, Default)]
 pub struct LiveOptions {
+    /// Inject a pre-built store (the CLI passes a durable backend; tests
+    /// wrap one in a `FaultyStore`); it must track `Master::store_size(cfg)`
+    /// weights.  Mutually exclusive with `store_addr`.
+    pub store: Option<Arc<dyn WeightStore>>,
     /// Connect to a remote TCP store instead of an in-process one.
     pub store_addr: Option<String>,
     /// Pause between worker scoring batches (keeps a small host responsive
@@ -44,20 +48,25 @@ pub fn run_live(cfg: &RunConfig, opts: &LiveOptions) -> Result<SimOutcome> {
         cfg.sync == SyncMode::Relaxed,
         "live mode is fire-and-forget; use sim mode for exact-sync runs"
     );
+    anyhow::ensure!(
+        opts.store.is_none() || opts.store_addr.is_none(),
+        "pass either an injected store or a store address, not both"
+    );
     let n_weights = Master::store_size(cfg);
-    let mem: Option<Arc<MemStore>> = if opts.store_addr.is_none() {
+    let mem: Option<Arc<MemStore>> = if opts.store.is_none() && opts.store_addr.is_none() {
         Some(Arc::new(MemStore::new(n_weights, cfg.init_weight)))
     } else {
         None
     };
     let connect = |role: &str| -> Result<Arc<dyn WeightStore>> {
-        Ok(match (&opts.store_addr, &mem) {
-            (Some(addr), _) => {
+        Ok(match (&opts.store_addr, &opts.store, &mem) {
+            (Some(addr), _, _) => {
                 let c = crate::weightstore::client::Client::connect(addr)?;
                 log_info!(role, "connected to store at {addr}");
                 Arc::new(c)
             }
-            (None, Some(mem)) => mem.clone(),
+            (None, Some(store), _) => Arc::clone(store),
+            (None, None, Some(mem)) => mem.clone() as Arc<dyn WeightStore>,
             _ => unreachable!(),
         })
     };

@@ -33,6 +33,25 @@ const ADAPTIVE_ENTROPY_LOW_TOL: f64 = 5e-3;
 /// ...or rises this far above it while a positive constant is active.
 const ADAPTIVE_ENTROPY_HIGH_TOL: f64 = 2e-2;
 
+/// The master's default saved-cursor name ([`WeightStore::save_cursor`]):
+/// pins the store's compaction at the proposal's cursor and, on a durable
+/// backend, survives store restarts so a resumed master can be found by
+/// name.  The name is deliberately stable (not per-process) so a
+/// restarted master reclaims its own pin; a **multi-master** deployment
+/// sharing one store must give each master a distinct name via
+/// [`Master::set_cursor_name`], or the fastest master drags the shared
+/// pin forward and compaction demotes the slower ones to full-table
+/// fetches.
+pub const MASTER_CURSOR: &str = "master";
+
+/// Steps between cursor persists (master steps / peer contributions).  The
+/// pin needs only coarse granularity — a lagging pin costs at worst a
+/// slightly larger delta after compaction, never correctness — so the sync
+/// hot path must not pay a store round trip (or grow a durable journal)
+/// every step.  Shared with `PeerState` so both consumer kinds pin at the
+/// same cadence.
+pub(crate) const CURSOR_SAVE_EVERY: u64 = 16;
+
 /// Which split to evaluate.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EvalSplit {
@@ -61,6 +80,12 @@ pub struct Master {
     /// Persistent proposal state: mirrors the store via deltas and keeps
     /// the Fenwick sampler maintained with point updates.
     proposal: ProposalMaintainer,
+    /// Saved-cursor name ([`MASTER_CURSOR`] by default; multi-master
+    /// deployments set distinct names — see the constant's docs).
+    cursor_name: String,
+    /// Last cursor successfully persisted via [`WeightStore::save_cursor`]
+    /// (skip the round trip / journal frame when nothing advanced).
+    saved_cursor: u64,
     /// Count of swallowed store failures (fire-and-forget resilience).
     pub store_errors: u64,
 }
@@ -93,7 +118,24 @@ impl Master {
             train_idx.len()
         );
         let mut rng = Pcg64::new(cfg.seed, 0x3A57E5);
-        let params = ParamSet::init_he(manifest, &mut rng);
+        // Resume from the store when it already holds a published model
+        // (a recovered durable store, or joining a live cluster): adopt
+        // both the blob and its version so our first publish lands above
+        // the persisted head instead of clobbering trained parameters
+        // with a fresh init.  A fresh store (version 0) starts from He
+        // init as before.  A *failed* probe is a hard error — not
+        // fire-and-forget: guessing version 0 against a store that
+        // actually holds v ≥ 1 would wedge every future publish behind
+        // the monotonicity check, and guessing fresh params would clobber
+        // a resumed run's model.  Construction has nothing safe to
+        // degrade to; the caller retries or aborts.
+        let (version, params) = match store.fetch_params(0)? {
+            Some((v, bytes)) => {
+                crate::log_info!("master", "resuming persisted parameters at version {v}");
+                (v, ParamSet::from_bytes(manifest, &bytes)?)
+            }
+            None => (0, ParamSet::init_he(manifest, &mut rng)),
+        };
         let batch = BatchBuilder::new(manifest.batch_train, manifest.input_dim, manifest.n_classes);
         let proposal = ProposalMaintainer::new(
             train_idx.len(),
@@ -109,15 +151,25 @@ impl Master {
             test_idx,
             store,
             params,
-            version: 0,
+            version,
             step: 0,
             rec: RunRecorder::new(),
             rng,
             batch,
             gtrue: GTrueEstimator::new(),
             proposal,
+            cursor_name: MASTER_CURSOR.to_string(),
+            saved_cursor: 0,
             store_errors: 0,
         })
+    }
+
+    /// Rename this master's compaction pin / resume handle (required when
+    /// several masters share one store — see [`MASTER_CURSOR`]).
+    pub fn set_cursor_name(&mut self, name: impl Into<String>) {
+        self.cursor_name = name.into();
+        // Force a re-save under the new name on the next sync.
+        self.saved_cursor = 0;
     }
 
     /// Number of weights the store must track for this session's config —
@@ -213,9 +265,31 @@ impl Master {
             let delta = self.store.fetch_weights_since(self.proposal.cursor())?;
             self.proposal.absorb(&delta, now)
         })();
-        if let Err(e) = synced {
-            self.store_errors += 1;
-            crate::log_warn!("master", "weight delta fetch failed (keeping last proposal): {e}");
+        match synced {
+            Ok(()) => {
+                // Persist the advanced cursor: a compaction pin while we
+                // live, a resume point if the store (or we) restart.  As
+                // fire-and-forget as the fetch itself — the worst a lost
+                // save costs is one full-table resync later.  Saved on the
+                // [`CURSOR_SAVE_EVERY`] cadence (plus once up front to
+                // register the pin) and only when it actually moved.
+                let cursor = self.proposal.cursor();
+                if cursor != self.saved_cursor
+                    && (self.saved_cursor == 0 || self.step % CURSOR_SAVE_EVERY == 0)
+                {
+                    match self.store.save_cursor(&self.cursor_name, cursor) {
+                        Ok(()) => self.saved_cursor = cursor,
+                        Err(e) => {
+                            self.store_errors += 1;
+                            crate::log_warn!("master", "cursor save failed (continuing): {e}");
+                        }
+                    }
+                }
+            }
+            Err(e) => {
+                self.store_errors += 1;
+                crate::log_warn!("master", "weight delta fetch failed (keeping last proposal): {e}");
+            }
         }
     }
 

@@ -37,7 +37,7 @@ pub mod worker;
 pub use live::{run_live, LiveOptions};
 pub use peer::{run_asgd_sim, AsgdOutcome, PeerState, PeerStats};
 pub use peer_live::{run_peer_live, PeerLiveOptions};
-pub use master::{EvalSplit, Master};
+pub use master::{EvalSplit, Master, MASTER_CURSOR};
 pub use proposal::ProposalMaintainer;
 pub use sim::{run_sim, run_sim_with_engine, SimOutcome};
 pub use worker::WorkerState;

@@ -101,6 +101,12 @@ pub struct PeerState {
     /// Transient store failures survived (monitoring, mirrors
     /// `WorkerState::store_errors`).
     pub store_errors: u64,
+    /// This peer's saved-cursor name (`peer-{id}`): compaction pin +
+    /// crash-resume handle, mirroring [`super::master::MASTER_CURSOR`].
+    cursor_name: String,
+    /// Last cursor successfully persisted (skip the round trip / journal
+    /// frame when nothing advanced).
+    saved_cursor: u64,
 }
 
 impl PeerState {
@@ -134,6 +140,8 @@ impl PeerState {
             steps_done: 0,
             push_calls_saved: 0,
             store_errors: 0,
+            cursor_name: format!("peer-{id}"),
+            saved_cursor: 0,
         }
     }
 
@@ -180,6 +188,28 @@ impl PeerState {
                 };
                 let delta = self.store.fetch_weights_since(prop.cursor())?;
                 prop.absorb(&delta, now)?;
+                // Persist the advanced cursor (compaction pin + resume
+                // point) — fire-and-forget like every other store op
+                // here, saved on the master's coarse cadence (a lagging
+                // pin is never a correctness problem) and only when it
+                // actually moved.
+                let cursor = prop.cursor();
+                if cursor != self.saved_cursor
+                    && (self.saved_cursor == 0
+                        || self.steps_done % super::master::CURSOR_SAVE_EVERY == 0)
+                {
+                    match self.store.save_cursor(&self.cursor_name, cursor) {
+                        Ok(()) => self.saved_cursor = cursor,
+                        Err(e) => {
+                            self.store_errors += 1;
+                            crate::log_warn!(
+                                "peer",
+                                "peer-{} cursor save failed (continuing): {e}",
+                                self.id
+                            );
+                        }
+                    }
+                }
                 let (pos, coefs, _) = prop.draw_minibatch(&mut self.rng, m);
                 (pos, coefs)
             }

@@ -170,8 +170,11 @@ pub fn run_peer_live(cfg: &RunConfig, opts: &PeerLiveOptions) -> Result<AsgdOutc
     let driver_engine = Engine::load(&dims_dir)?;
     let driver_store = connect("peer-driver")?;
     let mut eval_master = Master::new(cfg.clone(), &driver_engine, driver_store.clone())?;
-    // Publish initial parameters (version 1) so peers can start.
-    driver_store.push_params(1, eval_master.params.to_bytes())?;
+    // Publish initial parameters so peers can start — one version above
+    // whatever the store already holds (0 on a fresh store, the persisted
+    // head on a recovered durable store).
+    let base_version = driver_store.params_version()?;
+    driver_store.push_params(base_version + 1, eval_master.params.to_bytes())?;
 
     let use_is = cfg.trainer == TrainerKind::Issgd;
     let n_peers = cfg.n_workers;

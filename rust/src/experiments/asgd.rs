@@ -72,9 +72,30 @@ pub fn run_comparison(scale: &ExperimentScale) -> Result<Vec<AsgdRow>> {
                     // Sim vs live peer topology: the live arm runs one OS
                     // thread per peer, lockstep so seeds stay comparable.
                     let out = if scale.live_peers {
+                        // Optional durable backend: one store dir per
+                        // arm/seed so repeated experiment runs recover
+                        // (and exercise) the on-disk path.
+                        let store = match &scale.store_path {
+                            None => None,
+                            Some(dir) => {
+                                use crate::coordinator::Master;
+                                use crate::weightstore::durable::DurableStore;
+                                use crate::weightstore::WeightStore;
+                                let path =
+                                    std::path::Path::new(dir).join(format!("{name}-s{s}"));
+                                let d = DurableStore::open_or_create(
+                                    &path,
+                                    Master::store_size(&cfg),
+                                    cfg.init_weight,
+                                    Default::default(),
+                                )?;
+                                Some(std::sync::Arc::new(d) as std::sync::Arc<dyn WeightStore>)
+                            }
+                        };
                         run_peer_live(
                             &cfg,
                             &PeerLiveOptions {
+                                store,
                                 lockstep: true,
                                 deadline: Some(std::time::Duration::from_secs(600)),
                                 ..PeerLiveOptions::default()

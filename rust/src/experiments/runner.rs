@@ -21,6 +21,9 @@ pub struct ExperimentScale {
     /// (`run_peer_live`, lockstep for seed-reproducibility) instead of the
     /// round-robin sim.
     pub live_peers: bool,
+    /// With `live_peers`: back each arm/seed with a durable on-disk store
+    /// under this directory (`<dir>/<arm>-s<seed>`) instead of RAM.
+    pub store_path: Option<String>,
 }
 
 impl Default for ExperimentScale {
@@ -31,6 +34,7 @@ impl Default for ExperimentScale {
             n_examples: 2048,
             model: "small".into(),
             live_peers: false,
+            store_path: None,
         }
     }
 }
@@ -44,6 +48,7 @@ impl ExperimentScale {
             n_examples: 512,
             model: "tiny".into(),
             live_peers: false,
+            store_path: None,
         }
     }
 

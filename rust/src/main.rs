@@ -25,7 +25,8 @@ use issgd::log_info;
 use issgd::runtime::{artifacts_dir, Manifest};
 use issgd::util::cli::{self, Args};
 use issgd::util::logging;
-use issgd::weightstore::{server::Server, MemStore};
+use issgd::weightstore::durable::DurableStore;
+use issgd::weightstore::{server::Server, MemStore, WeightStore};
 
 const USAGE: &str = "\
 issgd — Distributed Importance Sampling SGD (Alain et al., 2015)
@@ -41,16 +42,22 @@ SUBCOMMANDS
                                     with --live every peer is its own OS thread
                   --lockstep        (peer --live) deterministic round-robin op order
                   --store ADDR      (live) connect to a remote db-server
+                  --store-path DIR  (implies --live) durable on-disk weight store:
+                                    append-only delta log + snapshot checkpoints,
+                                    survives restarts (see db-server)
                   --throttle-ms N   (live) pause between worker/peer batches
                   --monitor-every N enable the variance monitor
   db-server     run the weight store
                   --addr HOST:PORT  --n-examples N  --init-weight F
+                  --store-path DIR  serve a durable store (created on first run,
+                                    recovered — snapshot + log replay — on later runs)
   worker        standalone scoring worker against a remote store
                   --store ADDR --worker-id I --workers N --model NAME
                   --n-examples N --seed N
   experiment    regenerate paper artefacts: fig2|fig3|fig4|table1|staleness|asgd|adaptive|all
                   --seeds N --steps N --n-examples N --model NAME
                   --live-peers      asgd arms run the live threaded peer mode
+                  --store-path DIR  (with --live-peers) durable store per arm under DIR
   plot          render a result CSV as a terminal chart
                   issgd plot results/fig4b_sqrt_trace.csv [--log-y] [--width N] [--height N]
   info          print manifest info for --model
@@ -67,8 +74,8 @@ fn main() {
 fn value_opts() -> Vec<&'static str> {
     let mut opts = RunConfig::CLI_OPTS.to_vec();
     opts.extend([
-        "log-level", "addr", "store", "worker-id", "seeds", "results", "throttle-ms",
-        "width", "height",
+        "log-level", "addr", "store", "store-path", "worker-id", "seeds", "results",
+        "throttle-ms", "width", "height",
     ]);
     opts
 }
@@ -105,9 +112,35 @@ fn dispatch(argv: &[String]) -> Result<()> {
     }
 }
 
+/// Open (or create) the durable store named by `--store-path`, sized for
+/// `cfg`'s train split.  `None` when the flag is absent.
+fn durable_from_args(args: &Args, cfg: &RunConfig) -> Result<Option<Arc<dyn WeightStore>>> {
+    let Some(path) = args.get("store-path") else {
+        return Ok(None);
+    };
+    let n_weights = issgd::coordinator::Master::store_size(cfg);
+    let store = DurableStore::open_or_create(
+        std::path::Path::new(path),
+        n_weights,
+        cfg.init_weight,
+        Default::default(),
+    )?;
+    log_info!(
+        "cli",
+        "durable weight store at {path}: {n_weights} weights, write seq {}",
+        store.write_seq()
+    );
+    let store: Arc<dyn WeightStore> = Arc::new(store);
+    Ok(Some(store))
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = RunConfig::default().apply_args(args)?;
-    let live = args.flag("live") || args.get("store").is_some();
+    // A durable on-disk store only makes sense with real actors, so
+    // --store-path implies --live (the sims build their own in-memory
+    // store for determinism).
+    let live =
+        args.flag("live") || args.get("store").is_some() || args.get("store-path").is_some();
     let peer = args.flag("peer");
     log_info!(
         "cli",
@@ -125,6 +158,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     let outcome = if live {
         let opts = LiveOptions {
+            store: durable_from_args(args, &cfg)?,
             store_addr: args.get("store").map(String::from),
             worker_throttle: match args.get_parse("throttle-ms", 0u64)? {
                 0 => None,
@@ -163,7 +197,7 @@ fn cmd_train_peer(args: &Args, cfg: &RunConfig, live: bool) -> Result<()> {
 
     let outcome = if live {
         let opts = PeerLiveOptions {
-            store: None,
+            store: durable_from_args(args, cfg)?,
             store_addr: args.get("store").map(String::from),
             lockstep: args.flag("lockstep"),
             throttle: match args.get_parse("throttle-ms", 0u64)? {
@@ -210,7 +244,24 @@ fn cmd_db_server(args: &Args) -> Result<()> {
         n_examples: n,
         ..RunConfig::default()
     });
-    let store = Arc::new(MemStore::new(n_weights, init));
+    let store: Arc<dyn WeightStore> = match args.get("store-path") {
+        Some(path) => {
+            let d = DurableStore::open_or_create(
+                std::path::Path::new(path),
+                n_weights,
+                init,
+                Default::default(),
+            )?;
+            log_info!(
+                "db",
+                "durable store at {path}: write seq {}, floor {}",
+                d.write_seq(),
+                d.compact_floor()
+            );
+            Arc::new(d)
+        }
+        None => Arc::new(MemStore::new(n_weights, init)),
+    };
     let server = Server::bind(addr, store)?;
     log_info!(
         "db",
@@ -271,6 +322,14 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         scale.model = m.to_string();
     }
     scale.live_peers = args.flag("live-peers");
+    scale.store_path = args.get("store-path").map(String::from);
+    if scale.store_path.is_some() && !scale.live_peers {
+        issgd::log_warn!(
+            "exp",
+            "--store-path only backs the --live-peers asgd arms; the deterministic sims \
+             use in-memory stores and will NOT touch it"
+        );
+    }
     log_info!(
         "exp",
         "experiment {which}: model={} seeds={} steps={} n={}{}",

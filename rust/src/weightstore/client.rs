@@ -99,6 +99,25 @@ impl WeightStore for Client {
         }
     }
 
+    fn save_cursor(&self, name: &str, seq: u64) -> Result<()> {
+        match self.call(Request::SaveCursor {
+            name: name.to_string(),
+            seq,
+        })? {
+            Response::Ok => Ok(()),
+            other => bail!("unexpected response: {other:?}"),
+        }
+    }
+
+    fn load_cursor(&self, name: &str) -> Result<Option<u64>> {
+        match self.call(Request::LoadCursor {
+            name: name.to_string(),
+        })? {
+            Response::Cursor(c) => Ok(c),
+            other => bail!("unexpected response: {other:?}"),
+        }
+    }
+
     fn now(&self) -> Result<u64> {
         match self.call(Request::Now)? {
             Response::Now(t) => Ok(t),

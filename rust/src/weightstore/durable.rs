@@ -1,0 +1,854 @@
+//! Durable weight store: a [`MemStore`] serving engine journaled to disk —
+//! the persistence layer the ROADMAP's production north star needs.  The
+//! paper's deployment (§4.2) kept the weight database in Redis; ours kept
+//! it in RAM only, so any db-server restart lost the whole table and every
+//! delta cursor, forcing an O(N) re-score.  [`DurableStore`] closes that
+//! gap.
+//!
+//! # Design
+//!
+//! * **Serving** is unchanged: reads (`fetch_weights`,
+//!   `fetch_weights_since`, `fetch_params`) go straight to the inner
+//!   [`MemStore`] and stay concurrent.  Mutations are serialized on the
+//!   journal lock: apply to the `MemStore` (claiming the write sequence),
+//!   then append one checksummed frame to the active log segment — the
+//!   frame *is* the wire-codec message ([`segment`]), so a journaled push
+//!   is byte-compatible with the delta a fetch would ship.
+//! * **Segments** (`seg-XXXXXXXX.log`) roll at
+//!   [`DurableOptions::segment_bytes`].  Every append is flushed to the
+//!   OS, so a process crash loses nothing;
+//!   [`DurableOptions::fsync`] additionally `fdatasync`s each append for
+//!   power-loss durability.
+//! * **Compaction** (threshold-triggered at
+//!   [`DurableOptions::compact_after_bytes`], or explicit via
+//!   [`DurableStore::compact`]): fold in-memory history up to the oldest
+//!   saved consumer cursor ([`MemStore::compact_before`] — the cursor
+//!   pins are the safety contract on
+//!   [`WeightStore::save_cursor`]), write a full-snapshot checkpoint
+//!   (`snap-XXXXXXXX.snap`, atomic tmp+rename+fsync), start a fresh
+//!   segment, and delete everything the snapshot supersedes.  Disk usage
+//!   is therefore bounded by snapshot size + `compact_after_bytes` +
+//!   the active segment, and `write_seqs` history is finally truncated.
+//! * **Recovery** ([`DurableStore::open`]): load the newest snapshot that
+//!   scans clean, replay every later segment in order, truncate a torn
+//!   final frame (the crash shape) instead of failing, and continue on a
+//!   fresh segment.  Write sequences, stamps, parameter state, the
+//!   compaction floor, saved consumer cursors and the store clock are all
+//!   reproduced bit-exactly, so surviving consumers keep fetching
+//!   *incrementally* across the restart — the whole point.
+//!
+//! # Snapshot format
+//!
+//! A snapshot is itself a frame file ([`segment`]): a [`SnapshotMeta`]
+//! header, a params frame, one cursor frame per saved consumer, then the
+//! full table as delta frames *grouped by write sequence* (ascending), so
+//! loading is exactly the replay path and per-entry sequences survive.
+//! After compaction most entries share the floor sequence, so the common
+//! shape is one big frame plus a short recent tail.
+
+use std::fs::{self, File, OpenOptions};
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use super::segment::{
+    self, append_record, scan_file, Record, SnapshotMeta, SEGMENT_MAGIC, SNAPSHOT_MAGIC,
+};
+use super::{MemStore, StoreStats, WeightDelta, WeightSnapshot, WeightStore};
+use crate::{log_info, log_warn};
+
+/// Entries per snapshot delta frame (keeps frames under the codec cap for
+/// any table size).
+const SNAP_CHUNK: usize = 1 << 20;
+
+/// Tuning knobs for [`DurableStore`].
+#[derive(Debug, Clone)]
+pub struct DurableOptions {
+    /// Seal + roll the active segment at this many bytes.
+    pub segment_bytes: u64,
+    /// Run the compactor once this many journal bytes accumulated since
+    /// the last snapshot (`0` = explicit [`DurableStore::compact`] only).
+    pub compact_after_bytes: u64,
+    /// `fdatasync` every append (power-loss durability).  Off by default:
+    /// appends are still flushed to the OS, which survives process
+    /// crashes — the shape the tests simulate.
+    pub fsync: bool,
+}
+
+impl Default for DurableOptions {
+    fn default() -> DurableOptions {
+        DurableOptions {
+            segment_bytes: 1 << 20,
+            compact_after_bytes: 8 << 20,
+            fsync: false,
+        }
+    }
+}
+
+struct LogState {
+    file: BufWriter<File>,
+    seg_index: u64,
+    seg_bytes: u64,
+    since_snapshot: u64,
+}
+
+/// The persistent [`WeightStore`] backend.  See the module docs.
+pub struct DurableStore {
+    mem: MemStore,
+    dir: PathBuf,
+    opts: DurableOptions,
+    init_weight: f64,
+    log: Mutex<LogState>,
+    /// Set when a journal append fails: the in-memory state is then ahead
+    /// of disk, so further mutations are refused rather than silently
+    /// widening the recovery gap.
+    wounded: AtomicBool,
+    compactions_total: AtomicU64,
+}
+
+impl DurableStore {
+    /// Initialise a fresh store at `dir` (created if missing; must not
+    /// already hold a durable store).
+    pub fn create(
+        dir: &Path,
+        n: usize,
+        init_weight: f64,
+        opts: DurableOptions,
+    ) -> Result<DurableStore> {
+        fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+        let existing = segment::list_numbered(dir, "snap-", ".snap")?;
+        anyhow::ensure!(
+            existing.is_empty(),
+            "{} already holds a durable store (snapshot {} present); use open",
+            dir.display(),
+            existing[0].0
+        );
+        // No snapshot ⇒ nothing here is durable yet: clear any debris a
+        // crash mid-create left behind (a bare segment, a half-written
+        // snapshot tmp) so `create_new` below cannot trip over it.
+        gc_below(dir, u64::MAX);
+        let mem = MemStore::new(n, init_weight);
+        let store = DurableStore {
+            mem,
+            dir: dir.to_path_buf(),
+            opts,
+            init_weight,
+            log: Mutex::new(open_segment(dir, 1)?),
+            wounded: AtomicBool::new(false),
+            compactions_total: AtomicU64::new(0),
+        };
+        // Checkpoint the initial state so `open` always has a snapshot to
+        // start from; cover = 1 means "replay segment 1 onwards".
+        store.write_checkpoint(1, store.mem.compact_floor())?;
+        Ok(store)
+    }
+
+    /// Recover a store previously created at `dir`: newest valid snapshot
+    /// + replay of the segment tail, truncating a torn final frame.
+    pub fn open(dir: &Path, opts: DurableOptions) -> Result<DurableStore> {
+        let snaps = segment::list_numbered(dir, "snap-", ".snap")?;
+        anyhow::ensure!(
+            !snaps.is_empty(),
+            "{} holds no snapshot — not a durable store (use create)",
+            dir.display()
+        );
+        // Newest snapshot that scans clean and complete wins.
+        let mut chosen: Option<(SnapshotMeta, Vec<Record>)> = None;
+        for (cover, path) in snaps.iter().rev() {
+            match scan_file(path, SNAPSHOT_MAGIC) {
+                Ok(scan) if !scan.torn => match scan.records.split_first() {
+                    Some((Record::Meta(meta), rest)) => {
+                        chosen = Some((meta.clone(), rest.to_vec()));
+                        break;
+                    }
+                    _ => log_warn!("db", "snapshot {cover} lacks a header; skipping"),
+                },
+                Ok(_) => log_warn!("db", "snapshot {cover} is torn; falling back"),
+                Err(e) => log_warn!("db", "snapshot {cover} unreadable ({e}); falling back"),
+            }
+        }
+        let (meta, records) = chosen.context("no valid snapshot found")?;
+        let mem = MemStore::new(meta.n as usize, meta.init_weight);
+        for rec in &records {
+            apply_record(&mem, rec, true)?;
+        }
+        mem.restore_floor(meta.floor);
+        mem.force_write_seq(meta.next_seq);
+        mem.advance_clock_to(meta.clock);
+
+        // Replay segments the snapshot does not cover, oldest first.  Only
+        // the FINAL segment may be torn (that is where a crash lands);
+        // damage anywhere earlier means real data loss and is an error.
+        let segs = segment::list_numbered(dir, "seg-", ".log")?;
+        let live: Vec<&(u64, PathBuf)> = segs.iter().filter(|(k, _)| *k >= meta.cover).collect();
+        let mut max_index = meta.cover.saturating_sub(1);
+        let mut replayed_bytes = 0u64;
+        for (pos, (k, path)) in live.iter().enumerate() {
+            let scan = scan_file(path, SEGMENT_MAGIC)?;
+            if scan.torn {
+                // A magic-level stub — the crash landed during segment
+                // creation, so the file never held a durable record — is
+                // recognised by the ACTUAL file size (not the valid
+                // prefix: a sealed segment whose first frame rotted also
+                // scans to zero records, but its on-disk length betrays
+                // it) AND by being the newest segment (creation stubs are
+                // by construction where the journal ends).  Deleting it
+                // is lossless — and required, or a later open would see a
+                // non-final torn segment and refuse to recover.  Any
+                // other tear away from the journal's end is real damage
+                // and stays a hard error.
+                if fs::metadata(path)?.len() < 8 && pos + 1 == live.len() {
+                    log_warn!("db", "removing torn segment-creation stub {}", path.display());
+                    let _ = fs::remove_file(path);
+                    max_index = max_index.max(*k);
+                    continue;
+                }
+                anyhow::ensure!(
+                    pos + 1 == live.len(),
+                    "corrupt frame mid-journal in {} (not the final segment)",
+                    path.display()
+                );
+                log_warn!(
+                    "db",
+                    "truncating torn tail of {} at byte {}",
+                    path.display(),
+                    scan.valid_len
+                );
+                let f = OpenOptions::new().write(true).open(path)?;
+                f.set_len(scan.valid_len)?;
+                let _ = f.sync_all();
+            }
+            for rec in &scan.records {
+                apply_record(&mem, rec, false)?;
+            }
+            replayed_bytes += scan.valid_len.saturating_sub(8);
+            max_index = max_index.max(*k);
+        }
+
+        let next_index = max_index + 1;
+        let store = DurableStore {
+            mem,
+            dir: dir.to_path_buf(),
+            init_weight: meta.init_weight,
+            log: Mutex::new(open_segment(dir, next_index)?),
+            opts,
+            wounded: AtomicBool::new(false),
+            compactions_total: AtomicU64::new(0),
+        };
+        store.log.lock().unwrap().since_snapshot = replayed_bytes;
+        // GC anything the chosen snapshot superseded (stray tmp files too).
+        gc_below(dir, meta.cover);
+        log_info!(
+            "db",
+            "recovered durable store at {}: n={} seq={} floor={} (snapshot {}, {} segment bytes replayed)",
+            dir.display(),
+            store.mem.n_examples(),
+            store.mem.write_seq(),
+            store.mem.compact_floor(),
+            meta.cover,
+            replayed_bytes
+        );
+        Ok(store)
+    }
+
+    /// [`DurableStore::open`] when `dir` holds a store (whose size must
+    /// match `n`), [`DurableStore::create`] otherwise.
+    pub fn open_or_create(
+        dir: &Path,
+        n: usize,
+        init_weight: f64,
+        opts: DurableOptions,
+    ) -> Result<DurableStore> {
+        let has_snapshot = dir.is_dir()
+            && !segment::list_numbered(dir, "snap-", ".snap")?.is_empty();
+        if has_snapshot {
+            let store = Self::open(dir, opts)?;
+            anyhow::ensure!(
+                store.mem.n_examples() == n,
+                "store at {} tracks {} examples, run needs {n}",
+                dir.display(),
+                store.mem.n_examples()
+            );
+            Ok(store)
+        } else {
+            Self::create(dir, n, init_weight, opts)
+        }
+    }
+
+    /// Directory this store persists into.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn n_examples(&self) -> usize {
+        self.mem.n_examples()
+    }
+
+    /// Current global write sequence (mirrors [`MemStore::write_seq`]).
+    pub fn write_seq(&self) -> u64 {
+        self.mem.write_seq()
+    }
+
+    /// Current compaction floor (mirrors [`MemStore::compact_floor`]).
+    pub fn compact_floor(&self) -> u64 {
+        self.mem.compact_floor()
+    }
+
+    /// Compactions run by this instance (the counter does not persist).
+    pub fn compactions(&self) -> u64 {
+        self.compactions_total.load(Ordering::Relaxed)
+    }
+
+    /// Total bytes currently on disk (segments + snapshots).
+    pub fn disk_bytes(&self) -> Result<u64> {
+        let mut total = 0u64;
+        for entry in fs::read_dir(&self.dir)? {
+            total += entry?.metadata()?.len();
+        }
+        Ok(total)
+    }
+
+    /// Fold history, checkpoint, and GC now (also runs automatically at
+    /// [`DurableOptions::compact_after_bytes`]).
+    pub fn compact(&self) -> Result<()> {
+        let mut log = self.log.lock().unwrap();
+        self.check_wounded()?;
+        self.compact_locked(&mut log)
+    }
+
+    fn check_wounded(&self) -> Result<()> {
+        anyhow::ensure!(
+            !self.wounded.load(Ordering::Acquire),
+            "durable store wounded by an earlier journal failure; reopen to recover"
+        );
+        Ok(())
+    }
+
+    /// Append `rec` to the active segment (flush-per-record; optional
+    /// fsync).  On failure the store is marked wounded: memory is ahead of
+    /// disk and further mutations would widen the gap.
+    fn append(&self, log: &mut LogState, rec: &Record) -> Result<()> {
+        let res = (|| -> Result<u64> {
+            let bytes = append_record(&mut log.file, rec)?;
+            log.file.flush()?;
+            if self.opts.fsync {
+                log.file.get_ref().sync_data()?;
+            }
+            Ok(bytes)
+        })();
+        match res {
+            Ok(b) => {
+                log.seg_bytes += b;
+                log.since_snapshot += b;
+                Ok(())
+            }
+            Err(e) => {
+                self.wounded.store(true, Ordering::Release);
+                Err(e.context("journal append failed; durable store wounded"))
+            }
+        }
+    }
+
+    /// Roll/compact housekeeping after a successful append.
+    fn after_append(&self, log: &mut LogState) -> Result<()> {
+        if log.seg_bytes >= self.opts.segment_bytes {
+            self.roll_segment(log)?;
+        }
+        if self.opts.compact_after_bytes > 0 && log.since_snapshot >= self.opts.compact_after_bytes
+        {
+            self.compact_locked(log)?;
+        }
+        Ok(())
+    }
+
+    fn roll_segment(&self, log: &mut LogState) -> Result<()> {
+        log.file.flush()?;
+        let _ = log.file.get_ref().sync_data();
+        let mut fresh = open_segment(&self.dir, log.seg_index + 1)?;
+        fresh.since_snapshot = log.since_snapshot;
+        *log = fresh;
+        Ok(())
+    }
+
+    /// The compactor.  Runs under the journal lock: writers are quiesced,
+    /// readers keep going against the [`MemStore`].
+    fn compact_locked(&self, log: &mut LogState) -> Result<()> {
+        // 1. Fold in-memory history up to the oldest saved consumer cursor
+        //    (the trait's cursor-safety contract).
+        let floor = self.mem.compact_before(u64::MAX);
+        // 2. Seal the active segment.
+        log.file.flush()?;
+        let _ = log.file.get_ref().sync_data();
+        // 3. Checkpoint everything after it.
+        let cover = log.seg_index + 1;
+        self.write_checkpoint(cover, floor)?;
+        // 4. Continue on a fresh segment; superseded files are garbage.
+        *log = open_segment(&self.dir, cover)?;
+        self.compactions_total.fetch_add(1, Ordering::Relaxed);
+        gc_below(&self.dir, cover);
+        Ok(())
+    }
+
+    /// Write `snap-{cover}.snap` atomically (tmp + fsync + rename) from
+    /// the current in-memory state.
+    fn write_checkpoint(&self, cover: u64, floor: u64) -> Result<()> {
+        let (snap, seqs) = self.mem.dump_with_seqs();
+        let (pv, pb) = self.mem.params_blob();
+        let meta = SnapshotMeta {
+            n: self.mem.n_examples() as u64,
+            init_weight: self.init_weight,
+            floor,
+            next_seq: self.mem.write_seq(),
+            clock: self.mem.now()?,
+            cover,
+        };
+        let tmp = self.dir.join(format!("snap-{cover:08}.tmp"));
+        let path = segment::snapshot_path(&self.dir, cover);
+        {
+            let file = File::create(&tmp).with_context(|| format!("creating {}", tmp.display()))?;
+            let mut w = BufWriter::new(file);
+            w.write_all(SNAPSHOT_MAGIC)?;
+            append_record(&mut w, &Record::Meta(meta))?;
+            append_record(&mut w, &Record::Params { version: pv, bytes: pb })?;
+            for (name, seq) in self.mem.cursors_vec() {
+                append_record(&mut w, &Record::Cursor { name, seq })?;
+            }
+            // Full table grouped by write sequence, ascending: loading is
+            // exactly the replay path and per-entry sequences survive.
+            let mut by_seq: std::collections::BTreeMap<u64, Vec<usize>> =
+                std::collections::BTreeMap::new();
+            for (i, &s) in seqs.iter().enumerate() {
+                by_seq.entry(s).or_default().push(i);
+            }
+            for (seq, idxs) in &by_seq {
+                for chunk in idxs.chunks(SNAP_CHUNK) {
+                    let mut d = WeightDelta {
+                        seq: *seq,
+                        n: snap.len() as u64,
+                        full: false,
+                        ..WeightDelta::default()
+                    };
+                    for &i in chunk {
+                        d.indices.push(i as u64);
+                        d.weights.push(snap.weights[i]);
+                        d.stamps.push(snap.stamps[i]);
+                        d.param_versions.push(snap.param_versions[i]);
+                    }
+                    append_record(&mut w, &Record::Delta(d))?;
+                }
+            }
+            w.flush()?;
+            w.get_ref().sync_all()?;
+        }
+        fs::rename(&tmp, &path)?;
+        if let Ok(d) = File::open(&self.dir) {
+            let _ = d.sync_all();
+        }
+        Ok(())
+    }
+}
+
+impl Drop for DurableStore {
+    fn drop(&mut self) {
+        if let Ok(mut log) = self.log.lock() {
+            let _ = log.file.flush();
+            let _ = log.file.get_ref().sync_data();
+        }
+    }
+}
+
+/// Replay one journaled/snapshot record into `mem`.  `in_snapshot`
+/// restricts the record mix: grad records never appear in a checkpoint.
+fn apply_record(mem: &MemStore, rec: &Record, in_snapshot: bool) -> Result<()> {
+    match rec {
+        Record::Delta(d) => {
+            mem.restore_delta(d)?;
+            if let Some(&max_stamp) = d.stamps.iter().max() {
+                mem.advance_clock_to(max_stamp);
+            }
+        }
+        Record::Params { version, bytes } => mem.restore_params(*version, bytes.clone()),
+        Record::Grad { scale, grad } => {
+            anyhow::ensure!(!in_snapshot, "grad record inside a snapshot");
+            mem.apply_grad(*scale, grad)
+                .context("replaying a journaled grad")?;
+        }
+        Record::Cursor { name, seq } => mem.restore_cursor(name.clone(), *seq),
+        Record::Meta(_) => anyhow::bail!("unexpected meta record"),
+    }
+    Ok(())
+}
+
+fn open_segment(dir: &Path, index: u64) -> Result<LogState> {
+    let path = segment::segment_path(dir, index);
+    let file = OpenOptions::new()
+        .create_new(true)
+        .write(true)
+        .open(&path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    w.write_all(SEGMENT_MAGIC)?;
+    w.flush()?;
+    Ok(LogState {
+        file: w,
+        seg_index: index,
+        seg_bytes: 8,
+        since_snapshot: 0,
+    })
+}
+
+/// Best-effort deletion of everything a snapshot at `cover` supersedes.
+fn gc_below(dir: &Path, cover: u64) {
+    let doomed = |list: Result<Vec<(u64, PathBuf)>>| -> Vec<PathBuf> {
+        list.map(|v| {
+            v.into_iter()
+                .filter(|(k, _)| *k < cover)
+                .map(|(_, p)| p)
+                .collect()
+        })
+        .unwrap_or_default()
+    };
+    let mut paths = doomed(segment::list_numbered(dir, "seg-", ".log"));
+    paths.extend(doomed(segment::list_numbered(dir, "snap-", ".snap")));
+    if let Ok(entries) = fs::read_dir(dir) {
+        for entry in entries.flatten() {
+            if entry.file_name().to_string_lossy().ends_with(".tmp") {
+                paths.push(entry.path());
+            }
+        }
+    }
+    for p in paths {
+        if let Err(e) = fs::remove_file(&p) {
+            log_warn!("db", "gc could not remove {}: {e}", p.display());
+        }
+    }
+}
+
+impl WeightStore for DurableStore {
+    fn push_params(&self, version: u64, bytes: Vec<u8>) -> Result<()> {
+        let mut log = self.log.lock().unwrap();
+        self.check_wounded()?;
+        self.mem.push_params(version, bytes.clone())?;
+        self.append(&mut log, &Record::Params { version, bytes })?;
+        self.after_append(&mut log)
+    }
+
+    fn fetch_params(&self, than: u64) -> Result<Option<(u64, Vec<u8>)>> {
+        self.mem.fetch_params(than)
+    }
+
+    fn params_version(&self) -> Result<u64> {
+        self.mem.params_version()
+    }
+
+    fn push_weights(&self, start: usize, weights: &[f32], param_version: u64) -> Result<()> {
+        let mut log = self.log.lock().unwrap();
+        self.check_wounded()?;
+        let claimed = self.mem.push_weights_seq(start, weights, param_version)?;
+        if let Some((seq, stamp)) = claimed {
+            let mut d = WeightDelta {
+                seq,
+                n: self.mem.n_examples() as u64,
+                full: false,
+                ..WeightDelta::default()
+            };
+            d.indices.reserve(weights.len());
+            d.weights.reserve(weights.len());
+            d.stamps.reserve(weights.len());
+            d.param_versions.reserve(weights.len());
+            for (i, &w) in weights.iter().enumerate() {
+                d.indices.push((start + i) as u64);
+                d.weights.push(w as f64);
+                d.stamps.push(stamp);
+                d.param_versions.push(param_version);
+            }
+            self.append(&mut log, &Record::Delta(d))?;
+            self.after_append(&mut log)?;
+        }
+        Ok(())
+    }
+
+    fn fetch_weights(&self) -> Result<WeightSnapshot> {
+        self.mem.fetch_weights()
+    }
+
+    fn fetch_weights_since(&self, seq: u64) -> Result<WeightDelta> {
+        self.mem.fetch_weights_since(seq)
+    }
+
+    fn apply_grad(&self, scale: f32, grad: &[f32]) -> Result<u64> {
+        let mut log = self.log.lock().unwrap();
+        self.check_wounded()?;
+        let v = self.mem.apply_grad(scale, grad)?;
+        self.append(
+            &mut log,
+            &Record::Grad {
+                scale,
+                grad: grad.to_vec(),
+            },
+        )?;
+        self.after_append(&mut log)?;
+        Ok(v)
+    }
+
+    fn save_cursor(&self, name: &str, seq: u64) -> Result<()> {
+        let mut log = self.log.lock().unwrap();
+        self.check_wounded()?;
+        self.mem.save_cursor(name, seq)?;
+        // Journal the clamped value actually stored.
+        let stored = self.mem.load_cursor(name)?.unwrap_or(seq);
+        self.append(
+            &mut log,
+            &Record::Cursor {
+                name: name.to_string(),
+                seq: stored,
+            },
+        )?;
+        self.after_append(&mut log)
+    }
+
+    fn load_cursor(&self, name: &str) -> Result<Option<u64>> {
+        self.mem.load_cursor(name)
+    }
+
+    fn now(&self) -> Result<u64> {
+        self.mem.now()
+    }
+
+    fn stats(&self) -> Result<StoreStats> {
+        self.mem.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct TempDir(PathBuf);
+
+    impl TempDir {
+        fn new(tag: &str) -> TempDir {
+            static NEXT: AtomicU64 = AtomicU64::new(0);
+            let k = NEXT.fetch_add(1, Ordering::Relaxed);
+            let path = std::env::temp_dir()
+                .join(format!("issgd-durable-{tag}-{}-{k}", std::process::id()));
+            let _ = fs::remove_dir_all(&path);
+            TempDir(path)
+        }
+    }
+
+    impl Drop for TempDir {
+        fn drop(&mut self) {
+            let _ = fs::remove_dir_all(&self.0);
+        }
+    }
+
+    fn opts_manual() -> DurableOptions {
+        DurableOptions {
+            segment_bytes: 1 << 20,
+            compact_after_bytes: 0,
+            fsync: false,
+        }
+    }
+
+    #[test]
+    fn state_survives_crash_and_reopen_bit_exactly() {
+        let dir = TempDir::new("roundtrip");
+        let store = DurableStore::create(&dir.0, 32, 1.0, opts_manual()).unwrap();
+        store.push_weights(3, &[2.0, 3.0, 4.0], 5).unwrap();
+        store.push_weights(20, &[9.0], 6).unwrap();
+        store.push_params(1, vec![0u8; 8]).unwrap();
+        store.apply_grad(0.5, &[2.0, -2.0]).unwrap();
+        store.save_cursor("master", store.write_seq()).unwrap();
+        let want_table = store.fetch_weights().unwrap();
+        let want_seq = store.write_seq();
+        let want_params = store.fetch_params(0).unwrap();
+        let want_now = store.now().unwrap();
+        drop(store); // crash: appends were already flushed per-record
+
+        let back = DurableStore::open(&dir.0, opts_manual()).unwrap();
+        // Stamps included: the journal reproduces entries exactly.
+        assert_eq!(back.fetch_weights().unwrap(), want_table);
+        assert_eq!(back.write_seq(), want_seq);
+        assert_eq!(back.fetch_params(0).unwrap(), want_params);
+        assert_eq!(back.load_cursor("master").unwrap(), Some(want_seq));
+        // The recovered clock never runs backwards past old stamps.
+        let max_stamp = want_table.stamps.iter().copied().max().unwrap();
+        assert!(back.now().unwrap() >= want_now.min(max_stamp));
+        // A consumer at its saved cursor continues incrementally.
+        let d = back.fetch_weights_since(want_seq).unwrap();
+        assert!(!d.full);
+        assert!(d.is_empty());
+        // And the store keeps working.
+        back.push_weights(0, &[7.0], 9).unwrap();
+        let d = back.fetch_weights_since(want_seq).unwrap();
+        assert_eq!(d.indices, vec![0]);
+        assert_eq!(d.weights, vec![7.0]);
+    }
+
+    #[test]
+    fn reopen_after_reopen_is_stable() {
+        let dir = TempDir::new("twice");
+        let store = DurableStore::create(&dir.0, 8, 0.5, opts_manual()).unwrap();
+        store.push_weights(1, &[3.0], 1).unwrap();
+        drop(store);
+        let a = DurableStore::open(&dir.0, opts_manual()).unwrap();
+        a.push_weights(2, &[4.0], 2).unwrap();
+        let want = a.fetch_weights().unwrap();
+        let seq = a.write_seq();
+        drop(a);
+        let b = DurableStore::open(&dir.0, opts_manual()).unwrap();
+        assert_eq!(b.fetch_weights().unwrap(), want);
+        assert_eq!(b.write_seq(), seq);
+    }
+
+    #[test]
+    fn compaction_bounds_files_and_keeps_pinned_consumers_incremental() {
+        let dir = TempDir::new("compact");
+        let opts = DurableOptions {
+            segment_bytes: 1 << 12,
+            compact_after_bytes: 1 << 13,
+            fsync: false,
+        };
+        let store = DurableStore::create(&dir.0, 64, 1.0, opts).unwrap();
+        let mut cursor = store.fetch_weights_since(0).unwrap().seq;
+        let mut mirror = store.fetch_weights().unwrap();
+        for round in 0..400u64 {
+            let vals: Vec<f32> = (0..8).map(|i| (round + i) as f32 + 1.0).collect();
+            store.push_weights((round as usize * 8) % 56, &vals, round + 1).unwrap();
+            let d = store.fetch_weights_since(cursor).unwrap();
+            assert!(!d.full, "pinned consumer demoted to full at round {round}");
+            d.apply_to(&mut mirror).unwrap();
+            cursor = d.seq;
+            store.save_cursor("me", cursor).unwrap();
+        }
+        assert!(store.compactions() >= 2, "compactor never triggered");
+        assert!(store.compact_floor() > 0);
+        assert_eq!(mirror, store.fetch_weights().unwrap());
+        // GC really deletes: the directory holds the latest snapshot plus
+        // a small number of live segments, not 400 rounds of history.
+        let files = fs::read_dir(&dir.0).unwrap().count();
+        assert!(files <= 6, "GC left {files} files behind");
+        // Recovery from the compacted state still works.
+        let want = store.fetch_weights().unwrap();
+        drop(store);
+        let back = DurableStore::open(&dir.0, opts_manual()).unwrap();
+        assert_eq!(back.fetch_weights().unwrap(), want);
+        assert_eq!(back.load_cursor("me").unwrap(), Some(cursor));
+        assert!(!back.fetch_weights_since(cursor).unwrap().full);
+    }
+
+    #[test]
+    fn explicit_compact_folds_below_oldest_pin() {
+        let dir = TempDir::new("pin");
+        let store = DurableStore::create(&dir.0, 16, 1.0, opts_manual()).unwrap();
+        for i in 0..8 {
+            store.push_weights(i, &[i as f32 + 2.0], 1).unwrap();
+        }
+        store.save_cursor("slow", 4).unwrap();
+        store.save_cursor("fast", store.write_seq()).unwrap();
+        store.compact().unwrap();
+        assert_eq!(store.compact_floor(), 4);
+        // The slow consumer still gets precise deltas from its pin.
+        let d = store.fetch_weights_since(4).unwrap();
+        assert!(!d.full);
+        assert_eq!(d.indices, vec![3, 4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn create_refuses_an_existing_store_and_open_refuses_an_empty_dir() {
+        let dir = TempDir::new("guard");
+        let store = DurableStore::create(&dir.0, 4, 1.0, opts_manual()).unwrap();
+        drop(store);
+        assert!(DurableStore::create(&dir.0, 4, 1.0, opts_manual()).is_err());
+        let empty = TempDir::new("empty");
+        fs::create_dir_all(&empty.0).unwrap();
+        assert!(DurableStore::open(&empty.0, opts_manual()).is_err());
+    }
+
+    #[test]
+    fn open_or_create_checks_the_table_size() {
+        let dir = TempDir::new("size");
+        let store = DurableStore::open_or_create(&dir.0, 8, 1.0, opts_manual()).unwrap();
+        store.push_weights(0, &[2.0], 1).unwrap();
+        drop(store);
+        assert!(DurableStore::open_or_create(&dir.0, 9, 1.0, opts_manual()).is_err());
+        let back = DurableStore::open_or_create(&dir.0, 8, 1.0, opts_manual()).unwrap();
+        assert_eq!(back.fetch_weights().unwrap().weights[0], 2.0);
+    }
+
+    #[test]
+    fn torn_final_frame_is_truncated_on_open() {
+        let dir = TempDir::new("torn");
+        let store = DurableStore::create(&dir.0, 8, 1.0, opts_manual()).unwrap();
+        store.push_weights(0, &[5.0], 1).unwrap();
+        store.push_weights(1, &[6.0], 2).unwrap();
+        drop(store);
+        // Append half a frame header to the active segment: the classic
+        // crash-mid-append shape.
+        let segs = segment::list_numbered(&dir.0, "seg-", ".log").unwrap();
+        let (_, last) = segs.last().unwrap();
+        let mut f = OpenOptions::new().append(true).open(last).unwrap();
+        f.write_all(&[0xAB, 0xCD, 0xEF]).unwrap();
+        drop(f);
+        let back = DurableStore::open(&dir.0, opts_manual()).unwrap();
+        let snap = back.fetch_weights().unwrap();
+        assert_eq!(snap.weights[0], 5.0);
+        assert_eq!(snap.weights[1], 6.0);
+        // The tear is gone from disk: another open replays cleanly.
+        drop(back);
+        let again = DurableStore::open(&dir.0, opts_manual()).unwrap();
+        assert_eq!(again.fetch_weights().unwrap(), snap);
+    }
+
+    #[test]
+    fn magic_level_stub_does_not_brick_later_reopens() {
+        // Crash DURING segment creation: the newest segment is shorter
+        // than its magic.  The first reopen must absorb that; the second
+        // reopen must not refuse recovery because a non-final torn stub
+        // is sitting mid-journal (regression: recovery used to truncate
+        // the stub to zero bytes and keep it forever).
+        let dir = TempDir::new("stub");
+        let store = DurableStore::create(&dir.0, 8, 1.0, opts_manual()).unwrap();
+        store.push_weights(0, &[5.0], 1).unwrap();
+        let want = store.fetch_weights().unwrap();
+        drop(store);
+        // Simulate the torn-creation stub as the newest segment.
+        let segs = segment::list_numbered(&dir.0, "seg-", ".log").unwrap();
+        let (top, _) = segs.last().unwrap();
+        std::fs::write(segment::segment_path(&dir.0, top + 1), [0x49u8, 0x53]).unwrap();
+        let back = DurableStore::open(&dir.0, opts_manual()).unwrap();
+        assert_eq!(back.fetch_weights().unwrap(), want);
+        back.push_weights(1, &[6.0], 2).unwrap();
+        let want = back.fetch_weights().unwrap();
+        drop(back);
+        // Second reopen: the stub must be gone, recovery clean.
+        let again = DurableStore::open(&dir.0, opts_manual()).unwrap();
+        assert_eq!(again.fetch_weights().unwrap(), want);
+        for (_, path) in segment::list_numbered(&dir.0, "seg-", ".log").unwrap() {
+            assert!(std::fs::metadata(&path).unwrap().len() >= 8, "stub survived recovery");
+        }
+    }
+
+    #[test]
+    fn grad_replay_reproduces_parameters() {
+        let dir = TempDir::new("grad");
+        let store = DurableStore::create(&dir.0, 4, 1.0, opts_manual()).unwrap();
+        let mut blob = Vec::new();
+        for v in [1.0f32, 2.0] {
+            blob.extend(v.to_le_bytes());
+        }
+        store.push_params(1, blob).unwrap();
+        store.apply_grad(0.25, &[4.0, -4.0]).unwrap();
+        store.apply_grad(0.25, &[4.0, -4.0]).unwrap();
+        let want = store.fetch_params(0).unwrap().unwrap();
+        assert_eq!(want.0, 3);
+        drop(store);
+        let back = DurableStore::open(&dir.0, opts_manual()).unwrap();
+        assert_eq!(back.fetch_params(0).unwrap().unwrap(), want);
+        assert_eq!(back.params_version().unwrap(), 3);
+    }
+}

@@ -353,6 +353,20 @@ impl WeightStore for FaultyStore {
         self.inner.apply_grad(scale, grad)
     }
 
+    fn save_cursor(&self, name: &str, seq: u64) -> Result<()> {
+        self.tick();
+        // Fail BEFORE the inner call: an injected failure must leave the
+        // saved pin untouched (callers re-save on their next sync).
+        self.maybe_fail("save_cursor")?;
+        self.inner.save_cursor(name, seq)
+    }
+
+    fn load_cursor(&self, name: &str) -> Result<Option<u64>> {
+        self.tick();
+        self.maybe_fail("load_cursor")?;
+        self.inner.load_cursor(name)
+    }
+
     fn now(&self) -> Result<u64> {
         Ok(self.clock.now())
     }

@@ -18,6 +18,26 @@
 //!   transient errors, latency, and delta withholding/reordering, so the
 //!   staleness regimes the paper argues about are *testable*, not just
 //!   runnable.
+//! * [`durable::DurableStore`] — the persistent backend: a [`MemStore`]
+//!   serving engine journaled to an append-only segment log with periodic
+//!   full-snapshot checkpoints, threshold-triggered compaction/GC, and
+//!   torn-tail crash recovery.  Disk frames reuse the wire codec
+//!   ([`protocol`]), so disk and network stay one format.
+//!
+//! # Backend matrix
+//!
+//! | backend                | transport   | durability        | concurrency                                   |
+//! |------------------------|-------------|-------------------|-----------------------------------------------|
+//! | [`MemStore`]           | in-process  | none (RAM only)   | striped shard `RwLock`s, concurrent push/fetch |
+//! | [`client::Client`]     | TCP         | that of the server| one in-flight request per client handle        |
+//! | [`faulty::FaultyStore`]| decorator   | that of the inner | that of the inner (RNG under a mutex)          |
+//! | [`durable::DurableStore`] | in-process | crash-consistent journal + snapshots | reads concurrent (inner `MemStore`), writes serialized on the journal lock |
+//!
+//! All four implement the same [`WeightStore`] trait, so every topology
+//! (master/worker sim + live, peer sim + live, remote TCP deployments)
+//! composes with every backend — including `FaultyStore` over
+//! `DurableStore` for chaos-recovery tests.  The on-disk segment/snapshot
+//! format is documented in [`durable`].
 //!
 //! # Delta / sequence semantics
 //!
@@ -44,12 +64,16 @@
 //!   an entry that races past the cursor may be delivered twice — applying
 //!   it twice is harmless.  Replaying deltas from any cursor onto the
 //!   snapshot taken at that cursor reconstructs the current table exactly.
-//! * **Full fallback.**  `seq == 0` (a fresh consumer) or a cursor from
-//!   the future (a consumer of a restarted store) returns the entire
-//!   table with `delta.full == true`.  The initial table state carries
-//!   write sequence 1, so a consumer that synced a fresh store holds
-//!   cursor 1 — never the ambiguous 0 — and all later fetches are
-//!   incremental.
+//! * **Full fallback.**  `seq == 0` (a fresh consumer), a cursor from
+//!   the future (a consumer of a restarted in-memory store), or a cursor
+//!   below the **compaction floor** (history folded away by
+//!   [`MemStore::compact_before`]) returns the entire table with
+//!   `delta.full == true`.  The initial table state carries write
+//!   sequence 1, so a consumer that synced a fresh store holds cursor 1 —
+//!   never the ambiguous 0 — and all later fetches are incremental.
+//!   Consumers protect themselves from the compaction fallback by saving
+//!   their cursor ([`WeightStore::save_cursor`]): compaction never folds
+//!   at or above the oldest saved cursor.
 //!
 //! The master's per-step proposal maintenance therefore moves O(changes)
 //! bytes and does O(changes · log N) sampler updates, instead of cloning
@@ -63,10 +87,13 @@
 //! version mode (exact-mode sanity checks).
 
 pub mod client;
+pub mod durable;
 pub mod faulty;
 pub mod protocol;
+pub mod segment;
 pub mod server;
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, RwLock};
 use std::time::Instant;
@@ -253,6 +280,29 @@ pub trait WeightStore: Send + Sync {
     /// parameters have been published or sizes mismatch.
     fn apply_grad(&self, scale: f32, grad: &[f32]) -> Result<u64>;
 
+    /// Persist/advance a named consumer cursor.
+    ///
+    /// # Cursor-safety contract (compaction)
+    ///
+    /// Saved cursors are **compaction pins**: a store that truncates its
+    /// write-sequence history ([`MemStore::compact_before`], the durable
+    /// compactor) never folds history at or above the *oldest* saved
+    /// cursor.  A consumer that saves its cursor after every successful
+    /// absorb is therefore guaranteed incremental (`full == false`) deltas
+    /// for as long as it lives — and, on a durable backend, across store
+    /// restarts too.  A consumer that never saves stays *correct* but
+    /// unprotected: compaction may advance past its private cursor, and
+    /// its next fetch degrades to the full-table fallback.  Saving a
+    /// `seq` beyond the current write sequence clamps to the current
+    /// sequence.
+    fn save_cursor(&self, name: &str, seq: u64) -> Result<()>;
+
+    /// Last saved cursor for `name` (`None` = unknown consumer) — the
+    /// crash-resume entry point: a restarted consumer that checkpointed
+    /// its own mirror can continue incrementally from here instead of
+    /// paying an O(N) resync.
+    fn load_cursor(&self, name: &str) -> Result<Option<u64>>;
+
     /// Store-clock in nanoseconds (monotonic, starts near 0).
     fn now(&self) -> Result<u64>;
 
@@ -294,6 +344,16 @@ pub struct MemStore {
     n: usize,
     /// Global write-sequence counter; claimed under a shard's write lock.
     next_seq: AtomicU64,
+    /// Named consumer cursors ([`WeightStore::save_cursor`]): compaction
+    /// pins + crash-resume state.  Also serializes compactions.
+    cursors: Mutex<BTreeMap<String, u64>>,
+    /// Write sequences `< compact_floor` have been folded together by
+    /// [`MemStore::compact_before`]; a fetch cursor below the floor can
+    /// only be served the full table.
+    compact_floor: AtomicU64,
+    /// Added to the elapsed-time clock so a recovered durable store keeps
+    /// `now()` (and thus stamps) monotonic across restarts.
+    clock_offset: AtomicU64,
     start: Instant,
     param_pushes: AtomicU64,
     param_fetches: AtomicU64,
@@ -337,6 +397,9 @@ impl MemStore {
             chunk,
             n,
             next_seq: AtomicU64::new(1),
+            cursors: Mutex::new(BTreeMap::new()),
+            compact_floor: AtomicU64::new(0),
+            clock_offset: AtomicU64::new(0),
             start: Instant::now(),
             param_pushes: AtomicU64::new(0),
             param_fetches: AtomicU64::new(0),
@@ -356,6 +419,223 @@ impl MemStore {
     /// Current global write sequence (diagnostics/tests).
     pub fn write_seq(&self) -> u64 {
         self.next_seq.load(Ordering::Acquire)
+    }
+
+    /// Oldest saved consumer cursor — the compaction pin (`None` when no
+    /// consumer ever saved one).
+    pub fn oldest_cursor(&self) -> Option<u64> {
+        self.cursors.lock().unwrap().values().min().copied()
+    }
+
+    /// Write sequences below this value have been folded together by
+    /// [`MemStore::compact_before`]; fetch cursors below it fall back to
+    /// the full table.
+    pub fn compact_floor(&self) -> u64 {
+        self.compact_floor.load(Ordering::Acquire)
+    }
+
+    /// Truncate write-sequence history below
+    /// `min(limit, oldest saved cursor, current write sequence)`: every
+    /// entry older than that horizon is re-tagged *at* the horizon, so the
+    /// distinct-sequence history a persistent backend must retain shrinks
+    /// to the span live consumers can actually ask about (see
+    /// [`WeightStore::save_cursor`] for the safety contract).  Returns the
+    /// new floor; the floor never moves backwards.  The durable compactor
+    /// calls this before every snapshot — it is what finally lets
+    /// `write_seqs` history be truncated on disk as well as in memory.
+    pub fn compact_before(&self, limit: u64) -> u64 {
+        // Serialize compactions on the cursor lock; pins can be added or
+        // advanced concurrently, but a pin present *before* the fold
+        // started is honoured, which is all the contract promises.
+        let cursors = self.cursors.lock().unwrap();
+        let pin = cursors.values().min().copied().unwrap_or(u64::MAX);
+        let target = limit.min(pin).min(self.next_seq.load(Ordering::Acquire));
+        let old = self.compact_floor.load(Ordering::Acquire);
+        if target <= old {
+            return old;
+        }
+        // Publish the floor FIRST: a reader whose cursor is below the new
+        // floor immediately degrades to full fetches, so the per-entry
+        // re-tagging below can never hide a write from it.
+        self.compact_floor.store(target, Ordering::Release);
+        for lock in &self.shards {
+            let mut sh = lock.write().unwrap();
+            for s in sh.write_seqs.iter_mut() {
+                if *s < target {
+                    *s = target;
+                }
+            }
+            sh.max_seq = sh.max_seq.max(target);
+        }
+        target
+    }
+
+    // -- durable-backend plumbing (crate-internal) --------------------------
+
+    /// Overwrite entries with explicit sequence/stamp/version values — the
+    /// durable recovery path: replaying journal frames must reproduce the
+    /// pre-crash table bit-exactly (write sequences and stamps included),
+    /// never re-stamp it.
+    pub(crate) fn restore_delta(&self, d: &WeightDelta) -> Result<()> {
+        anyhow::ensure!(
+            d.n as usize == self.n,
+            "restore frame tracks {} entries, store holds {}",
+            d.n,
+            self.n
+        );
+        anyhow::ensure!(
+            d.indices.len() == d.weights.len()
+                && d.weights.len() == d.stamps.len()
+                && d.stamps.len() == d.param_versions.len(),
+            "restore frame columns disagree on length"
+        );
+        for &idx in &d.indices {
+            anyhow::ensure!((idx as usize) < self.n, "restore index {idx} out of bounds");
+        }
+        for lock in &self.shards {
+            let mut sh = lock.write().unwrap();
+            let base = sh.base;
+            let len = sh.weights.len();
+            let mut touched = false;
+            for (k, &idx) in d.indices.iter().enumerate() {
+                let i = idx as usize;
+                if i < base || i >= base + len {
+                    continue;
+                }
+                let j = i - base;
+                sh.weights[j] = d.weights[k];
+                sh.stamps[j] = d.stamps[k];
+                sh.param_versions[j] = d.param_versions[k];
+                sh.write_seqs[j] = d.seq;
+                touched = true;
+            }
+            if touched {
+                sh.max_seq = sh.max_seq.max(d.seq);
+            }
+        }
+        self.next_seq.fetch_max(d.seq, Ordering::AcqRel);
+        Ok(())
+    }
+
+    /// Set the parameter slot directly (recovery replay: last record wins,
+    /// no monotonicity check).
+    pub(crate) fn restore_params(&self, version: u64, bytes: Vec<u8>) {
+        let mut slot = self.params.lock().unwrap();
+        slot.version = version;
+        slot.bytes = bytes;
+    }
+
+    pub(crate) fn restore_cursor(&self, name: String, seq: u64) {
+        self.cursors.lock().unwrap().insert(name, seq);
+    }
+
+    pub(crate) fn restore_floor(&self, floor: u64) {
+        self.compact_floor.fetch_max(floor, Ordering::AcqRel);
+    }
+
+    pub(crate) fn force_write_seq(&self, seq: u64) {
+        self.next_seq.fetch_max(seq, Ordering::AcqRel);
+    }
+
+    /// Make [`WeightStore::now`] return at least `ns` from here on — a
+    /// recovered store must keep stamps monotonic across the restart.
+    pub(crate) fn advance_clock_to(&self, ns: u64) {
+        self.clock_offset.fetch_max(ns, Ordering::AcqRel);
+    }
+
+    /// Point-in-time copy of the full table *including write sequences*
+    /// (all shard read locks held, like `fetch_weights`) — the snapshot
+    /// writer's input.
+    pub(crate) fn dump_with_seqs(&self) -> (WeightSnapshot, Vec<u64>) {
+        let guards: Vec<_> = self.shards.iter().map(|l| l.read().unwrap()).collect();
+        let mut snap = WeightSnapshot {
+            weights: Vec::with_capacity(self.n),
+            stamps: Vec::with_capacity(self.n),
+            param_versions: Vec::with_capacity(self.n),
+        };
+        let mut seqs = Vec::with_capacity(self.n);
+        for sh in &guards {
+            snap.weights.extend_from_slice(&sh.weights);
+            snap.stamps.extend_from_slice(&sh.stamps);
+            snap.param_versions.extend_from_slice(&sh.param_versions);
+            seqs.extend_from_slice(&sh.write_seqs);
+        }
+        (snap, seqs)
+    }
+
+    /// Current parameter slot (version, blob copy) — snapshot writer input.
+    pub(crate) fn params_blob(&self) -> (u64, Vec<u8>) {
+        let slot = self.params.lock().unwrap();
+        (slot.version, slot.bytes.clone())
+    }
+
+    /// All saved consumer cursors — snapshot writer input.
+    pub(crate) fn cursors_vec(&self) -> Vec<(String, u64)> {
+        self.cursors
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), *v))
+            .collect()
+    }
+
+    /// Claim-and-write like [`WeightStore::push_weights`], returning the
+    /// claimed `(write_seq, stamp)` (`None` for an empty run) — the
+    /// durable journal needs both to record the exact entry state this
+    /// push created.
+    pub(crate) fn push_weights_seq(
+        &self,
+        start: usize,
+        weights: &[f32],
+        param_version: u64,
+    ) -> Result<Option<(u64, u64)>> {
+        anyhow::ensure!(
+            start + weights.len() <= self.n,
+            "weight range {}..{} out of bounds (n = {})",
+            start,
+            start + weights.len(),
+            self.n
+        );
+        // Validate before taking any lock: a bad value must not leave a
+        // half-applied run behind.
+        for (i, &w) in weights.iter().enumerate() {
+            anyhow::ensure!(w.is_finite() && w >= 0.0, "weight {w} invalid at {}", start + i);
+        }
+        let now = self.now()?;
+        let mut claimed = None;
+        if !weights.is_empty() {
+            let end = start + weights.len();
+            // Hold EVERY touched shard's write lock for the whole run
+            // (ascending order, so writers can't deadlock each other or
+            // the all-shards snapshot reader): a push is atomic — no
+            // reader observes half of it — and one sequence value covers
+            // it.  Claiming under the locks keeps the no-lost-updates
+            // guarantee: a reader that loaded a cursor ≥ `seq` blocks on
+            // these shards until the entries below are visible.
+            let first = start / self.chunk;
+            let last = (end - 1) / self.chunk;
+            let mut guards: Vec<_> = (first..=last)
+                .map(|s| self.shards[s].write().unwrap())
+                .collect();
+            let seq = self.next_seq.fetch_add(1, Ordering::AcqRel) + 1;
+            for sh in guards.iter_mut() {
+                let lo = start.max(sh.base);
+                let hi = end.min(sh.base + sh.weights.len());
+                for j in lo..hi {
+                    let k = j - sh.base;
+                    sh.weights[k] = weights[j - start] as f64;
+                    sh.stamps[k] = now;
+                    sh.param_versions[k] = param_version;
+                    sh.write_seqs[k] = seq;
+                }
+                sh.max_seq = sh.max_seq.max(seq);
+            }
+            claimed = Some((seq, now));
+        }
+        self.weight_pushes.fetch_add(1, Ordering::Relaxed);
+        self.weights_written
+            .fetch_add(weights.len() as u64, Ordering::Relaxed);
+        Ok(claimed)
     }
 }
 
@@ -389,51 +669,7 @@ impl WeightStore for MemStore {
     }
 
     fn push_weights(&self, start: usize, weights: &[f32], param_version: u64) -> Result<()> {
-        anyhow::ensure!(
-            start + weights.len() <= self.n,
-            "weight range {}..{} out of bounds (n = {})",
-            start,
-            start + weights.len(),
-            self.n
-        );
-        // Validate before taking any lock: a bad value must not leave a
-        // half-applied run behind.
-        for (i, &w) in weights.iter().enumerate() {
-            anyhow::ensure!(w.is_finite() && w >= 0.0, "weight {w} invalid at {}", start + i);
-        }
-        let now = self.now()?;
-        if !weights.is_empty() {
-            let end = start + weights.len();
-            // Hold EVERY touched shard's write lock for the whole run
-            // (ascending order, so writers can't deadlock each other or
-            // the all-shards snapshot reader): a push is atomic — no
-            // reader observes half of it — and one sequence value covers
-            // it.  Claiming under the locks keeps the no-lost-updates
-            // guarantee: a reader that loaded a cursor ≥ `seq` blocks on
-            // these shards until the entries below are visible.
-            let first = start / self.chunk;
-            let last = (end - 1) / self.chunk;
-            let mut guards: Vec<_> = (first..=last)
-                .map(|s| self.shards[s].write().unwrap())
-                .collect();
-            let seq = self.next_seq.fetch_add(1, Ordering::AcqRel) + 1;
-            for sh in guards.iter_mut() {
-                let lo = start.max(sh.base);
-                let hi = end.min(sh.base + sh.weights.len());
-                for j in lo..hi {
-                    let k = j - sh.base;
-                    sh.weights[k] = weights[j - start] as f64;
-                    sh.stamps[k] = now;
-                    sh.param_versions[k] = param_version;
-                    sh.write_seqs[k] = seq;
-                }
-                sh.max_seq = sh.max_seq.max(seq);
-            }
-        }
-        self.weight_pushes.fetch_add(1, Ordering::Relaxed);
-        self.weights_written
-            .fetch_add(weights.len() as u64, Ordering::Relaxed);
-        Ok(())
+        self.push_weights_seq(start, weights, param_version).map(|_| ())
     }
 
     fn fetch_weights(&self) -> Result<WeightSnapshot> {
@@ -462,9 +698,13 @@ impl WeightStore for MemStore {
     fn fetch_weights_since(&self, seq: u64) -> Result<WeightDelta> {
         // Cursor FIRST, scan second: writes sequenced at or below the
         // cursor are guaranteed visible to the scan (see module docs);
-        // writes racing past it are at worst re-delivered next time.
+        // writes racing past it are at worst re-delivered next time.  A
+        // caller cursor below the compaction floor can no longer be served
+        // precisely (history below the floor has been folded together) and
+        // falls back to the full table.
         let cursor = self.next_seq.load(Ordering::Acquire);
-        let full = seq == 0 || seq > cursor;
+        let floor = self.compact_floor.load(Ordering::Acquire);
+        let full = seq == 0 || seq > cursor || seq < floor;
         let mut delta = WeightDelta {
             seq: cursor,
             n: self.n as u64,
@@ -510,8 +750,19 @@ impl WeightStore for MemStore {
         Ok(slot.version)
     }
 
+    fn save_cursor(&self, name: &str, seq: u64) -> Result<()> {
+        anyhow::ensure!(!name.is_empty(), "cursor name must be non-empty");
+        let clamped = seq.min(self.next_seq.load(Ordering::Acquire));
+        self.cursors.lock().unwrap().insert(name.to_string(), clamped);
+        Ok(())
+    }
+
+    fn load_cursor(&self, name: &str) -> Result<Option<u64>> {
+        Ok(self.cursors.lock().unwrap().get(name).copied())
+    }
+
     fn now(&self) -> Result<u64> {
-        Ok(self.start.elapsed().as_nanos() as u64)
+        Ok(self.clock_offset.load(Ordering::Acquire) + self.start.elapsed().as_nanos() as u64)
     }
 
     fn stats(&self) -> Result<StoreStats> {
@@ -801,6 +1052,113 @@ mod tests {
         bad_full.n = 2;
         assert!(bad_full.apply_to(&mut snap).is_err());
         assert_eq!(snap, before);
+    }
+
+    // -- cursors + compaction ----------------------------------------------
+
+    #[test]
+    fn cursors_save_load_and_clamp() {
+        let s = MemStore::new(4, 1.0);
+        assert_eq!(s.load_cursor("master").unwrap(), None);
+        s.save_cursor("master", 1).unwrap();
+        assert_eq!(s.load_cursor("master").unwrap(), Some(1));
+        // A cursor from the future clamps to the current write sequence.
+        s.save_cursor("master", u64::MAX).unwrap();
+        assert_eq!(s.load_cursor("master").unwrap(), Some(s.write_seq()));
+        assert!(s.save_cursor("", 0).is_err());
+        assert_eq!(s.oldest_cursor(), Some(s.write_seq()));
+    }
+
+    #[test]
+    fn compact_before_respects_the_oldest_pin() {
+        let s = MemStore::new(10, 1.0);
+        for i in 0..6 {
+            s.push_weights(i, &[i as f32 + 2.0], 1).unwrap();
+        }
+        let head = s.write_seq(); // 7: init + 6 pushes
+        s.save_cursor("slow", 3).unwrap();
+        s.save_cursor("fast", head).unwrap();
+        // The fold clamps at the slowest consumer, not the requested limit.
+        assert_eq!(s.compact_before(u64::MAX), 3);
+        assert_eq!(s.compact_floor(), 3);
+        // A consumer at the pin keeps incremental service and misses
+        // nothing: entries 3.. (seqs 4..) are still distinguishable.
+        let d = s.fetch_weights_since(3).unwrap();
+        assert!(!d.full);
+        assert_eq!(d.indices, vec![2, 3, 4, 5]);
+        // A cursor below the floor degrades to the full-table fallback.
+        let d = s.fetch_weights_since(2).unwrap();
+        assert!(d.full);
+        assert_eq!(d.len(), 10);
+        // The floor never moves backwards.
+        assert_eq!(s.compact_before(1), 3);
+    }
+
+    #[test]
+    fn compaction_folds_history_but_loses_no_write() {
+        let s = MemStore::new(20, 0.5);
+        let d0 = s.fetch_weights_since(0).unwrap();
+        let mut mirror = d0.to_snapshot().unwrap();
+        let mut cursor = d0.seq;
+        for round in 0..12u64 {
+            s.push_weights((round as usize * 3) % 18, &[round as f32 + 1.0, 9.0], round + 1)
+                .unwrap();
+            if round == 5 {
+                // Mid-stream fold up to our own saved cursor.
+                s.save_cursor("me", cursor).unwrap();
+                s.compact_before(u64::MAX);
+            }
+        }
+        let d = s.fetch_weights_since(cursor).unwrap();
+        d.apply_to(&mut mirror).unwrap();
+        assert_eq!(mirror, s.fetch_weights().unwrap());
+    }
+
+    #[test]
+    fn compact_with_no_pins_folds_everything() {
+        let s = MemStore::new(4, 1.0);
+        s.push_weights(0, &[3.0], 1).unwrap();
+        let head = s.write_seq();
+        assert_eq!(s.compact_before(u64::MAX), head);
+        // Unpinned consumers fall back to full...
+        assert!(s.fetch_weights_since(1).unwrap().full);
+        // ...but a consumer exactly at the head stays incremental.
+        let d = s.fetch_weights_since(head).unwrap();
+        assert!(!d.full);
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn restore_delta_reproduces_exact_entry_state() {
+        let s = MemStore::new(10, 1.0);
+        let d = WeightDelta {
+            seq: 9,
+            n: 10,
+            full: false,
+            indices: vec![2, 7],
+            weights: vec![5.0, 6.0],
+            stamps: vec![111, 222],
+            param_versions: vec![3, 4],
+        };
+        s.restore_delta(&d).unwrap();
+        let snap = s.fetch_weights().unwrap();
+        assert_eq!(snap.weights[2], 5.0);
+        assert_eq!(snap.stamps[7], 222);
+        assert_eq!(snap.param_versions[2], 3);
+        assert_eq!(s.write_seq(), 9);
+        // The restored sequence is visible to delta fetches.
+        let got = s.fetch_weights_since(8).unwrap();
+        assert_eq!(got.indices, vec![2, 7]);
+        // Bad frames are rejected wholesale.
+        let bad = WeightDelta { n: 11, ..d.clone() };
+        assert!(s.restore_delta(&bad).is_err());
+    }
+
+    #[test]
+    fn advance_clock_keeps_now_monotonic() {
+        let s = MemStore::new(1, 0.0);
+        s.advance_clock_to(1_000_000_000);
+        assert!(s.now().unwrap() >= 1_000_000_000);
     }
 
     #[test]

@@ -28,6 +28,10 @@ pub enum Request {
     FetchWeightsSince { seq: u64 },
     /// Parameter-server op: params -= scale * grad (ASGD peers, §6).
     ApplyGrad { scale: f32, grad: Vec<f32> },
+    /// Persist a named consumer cursor (compaction pin + crash resume).
+    SaveCursor { name: String, seq: u64 },
+    /// Read back a named consumer cursor.
+    LoadCursor { name: String },
     Now,
     Stats,
     /// Ask the server process to exit its accept loop.
@@ -45,6 +49,8 @@ pub enum Response {
     WeightsDelta(WeightDelta),
     Now(u64),
     Stats(StoreStats),
+    /// A saved cursor (`None` = unknown consumer).
+    Cursor(Option<u64>),
 }
 
 // ---------------------------------------------------------------------------
@@ -153,14 +159,44 @@ fn put_f64s(out: &mut Vec<u8>, xs: &[f64]) {
 // encode / decode
 // ---------------------------------------------------------------------------
 
+/// Payload of a [`Request::PushParams`] (opcode included), built from
+/// borrows — shared with the durable journal so appends need not clone the
+/// blob just to serialize it.
+pub(crate) fn encode_push_params(version: u64, bytes: &[u8]) -> Vec<u8> {
+    let mut p = vec![0x01];
+    p.extend(version.to_le_bytes());
+    put_bytes(&mut p, bytes);
+    p
+}
+
+/// Payload of a [`Request::ApplyGrad`] (opcode included), from borrows.
+pub(crate) fn encode_apply_grad(scale: f32, grad: &[f32]) -> Vec<u8> {
+    let mut p = vec![0x08];
+    p.extend(scale.to_le_bytes());
+    put_f32s(&mut p, grad);
+    p
+}
+
+/// Payload of a [`Response::WeightsDelta`] (opcode included), from a
+/// borrow — the journal's per-push frame on the hot write path.
+pub(crate) fn encode_weights_delta(delta: &WeightDelta) -> Vec<u8> {
+    let mut p = vec![0x87];
+    p.extend(delta.seq.to_le_bytes());
+    p.extend(delta.n.to_le_bytes());
+    p.push(delta.full as u8);
+    put_u64s(&mut p, &delta.indices);
+    put_f64s(&mut p, &delta.weights);
+    put_u64s(&mut p, &delta.stamps);
+    put_u64s(&mut p, &delta.param_versions);
+    p
+}
+
 impl Request {
     pub fn encode(&self) -> Vec<u8> {
         let mut p = Vec::new();
         match self {
             Request::PushParams { version, bytes } => {
-                p.push(0x01);
-                p.extend(version.to_le_bytes());
-                put_bytes(&mut p, bytes);
+                return encode_push_params(*version, bytes);
             }
             Request::FetchParams { than } => {
                 p.push(0x02);
@@ -183,9 +219,16 @@ impl Request {
                 p.extend(seq.to_le_bytes());
             }
             Request::ApplyGrad { scale, grad } => {
-                p.push(0x08);
-                p.extend(scale.to_le_bytes());
-                put_f32s(&mut p, grad);
+                return encode_apply_grad(*scale, grad);
+            }
+            Request::SaveCursor { name, seq } => {
+                p.push(0x0A);
+                put_bytes(&mut p, name.as_bytes());
+                p.extend(seq.to_le_bytes());
+            }
+            Request::LoadCursor { name } => {
+                p.push(0x0B);
+                put_bytes(&mut p, name.as_bytes());
             }
             Request::Now => p.push(0x06),
             Request::Stats => p.push(0x07),
@@ -217,6 +260,13 @@ impl Request {
                     f32::from_le_bytes(raw.try_into().unwrap())
                 },
                 grad: c.f32s()?,
+            },
+            0x0A => Request::SaveCursor {
+                name: String::from_utf8(c.bytes()?).context("cursor name not utf-8")?,
+                seq: c.u64()?,
+            },
+            0x0B => Request::LoadCursor {
+                name: String::from_utf8(c.bytes()?).context("cursor name not utf-8")?,
             },
             0x06 => Request::Now,
             0x07 => Request::Stats,
@@ -259,18 +309,21 @@ impl Response {
                 put_u64s(&mut p, &snap.param_versions);
             }
             Response::WeightsDelta(delta) => {
-                p.push(0x87);
-                p.extend(delta.seq.to_le_bytes());
-                p.extend(delta.n.to_le_bytes());
-                p.push(delta.full as u8);
-                put_u64s(&mut p, &delta.indices);
-                put_f64s(&mut p, &delta.weights);
-                put_u64s(&mut p, &delta.stamps);
-                put_u64s(&mut p, &delta.param_versions);
+                return encode_weights_delta(delta);
             }
             Response::Now(t) => {
                 p.push(0x85);
                 p.extend(t.to_le_bytes());
+            }
+            Response::Cursor(opt) => {
+                p.push(0x88);
+                match opt {
+                    None => p.push(0),
+                    Some(seq) => {
+                        p.push(1);
+                        p.extend(seq.to_le_bytes());
+                    }
+                }
             }
             Response::Stats(s) => {
                 p.push(0x86);
@@ -358,6 +411,14 @@ impl Response {
                 })
             }
             0x85 => Response::Now(c.u64()?),
+            0x88 => {
+                let has = c.u8()? != 0;
+                if has {
+                    Response::Cursor(Some(c.u64()?))
+                } else {
+                    Response::Cursor(None)
+                }
+            }
             0x86 => Response::Stats(StoreStats {
                 param_pushes: c.u64()?,
                 param_fetches: c.u64()?,
@@ -440,6 +501,17 @@ mod tests {
             scale: 0.125,
             grad: vec![1.0, -2.0, 3.5],
         });
+        roundtrip_req(Request::SaveCursor {
+            name: "master".into(),
+            seq: u64::MAX,
+        });
+        roundtrip_req(Request::SaveCursor {
+            name: String::new(),
+            seq: 0,
+        });
+        roundtrip_req(Request::LoadCursor {
+            name: "peer-3".into(),
+        });
         roundtrip_req(Request::Now);
         roundtrip_req(Request::Stats);
         roundtrip_req(Request::Shutdown);
@@ -473,6 +545,8 @@ mod tests {
             ..WeightDelta::default()
         }));
         roundtrip_resp(Response::Now(123456789));
+        roundtrip_resp(Response::Cursor(None));
+        roundtrip_resp(Response::Cursor(Some(42)));
         roundtrip_resp(Response::Stats(StoreStats {
             param_pushes: 1,
             param_fetches: 2,

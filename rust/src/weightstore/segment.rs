@@ -1,0 +1,475 @@
+//! On-disk framing for the durable weight store: length-prefixed,
+//! CRC-32-checksummed records whose payloads reuse the TCP wire codec
+//! ([`super::protocol`]), so disk and network stay **one format** — a
+//! weight write is journaled as the exact [`WeightDelta`] frame a delta
+//! fetch would ship, a parameter publish as its `PushParams` request, a
+//! parameter-server update as its `ApplyGrad` request.
+//!
+//! # File layout
+//!
+//! Both file kinds share the frame format and differ only in magic +
+//! record mix:
+//!
+//! ```text
+//! segment  (seg-XXXXXXXX.log):   "ISGDLG01" frame*
+//! snapshot (snap-XXXXXXXX.snap): "ISGDSN01" meta-frame params-frame
+//!                                cursor-frame* delta-frame*
+//! frame:                         u32 payload-len | u32 crc32(payload) |
+//!                                payload = tag byte + codec bytes
+//! ```
+//!
+//! [`scan_file`] reads frames until EOF or the first torn/corrupt frame:
+//! a partial header, a partial payload, a length beyond the cap, or a CRC
+//! mismatch all mark a **torn tail** — the crash shape recovery exists
+//! for — and scanning stops there without error.  A CRC-*valid* payload
+//! that fails to decode is not a tear (the bytes arrived intact) and is
+//! surfaced as a hard error.
+
+use std::fs::File;
+use std::io::{BufReader, Read, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::protocol::{
+    encode_apply_grad, encode_push_params, encode_weights_delta, Request, Response, MAX_FRAME,
+};
+use super::WeightDelta;
+
+/// First bytes of every log segment file.
+pub const SEGMENT_MAGIC: &[u8; 8] = b"ISGDLG01";
+/// First bytes of every snapshot checkpoint file.
+pub const SNAPSHOT_MAGIC: &[u8; 8] = b"ISGDSN01";
+
+const TAG_DELTA: u8 = 1;
+const TAG_PARAMS: u8 = 2;
+const TAG_GRAD: u8 = 3;
+const TAG_CURSOR: u8 = 4;
+const TAG_META: u8 = 5;
+
+/// One journaled operation (or snapshot constituent).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Record {
+    /// A weight write: the exact entries one `push_weights` created,
+    /// carrying the write sequence it claimed (payload codec:
+    /// [`Response::WeightsDelta`]).
+    Delta(WeightDelta),
+    /// A parameter publish (payload codec: [`Request::PushParams`]).
+    Params { version: u64, bytes: Vec<u8> },
+    /// A parameter-server update (payload codec: [`Request::ApplyGrad`]);
+    /// replay recomputes the identical f32 arithmetic.
+    Grad { scale: f32, grad: Vec<f32> },
+    /// A consumer cursor save ([`super::WeightStore::save_cursor`]).
+    Cursor { name: String, seq: u64 },
+    /// Snapshot header — first record of every snapshot file.
+    Meta(SnapshotMeta),
+}
+
+/// Snapshot header: everything `DurableStore::open` needs besides the
+/// restored records themselves.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct SnapshotMeta {
+    /// Table size (examples tracked).
+    pub n: u64,
+    /// The store's initial weight (reproduces `create` parameters).
+    pub init_weight: f64,
+    /// Compaction floor at snapshot time.
+    pub floor: u64,
+    /// Global write-sequence counter at snapshot time.
+    pub next_seq: u64,
+    /// Store clock (ns) at snapshot time — restarts keep stamps monotonic.
+    pub clock: u64,
+    /// Segments with index `>= cover` postdate this snapshot and must be
+    /// replayed; segments below it are garbage once the snapshot is
+    /// durable.
+    pub cover: u64,
+}
+
+impl Record {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            // The by-ref payload builders are the SAME functions the wire
+            // encoders delegate to — one codec, and no cloning of the
+            // delta/blob vectors on the journal's hot write path.
+            Record::Delta(d) => {
+                out.push(TAG_DELTA);
+                out.extend(encode_weights_delta(d));
+            }
+            Record::Params { version, bytes } => {
+                out.push(TAG_PARAMS);
+                out.extend(encode_push_params(*version, bytes));
+            }
+            Record::Grad { scale, grad } => {
+                out.push(TAG_GRAD);
+                out.extend(encode_apply_grad(*scale, grad));
+            }
+            Record::Cursor { name, seq } => {
+                out.push(TAG_CURSOR);
+                let raw = name.as_bytes();
+                out.extend((raw.len() as u64).to_le_bytes());
+                out.extend(raw);
+                out.extend(seq.to_le_bytes());
+            }
+            Record::Meta(m) => {
+                out.push(TAG_META);
+                out.extend(m.n.to_le_bytes());
+                out.extend(m.init_weight.to_le_bytes());
+                out.extend(m.floor.to_le_bytes());
+                out.extend(m.next_seq.to_le_bytes());
+                out.extend(m.clock.to_le_bytes());
+                out.extend(m.cover.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Record> {
+        anyhow::ensure!(!buf.is_empty(), "empty record");
+        let tag = buf[0];
+        let mut body = &buf[1..];
+        let rec = match tag {
+            TAG_DELTA => match Response::decode(body)? {
+                Response::WeightsDelta(d) => Record::Delta(d),
+                other => bail!("delta record holds {other:?}"),
+            },
+            TAG_PARAMS => match Request::decode(body)? {
+                Request::PushParams { version, bytes } => Record::Params { version, bytes },
+                other => bail!("params record holds {other:?}"),
+            },
+            TAG_GRAD => match Request::decode(body)? {
+                Request::ApplyGrad { scale, grad } => Record::Grad { scale, grad },
+                other => bail!("grad record holds {other:?}"),
+            },
+            TAG_CURSOR => {
+                let len = take_u64(&mut body)? as usize;
+                let raw = take(&mut body, len)?;
+                let name = String::from_utf8(raw.to_vec()).context("cursor name not utf-8")?;
+                let seq = take_u64(&mut body)?;
+                anyhow::ensure!(body.is_empty(), "trailing bytes in cursor record");
+                Record::Cursor { name, seq }
+            }
+            TAG_META => {
+                let meta = SnapshotMeta {
+                    n: take_u64(&mut body)?,
+                    init_weight: f64::from_le_bytes(take(&mut body, 8)?.try_into().unwrap()),
+                    floor: take_u64(&mut body)?,
+                    next_seq: take_u64(&mut body)?,
+                    clock: take_u64(&mut body)?,
+                    cover: take_u64(&mut body)?,
+                };
+                anyhow::ensure!(body.is_empty(), "trailing bytes in meta record");
+                Record::Meta(meta)
+            }
+            other => bail!("unknown record tag {other}"),
+        };
+        Ok(rec)
+    }
+}
+
+fn take<'a>(buf: &mut &'a [u8], n: usize) -> Result<&'a [u8]> {
+    anyhow::ensure!(buf.len() >= n, "truncated record: need {n} bytes, have {}", buf.len());
+    let (head, tail) = buf.split_at(n);
+    *buf = tail;
+    Ok(head)
+}
+
+fn take_u64(buf: &mut &[u8]) -> Result<u64> {
+    Ok(u64::from_le_bytes(take(buf, 8)?.try_into().unwrap()))
+}
+
+/// CRC-32 (IEEE 802.3, reflected) — bitwise, no table: recovery-path
+/// throughput is irrelevant next to disk I/O.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+/// Append one checksummed frame; returns the bytes written (header +
+/// payload).
+pub fn append_record(w: &mut impl Write, rec: &Record) -> Result<u64> {
+    let payload = rec.encode();
+    anyhow::ensure!(payload.len() <= MAX_FRAME, "record too large: {} bytes", payload.len());
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(&crc32(&payload).to_le_bytes())?;
+    w.write_all(&payload)?;
+    Ok(8 + payload.len() as u64)
+}
+
+/// What [`scan_file`] recovered from one file.
+#[derive(Debug)]
+pub struct FileScan {
+    /// Frames that survived, in file order.
+    pub records: Vec<Record>,
+    /// Byte offset up to which the file is valid (truncate here to drop a
+    /// torn tail).
+    pub valid_len: u64,
+    /// True when a torn/corrupt tail was found after `valid_len`.
+    pub torn: bool,
+}
+
+/// Read `path` (which must start with `magic`) frame by frame until EOF or
+/// the first torn frame.  See the module docs for what counts as a tear
+/// versus a hard error.  A file too short to even hold its magic is
+/// treated as torn-at-zero, not an error (a crash can land mid-creation).
+pub fn scan_file(path: &Path, magic: &[u8; 8]) -> Result<FileScan> {
+    let file = File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let mut r = BufReader::new(file);
+    let mut head = [0u8; 8];
+    if read_full(&mut r, &mut head)? < 8 {
+        return Ok(FileScan {
+            records: Vec::new(),
+            valid_len: 0,
+            torn: true,
+        });
+    }
+    anyhow::ensure!(
+        &head == magic,
+        "{} has wrong magic {head:?} (expected {magic:?})",
+        path.display()
+    );
+    let mut off = 8u64;
+    let mut records = Vec::new();
+    let mut torn = false;
+    loop {
+        let mut hdr = [0u8; 8];
+        let got = read_full(&mut r, &mut hdr)?;
+        if got == 0 {
+            break; // clean EOF
+        }
+        if got < 8 {
+            torn = true;
+            break;
+        }
+        let len = u32::from_le_bytes(hdr[0..4].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(hdr[4..8].try_into().unwrap());
+        if len > MAX_FRAME {
+            torn = true;
+            break;
+        }
+        let mut payload = vec![0u8; len];
+        if read_full(&mut r, &mut payload)? < len {
+            torn = true;
+            break;
+        }
+        if crc32(&payload) != crc {
+            torn = true;
+            break;
+        }
+        let rec = Record::decode(&payload)
+            .with_context(|| format!("record at byte {off} of {}", path.display()))?;
+        records.push(rec);
+        off += 8 + len as u64;
+    }
+    Ok(FileScan {
+        records,
+        valid_len: off,
+        torn,
+    })
+}
+
+fn read_full(r: &mut impl Read, buf: &mut [u8]) -> Result<usize> {
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        let n = r.read(&mut buf[filled..])?;
+        if n == 0 {
+            break;
+        }
+        filled += n;
+    }
+    Ok(filled)
+}
+
+pub fn segment_path(dir: &Path, index: u64) -> PathBuf {
+    dir.join(format!("seg-{index:08}.log"))
+}
+
+pub fn snapshot_path(dir: &Path, cover: u64) -> PathBuf {
+    dir.join(format!("snap-{cover:08}.snap"))
+}
+
+/// Files in `dir` named `{prefix}{number}{suffix}`, sorted by number.
+pub fn list_numbered(dir: &Path, prefix: &str, suffix: &str) -> Result<Vec<(u64, PathBuf)>> {
+    let mut out = Vec::new();
+    for entry in std::fs::read_dir(dir).with_context(|| format!("listing {}", dir.display()))? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if let Some(rest) = name.strip_prefix(prefix) {
+            if let Some(num) = rest.strip_suffix(suffix) {
+                if let Ok(k) = num.parse::<u64>() {
+                    out.push((k, entry.path()));
+                }
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_records() -> Vec<Record> {
+        vec![
+            Record::Delta(WeightDelta {
+                seq: 7,
+                n: 100,
+                full: false,
+                indices: vec![3, 4, 90],
+                weights: vec![0.5, 1.5, 9.0],
+                stamps: vec![11, 11, 22],
+                param_versions: vec![1, 1, 2],
+            }),
+            Record::Params {
+                version: 3,
+                bytes: vec![1, 2, 3, 255],
+            },
+            Record::Grad {
+                scale: 0.125,
+                grad: vec![1.0, -2.0],
+            },
+            Record::Cursor {
+                name: "master".into(),
+                seq: 42,
+            },
+            Record::Meta(SnapshotMeta {
+                n: 100,
+                init_weight: 1.5,
+                floor: 3,
+                next_seq: 9,
+                clock: 1234,
+                cover: 2,
+            }),
+        ]
+    }
+
+    #[test]
+    fn records_roundtrip() {
+        for rec in sample_records() {
+            let enc = rec.encode();
+            assert_eq!(Record::decode(&enc).unwrap(), rec);
+        }
+    }
+
+    #[test]
+    fn record_decode_rejects_truncation_and_trailing() {
+        for rec in sample_records() {
+            let enc = rec.encode();
+            for cut in 0..enc.len() {
+                assert!(Record::decode(&enc[..cut]).is_err(), "prefix {cut} decoded");
+            }
+            let mut extra = enc.clone();
+            extra.push(0);
+            assert!(Record::decode(&extra).is_err());
+        }
+    }
+
+    #[test]
+    fn crc32_matches_known_vector() {
+        // The classic check value for CRC-32/IEEE.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    fn temp_file(tag: &str) -> PathBuf {
+        static NEXT: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        let k = NEXT.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        std::env::temp_dir().join(format!("issgd-seg-{tag}-{}-{k}", std::process::id()))
+    }
+
+    fn write_file(path: &Path, records: &[Record]) -> Vec<u8> {
+        let mut buf: Vec<u8> = SEGMENT_MAGIC.to_vec();
+        for rec in records {
+            append_record(&mut buf, rec).unwrap();
+        }
+        std::fs::write(path, &buf).unwrap();
+        buf
+    }
+
+    #[test]
+    fn scan_reads_back_everything() {
+        let path = temp_file("scan");
+        let records = sample_records();
+        let bytes = write_file(&path, &records);
+        let scan = scan_file(&path, SEGMENT_MAGIC).unwrap();
+        assert!(!scan.torn);
+        assert_eq!(scan.valid_len, bytes.len() as u64);
+        assert_eq!(scan.records, records);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn scan_stops_at_any_torn_tail() {
+        let path = temp_file("torn");
+        let records = sample_records();
+        let bytes = write_file(&path, &records);
+        // Every strict prefix recovers a (possibly empty) record prefix
+        // and flags the tear — never errors, never panics.
+        for cut in 8..bytes.len() {
+            std::fs::write(&path, &bytes[..cut]).unwrap();
+            let scan = scan_file(&path, SEGMENT_MAGIC).unwrap();
+            assert!(scan.torn || scan.valid_len == cut as u64);
+            assert!(scan.valid_len <= cut as u64);
+            assert!(scan.records.len() <= records.len());
+            // The recovered prefix is intact record-for-record.
+            for (a, b) in scan.records.iter().zip(&records) {
+                assert_eq!(a, b);
+            }
+        }
+        // Shorter than the magic: torn-at-zero, not an error.
+        std::fs::write(&path, &bytes[..5]).unwrap();
+        let scan = scan_file(&path, SEGMENT_MAGIC).unwrap();
+        assert!(scan.torn);
+        assert_eq!(scan.valid_len, 0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn scan_flags_corrupt_crc_as_torn() {
+        let path = temp_file("crc");
+        let records = sample_records();
+        let mut bytes = write_file(&path, &records[..2]);
+        // Flip one payload byte of the SECOND frame: frame 1 survives,
+        // frame 2 is a tear.
+        let first_frame_end = 8 + 8 + records[0].encode().len();
+        let idx = first_frame_end + 12;
+        bytes[idx] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let scan = scan_file(&path, SEGMENT_MAGIC).unwrap();
+        assert!(scan.torn);
+        assert_eq!(scan.records.len(), 1);
+        assert_eq!(scan.valid_len, first_frame_end as u64);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn scan_rejects_wrong_magic() {
+        let path = temp_file("magic");
+        write_file(&path, &[]);
+        assert!(scan_file(&path, SNAPSHOT_MAGIC).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn numbered_listing_sorts() {
+        let dir = temp_file("list");
+        std::fs::create_dir_all(&dir).unwrap();
+        for k in [3u64, 1, 2] {
+            std::fs::write(segment_path(&dir, k), b"x").unwrap();
+        }
+        std::fs::write(dir.join("unrelated.txt"), b"x").unwrap();
+        let listed = list_numbered(&dir, "seg-", ".log").unwrap();
+        let nums: Vec<u64> = listed.iter().map(|(k, _)| *k).collect();
+        assert_eq!(nums, vec![1, 2, 3]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

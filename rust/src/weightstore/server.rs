@@ -1,30 +1,52 @@
-//! TCP server exposing a [`MemStore`] to remote masters/workers.
+//! TCP server exposing any [`WeightStore`] to remote masters/workers.
 //!
 //! Thread-per-connection over std::net (tokio is unavailable offline, and
 //! the connection count here is tiny: one master + a handful of workers).
+//! The server is generic over its backend — `issgd db-server` hands it a
+//! [`super::MemStore`] or a [`super::durable::DurableStore`]; tests wrap
+//! either in a [`super::faulty::FaultyStore`] — so one transport serves
+//! every storage engine.
+//!
 //! The accept loop exits when any client sends `Shutdown`, letting
 //! integration tests and the `issgd db-server` subcommand terminate
-//! cleanly.
+//! cleanly.  Connection reads poll at [`READ_POLL`] against the stop
+//! flag: a hung or idle client can no longer pin its handler thread
+//! forever after `Shutdown` (previously only the accept loop was
+//! unblocked by a self-connection; handler threads blocked in a frame
+//! read leaked).  Partial frames accumulate across polls, so slow-but-
+//! live clients are unaffected.
 
+use std::io::Read;
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use anyhow::Result;
 
-use super::protocol::{read_frame, write_frame, Request, Response};
-use super::{MemStore, WeightStore};
+use super::protocol::{write_frame, Request, Response, MAX_FRAME};
+use super::WeightStore;
 use crate::log_debug;
+
+/// How often a blocked connection read re-checks the stop flag.
+const READ_POLL: std::time::Duration = std::time::Duration::from_millis(100);
+
+/// Per-syscall write timeout.  A client that stops *reading* would
+/// otherwise block its handler in `write_frame` forever — past the stop
+/// flag, and since [`Server::serve`] joins handlers on shutdown, past the
+/// server's lifetime too.  The timeout is per `write` call, so a slowly
+/// draining but live client keeps making progress; only a fully stalled
+/// one gets its connection dropped.
+const WRITE_STALL: std::time::Duration = std::time::Duration::from_secs(5);
 
 pub struct Server {
     listener: TcpListener,
-    store: Arc<MemStore>,
+    store: Arc<dyn WeightStore>,
     stop: Arc<AtomicBool>,
 }
 
 impl Server {
     /// Bind to `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port).
-    pub fn bind(addr: &str, store: Arc<MemStore>) -> Result<Server> {
+    pub fn bind(addr: &str, store: Arc<dyn WeightStore>) -> Result<Server> {
         let listener = TcpListener::bind(addr)?;
         Ok(Server {
             listener,
@@ -41,13 +63,25 @@ impl Server {
     /// Serve until a client sends `Shutdown`.  Each connection gets its own
     /// thread; per-request errors are answered as `Response::Err`, i/o
     /// errors drop the connection (the peer retries or dies, its choice).
+    ///
+    /// On shutdown every handler thread is joined before returning (each
+    /// notices the stop flag within one [`READ_POLL`]), so when `serve`
+    /// returns no handler still holds a store handle — a caller may drop
+    /// the server and immediately reopen a durable backend's directory
+    /// without racing a late write from a lingering connection.
     pub fn serve(self) -> Result<()> {
         // The accept loop is unblocked on shutdown by a self-connection
         // made from the handler thread that received Shutdown.
+        let mut handlers: Vec<std::thread::JoinHandle<()>> = Vec::new();
         for conn in self.listener.incoming() {
             if self.stop.load(Ordering::SeqCst) {
                 break;
             }
+            // Reap finished handlers as we go (dropping a finished
+            // JoinHandle detaches and frees the thread) so a long-lived
+            // server does not accumulate one joinable stack per
+            // connection it ever served.
+            handlers.retain(|h| !h.is_finished());
             let stream = match conn {
                 Ok(s) => s,
                 Err(e) => {
@@ -58,11 +92,14 @@ impl Server {
             let store = Arc::clone(&self.store);
             let stop = Arc::clone(&self.stop);
             let addr = self.local_addr()?;
-            std::thread::spawn(move || {
-                if let Err(e) = handle_connection(stream, &store, &stop, addr) {
+            handlers.push(std::thread::spawn(move || {
+                if let Err(e) = handle_connection(stream, store.as_ref(), &stop, addr) {
                     log_debug!("db", "connection ended: {e}");
                 }
-            });
+            }));
+        }
+        for h in handlers {
+            let _ = h.join();
         }
         Ok(())
     }
@@ -79,17 +116,31 @@ impl Server {
     }
 }
 
+/// Outcome of one stoppable frame read.
+enum FrameRead {
+    Frame(Vec<u8>),
+    /// Peer closed (cleanly or mid-frame): drop the connection.
+    Closed,
+    /// The stop flag flipped: release the handler thread.
+    Stopped,
+}
+
 fn handle_connection(
     mut stream: TcpStream,
-    store: &MemStore,
+    store: &dyn WeightStore,
     stop: &AtomicBool,
     self_addr: std::net::SocketAddr,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
+    // Poll reads so this thread observes `stop` even while idle or facing
+    // a hung client — the handler-leak fix (see module docs) — and bound
+    // write stalls so a client that stops reading cannot pin us either.
+    stream.set_read_timeout(Some(READ_POLL)).ok();
+    stream.set_write_timeout(Some(WRITE_STALL)).ok();
     loop {
-        let frame = match read_frame(&mut stream) {
-            Ok(f) => f,
-            Err(_) => return Ok(()), // peer closed
+        let frame = match read_frame_stoppable(&mut stream, stop)? {
+            FrameRead::Frame(f) => f,
+            FrameRead::Closed | FrameRead::Stopped => return Ok(()),
         };
         let req = Request::decode(&frame)?;
         if matches!(req, Request::Shutdown) {
@@ -104,7 +155,59 @@ fn handle_connection(
     }
 }
 
-fn dispatch(store: &MemStore, req: Request) -> Response {
+/// Length-prefixed frame read that re-checks `stop` on every read-timeout
+/// tick.  Partial data accumulates across ticks, so a slow client's frame
+/// survives any number of polls.
+fn read_frame_stoppable(stream: &mut TcpStream, stop: &AtomicBool) -> Result<FrameRead> {
+    let mut len_buf = [0u8; 4];
+    match read_full_stoppable(stream, &mut len_buf, stop)? {
+        FullRead::Done => {}
+        FullRead::Closed => return Ok(FrameRead::Closed),
+        FullRead::Stopped => return Ok(FrameRead::Stopped),
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    anyhow::ensure!(len <= MAX_FRAME, "frame length {len} exceeds cap");
+    let mut payload = vec![0u8; len];
+    match read_full_stoppable(stream, &mut payload, stop)? {
+        FullRead::Done => Ok(FrameRead::Frame(payload)),
+        FullRead::Closed => Ok(FrameRead::Closed),
+        FullRead::Stopped => Ok(FrameRead::Stopped),
+    }
+}
+
+enum FullRead {
+    Done,
+    Closed,
+    Stopped,
+}
+
+fn read_full_stoppable(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    stop: &AtomicBool,
+) -> Result<FullRead> {
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        if stop.load(Ordering::SeqCst) {
+            return Ok(FullRead::Stopped);
+        }
+        match stream.read(&mut buf[filled..]) {
+            Ok(0) => return Ok(FullRead::Closed),
+            Ok(n) => filled += n,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut
+                    || e.kind() == std::io::ErrorKind::Interrupted =>
+            {
+                continue
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(FullRead::Done)
+}
+
+fn dispatch(store: &dyn WeightStore, req: Request) -> Response {
     let result: Result<Response> = (|| {
         Ok(match req {
             Request::PushParams { version, bytes } => {
@@ -128,6 +231,11 @@ fn dispatch(store: &MemStore, req: Request) -> Response {
             Request::ApplyGrad { scale, grad } => {
                 Response::Version(store.apply_grad(scale, &grad)?)
             }
+            Request::SaveCursor { name, seq } => {
+                store.save_cursor(&name, seq)?;
+                Response::Ok
+            }
+            Request::LoadCursor { name } => Response::Cursor(store.load_cursor(&name)?),
             Request::Now => Response::Now(store.now()?),
             Request::Stats => Response::Stats(store.stats()?),
             Request::Shutdown => unreachable!("handled by caller"),

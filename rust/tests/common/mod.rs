@@ -1,0 +1,27 @@
+//! Helpers shared across the integration/property test binaries (each
+//! test target compiles this module independently via `mod common;`).
+
+use std::path::PathBuf;
+
+/// Self-cleaning scratch directory for durable-store tests: unique per
+/// (process, counter) so concurrent test binaries never collide, removed
+/// on drop.
+pub struct TempDir(pub PathBuf);
+
+impl TempDir {
+    pub fn new(tag: &str) -> TempDir {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static NEXT: AtomicU64 = AtomicU64::new(0);
+        let k = NEXT.fetch_add(1, Ordering::Relaxed);
+        let path =
+            std::env::temp_dir().join(format!("issgd-test-{tag}-{}-{k}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&path);
+        TempDir(path)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}

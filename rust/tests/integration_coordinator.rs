@@ -224,6 +224,7 @@ fn live_threaded_cluster_round_trips() {
     let out = run_live(
         &cfg,
         &LiveOptions {
+            store: None,
             store_addr: None,
             worker_throttle: Some(std::time::Duration::from_millis(1)),
             wait_for_first_scores: true,
@@ -488,6 +489,14 @@ impl WeightStore for FlakyStore {
     fn apply_grad(&self, scale: f32, grad: &[f32]) -> anyhow::Result<u64> {
         self.maybe_fail()?;
         self.inner.apply_grad(scale, grad)
+    }
+    fn save_cursor(&self, name: &str, seq: u64) -> anyhow::Result<()> {
+        self.maybe_fail()?;
+        self.inner.save_cursor(name, seq)
+    }
+    fn load_cursor(&self, name: &str) -> anyhow::Result<Option<u64>> {
+        self.maybe_fail()?;
+        self.inner.load_cursor(name)
     }
     fn now(&self) -> anyhow::Result<u64> {
         self.inner.now()
@@ -858,6 +867,7 @@ fn worker_death_does_not_stop_live_master() {
     let out = run_live(
         &cfg,
         &LiveOptions {
+            store: None,
             store_addr: None,
             worker_throttle: Some(std::time::Duration::from_millis(250)),
             wait_for_first_scores: false,

@@ -1,0 +1,181 @@
+//! Integration: the durable weight store subsystem end-to-end — kill /
+//! reopen / resume with live consumer cursors, compaction + GC bounding
+//! the on-disk footprint across snapshot cycles, and torn-tail recovery.
+//!
+//! The consumers here are the real coordinator state machines
+//! (`ProposalMaintainer` in master mode and peer/coverage-prior mode),
+//! driven directly so no AOT artifacts are needed: what is under test is
+//! the store's half of the §4.2 topology, not the model.
+
+use std::sync::Arc;
+
+use issgd::config::StalenessUnit;
+use issgd::coordinator::ProposalMaintainer;
+use issgd::util::rng::Pcg64;
+use issgd::weightstore::durable::{DurableOptions, DurableStore};
+use issgd::weightstore::WeightStore;
+
+mod common;
+use common::TempDir;
+
+fn small_opts() -> DurableOptions {
+    DurableOptions {
+        segment_bytes: 1 << 14,
+        compact_after_bytes: 1 << 15,
+        fsync: false,
+    }
+}
+
+/// The acceptance scenario: a master-mode and a peer-mode consumer keep
+/// their proposals synced against a durable store that crashes (drop +
+/// reopen) every cycle, with enough write traffic that the compactor runs
+/// several snapshot cycles.  Both consumers must resume *incrementally*
+/// from their persisted cursors after every crash, and the on-disk
+/// footprint must stay bounded instead of growing with history.
+#[test]
+fn master_and_peer_resume_from_persisted_cursors_with_bounded_disk() {
+    let dir = TempDir::new("resume");
+    let n = 512usize;
+    let mut master = ProposalMaintainer::new(n, 0.5, None, StalenessUnit::Versions);
+    let mut peer = ProposalMaintainer::with_coverage_prior(n, 0.5, None, StalenessUnit::Versions);
+    let mut rng = Pcg64::seeded(0xD04_AB1E);
+
+    let mut store = Arc::new(DurableStore::create(&dir.0, n, 1.0, small_opts()).unwrap());
+    // Bootstrap both consumers (full fetch) and persist their cursors.
+    let d = store.fetch_weights_since(master.cursor()).unwrap();
+    master.absorb(&d, 0).unwrap();
+    store.save_cursor("master", master.cursor()).unwrap();
+    let d = store.fetch_weights_since(peer.cursor()).unwrap();
+    peer.absorb(&d, 0).unwrap();
+    store.save_cursor("peer-0", peer.cursor()).unwrap();
+
+    let mut compactions_total = 0u64;
+    let mut disk_per_cycle: Vec<u64> = Vec::new();
+    for cycle in 0..4 {
+        for round in 0..200u64 {
+            let start = rng.next_below((n - 8) as u64) as usize;
+            let vals: Vec<f32> = (0..8).map(|_| rng.next_f32().abs() + 0.01).collect();
+            store.push_weights(start, &vals, cycle as u64 * 200 + round + 1).unwrap();
+            if round % 3 == 0 {
+                let d = store.fetch_weights_since(master.cursor()).unwrap();
+                assert!(!d.full, "master demoted to full mid-cycle {cycle}");
+                master.absorb(&d, 0).unwrap();
+                store.save_cursor("master", master.cursor()).unwrap();
+            }
+            if round % 5 == 0 {
+                let d = store.fetch_weights_since(peer.cursor()).unwrap();
+                assert!(!d.full, "peer demoted to full mid-cycle {cycle}");
+                peer.absorb(&d, 0).unwrap();
+                store.save_cursor("peer-0", peer.cursor()).unwrap();
+            }
+        }
+        compactions_total += store.compactions();
+        disk_per_cycle.push(store.disk_bytes().unwrap());
+
+        // Crash: drop the only handle, reopen from disk.
+        let seq_before = store.write_seq();
+        let table_before = store.fetch_weights().unwrap();
+        drop(store);
+        store = Arc::new(DurableStore::open(&dir.0, small_opts()).unwrap());
+
+        // The store came back bit-exact (stamps included: the journal is
+        // exact) and remembers both consumers.
+        assert_eq!(store.write_seq(), seq_before, "write sequence lost in crash {cycle}");
+        assert_eq!(store.fetch_weights().unwrap(), table_before);
+        assert_eq!(store.load_cursor("master").unwrap(), Some(master.cursor()));
+        assert_eq!(store.load_cursor("peer-0").unwrap(), Some(peer.cursor()));
+
+        // THE acceptance point: both consumers continue incrementally from
+        // their persisted cursors — no O(N) re-score after the restart.
+        let d = store.fetch_weights_since(master.cursor()).unwrap();
+        assert!(!d.full, "master demoted to full resync after crash {cycle}");
+        master.absorb(&d, 0).unwrap();
+        store.save_cursor("master", master.cursor()).unwrap();
+        let d = store.fetch_weights_since(peer.cursor()).unwrap();
+        assert!(!d.full, "peer demoted to full resync after crash {cycle}");
+        peer.absorb(&d, 0).unwrap();
+        store.save_cursor("peer-0", peer.cursor()).unwrap();
+    }
+
+    // ≥3 snapshot cycles actually happened (the acceptance bar), and disk
+    // stayed bounded: the last cycle's footprint is within a small factor
+    // of the first's and under an absolute ceiling, instead of growing
+    // with ~800 rounds of history.
+    assert!(
+        compactions_total >= 3,
+        "only {compactions_total} snapshot cycles ran"
+    );
+    let first = *disk_per_cycle.first().unwrap();
+    let last = *disk_per_cycle.last().unwrap();
+    assert!(
+        last <= first.saturating_mul(3).max(256 << 10),
+        "disk grew unboundedly: first cycle {first} B, last cycle {last} B"
+    );
+    assert!(last < (1 << 20), "disk footprint {last} B exceeds 1 MiB at n=512");
+
+    // Final convergence: both mirrors equal the store's table exactly.
+    let truth = store.fetch_weights().unwrap();
+    assert_eq!(*master.raw(), truth);
+    assert_eq!(*peer.raw(), truth);
+
+    // GC hygiene: the directory holds the latest snapshot + live segments,
+    // not 4 cycles of history.
+    let files = std::fs::read_dir(&dir.0).unwrap().count();
+    assert!(files <= 8, "GC left {files} files behind");
+}
+
+/// A consumer that never saves a cursor is still correct after a crash —
+/// it just pays the documented full-table fallback once compaction has
+/// folded history past its private cursor.
+#[test]
+fn unpinned_consumer_degrades_to_full_fallback_not_corruption() {
+    let dir = TempDir::new("unpinned");
+    let n = 64usize;
+    let store = DurableStore::create(&dir.0, n, 1.0, small_opts()).unwrap();
+    let d = store.fetch_weights_since(0).unwrap();
+    let mut mirror = d.to_snapshot().unwrap();
+    let mut cursor = d.seq;
+    for round in 0..50u64 {
+        store.push_weights((round as usize * 7) % 56, &[round as f32 + 1.0], round + 1).unwrap();
+    }
+    // No pins anywhere: the compactor may fold everything.
+    store.compact().unwrap();
+    let d = store.fetch_weights_since(cursor).unwrap();
+    assert!(d.full, "history below the fold should no longer be servable");
+    d.apply_to(&mut mirror).unwrap();
+    cursor = d.seq;
+    assert_eq!(mirror, store.fetch_weights().unwrap());
+    // Incremental service resumes from the post-fold cursor.
+    store.push_weights(0, &[99.0], 77).unwrap();
+    let d = store.fetch_weights_since(cursor).unwrap();
+    assert!(!d.full);
+    assert_eq!(d.indices, vec![0]);
+}
+
+/// Crash mid-append: garbage after the last complete frame is truncated on
+/// reopen and the store keeps serving + journaling.
+#[test]
+fn torn_tail_recovery_is_repeatable() {
+    let dir = TempDir::new("torn");
+    let n = 16usize;
+    let store = DurableStore::create(&dir.0, n, 1.0, small_opts()).unwrap();
+    for i in 0..5 {
+        store.push_weights(i, &[i as f32 + 1.0], 1).unwrap();
+    }
+    let want = store.fetch_weights().unwrap();
+    drop(store);
+    for garbage in [vec![0x7Fu8], vec![0xFF; 6], vec![0xAB; 13]] {
+        // Damage the newest segment's tail...
+        let segs =
+            issgd::weightstore::segment::list_numbered(&dir.0, "seg-", ".log").unwrap();
+        let (_, newest) = segs.last().unwrap();
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new().append(true).open(newest).unwrap();
+        f.write_all(&garbage).unwrap();
+        drop(f);
+        // ...and recover: the table is intact every time.
+        let back = DurableStore::open(&dir.0, small_opts()).unwrap();
+        assert_eq!(back.fetch_weights().unwrap(), want);
+        drop(back);
+    }
+}

@@ -189,6 +189,7 @@ fn full_training_session_over_tcp() {
     let out = run_live(
         &cfg,
         &LiveOptions {
+            store: None,
             store_addr: Some(addr.to_string()),
             worker_throttle: Some(std::time::Duration::from_millis(1)),
             wait_for_first_scores: true,
@@ -243,4 +244,114 @@ fn faulty_decorator_over_tcp_client_converges() {
         oracle.shutdown_server().unwrap();
     }
     handle.join().unwrap();
+}
+
+#[test]
+fn cursors_roundtrip_over_tcp() {
+    let (addr, handle) = spawn_store(8);
+    {
+        let c = Client::connect(&addr).unwrap();
+        assert_eq!(c.load_cursor("master").unwrap(), None);
+        let d = c.fetch_weights_since(0).unwrap();
+        c.save_cursor("master", d.seq).unwrap();
+        assert_eq!(c.load_cursor("master").unwrap(), Some(d.seq));
+        // Empty names are a server-side error, not a dropped connection.
+        assert!(c.save_cursor("", 1).is_err());
+        assert_eq!(c.load_cursor("master").unwrap(), Some(d.seq));
+        c.shutdown_server().unwrap();
+    }
+    handle.join().unwrap();
+}
+
+#[test]
+fn durable_store_over_tcp_resumes_across_server_restarts() {
+    // The `issgd db-server --store-path` shape: the TCP server is generic
+    // over its backend, so a durable store serves remote clients and a
+    // server restart (process crash) loses neither the table nor the
+    // consumers' saved cursors — the remote master resumes incrementally.
+    use issgd::weightstore::durable::{DurableOptions, DurableStore};
+
+    let dir = std::env::temp_dir().join(format!("issgd-tcp-durable-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let opts = DurableOptions {
+        segment_bytes: 1 << 14,
+        compact_after_bytes: 0,
+        fsync: false,
+    };
+
+    // Serve cycle 1: create, write, persist a cursor.
+    let (cursor, table) = {
+        let store = Arc::new(DurableStore::create(&dir, 32, 1.0, opts.clone()).unwrap());
+        let server = Server::bind("127.0.0.1:0", store).unwrap();
+        let (addr, handle) = server.serve_in_background().unwrap();
+        let c = Client::connect(&addr.to_string()).unwrap();
+        c.push_weights(3, &[5.0, 6.0], 2).unwrap();
+        c.push_weights(20, &[9.0], 3).unwrap();
+        let d = c.fetch_weights_since(0).unwrap();
+        c.save_cursor("master", d.seq).unwrap();
+        let table = c.fetch_weights().unwrap();
+        c.shutdown_server().unwrap();
+        handle.join().unwrap();
+        (d.seq, table)
+    };
+    // serve() joins every handler thread before returning, so once the
+    // join above came back no connection still holds the old store — the
+    // directory can be reopened immediately without racing a late write.
+
+    // Serve cycle 2: recover from disk, the remote consumer continues.
+    {
+        let store = Arc::new(DurableStore::open(&dir, opts).unwrap());
+        let server = Server::bind("127.0.0.1:0", store).unwrap();
+        let (addr, handle) = server.serve_in_background().unwrap();
+        let c = Client::connect(&addr.to_string()).unwrap();
+        assert_eq!(c.fetch_weights().unwrap(), table);
+        assert_eq!(c.load_cursor("master").unwrap(), Some(cursor));
+        let d = c.fetch_weights_since(cursor).unwrap();
+        assert!(!d.full, "remote master demoted to full resync after restart");
+        assert!(d.is_empty());
+        c.push_weights(0, &[7.0], 9).unwrap();
+        let d = c.fetch_weights_since(cursor).unwrap();
+        assert_eq!(d.indices, vec![0]);
+        c.shutdown_server().unwrap();
+        handle.join().unwrap();
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn shutdown_releases_idle_and_hung_connections() {
+    // The handler-leak fix: connection reads poll the stop flag, so after
+    // Shutdown a client that is idle — or hung mid-frame, the worst case —
+    // no longer pins its handler thread; the handler exits and the socket
+    // closes underneath the client.
+    use std::io::{Read, Write};
+
+    let (addr, handle) = spawn_store(4);
+    // An idle connection (no bytes sent) and a hung one (half a frame
+    // header, then silence).
+    let mut idle = std::net::TcpStream::connect(&addr).unwrap();
+    let mut hung = std::net::TcpStream::connect(&addr).unwrap();
+    hung.write_all(&[5, 0]).unwrap();
+    // Let both handlers enter their read loops, then shut down.
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    let c = Client::connect(&addr).unwrap();
+    c.shutdown_server().unwrap();
+    handle.join().unwrap();
+    for (name, stream) in [("idle", &mut idle), ("hung", &mut hung)] {
+        stream
+            .set_read_timeout(Some(std::time::Duration::from_secs(5)))
+            .unwrap();
+        let mut buf = [0u8; 1];
+        match stream.read(&mut buf) {
+            Ok(0) => {} // EOF: the handler thread released us
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                panic!("{name} connection still pinned a handler thread after shutdown")
+            }
+            Err(_) => {} // reset is also a release
+            Ok(n) => panic!("unexpected {n} bytes on the {name} connection"),
+        }
+    }
 }

@@ -220,13 +220,75 @@ fn protocol_roundtrips_random_messages() {
     });
 }
 
-#[test]
-fn delta_replay_from_any_seq_reconstructs_snapshot() {
+// ---------------------------------------------------------------------------
+// backend conformance harness
+// ---------------------------------------------------------------------------
+//
+// The delta-replay and multi-consumer properties are *backend contracts*,
+// not MemStore implementation details: the same generic bodies run against
+// every in-process backend (MemStore, DurableStore over a temp dir), so a
+// new backend cannot silently weaken the cursor semantics.
+
+mod common;
+use common::TempDir;
+
+/// One store under conformance test: the trait handle plus the probe the
+/// properties need (current global write sequence) and the tempdir guard
+/// keeping a durable backend's files alive for the case's duration.
+struct TestStore {
+    store: std::sync::Arc<dyn WeightStore>,
+    write_seq: Box<dyn Fn() -> u64>,
+    _dir: Option<TempDir>,
+}
+
+fn durable_opts() -> issgd::weightstore::durable::DurableOptions {
+    issgd::weightstore::durable::DurableOptions {
+        segment_bytes: 1 << 16,
+        compact_after_bytes: 0, // conformance runs exercise the journal, not the compactor
+        fsync: false,
+    }
+}
+
+/// Every in-process backend the conformance properties run against.
+fn backends(tag: &'static str) -> Vec<(&'static str, Box<dyn Fn(usize, f64) -> TestStore>)> {
+    use issgd::weightstore::durable::DurableStore;
+    use std::sync::Arc;
+    vec![
+        (
+            "mem",
+            Box::new(|n: usize, init: f64| {
+                let s = Arc::new(MemStore::new(n, init));
+                let probe = Arc::clone(&s);
+                TestStore {
+                    store: s,
+                    write_seq: Box::new(move || probe.write_seq()),
+                    _dir: None,
+                }
+            }) as Box<dyn Fn(usize, f64) -> TestStore>,
+        ),
+        (
+            "durable",
+            Box::new(move |n: usize, init: f64| {
+                let dir = TempDir::new(tag);
+                let s = Arc::new(DurableStore::create(&dir.0, n, init, durable_opts()).unwrap());
+                let probe = Arc::clone(&s);
+                TestStore {
+                    store: s,
+                    write_seq: Box::new(move || probe.write_seq()),
+                    _dir: Some(dir),
+                }
+            }),
+        ),
+    ]
+}
+
+fn delta_replay_reconstructs_generic(label: &str, mk: &dyn Fn(usize, f64) -> TestStore) {
     // For any cursor ever handed out: snapshot-at-cursor + delta-since-cursor
     // must equal the final table exactly.
-    prop("delta-replay", 20, |rng| {
+    prop(&format!("delta-replay-{label}"), 20, |rng| {
         let n = 1 + rng.next_below(300) as usize;
-        let store = MemStore::new(n, rng.next_f64());
+        let ts = mk(n, rng.next_f64());
+        let store = &ts.store;
         // Checkpoints: (cursor, snapshot consistent with that cursor).
         let mut checkpoints: Vec<(u64, WeightSnapshot)> = Vec::new();
         let d0 = store.fetch_weights_since(0).unwrap();
@@ -241,7 +303,7 @@ fn delta_replay_from_any_seq_reconstructs_snapshot() {
                 // Checkpoint mid-stream: a full snapshot plus the cursor
                 // current at the same (quiescent) moment.
                 let snap = store.fetch_weights().unwrap();
-                let cursor = store.write_seq();
+                let cursor = (ts.write_seq)();
                 checkpoints.push((cursor, snap));
             }
         }
@@ -258,14 +320,21 @@ fn delta_replay_from_any_seq_reconstructs_snapshot() {
 }
 
 #[test]
-fn delta_replay_survives_concurrent_pushers() {
+fn delta_replay_from_any_seq_reconstructs_snapshot() {
+    for (label, mk) in backends("replay") {
+        delta_replay_reconstructs_generic(label, mk.as_ref());
+    }
+}
+
+fn delta_replay_concurrent_generic(label: &str, mk: &dyn Fn(usize, f64) -> TestStore) {
     // A reader chases the cursor while writers hammer overlapping ranges;
     // after the writers finish, one final delta must land the reader's
     // mirror exactly on the store's table (no lost or phantom writes).
-    prop("delta-concurrent", 6, |rng| {
+    prop(&format!("delta-concurrent-{label}"), 6, |rng| {
         use std::sync::Arc;
         let n = 200 + rng.next_below(400) as usize;
-        let store = Arc::new(MemStore::new(n, 0.0));
+        let ts = mk(n, 0.0);
+        let store = Arc::clone(&ts.store);
         let d0 = store.fetch_weights_since(0).unwrap();
         let mut mirror = d0.to_snapshot().unwrap();
         let mut cursor = d0.seq;
@@ -297,6 +366,13 @@ fn delta_replay_survives_concurrent_pushers() {
         d.apply_to(&mut mirror).unwrap();
         assert_eq!(mirror, store.fetch_weights().unwrap());
     });
+}
+
+#[test]
+fn delta_replay_survives_concurrent_pushers() {
+    for (label, mk) in backends("concurrent") {
+        delta_replay_concurrent_generic(label, mk.as_ref());
+    }
 }
 
 #[test]
@@ -356,17 +432,17 @@ fn faulty_store_replay_converges_for_any_schedule() {
     });
 }
 
-#[test]
-fn multi_consumer_cursors_reconstruct_identically() {
+fn multi_consumer_generic(label: &str, mk: &dyn Fn(usize, f64) -> TestStore) {
     // ROADMAP item: several masters/consumers sharing one store.  Cursors
     // are client-side state, so any number of consumers may interleave
     // `fetch_weights_since` calls at different cadences — each must
     // independently converge on the same table.
     use issgd::config::StalenessUnit;
     use issgd::coordinator::ProposalMaintainer;
-    prop("multi-consumer", 8, |rng| {
+    prop(&format!("multi-consumer-{label}"), 8, |rng| {
         let n = 40 + rng.next_below(160) as usize;
-        let store = MemStore::new(n, 1.0);
+        let ts = mk(n, 1.0);
+        let store = &ts.store;
         // Three consumers: a plain snapshot mirror, a master-mode
         // maintainer, and a peer-mode (coverage-prior) maintainer.
         let mut mirror = WeightSnapshot::default();
@@ -413,6 +489,151 @@ fn multi_consumer_cursors_reconstruct_identically() {
                 pa.sampler().weight(i)
             );
         }
+    });
+}
+
+#[test]
+fn multi_consumer_cursors_reconstruct_identically() {
+    for (label, mk) in backends("multi") {
+        multi_consumer_generic(label, mk.as_ref());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// durable crash recovery
+// ---------------------------------------------------------------------------
+
+#[test]
+fn durable_recovery_from_truncated_log_is_a_prefix_replay() {
+    // The crash-recovery contract: for ANY byte-level truncation of the
+    // journal, reopen recovers exactly the table a reference MemStore
+    // reaches by replaying some *prefix* of the op schedule — never a
+    // corrupted or interleaved state.  (Pushes only, so each op is exactly
+    // one journal frame and the recovered write sequence identifies the
+    // surviving prefix length.)
+    use issgd::weightstore::durable::{DurableOptions, DurableStore};
+    prop("durable-truncate", 10, |rng| {
+        let dir = TempDir::new("trunc");
+        let n = 10 + rng.next_below(120) as usize;
+        let opts = DurableOptions {
+            segment_bytes: u64::MAX, // keep one live segment: tear anywhere in it
+            compact_after_bytes: 0,
+            fsync: false,
+        };
+        let store = DurableStore::create(&dir.0, n, 1.0, opts.clone()).unwrap();
+        let mut ops: Vec<(usize, Vec<f32>, u64)> = Vec::new();
+        for round in 0..(5 + rng.next_below(40)) {
+            let start = rng.next_below(n as u64) as usize;
+            let len = 1 + rng.next_below((n - start).min(12) as u64) as usize;
+            let vals: Vec<f32> = (0..len).map(|_| rng.next_f32().abs()).collect();
+            store.push_weights(start, &vals, round + 1).unwrap();
+            ops.push((start, vals, round + 1));
+        }
+        drop(store); // crash: every append was already flushed
+
+        // Tear the live segment at an arbitrary byte offset.
+        let segs = issgd::weightstore::segment::list_numbered(&dir.0, "seg-", ".log").unwrap();
+        let (_, seg) = segs.last().unwrap();
+        let len = std::fs::metadata(seg).unwrap().len();
+        let cut = rng.next_below(len + 1);
+        {
+            let f = std::fs::OpenOptions::new().write(true).open(seg).unwrap();
+            f.set_len(cut).unwrap();
+        }
+
+        let recovered = DurableStore::open(&dir.0, opts).unwrap();
+        // Which prefix survived is readable off the write sequence (init
+        // state is seq 1, each push claims the next).
+        let m = (recovered.write_seq() - 1) as usize;
+        assert!(m <= ops.len(), "recovered more ops than were written");
+        let reference = MemStore::new(n, 1.0);
+        for (start, vals, pv) in ops.iter().take(m) {
+            reference.push_weights(*start, vals, *pv).unwrap();
+        }
+        let got = recovered.fetch_weights().unwrap();
+        let want = reference.fetch_weights().unwrap();
+        // Stamps are wall-clock on the reference, journal-exact on the
+        // recovered store — compare everything else, then the delta
+        // structure (same per-entry write sequences ⇒ same delivery sets).
+        assert_eq!(got.weights, want.weights);
+        assert_eq!(got.param_versions, want.param_versions);
+        assert_eq!(recovered.write_seq(), reference.write_seq());
+        let dr = recovered.fetch_weights_since(1).unwrap();
+        let df = reference.fetch_weights_since(1).unwrap();
+        assert_eq!(dr.indices, df.indices);
+        assert_eq!(dr.weights, df.weights);
+        assert_eq!(dr.param_versions, df.param_versions);
+        // The recovered store keeps working past the tear.
+        recovered.push_weights(0, &[42.0], 99).unwrap();
+        assert_eq!(recovered.fetch_weights().unwrap().weights[0], 42.0);
+        assert_eq!(recovered.write_seq(), reference.write_seq() + 1);
+    });
+}
+
+#[test]
+fn faulty_wrapped_durable_store_converges_and_persists() {
+    // FaultyStore over DurableStore: the chaos decorator's replay contract
+    // must hold over the persistent backend, the injected faults must
+    // never wound the journal, and a crash after the outage must recover
+    // the exact pre-crash table (stamps included — the journal is exact).
+    use issgd::weightstore::durable::{DurableOptions, DurableStore};
+    use issgd::weightstore::faulty::{FaultSpec, FaultyStore};
+    use std::sync::Arc;
+    prop("faulty-durable", 6, |rng| {
+        let dir = TempDir::new("faulty");
+        let n = 20 + rng.next_below(100) as usize;
+        let opts = DurableOptions {
+            segment_bytes: 1 << 13,
+            compact_after_bytes: 1 << 14, // let the compactor race the chaos
+            fsync: false,
+        };
+        let spec = FaultSpec::quiet(rng.next_u64())
+            .with_errors(rng.next_f64() * 0.4)
+            .with_withholding(rng.next_f64() * 0.4)
+            .with_partial_deltas(rng.next_f64() * 0.4)
+            .with_latency(1 + rng.next_below(20), rng.next_below(50));
+        let inner = Arc::new(DurableStore::create(&dir.0, n, 1.0, opts.clone()).unwrap());
+        let store = FaultyStore::new(inner.clone() as Arc<dyn WeightStore>, spec);
+        let mut mirror = WeightSnapshot::default();
+        let mut cursor = 0u64;
+        for round in 0..60u64 {
+            // Writer: straight into the durable store (delivery, not
+            // write acceptance, is under chaos here).
+            let start = rng.next_below(n as u64) as usize;
+            let len = 1 + rng.next_below((n - start).min(16) as u64) as usize;
+            let vals: Vec<f32> = (0..len).map(|_| rng.next_f32().abs() + 0.01).collect();
+            inner.push_weights(start, &vals, round + 1).unwrap();
+            // Consumer: chase the cursor through the fault schedule,
+            // pinning compaction at the last absorbed position (saved via
+            // the reliable handle so the pin itself is deterministic).
+            if let Ok(d) = store.fetch_weights_since(cursor) {
+                d.apply_to(&mut mirror).unwrap();
+                cursor = d.seq;
+                inner.save_cursor("chaos", cursor).unwrap();
+            }
+        }
+        // Outage over: drain and compare against the ground truth.
+        store.set_enabled(false);
+        let d = store.fetch_weights_since(cursor).unwrap();
+        d.apply_to(&mut mirror).unwrap();
+        cursor = d.seq;
+        assert_eq!(mirror, inner.fetch_weights().unwrap(), "replay diverged");
+        assert_eq!(cursor, inner.write_seq());
+        inner.save_cursor("chaos", cursor).unwrap();
+
+        // Crash + reopen: the journal reproduces the table bit-exactly and
+        // the pinned consumer resumes incrementally.
+        let want = inner.fetch_weights().unwrap();
+        let want_seq = inner.write_seq();
+        drop(store);
+        drop(inner);
+        let back = DurableStore::open(&dir.0, opts).unwrap();
+        assert_eq!(back.fetch_weights().unwrap(), want);
+        assert_eq!(back.write_seq(), want_seq);
+        assert_eq!(back.load_cursor("chaos").unwrap(), Some(cursor));
+        let d = back.fetch_weights_since(cursor).unwrap();
+        assert!(!d.full, "pinned consumer demoted to full resync after crash");
+        assert!(d.is_empty());
     });
 }
 
