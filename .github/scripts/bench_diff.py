@@ -1,0 +1,87 @@
+#!/usr/bin/env python3
+"""Diff two bench JSON-lines files (the CI BENCH_* artifacts).
+
+Usage: bench_diff.py PREV.json CURR.json
+
+Each line is one benchmark: {"group", "name", "median_ns", ...} as written
+by the rust bench harness's --json sink.  Prints a per-bench delta table of
+median times, flagging regressions > WARN_PCT.  Always exits 0 — the diff
+is a reviewer signal (warn, don't fail): CI runners are noisy, and the
+perf trajectory across PRs is what matters.
+"""
+
+import json
+import sys
+
+WARN_PCT = 25.0
+
+
+def load(path):
+    out = {}
+    try:
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rec = json.loads(line)
+                except json.JSONDecodeError:
+                    continue
+                key = f"{rec.get('group', '?')}/{rec.get('name', '?')}"
+                if "median_ns" in rec:
+                    out[key] = rec
+    except OSError as e:
+        print(f"bench-diff: cannot read {path}: {e}")
+    return out
+
+
+def fmt_ns(ns):
+    for unit, scale in (("s", 1e9), ("ms", 1e6), ("us", 1e3)):
+        if ns >= scale:
+            return f"{ns / scale:.2f}{unit}"
+    return f"{ns:.0f}ns"
+
+
+def main():
+    if len(sys.argv) != 3:
+        print(__doc__)
+        return
+    prev, curr = load(sys.argv[1]), load(sys.argv[2])
+    if not prev or not curr:
+        print("bench-diff: nothing to compare (missing or empty input)")
+        return
+    names = sorted(set(prev) | set(curr))
+    width = max(len(n) for n in names)
+    warned = 0
+    print(f"{'benchmark':<{width}}  {'prev':>10}  {'curr':>10}  {'delta':>8}")
+    print("-" * (width + 34))
+    for name in names:
+        p, c = prev.get(name), curr.get(name)
+        if p is None:
+            print(f"{name:<{width}}  {'—':>10}  {fmt_ns(c['median_ns']):>10}  {'new':>8}")
+            continue
+        if c is None:
+            print(f"{name:<{width}}  {fmt_ns(p['median_ns']):>10}  {'—':>10}  {'gone':>8}")
+            continue
+        pm, cm = p["median_ns"], c["median_ns"]
+        pct = (cm - pm) / pm * 100.0 if pm > 0 else 0.0
+        mark = ""
+        if pct > WARN_PCT:
+            mark = "  <-- regression?"
+            warned += 1
+        print(
+            f"{name:<{width}}  {fmt_ns(pm):>10}  {fmt_ns(cm):>10}  {pct:>+7.1f}%{mark}"
+        )
+    if warned:
+        print(
+            f"\nbench-diff: {warned} benchmark(s) slowed by more than "
+            f"{WARN_PCT:.0f}% vs the previous artifact (warn-only; "
+            "runner noise is common — check the trajectory, not one point)."
+        )
+    else:
+        print("\nbench-diff: no regressions beyond the warn threshold.")
+
+
+if __name__ == "__main__":
+    main()

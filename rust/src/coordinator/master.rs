@@ -80,6 +80,10 @@ pub struct Master {
     /// Persistent proposal state: mirrors the store via deltas and keeps
     /// the Fenwick sampler maintained with point updates.
     proposal: ProposalMaintainer,
+    /// Per-layer chunk bytes of the last successful publish: the dirty
+    /// tracker behind layer-wise parameter pushes.  Empty = no layout
+    /// published by us yet (the next publish ships the full layout).
+    last_pushed: Vec<Vec<u8>>,
     /// Saved-cursor name ([`MASTER_CURSOR`] by default; multi-master
     /// deployments set distinct names — see the constant's docs).
     cursor_name: String,
@@ -129,12 +133,31 @@ impl Master {
         // the monotonicity check, and guessing fresh params would clobber
         // a resumed run's model.  Construction has nothing safe to
         // degrade to; the caller retries or aborts.
-        let (version, params) = match store.fetch_params(0)? {
-            Some((v, bytes)) => {
-                crate::log_info!("master", "resuming persisted parameters at version {v}");
-                (v, ParamSet::from_bytes(manifest, &bytes)?)
+        // Fetched layer-wise (cursor 0 ⇒ a full delta) so an adopted
+        // store whose layout matches ours can seed the dirty tracker:
+        // the first publish after a resume then ships only what actually
+        // changed instead of re-uploading (and re-journaling) the whole
+        // model under a fresh layout.
+        let (version, params, last_pushed) = match store.fetch_params_since(0)? {
+            Some(delta) => {
+                crate::log_info!(
+                    "master",
+                    "resuming persisted parameters at version {}",
+                    delta.version
+                );
+                let params = ParamSet::from_delta(manifest, &delta)?;
+                let ours: Vec<String> = (0..params.layers.len())
+                    .map(crate::model::layer_chunk_name)
+                    .collect();
+                let theirs: Vec<&str> = delta.layers.iter().map(|l| l.name.as_str()).collect();
+                let seeded = if ours.iter().map(String::as_str).eq(theirs) {
+                    delta.layers.into_iter().map(|l| l.bytes).collect()
+                } else {
+                    Vec::new() // blob-layout store: next publish re-layers it
+                };
+                (delta.version, params, seeded)
             }
-            None => (0, ParamSet::init_he(manifest, &mut rng)),
+            None => (0, ParamSet::init_he(manifest, &mut rng), Vec::new()),
         };
         let batch = BatchBuilder::new(manifest.batch_train, manifest.input_dim, manifest.n_classes);
         let proposal = ProposalMaintainer::new(
@@ -158,6 +181,7 @@ impl Master {
             batch,
             gtrue: GTrueEstimator::new(),
             proposal,
+            last_pushed,
             cursor_name: MASTER_CURSOR.to_string(),
             saved_cursor: 0,
             store_errors: 0,
@@ -180,21 +204,54 @@ impl Master {
     }
 
     /// Publish current parameters if the cadence says so (always publishes
-    /// at step 0 so workers can start scoring immediately).
+    /// at step 0 so workers can start scoring immediately) — **layer-wise**:
+    /// the first publish ships the full manifest-keyed layout, every later
+    /// one diffs each layer's bytes against the last successful publish
+    /// and ships only the layers the optimizer actually changed (frozen or
+    /// converged layers cost nothing on the wire or in the durable
+    /// journal).  A cadence step where nothing changed skips the store
+    /// round trip entirely.
     ///
     /// Store failures are logged and swallowed: the paper's master is
     /// "fire and forget" (§4.2) — a flaky database must degrade ISSGD
-    /// towards plain SGD, never crash training.
+    /// towards plain SGD, never crash training.  The dirty tracker only
+    /// advances on success, so a failed push's layers are retried whole.
     pub fn maybe_push_params(&mut self) -> Result<bool> {
         if self.step % self.cfg.param_push_every != 0 {
             return Ok(false);
         }
-        match self
-            .store
-            .push_params(self.version + 1, self.params.to_bytes())
-        {
+        let mut chunks = self.params.to_layer_chunks();
+        let full = self.last_pushed.len() != chunks.len();
+        let dirty: Vec<usize> = if full {
+            (0..chunks.len()).collect()
+        } else {
+            (0..chunks.len())
+                .filter(|&i| self.last_pushed[i] != chunks[i].1)
+                .collect()
+        };
+        if dirty.is_empty() {
+            return Ok(false); // nothing changed since the last publish
+        }
+        // Move (never copy) the dirty chunks into the payload: a full
+        // publish of the `paper` config is ~76 MB, and on success the
+        // same buffers become the dirty tracker's new baseline.  On
+        // failure the payload is simply dropped — the next cadence
+        // re-serializes from `self.params`, whose layers a failed store
+        // call cannot have consumed.
+        let payload: Vec<(String, Vec<u8>)> = dirty
+            .iter()
+            .map(|&i| (std::mem::take(&mut chunks[i].0), std::mem::take(&mut chunks[i].1)))
+            .collect();
+        match self.store.push_params_layers(self.version + 1, full, &payload) {
             Ok(()) => {
                 self.version += 1;
+                if full {
+                    self.last_pushed = payload.into_iter().map(|(_, b)| b).collect();
+                } else {
+                    for (&i, (_, b)) in dirty.iter().zip(payload) {
+                        self.last_pushed[i] = b;
+                    }
+                }
                 Ok(true)
             }
             Err(e) => {

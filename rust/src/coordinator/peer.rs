@@ -58,7 +58,7 @@ use crate::config::{RunConfig, StalenessUnit, TrainerKind};
 use crate::data::{BatchBuilder, SynthDataset};
 use crate::metrics::RunRecorder;
 use crate::model::ParamSet;
-use crate::runtime::Engine;
+use crate::runtime::{Engine, Manifest};
 use crate::util::rng::Pcg64;
 use crate::weightstore::{MemStore, WeightStore};
 
@@ -156,13 +156,24 @@ impl PeerState {
         self.proposal.is_some()
     }
 
-    /// Pull newer parameters if available.
+    /// Pull newer parameters if available — layer-wise: a full delta
+    /// (bootstrap / fallback) rebuilds the local copy, an incremental one
+    /// patches only the dirty layers in place.
     pub fn refresh_params(&mut self, engine: &Engine) -> Result<bool> {
-        match self.store.fetch_params(self.version)? {
+        match self.store.fetch_params_since(self.version)? {
             None => Ok(false),
-            Some((version, bytes)) => {
-                self.params = Some(ParamSet::from_bytes(engine.manifest(), &bytes)?);
-                self.version = version;
+            Some(delta) => {
+                match &mut self.params {
+                    Some(p) if !delta.full => p.apply_delta(engine.manifest(), &delta)?,
+                    _ => {
+                        anyhow::ensure!(
+                            delta.full,
+                            "incremental params delta before any full sync"
+                        );
+                        self.params = Some(ParamSet::from_delta(engine.manifest(), &delta)?);
+                    }
+                }
+                self.version = delta.version;
                 Ok(true)
             }
         }
@@ -312,6 +323,42 @@ impl PeerState {
     }
 }
 
+/// Refresh an eval master's parameters from the server through a params
+/// version cursor (shared by the sim and the live driver): an unchanged
+/// model skips the download entirely, an incremental delta patches only
+/// the dirty layers, and the advanced version is threaded back through
+/// `eval_version` at *every* call site — the final eval included — so a
+/// later refresh never re-downloads a model it already holds.
+pub(crate) fn refresh_eval_params(
+    master: &mut Master,
+    manifest: &Manifest,
+    store: &Arc<dyn WeightStore>,
+    eval_version: &mut u64,
+) -> Result<()> {
+    if let Some(delta) = store.fetch_params_since(*eval_version)? {
+        *eval_version = apply_eval_params_delta(master, manifest, &delta)?;
+    }
+    Ok(())
+}
+
+/// Apply half of an eval refresh, returning the new version cursor.
+/// Split out so callers that retry transient *fetch* failures can still
+/// propagate a failing *apply* — a delta that does not apply means
+/// publisher and store disagree on the model config, which is
+/// deterministic and must not be retried or swallowed.
+pub(crate) fn apply_eval_params_delta(
+    master: &mut Master,
+    manifest: &Manifest,
+    delta: &crate::weightstore::ParamsDelta,
+) -> Result<u64> {
+    if delta.full {
+        master.params = ParamSet::from_delta(manifest, delta)?;
+    } else {
+        master.params.apply_delta(manifest, delta)?;
+    }
+    Ok(delta.version)
+}
+
 /// Per-peer shutdown counters (shared by the sim and the live threaded
 /// topology — `coordinator::peer_live`).
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
@@ -371,8 +418,9 @@ pub fn run_asgd_sim(cfg: &RunConfig, engine: &Engine) -> Result<AsgdOutcome> {
     let store_dyn: Arc<dyn WeightStore> = store.clone();
     // Reuse Master for data/split/init/eval plumbing; it never trains here.
     let mut eval_master = Master::new(cfg.clone(), engine, store_dyn.clone())?;
-    // Publish initial parameters (version 1) for the peers.
-    store_dyn.push_params(1, eval_master.params.to_bytes())?;
+    // Publish initial parameters (version 1) for the peers — the full
+    // manifest-keyed layout, so later fetches are layer-precise.
+    store_dyn.push_params_layers(1, true, &eval_master.params.to_layer_chunks())?;
 
     let manifest = engine.manifest();
     let use_is = cfg.trainer == TrainerKind::Issgd;
@@ -429,10 +477,7 @@ pub fn run_asgd_sim(cfg: &RunConfig, engine: &Engine) -> Result<AsgdOutcome> {
         // round crossed an eval boundary (rounds advance by n_workers
         // steps, so exact `% eval_every == 0` hits can't be relied on).
         if cfg.eval_every > 0 && round_start / cfg.eval_every != total_steps / cfg.eval_every {
-            if let Some((v, bytes)) = store_dyn.fetch_params(eval_version)? {
-                eval_master.params = ParamSet::from_bytes(manifest, &bytes)?;
-                eval_version = v;
-            }
+            refresh_eval_params(&mut eval_master, manifest, &store_dyn, &mut eval_version)?;
             let (l, e) = eval_master.evaluate(engine, EvalSplit::Train)?;
             let (_tl, te) = eval_master.evaluate(engine, EvalSplit::Test)?;
             rec.record("eval_train_loss", total_steps, l);
@@ -441,10 +486,11 @@ pub fn run_asgd_sim(cfg: &RunConfig, engine: &Engine) -> Result<AsgdOutcome> {
         }
     }
 
-    // Final evaluation with server params (cursor: skip if already fresh).
-    if let Some((_v, bytes)) = store_dyn.fetch_params(eval_version)? {
-        eval_master.params = ParamSet::from_bytes(manifest, &bytes)?;
-    }
+    // Final evaluation with server params — same cursor-threading helper
+    // as the in-round path, so the version advances here too and a later
+    // reader of `eval_version` never re-downloads a model already held
+    // (the old code discarded the returned version at exactly this site).
+    refresh_eval_params(&mut eval_master, manifest, &store_dyn, &mut eval_version)?;
     let final_err = (
         eval_master.evaluate(engine, EvalSplit::Train)?.1,
         eval_master.evaluate(engine, EvalSplit::Valid)?.1,

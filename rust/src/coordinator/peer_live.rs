@@ -40,7 +40,6 @@ use anyhow::Result;
 
 use crate::config::{RunConfig, StalenessUnit, TrainerKind};
 use crate::metrics::RunRecorder;
-use crate::model::ParamSet;
 use crate::runtime::{artifacts_dir, Engine};
 use crate::weightstore::{MemStore, WeightStore};
 use crate::{log_info, log_warn};
@@ -170,11 +169,15 @@ pub fn run_peer_live(cfg: &RunConfig, opts: &PeerLiveOptions) -> Result<AsgdOutc
     let driver_engine = Engine::load(&dims_dir)?;
     let driver_store = connect("peer-driver")?;
     let mut eval_master = Master::new(cfg.clone(), &driver_engine, driver_store.clone())?;
-    // Publish initial parameters so peers can start — one version above
-    // whatever the store already holds (0 on a fresh store, the persisted
-    // head on a recovered durable store).
-    let base_version = driver_store.params_version()?;
-    driver_store.push_params(base_version + 1, eval_master.params.to_bytes())?;
+    // Publish initial parameters so peers can start — only on a fresh
+    // store (version 0), as the full manifest-keyed layout so every later
+    // fetch is layer-precise.  A recovered durable store already holds the
+    // model `Master::new` just adopted: republishing it would re-journal
+    // the whole blob and raise the params floor, demoting every resumed
+    // consumer to the full-blob fallback for nothing.
+    if driver_store.params_version()? == 0 {
+        driver_store.push_params_layers(1, true, &eval_master.params.to_layer_chunks())?;
+    }
 
     let use_is = cfg.trainer == TrainerKind::Issgd;
     let n_peers = cfg.n_workers;
@@ -466,24 +469,32 @@ pub fn run_peer_live(cfg: &RunConfig, opts: &PeerLiveOptions) -> Result<AsgdOutc
     }
 
     // Final evaluation with the server's current parameters.  The store
-    // may still be injecting faults at shutdown: retry the fetch, and on
-    // persistent failure evaluate with the last successfully fetched
-    // params instead of discarding the whole run.  (A blob that fails to
-    // *decode* is deterministic and still propagates.)
+    // may still be injecting faults at shutdown: retry the *fetch*, and
+    // on persistent failure evaluate with the last successfully applied
+    // params instead of discarding the whole run.  A delta that fails to
+    // *apply* is deterministic (publisher/store config mismatch) and
+    // still propagates — only transport failures are retried.
+    let mut final_delta = None;
     for attempt in 0..DRAIN_RETRIES {
-        match driver_store.fetch_params(eval_version) {
-            Ok(Some((v, bytes))) => {
-                eval_master.params = ParamSet::from_bytes(driver_engine.manifest(), &bytes)?;
-                eval_version = v;
+        match driver_store.fetch_params_since(eval_version) {
+            Ok(d) => {
+                final_delta = d;
                 break;
             }
-            Ok(None) => break,
             Err(e) => log_warn!(
                 "peer-driver",
                 "final param fetch failed (attempt {attempt}, retrying): {e}"
             ),
         }
     }
+    if let Some(delta) = final_delta {
+        eval_version = super::peer::apply_eval_params_delta(
+            &mut eval_master,
+            driver_engine.manifest(),
+            &delta,
+        )?;
+    }
+    let _ = eval_version; // the cursor stays threaded through the last refresh too
     let final_err = (
         eval_master.evaluate(&driver_engine, EvalSplit::Train)?.1,
         eval_master.evaluate(&driver_engine, EvalSplit::Valid)?.1,
@@ -509,17 +520,15 @@ pub fn run_peer_live(cfg: &RunConfig, opts: &PeerLiveOptions) -> Result<AsgdOutc
 }
 
 /// One driver-side evaluation round against the server's current
-/// parameters (version cursor: an unchanged blob skips download+decode).
+/// parameters (version cursor: an unchanged model skips the download, a
+/// changed one ships only its dirty layers).
 fn eval_at(
     eval_master: &mut Master,
     engine: &Engine,
     store: &Arc<dyn WeightStore>,
     eval_version: &mut u64,
 ) -> Result<(f64, f64, f64)> {
-    if let Some((v, bytes)) = store.fetch_params(*eval_version)? {
-        eval_master.params = ParamSet::from_bytes(engine.manifest(), &bytes)?;
-        *eval_version = v;
-    }
+    super::peer::refresh_eval_params(eval_master, engine.manifest(), store, eval_version)?;
     let (l, e) = eval_master.evaluate(engine, EvalSplit::Train)?;
     let (_tl, te) = eval_master.evaluate(engine, EvalSplit::Test)?;
     Ok((l, e, te))

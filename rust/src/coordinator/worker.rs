@@ -19,7 +19,7 @@ use anyhow::Result;
 use crate::data::{BatchBuilder, Shard, SynthDataset};
 use crate::model::ParamSet;
 use crate::runtime::Engine;
-use crate::weightstore::WeightStore;
+use crate::weightstore::{ParamsDelta, WeightStore};
 
 pub struct WorkerState {
     pub id: usize,
@@ -76,18 +76,30 @@ impl WorkerState {
         }
     }
 
-    /// Store half of a parameter refresh: fetch a newer blob if one
-    /// exists.  Failures here are transport-transient.
-    fn fetch_newer_params(&self) -> Result<Option<(u64, Vec<u8>)>> {
-        self.store.fetch_params(self.version)
+    /// Store half of a parameter refresh: fetch the layers written since
+    /// our version, if any.  Failures here are transport-transient.  The
+    /// steady-state traffic is O(dirty layers), not the whole blob — the
+    /// paper's latency-tolerant propagation made cheap.
+    fn fetch_newer_params(&self) -> Result<Option<ParamsDelta>> {
+        self.store.fetch_params_since(self.version)
     }
 
-    /// Decode half of a parameter refresh.  A blob that does not decode is
+    /// Decode half of a parameter refresh.  A delta that does not apply is
     /// a deterministic failure (wrong model/config on the store) — callers
-    /// must not retry it.
-    fn install_params(&mut self, engine: &Engine, version: u64, bytes: &[u8]) -> Result<()> {
-        self.params = Some(ParamSet::from_bytes(engine.manifest(), bytes)?);
-        self.version = version;
+    /// must not retry it.  Full deltas (bootstrap / store fallback)
+    /// rebuild the set; incremental ones patch the named layers in place.
+    fn install_params(&mut self, engine: &Engine, delta: &ParamsDelta) -> Result<()> {
+        match &mut self.params {
+            Some(p) if !delta.full => p.apply_delta(engine.manifest(), delta)?,
+            _ => {
+                anyhow::ensure!(
+                    delta.full,
+                    "incremental params delta before any full sync"
+                );
+                self.params = Some(ParamSet::from_delta(engine.manifest(), delta)?);
+            }
+        }
+        self.version = delta.version;
         Ok(())
     }
 
@@ -96,8 +108,8 @@ impl WorkerState {
     pub fn refresh_params(&mut self, engine: &Engine) -> Result<bool> {
         match self.fetch_newer_params()? {
             None => Ok(false),
-            Some((version, bytes)) => {
-                self.install_params(engine, version, &bytes)?;
+            Some(delta) => {
+                self.install_params(engine, &delta)?;
                 Ok(true)
             }
         }
@@ -206,10 +218,10 @@ impl WorkerState {
         while !stop.load(Ordering::Relaxed) {
             let store_err: Option<(&str, anyhow::Error)> = match self.fetch_newer_params() {
                 Err(e) => Some(("param fetch", e)),
-                Ok(blob) => {
-                    if let Some((version, bytes)) = blob {
-                        // A non-decoding blob is deterministic — propagate.
-                        self.install_params(engine, version, &bytes)?;
+                Ok(delta) => {
+                    if let Some(delta) = delta {
+                        // A non-applying delta is deterministic — propagate.
+                        self.install_params(engine, &delta)?;
                     }
                     match self.compute_scores(engine)? {
                         None => {

@@ -12,6 +12,16 @@ use anyhow::Result;
 
 use crate::runtime::Manifest;
 use crate::util::rng::Pcg64;
+use crate::weightstore::ParamsDelta;
+
+/// Canonical weight-store chunk name of layer `i` — the naming contract
+/// between the publisher ([`ParamSet::to_layer_chunks`]) and subscribers
+/// ([`ParamSet::apply_delta`]).  One chunk per layer, `W_i ‖ b_i` in
+/// [`ParamSet::to_bytes`] order, so concatenating the chunks in layout
+/// order reproduces the flat blob byte-exactly.
+pub fn layer_chunk_name(i: usize) -> String {
+    format!("layer{i}")
+}
 
 /// One dense layer's parameters, row-major `W: (d_in, d_out)` + `b: (d_out,)`.
 #[derive(Debug, Clone, PartialEq)]
@@ -68,6 +78,100 @@ impl ParamSet {
             }
         }
         out
+    }
+
+    /// Serialise one layer's chunk (`W_i ‖ b_i`, little-endian f32s) —
+    /// the unit of layer-wise parameter propagation.
+    pub fn layer_bytes(&self, i: usize) -> Vec<u8> {
+        let l = &self.layers[i];
+        let mut out = Vec::with_capacity((l.w.len() + l.b.len()) * 4);
+        for v in l.w.iter().chain(l.b.iter()) {
+            out.extend(v.to_le_bytes());
+        }
+        out
+    }
+
+    /// All layers as named chunks in layout order — the store's
+    /// full-layout publish ([`crate::weightstore::WeightStore::push_params_layers`]).
+    pub fn to_layer_chunks(&self) -> Vec<(String, Vec<u8>)> {
+        (0..self.layers.len())
+            .map(|i| (layer_chunk_name(i), self.layer_bytes(i)))
+            .collect()
+    }
+
+    /// Apply a params delta in place: a full delta rebuilds from the
+    /// concatenated blob (validated against the manifest), an incremental
+    /// one overwrites only the named layers — the O(dirty layers)
+    /// counterpart of `from_bytes` on the whole blob.
+    ///
+    /// All-or-nothing: every chunk is resolved and size-checked before any
+    /// layer is mutated, so a malformed delta never leaves the set
+    /// half-patched (callers retry or keep evaluating the last good
+    /// parameters).
+    pub fn apply_delta(&mut self, manifest: &Manifest, delta: &ParamsDelta) -> Result<()> {
+        if delta.full {
+            *self = ParamSet::from_bytes(manifest, &delta.to_blob()?)?;
+            return Ok(());
+        }
+        // Pass 1: resolve + validate everything without touching `self`.
+        let mut resolved: Vec<usize> = Vec::with_capacity(delta.layers.len());
+        for chunk in &delta.layers {
+            if chunk.name.is_empty() {
+                // The unnamed chunk is the store's whole-blob pseudo-layer
+                // (a blob-published layout); it replaces the whole set.
+                anyhow::ensure!(
+                    chunk.bytes.len() == manifest.n_params * 4,
+                    "whole-blob chunk is {} bytes, manifest expects {}",
+                    chunk.bytes.len(),
+                    manifest.n_params * 4
+                );
+                resolved.push(usize::MAX); // sentinel: full rebuild
+                continue;
+            }
+            // Parse the index out of the canonical "layer{i}" name — O(1),
+            // no per-candidate allocation (refreshes run per sync on the
+            // worker/peer hot path).
+            let i: usize = chunk
+                .name
+                .strip_prefix("layer")
+                .and_then(|s| s.parse().ok())
+                .filter(|&i| i < self.layers.len())
+                .ok_or_else(|| {
+                    anyhow::anyhow!("params delta names unknown layer {:?}", chunk.name)
+                })?;
+            let l = &self.layers[i];
+            let expect = (l.w.len() + l.b.len()) * 4;
+            anyhow::ensure!(
+                chunk.bytes.len() == expect,
+                "layer {:?} chunk is {} bytes, shape expects {expect}",
+                chunk.name,
+                chunk.bytes.len()
+            );
+            resolved.push(i);
+        }
+        // Pass 2: apply (infallible).
+        for (chunk, &i) in delta.layers.iter().zip(&resolved) {
+            if i == usize::MAX {
+                // Validated above; from_bytes can no longer fail on size.
+                *self = ParamSet::from_bytes(manifest, &chunk.bytes)?;
+                continue;
+            }
+            let l = &mut self.layers[i];
+            let mut vals = chunk
+                .bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()));
+            for v in l.w.iter_mut().chain(l.b.iter_mut()) {
+                *v = vals.next().unwrap();
+            }
+        }
+        Ok(())
+    }
+
+    /// Bootstrap a parameter set from a **full** delta.
+    pub fn from_delta(manifest: &Manifest, delta: &ParamsDelta) -> Result<ParamSet> {
+        anyhow::ensure!(delta.full, "bootstrap requires a full params delta");
+        ParamSet::from_bytes(manifest, &delta.to_blob()?)
     }
 
     /// Inverse of [`ParamSet::to_bytes`]; validates the byte count against
@@ -178,6 +282,87 @@ mod tests {
     fn from_bytes_validates_length() {
         let m = manifest();
         assert!(ParamSet::from_bytes(&m, &[0u8; 7]).is_err());
+    }
+
+    #[test]
+    fn layer_chunks_concatenate_to_the_flat_blob() {
+        let m = manifest();
+        let p = ParamSet::init_he(&m, &mut Pcg64::seeded(5));
+        let chunks = p.to_layer_chunks();
+        assert_eq!(chunks.len(), 2);
+        assert_eq!(chunks[0].0, "layer0");
+        assert_eq!(chunks[1].0, "layer1");
+        let concat: Vec<u8> = chunks.iter().flat_map(|(_, b)| b.iter().copied()).collect();
+        assert_eq!(concat, p.to_bytes());
+    }
+
+    #[test]
+    fn apply_delta_partial_updates_only_named_layers() {
+        use crate::weightstore::{LayerChunk, ParamsDelta};
+        let m = manifest();
+        let mut p = ParamSet::init_he(&m, &mut Pcg64::seeded(6));
+        let q = ParamSet::init_he(&m, &mut Pcg64::seeded(7));
+        // Ship only layer 1 of q into p.
+        let delta = ParamsDelta {
+            version: 2,
+            full: false,
+            layers: vec![LayerChunk {
+                name: "layer1".into(),
+                version: 2,
+                bytes: q.layer_bytes(1),
+            }],
+        };
+        let p0_before = p.layers[0].clone();
+        p.apply_delta(&m, &delta).unwrap();
+        assert_eq!(p.layers[0], p0_before, "untouched layer changed");
+        assert_eq!(p.layers[1], q.layers[1], "named layer not applied");
+        // Unknown names and wrong sizes are hard errors.
+        let bad = ParamsDelta {
+            version: 3,
+            full: false,
+            layers: vec![LayerChunk {
+                name: "layer9".into(),
+                version: 3,
+                bytes: q.layer_bytes(1),
+            }],
+        };
+        assert!(p.apply_delta(&m, &bad).is_err());
+        let short = ParamsDelta {
+            version: 3,
+            full: false,
+            layers: vec![LayerChunk {
+                name: "layer1".into(),
+                version: 3,
+                bytes: vec![0u8; 4],
+            }],
+        };
+        assert!(p.apply_delta(&m, &short).is_err());
+    }
+
+    #[test]
+    fn full_delta_bootstraps_a_param_set() {
+        use crate::weightstore::{LayerChunk, ParamsDelta};
+        let m = manifest();
+        let p = ParamSet::init_he(&m, &mut Pcg64::seeded(8));
+        let delta = ParamsDelta {
+            version: 1,
+            full: true,
+            layers: p
+                .to_layer_chunks()
+                .into_iter()
+                .map(|(name, bytes)| LayerChunk {
+                    name,
+                    version: 1,
+                    bytes,
+                })
+                .collect(),
+        };
+        let q = ParamSet::from_delta(&m, &delta).unwrap();
+        assert_eq!(p, q);
+        // A partial delta cannot bootstrap.
+        let mut partial = delta.clone();
+        partial.full = false;
+        assert!(ParamSet::from_delta(&m, &partial).is_err());
     }
 
     #[test]

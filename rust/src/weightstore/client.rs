@@ -11,7 +11,7 @@ use std::sync::Mutex;
 use anyhow::{bail, Result};
 
 use super::protocol::{read_frame, write_frame, Request, Response};
-use super::{StoreStats, WeightDelta, WeightSnapshot, WeightStore};
+use super::{ParamsDelta, StoreStats, WeightDelta, WeightSnapshot, WeightStore};
 
 pub struct Client {
     stream: Mutex<TcpStream>,
@@ -53,6 +53,29 @@ impl WeightStore for Client {
     fn fetch_params(&self, than: u64) -> Result<Option<(u64, Vec<u8>)>> {
         match self.call(Request::FetchParams { than })? {
             Response::Params(p) => Ok(p),
+            other => bail!("unexpected response: {other:?}"),
+        }
+    }
+
+    fn push_params_layers(
+        &self,
+        version: u64,
+        full: bool,
+        layers: &[(String, Vec<u8>)],
+    ) -> Result<()> {
+        match self.call(Request::PushParamsLayers {
+            version,
+            full,
+            layers: layers.to_vec(),
+        })? {
+            Response::Ok => Ok(()),
+            other => bail!("unexpected response: {other:?}"),
+        }
+    }
+
+    fn fetch_params_since(&self, than: u64) -> Result<Option<ParamsDelta>> {
+        match self.call(Request::FetchParamsSince { than })? {
+            Response::ParamsDelta(d) => Ok(d),
             other => bail!("unexpected response: {other:?}"),
         }
     }
@@ -114,6 +137,15 @@ impl WeightStore for Client {
             name: name.to_string(),
         })? {
             Response::Cursor(c) => Ok(c),
+            other => bail!("unexpected response: {other:?}"),
+        }
+    }
+
+    fn drop_cursor(&self, name: &str) -> Result<()> {
+        match self.call(Request::DropCursor {
+            name: name.to_string(),
+        })? {
+            Response::Ok => Ok(()),
             other => bail!("unexpected response: {other:?}"),
         }
     }

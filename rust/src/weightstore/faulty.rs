@@ -29,7 +29,11 @@
 //!   see writes late and out of order, but never lose one — exactly the
 //!   regime the paper's "factors ... not updated instantly" claim is
 //!   about.  Full deltas (cursor 0 / resync) are never tampered with, so
-//!   a consumer can always bootstrap.
+//!   a consumer can always bootstrap.  **Params deltas** join the same
+//!   surface: an incremental `fetch_params_since` may be withheld
+//!   (reported as "up to date"), so consumers train on stale layers until
+//!   a later fetch delivers them — full params deltas, like full weight
+//!   deltas, always pass through.
 //!
 //! Faults stop at the `fault_until` virtual-time horizon (if set) or when
 //! [`FaultyStore::set_enabled`]`(false)` is called, which is how
@@ -47,7 +51,7 @@ use anyhow::Result;
 
 use crate::util::rng::Pcg64;
 
-use super::{StoreStats, WeightDelta, WeightSnapshot, WeightStore};
+use super::{ParamsDelta, StoreStats, WeightDelta, WeightSnapshot, WeightStore};
 
 /// Virtual time shared by a [`FaultyStore`] and its tests: a monotonic
 /// nanosecond counter advanced by store ops, never by wall clocks.
@@ -155,6 +159,9 @@ pub struct FaultStats {
     pub injected_errors: u64,
     pub withheld_deltas: u64,
     pub partial_deltas: u64,
+    /// Incremental params deltas withheld (reported as "up to date"; the
+    /// layers arrive on a later fetch — the cursor never moved).
+    pub withheld_params: u64,
     /// Ops observed (clock ticks), including ones that then failed.
     pub ops: u64,
 }
@@ -169,6 +176,7 @@ pub struct FaultyStore {
     injected_errors: AtomicU64,
     withheld_deltas: AtomicU64,
     partial_deltas: AtomicU64,
+    withheld_params: AtomicU64,
     ops: AtomicU64,
 }
 
@@ -195,6 +203,7 @@ impl FaultyStore {
             injected_errors: AtomicU64::new(0),
             withheld_deltas: AtomicU64::new(0),
             partial_deltas: AtomicU64::new(0),
+            withheld_params: AtomicU64::new(0),
             ops: AtomicU64::new(0),
         }
     }
@@ -220,6 +229,7 @@ impl FaultyStore {
             injected_errors: self.injected_errors.load(Ordering::Relaxed),
             withheld_deltas: self.withheld_deltas.load(Ordering::Relaxed),
             partial_deltas: self.partial_deltas.load(Ordering::Relaxed),
+            withheld_params: self.withheld_params.load(Ordering::Relaxed),
             ops: self.ops.load(Ordering::Relaxed),
         }
     }
@@ -279,6 +289,42 @@ impl WeightStore for FaultyStore {
         self.tick();
         self.maybe_fail("fetch_params")?;
         self.inner.fetch_params(than)
+    }
+
+    fn push_params_layers(
+        &self,
+        version: u64,
+        full: bool,
+        layers: &[(String, Vec<u8>)],
+    ) -> Result<()> {
+        self.tick();
+        // Fail BEFORE the inner call: an injected push failure must leave
+        // no partial layer write behind.
+        self.maybe_fail("push_params_layers")?;
+        self.inner.push_params_layers(version, full, layers)
+    }
+
+    fn fetch_params_since(&self, than: u64) -> Result<Option<ParamsDelta>> {
+        self.tick();
+        self.maybe_fail("fetch_params_since")?;
+        let delta = self.inner.fetch_params_since(than)?;
+        match delta {
+            // Full deltas are the bootstrap/resync path — never withheld,
+            // mirroring the weight-delta rule.
+            Some(d) if !d.full => {
+                if self.roll(self.spec.withhold_prob) {
+                    // Withhold: report "up to date".  The caller's version
+                    // cursor stays at `than`, layer bytes are absolute, so
+                    // everything is re-delivered on a later fetch — params
+                    // arrive late and possibly reordered, never corrupted.
+                    self.withheld_params.fetch_add(1, Ordering::Relaxed);
+                    Ok(None)
+                } else {
+                    Ok(Some(d))
+                }
+            }
+            other => Ok(other),
+        }
     }
 
     fn params_version(&self) -> Result<u64> {
@@ -367,6 +413,14 @@ impl WeightStore for FaultyStore {
         self.inner.load_cursor(name)
     }
 
+    fn drop_cursor(&self, name: &str) -> Result<()> {
+        self.tick();
+        // Fail BEFORE the inner call: a failed drop leaves the pin in
+        // place (callers re-drop; the op is idempotent).
+        self.maybe_fail("drop_cursor")?;
+        self.inner.drop_cursor(name)
+    }
+
     fn now(&self) -> Result<u64> {
         Ok(self.clock.now())
     }
@@ -430,6 +484,34 @@ mod tests {
         assert_eq!(mirror, mem.fetch_weights().unwrap());
         let d = store.fetch_weights_since(cursor).unwrap();
         assert!(d.is_empty());
+    }
+
+    #[test]
+    fn params_withholding_delays_but_never_loses_layers() {
+        let (mem, store) = wrap(4, FaultSpec::quiet(21).with_withholding(1.0));
+        mem.push_params_layers(1, true, &[("a".into(), vec![1, 1]), ("b".into(), vec![2, 2])])
+            .unwrap();
+        // Bootstrap (full) passes through untouched.
+        let d = store.fetch_params_since(0).unwrap().unwrap();
+        assert!(d.full, "full params deltas must never be withheld");
+        let mut version = d.version;
+        let mut mine: Vec<Vec<u8>> = d.layers.iter().map(|l| l.bytes.clone()).collect();
+        // Incremental updates are withheld: the fetch claims "up to date".
+        mem.push_params_layers(2, false, &[("b".into(), vec![9, 9])]).unwrap();
+        assert!(store.fetch_params_since(version).unwrap().is_none());
+        assert!(store.fault_stats().withheld_params > 0);
+        // Outage over: the layer arrives late, nothing lost.
+        store.set_enabled(false);
+        let d = store.fetch_params_since(version).unwrap().unwrap();
+        assert!(!d.full);
+        for l in &d.layers {
+            let idx = if l.name == "a" { 0 } else { 1 };
+            mine[idx] = l.bytes.clone();
+        }
+        version = d.version;
+        assert_eq!(version, 2);
+        assert_eq!(mine.concat(), mem.fetch_params(0).unwrap().unwrap().1);
+        assert!(store.fetch_params_since(version).unwrap().is_none());
     }
 
     #[test]

@@ -85,6 +85,38 @@
 //! monotonic nanosecond clock.  The master's staleness filter (§B.1) can
 //! therefore operate in wall-clock mode (the paper's "4 seconds") or in
 //! version mode (exact-mode sanity checks).
+//!
+//! # Layer-wise parameter deltas
+//!
+//! Parameters get the same O(changes)-vs-O(N) treatment as weights.  The
+//! stored blob is split into **named layer chunks** (the publisher keys
+//! them off the model manifest — see `model::layer_chunk_name`), each
+//! tagged with the params version that last wrote it.
+//! [`WeightStore::push_params_layers`] updates only the layers a step
+//! actually touched; [`WeightStore::fetch_params_since`]`(v)` returns a
+//! [`ParamsDelta`] carrying only layers newer than `v` plus the new
+//! version cursor.  The legacy whole-blob ops ([`WeightStore::push_params`],
+//! [`WeightStore::fetch_params`]) remain as the bootstrap/opaque path and
+//! observe the concatenation of the chunks in layout order.
+//!
+//! **Params fallback contract** (mirrors the weight cursor contract):
+//! `fetch_params_since` returns `None` when the caller is up to date (or
+//! nothing is published); otherwise a delta whose `full` flag is set when
+//! the caller's version predates the store's retained layer history —
+//! version 0 (bootstrap), a version below the **params floor** (a
+//! whole-blob publish or full-layout republish resets per-layer history,
+//! raising the floor to that version), or a version from the future (a
+//! consumer of a restarted store).  A full delta carries the complete
+//! layout in order; an incremental one only the dirty layers, applied in
+//! place by `model::ParamSet::apply_delta`.  Layer bytes are absolute, so
+//! re-delivery is idempotent, exactly like weight deltas.
+//! [`WeightStore::apply_grad`] touches every layer and therefore marks
+//! the whole layout dirty at the new version.
+//!
+//! Saved consumer cursors can also be **dropped**
+//! ([`WeightStore::drop_cursor`]): a pin from a dead consumer no longer
+//! blocks the compaction floor forever — drop it explicitly, or let the
+//! durable compactor's optional max-age expiry reap it.
 
 pub mod client;
 pub mod durable;
@@ -98,7 +130,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, RwLock};
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 /// Everything the master needs to build a proposal distribution.
 #[derive(Debug, Clone, Default, PartialEq)]
@@ -215,6 +247,60 @@ impl WeightDelta {
     }
 }
 
+/// One named parameter layer chunk as shipped by a params delta: the
+/// layer's full byte payload plus the params version that last wrote it.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct LayerChunk {
+    /// Layer name (the publisher keys these off the model manifest).
+    pub name: String,
+    /// Params version that last wrote this layer.
+    pub version: u64,
+    /// The layer's serialized parameters (absolute, not a diff).
+    pub bytes: Vec<u8>,
+}
+
+/// The incremental counterpart of the parameter blob: the layers written
+/// since a caller-provided version cursor, in layout order.  See the
+/// module docs for the params fallback contract.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ParamsDelta {
+    /// New cursor: the store's params version at fetch time.
+    pub version: u64,
+    /// True when `layers` carries the complete layout (bootstrap,
+    /// below-floor, or future-cursor fallback); false means only the
+    /// dirty layers are present and the caller must already hold the rest.
+    pub full: bool,
+    /// The shipped layer chunks, in layout order.
+    pub layers: Vec<LayerChunk>,
+}
+
+impl ParamsDelta {
+    /// Number of layer chunks carried.
+    pub fn len(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    /// Total layer payload bytes carried (the O(changes) traffic).
+    pub fn payload_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.bytes.len()).sum()
+    }
+
+    /// Concatenate a **full** delta's layers into the flat wire blob
+    /// ([`WeightStore::fetch_params`] order).
+    pub fn to_blob(&self) -> Result<Vec<u8>> {
+        anyhow::ensure!(self.full, "to_blob requires a full params delta");
+        let mut out = Vec::with_capacity(self.payload_bytes());
+        for l in &self.layers {
+            out.extend_from_slice(&l.bytes);
+        }
+        Ok(out)
+    }
+}
+
 /// Store-side aggregate counters (exposed for experiments/monitoring).
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct StoreStats {
@@ -228,6 +314,10 @@ pub struct StoreStats {
     pub delta_fetches: u64,
     /// Entries shipped across all delta fetches (the O(changes) traffic).
     pub delta_entries: u64,
+    /// `fetch_params_since` calls served.
+    pub params_delta_fetches: u64,
+    /// Layer chunks shipped across all params delta fetches.
+    pub params_delta_layers: u64,
     /// `push_weights` round-trips avoided by client-side run coalescing
     /// (peer mode sorts a minibatch's positions and pushes contiguous runs
     /// in one call).  The store itself cannot observe avoided calls, so
@@ -247,6 +337,28 @@ pub trait WeightStore: Send + Sync {
     /// `None` when the caller is already up to date — workers poll this
     /// cheaply without re-downloading ~76 MB of `paper`-config weights.
     fn fetch_params(&self, than: u64) -> Result<Option<(u64, Vec<u8>)>>;
+
+    /// Publish named parameter layers under `version` (> current; versions
+    /// define staleness, exactly like [`WeightStore::push_params`]).
+    ///
+    /// `full == true` (re)defines the entire layout from `layers` (names
+    /// must be unique and non-empty) and raises the **params floor** to
+    /// `version` — per-layer history before a layout definition cannot be
+    /// served precisely.  `full == false` updates only the named layers,
+    /// which must already exist with the same byte size (a mismatch means
+    /// publisher and store disagree on the model config — a hard error,
+    /// not a transient).  The first publish on a fresh slot must be full.
+    fn push_params_layers(&self, version: u64, full: bool, layers: &[(String, Vec<u8>)])
+        -> Result<()>;
+
+    /// Layers written since params version `than` plus the new version
+    /// cursor — the incremental parameter fetch.  `None` when the caller
+    /// is up to date or nothing is published; otherwise see the module
+    /// docs for when the delta degrades to `full` (version 0, below the
+    /// params floor, or from the future).  Layer bytes are absolute, so
+    /// re-delivery is idempotent; like weight cursors, params version
+    /// cursors are per-consumer client-side state.
+    fn fetch_params_since(&self, than: u64) -> Result<Option<ParamsDelta>>;
 
     /// Latest published parameter version (0 = nothing published yet).
     fn params_version(&self) -> Result<u64>;
@@ -303,6 +415,14 @@ pub trait WeightStore: Send + Sync {
     /// paying an O(N) resync.
     fn load_cursor(&self, name: &str) -> Result<Option<u64>>;
 
+    /// Discard a saved consumer cursor (idempotent: unknown names are a
+    /// no-op).  The antidote to a dead consumer's pin blocking the
+    /// compaction floor forever: once dropped, the pin no longer clamps
+    /// [`MemStore::compact_before`] / the durable compactor, and a
+    /// late-returning consumer of that name simply degrades to the
+    /// full-table fallback on its next fetch.
+    fn drop_cursor(&self, name: &str) -> Result<()>;
+
     /// Store-clock in nanoseconds (monotonic, starts near 0).
     fn now(&self) -> Result<u64>;
 
@@ -310,9 +430,41 @@ pub trait WeightStore: Send + Sync {
     fn stats(&self) -> Result<StoreStats>;
 }
 
+/// One stored parameter layer: name, payload, last-write version.
+struct ParamLayer {
+    name: String,
+    bytes: Vec<u8>,
+    /// Params version that last wrote this layer.
+    version: u64,
+}
+
 struct ParamSlot {
     version: u64,
-    bytes: Vec<u8>,
+    /// Named layer chunks in layout order (their concatenation is the
+    /// wire blob [`WeightStore::fetch_params`] serves).  A whole-blob
+    /// publish stores a single unnamed chunk.
+    layers: Vec<ParamLayer>,
+    /// Caller versions `< floor` cannot be served layer-precisely (the
+    /// layout was (re)defined at `floor`): `fetch_params_since` falls
+    /// back to the full layout for them.
+    floor: u64,
+}
+
+impl ParamSlot {
+    fn blob(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.layers.iter().map(|l| l.bytes.len()).sum());
+        for l in &self.layers {
+            out.extend_from_slice(&l.bytes);
+        }
+        out
+    }
+}
+
+/// A saved consumer cursor: the pinned sequence plus the store-clock
+/// stamp of its last save (the max-age expiry signal).
+struct CursorPin {
+    seq: u64,
+    saved_at: u64,
 }
 
 /// One contiguous stripe of the weight table.
@@ -346,7 +498,7 @@ pub struct MemStore {
     next_seq: AtomicU64,
     /// Named consumer cursors ([`WeightStore::save_cursor`]): compaction
     /// pins + crash-resume state.  Also serializes compactions.
-    cursors: Mutex<BTreeMap<String, u64>>,
+    cursors: Mutex<BTreeMap<String, CursorPin>>,
     /// Write sequences `< compact_floor` have been folded together by
     /// [`MemStore::compact_before`]; a fetch cursor below the floor can
     /// only be served the full table.
@@ -363,6 +515,8 @@ pub struct MemStore {
     grad_applies: AtomicU64,
     delta_fetches: AtomicU64,
     delta_entries: AtomicU64,
+    params_delta_fetches: AtomicU64,
+    params_delta_layers: AtomicU64,
 }
 
 impl MemStore {
@@ -391,7 +545,8 @@ impl MemStore {
         MemStore {
             params: Mutex::new(ParamSlot {
                 version: 0,
-                bytes: Vec::new(),
+                layers: Vec::new(),
+                floor: 0,
             }),
             shards,
             chunk,
@@ -409,6 +564,8 @@ impl MemStore {
             grad_applies: AtomicU64::new(0),
             delta_fetches: AtomicU64::new(0),
             delta_entries: AtomicU64::new(0),
+            params_delta_fetches: AtomicU64::new(0),
+            params_delta_layers: AtomicU64::new(0),
         }
     }
 
@@ -424,7 +581,13 @@ impl MemStore {
     /// Oldest saved consumer cursor — the compaction pin (`None` when no
     /// consumer ever saved one).
     pub fn oldest_cursor(&self) -> Option<u64> {
-        self.cursors.lock().unwrap().values().min().copied()
+        self.cursors.lock().unwrap().values().map(|p| p.seq).min()
+    }
+
+    /// Params versions below this cannot be served layer-precisely
+    /// (layout (re)definition point — see the module docs).
+    pub fn params_floor(&self) -> u64 {
+        self.params.lock().unwrap().floor
     }
 
     /// Write sequences below this value have been folded together by
@@ -448,7 +611,7 @@ impl MemStore {
         // advanced concurrently, but a pin present *before* the fold
         // started is honoured, which is all the contract promises.
         let cursors = self.cursors.lock().unwrap();
-        let pin = cursors.values().min().copied().unwrap_or(u64::MAX);
+        let pin = cursors.values().map(|p| p.seq).min().unwrap_or(u64::MAX);
         let target = limit.min(pin).min(self.next_seq.load(Ordering::Acquire));
         let old = self.compact_floor.load(Ordering::Acquire);
         if target <= old {
@@ -517,16 +680,113 @@ impl MemStore {
         Ok(())
     }
 
-    /// Set the parameter slot directly (recovery replay: last record wins,
-    /// no monotonicity check).
+    /// Set the parameter slot from a whole blob directly (legacy journal
+    /// record replay: last record wins, no monotonicity check).  The blob
+    /// becomes a single unnamed layer and the floor rises to `version`.
     pub(crate) fn restore_params(&self, version: u64, bytes: Vec<u8>) {
         let mut slot = self.params.lock().unwrap();
         slot.version = version;
-        slot.bytes = bytes;
+        slot.layers = vec![ParamLayer {
+            name: String::new(),
+            bytes,
+            version,
+        }];
+        slot.floor = version;
     }
 
-    pub(crate) fn restore_cursor(&self, name: String, seq: u64) {
-        self.cursors.lock().unwrap().insert(name, seq);
+    /// Replay a journaled layer push exactly (no monotonicity check —
+    /// journal order is push order).  Mirrors
+    /// [`WeightStore::push_params_layers`] semantics.
+    pub(crate) fn replay_params_layers(
+        &self,
+        version: u64,
+        full: bool,
+        layers: &[(String, Vec<u8>)],
+    ) -> Result<()> {
+        let mut slot = self.params.lock().unwrap();
+        if full || slot.version == 0 {
+            anyhow::ensure!(full, "journaled partial layer push before any layout");
+            slot.layers = layers
+                .iter()
+                .map(|(n, b)| ParamLayer {
+                    name: n.clone(),
+                    bytes: b.clone(),
+                    version,
+                })
+                .collect();
+            slot.floor = version;
+        } else {
+            for (n, b) in layers {
+                let l = slot
+                    .layers
+                    .iter_mut()
+                    .find(|l| &l.name == n)
+                    .with_context(|| format!("journaled push names unknown layer {n:?}"))?;
+                l.bytes = b.clone();
+                l.version = version;
+            }
+        }
+        slot.version = version.max(slot.version);
+        Ok(())
+    }
+
+    /// Append one layer during snapshot restore, preserving layout order
+    /// and the per-layer version recorded at checkpoint time.
+    pub(crate) fn snapshot_append_param_layer(&self, name: String, version: u64, bytes: Vec<u8>) {
+        self.params.lock().unwrap().layers.push(ParamLayer {
+            name,
+            bytes,
+            version,
+        });
+    }
+
+    /// Set the params head version + floor (snapshot meta restore).
+    pub(crate) fn restore_params_meta(&self, version: u64, floor: u64) {
+        let mut slot = self.params.lock().unwrap();
+        slot.version = version;
+        slot.floor = floor;
+    }
+
+    pub(crate) fn restore_cursor(&self, name: String, seq: u64, saved_at: u64) {
+        self.cursors
+            .lock()
+            .unwrap()
+            .insert(name, CursorPin { seq, saved_at });
+    }
+
+    /// Save a cursor and report what was actually stored: the clamped
+    /// sequence plus the store-clock stamp — the durable journal records
+    /// both so replay is bit-exact.
+    pub(crate) fn save_cursor_pin(&self, name: &str, seq: u64) -> Result<(u64, u64)> {
+        anyhow::ensure!(!name.is_empty(), "cursor name must be non-empty");
+        let clamped = seq.min(self.next_seq.load(Ordering::Acquire));
+        let saved_at = self.now()?;
+        self.cursors
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), CursorPin { seq: clamped, saved_at });
+        Ok((clamped, saved_at))
+    }
+
+    /// Drop every pin whose last save predates `cutoff` (store-clock ns);
+    /// returns the reaped `(name, seq)` pairs.  The durable compactor's
+    /// max-age expiry — a dead consumer's pin stops blocking the floor,
+    /// at the documented cost that the consumer, if it ever returns,
+    /// degrades to the full-table fallback.
+    pub(crate) fn expire_cursors(&self, cutoff: u64) -> Vec<(String, u64)> {
+        let mut cursors = self.cursors.lock().unwrap();
+        let doomed: Vec<String> = cursors
+            .iter()
+            .filter(|(_, p)| p.saved_at < cutoff)
+            .map(|(n, _)| n.clone())
+            .collect();
+        doomed
+            .into_iter()
+            .map(|n| {
+                let pin = cursors.remove(&n).unwrap();
+                (n, pin.seq)
+            })
+            .collect()
     }
 
     pub(crate) fn restore_floor(&self, floor: u64) {
@@ -563,19 +823,30 @@ impl MemStore {
         (snap, seqs)
     }
 
-    /// Current parameter slot (version, blob copy) — snapshot writer input.
-    pub(crate) fn params_blob(&self) -> (u64, Vec<u8>) {
+    /// Current parameter state `(version, floor, layer chunks in layout
+    /// order)` — snapshot writer input.
+    pub(crate) fn params_layers_dump(&self) -> (u64, u64, Vec<LayerChunk>) {
         let slot = self.params.lock().unwrap();
-        (slot.version, slot.bytes.clone())
+        let layers = slot
+            .layers
+            .iter()
+            .map(|l| LayerChunk {
+                name: l.name.clone(),
+                version: l.version,
+                bytes: l.bytes.clone(),
+            })
+            .collect();
+        (slot.version, slot.floor, layers)
     }
 
-    /// All saved consumer cursors — snapshot writer input.
-    pub(crate) fn cursors_vec(&self) -> Vec<(String, u64)> {
+    /// All saved consumer cursors `(name, seq, saved_at)` — snapshot
+    /// writer input.
+    pub(crate) fn cursors_vec(&self) -> Vec<(String, u64, u64)> {
         self.cursors
             .lock()
             .unwrap()
             .iter()
-            .map(|(k, v)| (k.clone(), *v))
+            .map(|(k, v)| (k.clone(), v.seq, v.saved_at))
             .collect()
     }
 
@@ -649,7 +920,75 @@ impl WeightStore for MemStore {
             version
         );
         slot.version = version;
-        slot.bytes = bytes;
+        // A whole-blob publish has no layer structure: it replaces the
+        // layout with one unnamed chunk and resets per-layer history.
+        slot.layers = vec![ParamLayer {
+            name: String::new(),
+            bytes,
+            version,
+        }];
+        slot.floor = version;
+        self.param_pushes.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn push_params_layers(
+        &self,
+        version: u64,
+        full: bool,
+        layers: &[(String, Vec<u8>)],
+    ) -> Result<()> {
+        anyhow::ensure!(!layers.is_empty(), "layer push carries no layers");
+        let mut slot = self.params.lock().unwrap();
+        anyhow::ensure!(
+            version > slot.version,
+            "parameter version must increase: {} -> {}",
+            slot.version,
+            version
+        );
+        if full || slot.version == 0 {
+            anyhow::ensure!(
+                full,
+                "first layer publish must be full (the layout is undefined)"
+            );
+            for (i, (n, _)) in layers.iter().enumerate() {
+                anyhow::ensure!(!n.is_empty(), "layer {i} has an empty name");
+                anyhow::ensure!(
+                    !layers[..i].iter().any(|(m, _)| m == n),
+                    "duplicate layer name {n:?} in full publish"
+                );
+            }
+            slot.layers = layers
+                .iter()
+                .map(|(n, b)| ParamLayer {
+                    name: n.clone(),
+                    bytes: b.clone(),
+                    version,
+                })
+                .collect();
+            // Layout (re)definition: older per-layer history is gone.
+            slot.floor = version;
+        } else {
+            // Validate every named layer before mutating any: a bad push
+            // must not leave the layout half-updated.
+            for (n, b) in layers {
+                let l = slot.layers.iter().find(|l| &l.name == n).with_context(|| {
+                    format!("push names unknown layer {n:?}; republish the full layout")
+                })?;
+                anyhow::ensure!(
+                    l.bytes.len() == b.len(),
+                    "layer {n:?} is {} bytes, push carries {}",
+                    l.bytes.len(),
+                    b.len()
+                );
+            }
+            for (n, b) in layers {
+                let l = slot.layers.iter_mut().find(|l| &l.name == n).unwrap();
+                l.bytes = b.clone();
+                l.version = version;
+            }
+        }
+        slot.version = version;
         self.param_pushes.fetch_add(1, Ordering::Relaxed);
         Ok(())
     }
@@ -658,10 +997,39 @@ impl WeightStore for MemStore {
         let slot = self.params.lock().unwrap();
         self.param_fetches.fetch_add(1, Ordering::Relaxed);
         if slot.version > than {
-            Ok(Some((slot.version, slot.bytes.clone())))
+            Ok(Some((slot.version, slot.blob())))
         } else {
             Ok(None)
         }
+    }
+
+    fn fetch_params_since(&self, than: u64) -> Result<Option<ParamsDelta>> {
+        let slot = self.params.lock().unwrap();
+        self.params_delta_fetches.fetch_add(1, Ordering::Relaxed);
+        if slot.version == 0 || than == slot.version {
+            return Ok(None);
+        }
+        // Version 0 (bootstrap), below the floor (layout redefined since),
+        // or from the future (restarted store): only the full layout can
+        // be served.  `than == 0 < floor` always, but spell it out.
+        let full = than == 0 || than < slot.floor || than > slot.version;
+        let layers: Vec<LayerChunk> = slot
+            .layers
+            .iter()
+            .filter(|l| full || l.version > than)
+            .map(|l| LayerChunk {
+                name: l.name.clone(),
+                version: l.version,
+                bytes: l.bytes.clone(),
+            })
+            .collect();
+        self.params_delta_layers
+            .fetch_add(layers.len() as u64, Ordering::Relaxed);
+        Ok(Some(ParamsDelta {
+            version: slot.version,
+            full,
+            layers,
+        }))
     }
 
     fn params_version(&self) -> Result<u64> {
@@ -735,30 +1103,51 @@ impl WeightStore for MemStore {
         anyhow::ensure!(scale.is_finite(), "scale {scale} invalid");
         let mut slot = self.params.lock().unwrap();
         anyhow::ensure!(slot.version > 0, "no parameters published yet");
+        let total: usize = slot.layers.iter().map(|l| l.bytes.len()).sum();
         anyhow::ensure!(
-            slot.bytes.len() == grad.len() * 4,
+            total == grad.len() * 4,
             "gradient has {} values, parameter blob holds {}",
             grad.len(),
-            slot.bytes.len() / 4
+            total / 4
         );
-        for (chunk, g) in slot.bytes.chunks_exact_mut(4).zip(grad) {
-            let v = f32::from_le_bytes(chunk.try_into().unwrap()) - scale * g;
-            chunk.copy_from_slice(&v.to_le_bytes());
+        // Validate alignment before mutating anything: a bad layer must
+        // not leave the blob half-updated.
+        for l in &slot.layers {
+            anyhow::ensure!(
+                l.bytes.len() % 4 == 0,
+                "layer {:?} is not f32-aligned ({} bytes)",
+                l.name,
+                l.bytes.len()
+            );
         }
-        slot.version += 1;
+        // The gradient spans the whole flat parameter vector, so every
+        // layer is touched and stamped with the new version.
+        let new_version = slot.version + 1;
+        let mut off = 0usize;
+        for l in slot.layers.iter_mut() {
+            for chunk in l.bytes.chunks_exact_mut(4) {
+                let v = f32::from_le_bytes(chunk.try_into().unwrap()) - scale * grad[off];
+                chunk.copy_from_slice(&v.to_le_bytes());
+                off += 1;
+            }
+            l.version = new_version;
+        }
+        slot.version = new_version;
         self.grad_applies.fetch_add(1, Ordering::Relaxed);
         Ok(slot.version)
     }
 
     fn save_cursor(&self, name: &str, seq: u64) -> Result<()> {
-        anyhow::ensure!(!name.is_empty(), "cursor name must be non-empty");
-        let clamped = seq.min(self.next_seq.load(Ordering::Acquire));
-        self.cursors.lock().unwrap().insert(name.to_string(), clamped);
-        Ok(())
+        self.save_cursor_pin(name, seq).map(|_| ())
     }
 
     fn load_cursor(&self, name: &str) -> Result<Option<u64>> {
-        Ok(self.cursors.lock().unwrap().get(name).copied())
+        Ok(self.cursors.lock().unwrap().get(name).map(|p| p.seq))
+    }
+
+    fn drop_cursor(&self, name: &str) -> Result<()> {
+        self.cursors.lock().unwrap().remove(name);
+        Ok(())
     }
 
     fn now(&self) -> Result<u64> {
@@ -775,6 +1164,8 @@ impl WeightStore for MemStore {
             grad_applies: self.grad_applies.load(Ordering::Relaxed),
             delta_fetches: self.delta_fetches.load(Ordering::Relaxed),
             delta_entries: self.delta_entries.load(Ordering::Relaxed),
+            params_delta_fetches: self.params_delta_fetches.load(Ordering::Relaxed),
+            params_delta_layers: self.params_delta_layers.load(Ordering::Relaxed),
             push_calls_saved: 0,
         })
     }
@@ -1159,6 +1550,149 @@ mod tests {
         let s = MemStore::new(1, 0.0);
         s.advance_clock_to(1_000_000_000);
         assert!(s.now().unwrap() >= 1_000_000_000);
+    }
+
+    // -- layer-wise params ---------------------------------------------------
+
+    fn chunk(name: &str, bytes: &[u8]) -> (String, Vec<u8>) {
+        (name.to_string(), bytes.to_vec())
+    }
+
+    #[test]
+    fn layer_push_and_delta_fetch_ship_only_dirty_layers() {
+        let s = MemStore::new(2, 1.0);
+        assert!(s.fetch_params_since(0).unwrap().is_none()); // nothing yet
+        s.push_params_layers(1, true, &[chunk("a", &[1, 1, 1, 1]), chunk("b", &[2, 2, 2, 2])])
+            .unwrap();
+        // Bootstrap (cursor 0): full layout in order.
+        let d = s.fetch_params_since(0).unwrap().unwrap();
+        assert!(d.full);
+        assert_eq!(d.version, 1);
+        assert_eq!(d.len(), 2);
+        assert_eq!(d.layers[0].name, "a");
+        assert_eq!(d.layers[1].name, "b");
+        assert_eq!(d.to_blob().unwrap(), vec![1, 1, 1, 1, 2, 2, 2, 2]);
+        // Partial update: only layer b ships to a caller at version 1.
+        s.push_params_layers(2, false, &[chunk("b", &[9, 9, 9, 9])]).unwrap();
+        let d = s.fetch_params_since(1).unwrap().unwrap();
+        assert!(!d.full);
+        assert_eq!(d.version, 2);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d.layers[0].name, "b");
+        assert_eq!(d.layers[0].version, 2);
+        assert_eq!(d.layers[0].bytes, vec![9, 9, 9, 9]);
+        // Up to date: None.
+        assert!(s.fetch_params_since(2).unwrap().is_none());
+        // The blob view concatenates the updated layout.
+        let (v, blob) = s.fetch_params(0).unwrap().unwrap();
+        assert_eq!((v, blob), (2, vec![1, 1, 1, 1, 9, 9, 9, 9]));
+        assert_eq!(s.stats().unwrap().params_delta_fetches, 4);
+    }
+
+    #[test]
+    fn params_delta_fallbacks_below_floor_and_from_the_future() {
+        let s = MemStore::new(2, 1.0);
+        s.push_params_layers(1, true, &[chunk("a", &[1]), chunk("b", &[2])]).unwrap();
+        s.push_params_layers(2, false, &[chunk("a", &[3])]).unwrap();
+        // Full-layout republish raises the floor: version-1 history is gone.
+        s.push_params_layers(5, true, &[chunk("a", &[4]), chunk("b", &[5])]).unwrap();
+        assert_eq!(s.params_floor(), 5);
+        let d = s.fetch_params_since(2).unwrap().unwrap();
+        assert!(d.full, "cursor below the params floor must fall back to full");
+        assert_eq!(d.len(), 2);
+        // A future cursor (restarted store) also degrades to full.
+        let d = s.fetch_params_since(99).unwrap().unwrap();
+        assert!(d.full);
+        assert_eq!(d.version, 5);
+    }
+
+    #[test]
+    fn layer_push_validates_layout_and_sizes() {
+        let s = MemStore::new(2, 1.0);
+        // First publish must be full.
+        assert!(s.push_params_layers(1, false, &[chunk("a", &[1])]).is_err());
+        // Full publish rejects empty and duplicate names.
+        assert!(s.push_params_layers(1, true, &[chunk("", &[1])]).is_err());
+        assert!(s
+            .push_params_layers(1, true, &[chunk("a", &[1]), chunk("a", &[2])])
+            .is_err());
+        assert!(s.push_params_layers(1, true, &[]).is_err());
+        s.push_params_layers(1, true, &[chunk("a", &[1, 2])]).unwrap();
+        // Partial pushes must name known layers with matching sizes and
+        // increasing versions.
+        assert!(s.push_params_layers(2, false, &[chunk("nope", &[1, 2])]).is_err());
+        assert!(s.push_params_layers(2, false, &[chunk("a", &[1])]).is_err());
+        assert!(s.push_params_layers(1, false, &[chunk("a", &[3, 4])]).is_err());
+        s.push_params_layers(2, false, &[chunk("a", &[3, 4])]).unwrap();
+        assert_eq!(s.params_version().unwrap(), 2);
+    }
+
+    #[test]
+    fn apply_grad_marks_every_layer_dirty() {
+        let s = MemStore::new(2, 1.0);
+        let zeros = vec![0u8; 4];
+        s.push_params_layers(1, true, &[chunk("a", &zeros), chunk("b", &zeros)]).unwrap();
+        let v = s.apply_grad(0.5, &[2.0, -2.0]).unwrap();
+        assert_eq!(v, 2);
+        let d = s.fetch_params_since(1).unwrap().unwrap();
+        assert!(!d.full);
+        assert_eq!(d.len(), 2, "a grad touches the whole layout");
+        let (_, blob) = s.fetch_params(0).unwrap().unwrap();
+        let got: Vec<f32> = blob
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        assert_eq!(got, vec![-1.0, 1.0]);
+    }
+
+    #[test]
+    fn whole_blob_push_resets_the_layout_and_floor() {
+        let s = MemStore::new(2, 1.0);
+        s.push_params_layers(1, true, &[chunk("a", &[1]), chunk("b", &[2])]).unwrap();
+        s.push_params(4, vec![7, 8]).unwrap();
+        assert_eq!(s.params_floor(), 4);
+        let d = s.fetch_params_since(1).unwrap().unwrap();
+        assert!(d.full, "layer history does not survive a blob publish");
+        assert_eq!(d.len(), 1);
+        assert_eq!(d.layers[0].name, "");
+        assert_eq!(d.to_blob().unwrap(), vec![7, 8]);
+        // And a full layer publish on top re-layers the slot.
+        s.push_params_layers(5, true, &[chunk("x", &[9])]).unwrap();
+        assert_eq!(s.fetch_params(0).unwrap().unwrap().1, vec![9]);
+    }
+
+    #[test]
+    fn drop_cursor_unblocks_the_compaction_floor() {
+        let s = MemStore::new(8, 1.0);
+        for i in 0..6 {
+            s.push_weights(i, &[i as f32 + 2.0], 1).unwrap();
+        }
+        let head = s.write_seq();
+        s.save_cursor("dead", 2).unwrap();
+        s.save_cursor("live", head).unwrap();
+        assert_eq!(s.compact_before(u64::MAX), 2, "dead pin clamps the fold");
+        s.drop_cursor("dead").unwrap();
+        assert_eq!(s.load_cursor("dead").unwrap(), None);
+        // Dropping is idempotent and unblocks the floor.
+        s.drop_cursor("dead").unwrap();
+        assert_eq!(s.compact_before(u64::MAX), head);
+        assert_eq!(s.oldest_cursor(), Some(head));
+    }
+
+    #[test]
+    fn expire_cursors_reaps_only_stale_pins() {
+        let s = MemStore::new(4, 1.0);
+        s.push_weights(0, &[2.0], 1).unwrap();
+        s.save_cursor("old", 1).unwrap();
+        let cutoff = s.now().unwrap() + 1; // strictly after the save
+        // "fresh" is saved at a clock reading at/after the cutoff.
+        s.advance_clock_to(cutoff + 1);
+        s.save_cursor("fresh", s.write_seq()).unwrap();
+        let reaped = s.expire_cursors(cutoff);
+        assert_eq!(reaped.len(), 1);
+        assert_eq!(reaped[0].0, "old");
+        assert_eq!(s.load_cursor("old").unwrap(), None);
+        assert!(s.load_cursor("fresh").unwrap().is_some());
     }
 
     #[test]

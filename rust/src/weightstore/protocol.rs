@@ -5,12 +5,38 @@
 //! fields.  No varints, no schema evolution — the protocol is internal to
 //! one release of this binary on both ends, so simplicity wins (this is
 //! also roughly what the paper got from Redis: opaque blobs under keys).
+//!
+//! # Opcode table
+//!
+//! | op   | request                | op   | response            |
+//! |------|------------------------|------|---------------------|
+//! | 0x01 | `PushParams`           | 0x80 | `Ok`                |
+//! | 0x02 | `FetchParams`          | 0x81 | `Err`               |
+//! | 0x03 | `ParamsVersion`        | 0x82 | `Params`            |
+//! | 0x04 | `PushWeights`          | 0x83 | `Version`           |
+//! | 0x05 | `FetchWeights`         | 0x84 | `Weights`           |
+//! | 0x06 | `Now`                  | 0x85 | `Now`               |
+//! | 0x07 | `Stats`                | 0x86 | `Stats`             |
+//! | 0x08 | `ApplyGrad`            | 0x87 | `WeightsDelta`      |
+//! | 0x09 | `FetchWeightsSince`    | 0x88 | `Cursor`            |
+//! | 0x0A | `SaveCursor`           | 0x89 | `ParamsDelta`       |
+//! | 0x0B | `LoadCursor`           |      |                     |
+//! | 0x0C | `PushParamsLayers`     |      |                     |
+//! | 0x0D | `FetchParamsSince`     |      |                     |
+//! | 0x0E | `DropCursor`           |      |                     |
+//! | 0x0F | `Shutdown`             |      |                     |
+//!
+//! The params-delta pair (`PushParamsLayers`/`FetchParamsSince` →
+//! `ParamsDelta`) carries *named layer chunks* instead of the whole blob;
+//! the version/fallback contract lives on
+//! [`super::WeightStore::fetch_params_since`] and in the `weightstore`
+//! module docs.  `DropCursor` removes a dead consumer's compaction pin.
 
 use std::io::{Read, Write};
 
 use anyhow::{bail, Context, Result};
 
-use super::{StoreStats, WeightDelta, WeightSnapshot};
+use super::{LayerChunk, ParamsDelta, StoreStats, WeightDelta, WeightSnapshot};
 
 /// Hard cap on frame size (128 MiB) — a corrupted length prefix must not
 /// make the peer try to allocate the universe.
@@ -32,6 +58,16 @@ pub enum Request {
     SaveCursor { name: String, seq: u64 },
     /// Read back a named consumer cursor.
     LoadCursor { name: String },
+    /// Publish named parameter layers (`full` = layout definition).
+    PushParamsLayers {
+        version: u64,
+        full: bool,
+        layers: Vec<(String, Vec<u8>)>,
+    },
+    /// Incremental parameter fetch: layers written since `than`.
+    FetchParamsSince { than: u64 },
+    /// Discard a named consumer cursor (dead-consumer pin removal).
+    DropCursor { name: String },
     Now,
     Stats,
     /// Ask the server process to exit its accept loop.
@@ -51,6 +87,8 @@ pub enum Response {
     Stats(StoreStats),
     /// A saved cursor (`None` = unknown consumer).
     Cursor(Option<u64>),
+    /// A params delta (`None` = caller up to date / nothing published).
+    ParamsDelta(Option<ParamsDelta>),
 }
 
 // ---------------------------------------------------------------------------
@@ -177,6 +215,28 @@ pub(crate) fn encode_apply_grad(scale: f32, grad: &[f32]) -> Vec<u8> {
     p
 }
 
+/// Payload of a [`Request::PushParamsLayers`] (opcode included), from
+/// borrows — shared with the durable journal, whose per-push params
+/// record is exactly this frame (no whole-blob re-serialization).
+/// Generic over the pair types so both owned `(String, Vec<u8>)` lists
+/// and borrowed `(&str, &[u8])` views (the snapshot writer) encode
+/// without cloning.
+pub(crate) fn encode_push_params_layers<N: AsRef<str>, B: AsRef<[u8]>>(
+    version: u64,
+    full: bool,
+    layers: &[(N, B)],
+) -> Vec<u8> {
+    let mut p = vec![0x0C];
+    p.extend(version.to_le_bytes());
+    p.push(full as u8);
+    p.extend((layers.len() as u64).to_le_bytes());
+    for (name, bytes) in layers {
+        put_bytes(&mut p, name.as_ref().as_bytes());
+        put_bytes(&mut p, bytes.as_ref());
+    }
+    p
+}
+
 /// Payload of a [`Response::WeightsDelta`] (opcode included), from a
 /// borrow — the journal's per-push frame on the hot write path.
 pub(crate) fn encode_weights_delta(delta: &WeightDelta) -> Vec<u8> {
@@ -230,6 +290,21 @@ impl Request {
                 p.push(0x0B);
                 put_bytes(&mut p, name.as_bytes());
             }
+            Request::PushParamsLayers {
+                version,
+                full,
+                layers,
+            } => {
+                return encode_push_params_layers(*version, *full, layers);
+            }
+            Request::FetchParamsSince { than } => {
+                p.push(0x0D);
+                p.extend(than.to_le_bytes());
+            }
+            Request::DropCursor { name } => {
+                p.push(0x0E);
+                put_bytes(&mut p, name.as_bytes());
+            }
             Request::Now => p.push(0x06),
             Request::Stats => p.push(0x07),
             Request::Shutdown => p.push(0x0F),
@@ -266,6 +341,27 @@ impl Request {
                 seq: c.u64()?,
             },
             0x0B => Request::LoadCursor {
+                name: String::from_utf8(c.bytes()?).context("cursor name not utf-8")?,
+            },
+            0x0C => {
+                let version = c.u64()?;
+                let full = c.u8()? != 0;
+                let count = c.u64()? as usize;
+                let mut layers = Vec::with_capacity(count.min(1 << 16));
+                for _ in 0..count {
+                    let name =
+                        String::from_utf8(c.bytes()?).context("layer name not utf-8")?;
+                    let bytes = c.bytes()?;
+                    layers.push((name, bytes));
+                }
+                Request::PushParamsLayers {
+                    version,
+                    full,
+                    layers,
+                }
+            }
+            0x0D => Request::FetchParamsSince { than: c.u64()? },
+            0x0E => Request::DropCursor {
                 name: String::from_utf8(c.bytes()?).context("cursor name not utf-8")?,
             },
             0x06 => Request::Now,
@@ -325,6 +421,23 @@ impl Response {
                     }
                 }
             }
+            Response::ParamsDelta(opt) => {
+                p.push(0x89);
+                match opt {
+                    None => p.push(0),
+                    Some(d) => {
+                        p.push(1);
+                        p.extend(d.version.to_le_bytes());
+                        p.push(d.full as u8);
+                        p.extend((d.layers.len() as u64).to_le_bytes());
+                        for l in &d.layers {
+                            put_bytes(&mut p, l.name.as_bytes());
+                            p.extend(l.version.to_le_bytes());
+                            put_bytes(&mut p, &l.bytes);
+                        }
+                    }
+                }
+            }
             Response::Stats(s) => {
                 p.push(0x86);
                 for v in [
@@ -336,6 +449,8 @@ impl Response {
                     s.grad_applies,
                     s.delta_fetches,
                     s.delta_entries,
+                    s.params_delta_fetches,
+                    s.params_delta_layers,
                     s.push_calls_saved,
                 ] {
                     p.extend(v.to_le_bytes());
@@ -419,6 +534,33 @@ impl Response {
                     Response::Cursor(None)
                 }
             }
+            0x89 => {
+                let has = c.u8()? != 0;
+                if !has {
+                    Response::ParamsDelta(None)
+                } else {
+                    let version = c.u64()?;
+                    let full = c.u8()? != 0;
+                    let count = c.u64()? as usize;
+                    let mut layers = Vec::with_capacity(count.min(1 << 16));
+                    for _ in 0..count {
+                        let name =
+                            String::from_utf8(c.bytes()?).context("layer name not utf-8")?;
+                        let lv = c.u64()?;
+                        let bytes = c.bytes()?;
+                        layers.push(LayerChunk {
+                            name,
+                            version: lv,
+                            bytes,
+                        });
+                    }
+                    Response::ParamsDelta(Some(ParamsDelta {
+                        version,
+                        full,
+                        layers,
+                    }))
+                }
+            }
             0x86 => Response::Stats(StoreStats {
                 param_pushes: c.u64()?,
                 param_fetches: c.u64()?,
@@ -428,6 +570,8 @@ impl Response {
                 grad_applies: c.u64()?,
                 delta_fetches: c.u64()?,
                 delta_entries: c.u64()?,
+                params_delta_fetches: c.u64()?,
+                params_delta_layers: c.u64()?,
                 push_calls_saved: c.u64()?,
             }),
             _ => bail!("unknown response opcode {op:#04x}"),
@@ -512,6 +656,24 @@ mod tests {
         roundtrip_req(Request::LoadCursor {
             name: "peer-3".into(),
         });
+        roundtrip_req(Request::PushParamsLayers {
+            version: 12,
+            full: true,
+            layers: vec![
+                ("layer0".into(), vec![1, 2, 3, 4]),
+                ("layer1".into(), Vec::new()),
+            ],
+        });
+        roundtrip_req(Request::PushParamsLayers {
+            version: 13,
+            full: false,
+            layers: vec![("layer1".into(), vec![9; 33])],
+        });
+        roundtrip_req(Request::FetchParamsSince { than: 0 });
+        roundtrip_req(Request::FetchParamsSince { than: u64::MAX });
+        roundtrip_req(Request::DropCursor {
+            name: "peer-7".into(),
+        });
         roundtrip_req(Request::Now);
         roundtrip_req(Request::Stats);
         roundtrip_req(Request::Shutdown);
@@ -547,6 +709,32 @@ mod tests {
         roundtrip_resp(Response::Now(123456789));
         roundtrip_resp(Response::Cursor(None));
         roundtrip_resp(Response::Cursor(Some(42)));
+        roundtrip_resp(Response::ParamsDelta(None));
+        roundtrip_resp(Response::ParamsDelta(Some(ParamsDelta {
+            version: 9,
+            full: false,
+            layers: vec![
+                LayerChunk {
+                    name: "layer2".into(),
+                    version: 9,
+                    bytes: vec![0, 255, 7],
+                },
+                LayerChunk {
+                    name: "layer5".into(),
+                    version: 8,
+                    bytes: Vec::new(),
+                },
+            ],
+        })));
+        roundtrip_resp(Response::ParamsDelta(Some(ParamsDelta {
+            version: 1,
+            full: true,
+            layers: vec![LayerChunk {
+                name: "".into(),
+                version: 1,
+                bytes: vec![42; 17],
+            }],
+        })));
         roundtrip_resp(Response::Stats(StoreStats {
             param_pushes: 1,
             param_fetches: 2,
@@ -556,8 +744,50 @@ mod tests {
             grad_applies: 6,
             delta_fetches: 7,
             delta_entries: 8,
-            push_calls_saved: 9,
+            params_delta_fetches: 9,
+            params_delta_layers: 10,
+            push_calls_saved: 11,
         }));
+    }
+
+    #[test]
+    fn params_delta_frames_reject_truncation_and_trailing() {
+        let enc = Response::ParamsDelta(Some(ParamsDelta {
+            version: 3,
+            full: true,
+            layers: vec![
+                LayerChunk {
+                    name: "a".into(),
+                    version: 2,
+                    bytes: vec![1, 2, 3, 4],
+                },
+                LayerChunk {
+                    name: "b".into(),
+                    version: 3,
+                    bytes: vec![5, 6],
+                },
+            ],
+        }))
+        .encode();
+        for cut in 0..enc.len() {
+            assert!(Response::decode(&enc[..cut]).is_err(), "prefix {cut} decoded");
+        }
+        let mut extra = enc.clone();
+        extra.push(0);
+        assert!(Response::decode(&extra).is_err());
+
+        let enc = Request::PushParamsLayers {
+            version: 4,
+            full: false,
+            layers: vec![("x".into(), vec![7, 8, 9])],
+        }
+        .encode();
+        for cut in 0..enc.len() {
+            assert!(Request::decode(&enc[..cut]).is_err(), "prefix {cut} decoded");
+        }
+        let mut extra = enc;
+        extra.push(0);
+        assert!(Request::decode(&extra).is_err());
     }
 
     #[test]

@@ -11,8 +11,8 @@
 //! record mix:
 //!
 //! ```text
-//! segment  (seg-XXXXXXXX.log):   "ISGDLG01" frame*
-//! snapshot (snap-XXXXXXXX.snap): "ISGDSN01" meta-frame params-frame
+//! segment  (seg-XXXXXXXX.log):   "ISGDLG02" frame*
+//! snapshot (snap-XXXXXXXX.snap): "ISGDSN02" meta-frame params-layer-frame*
 //!                                cursor-frame* delta-frame*
 //! frame:                         u32 payload-len | u32 crc32(payload) |
 //!                                payload = tag byte + codec bytes
@@ -32,20 +32,28 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Context, Result};
 
 use super::protocol::{
-    encode_apply_grad, encode_push_params, encode_weights_delta, Request, Response, MAX_FRAME,
+    encode_apply_grad, encode_push_params, encode_push_params_layers, encode_weights_delta,
+    Request, Response, MAX_FRAME,
 };
 use super::WeightDelta;
 
-/// First bytes of every log segment file.
-pub const SEGMENT_MAGIC: &[u8; 8] = b"ISGDLG01";
-/// First bytes of every snapshot checkpoint file.
-pub const SNAPSHOT_MAGIC: &[u8; 8] = b"ISGDSN01";
+/// First bytes of every log segment file.  The trailing two digits
+/// version the record format: 02 added the cursor save stamp, the
+/// params-layer record, and the params version/floor meta fields —
+/// a store written by an 01 binary fails `open` with an explicit
+/// wrong-magic error instead of a corruption-shaped decode failure.
+pub const SEGMENT_MAGIC: &[u8; 8] = b"ISGDLG02";
+/// First bytes of every snapshot checkpoint file (versioned like
+/// [`SEGMENT_MAGIC`]).
+pub const SNAPSHOT_MAGIC: &[u8; 8] = b"ISGDSN02";
 
 const TAG_DELTA: u8 = 1;
 const TAG_PARAMS: u8 = 2;
 const TAG_GRAD: u8 = 3;
 const TAG_CURSOR: u8 = 4;
 const TAG_META: u8 = 5;
+const TAG_PARAMS_LAYERS: u8 = 6;
+const TAG_DROP_CURSOR: u8 = 7;
 
 /// One journaled operation (or snapshot constituent).
 #[derive(Debug, Clone, PartialEq)]
@@ -54,13 +62,30 @@ pub enum Record {
     /// carrying the write sequence it claimed (payload codec:
     /// [`Response::WeightsDelta`]).
     Delta(WeightDelta),
-    /// A parameter publish (payload codec: [`Request::PushParams`]).
+    /// A whole-blob parameter publish (payload codec:
+    /// [`Request::PushParams`]) — the legacy path; layer pushes journal
+    /// [`Record::ParamsLayers`] instead, so a params record carries only
+    /// the layers that actually changed.
     Params { version: u64, bytes: Vec<u8> },
+    /// A layer-wise parameter publish (payload codec:
+    /// [`Request::PushParamsLayers`]).  In a journal this is the exact
+    /// push replayed; in a snapshot it is one layout-ordered layer patch
+    /// whose `version` is the layer's last write (the differential
+    /// checkpoint shape: base layers + newer patches, replayed in order).
+    ParamsLayers {
+        version: u64,
+        full: bool,
+        layers: Vec<(String, Vec<u8>)>,
+    },
     /// A parameter-server update (payload codec: [`Request::ApplyGrad`]);
     /// replay recomputes the identical f32 arithmetic.
     Grad { scale: f32, grad: Vec<f32> },
-    /// A consumer cursor save ([`super::WeightStore::save_cursor`]).
-    Cursor { name: String, seq: u64 },
+    /// A consumer cursor save ([`super::WeightStore::save_cursor`]),
+    /// carrying the store-clock stamp of the save (the max-age expiry
+    /// signal survives restarts).
+    Cursor { name: String, seq: u64, stamp: u64 },
+    /// A consumer cursor removal ([`super::WeightStore::drop_cursor`]).
+    DropCursor { name: String },
     /// Snapshot header — first record of every snapshot file.
     Meta(SnapshotMeta),
 }
@@ -83,6 +108,10 @@ pub struct SnapshotMeta {
     /// replayed; segments below it are garbage once the snapshot is
     /// durable.
     pub cover: u64,
+    /// Params head version at snapshot time.
+    pub params_version: u64,
+    /// Params floor at snapshot time (layout-definition point).
+    pub params_floor: u64,
 }
 
 impl Record {
@@ -100,16 +129,31 @@ impl Record {
                 out.push(TAG_PARAMS);
                 out.extend(encode_push_params(*version, bytes));
             }
+            Record::ParamsLayers {
+                version,
+                full,
+                layers,
+            } => {
+                out.push(TAG_PARAMS_LAYERS);
+                out.extend(encode_push_params_layers(*version, *full, layers));
+            }
             Record::Grad { scale, grad } => {
                 out.push(TAG_GRAD);
                 out.extend(encode_apply_grad(*scale, grad));
             }
-            Record::Cursor { name, seq } => {
+            Record::Cursor { name, seq, stamp } => {
                 out.push(TAG_CURSOR);
                 let raw = name.as_bytes();
                 out.extend((raw.len() as u64).to_le_bytes());
                 out.extend(raw);
                 out.extend(seq.to_le_bytes());
+                out.extend(stamp.to_le_bytes());
+            }
+            Record::DropCursor { name } => {
+                out.push(TAG_DROP_CURSOR);
+                let raw = name.as_bytes();
+                out.extend((raw.len() as u64).to_le_bytes());
+                out.extend(raw);
             }
             Record::Meta(m) => {
                 out.push(TAG_META);
@@ -119,6 +163,8 @@ impl Record {
                 out.extend(m.next_seq.to_le_bytes());
                 out.extend(m.clock.to_le_bytes());
                 out.extend(m.cover.to_le_bytes());
+                out.extend(m.params_version.to_le_bytes());
+                out.extend(m.params_floor.to_le_bytes());
             }
         }
         out
@@ -137,6 +183,18 @@ impl Record {
                 Request::PushParams { version, bytes } => Record::Params { version, bytes },
                 other => bail!("params record holds {other:?}"),
             },
+            TAG_PARAMS_LAYERS => match Request::decode(body)? {
+                Request::PushParamsLayers {
+                    version,
+                    full,
+                    layers,
+                } => Record::ParamsLayers {
+                    version,
+                    full,
+                    layers,
+                },
+                other => bail!("params-layers record holds {other:?}"),
+            },
             TAG_GRAD => match Request::decode(body)? {
                 Request::ApplyGrad { scale, grad } => Record::Grad { scale, grad },
                 other => bail!("grad record holds {other:?}"),
@@ -146,8 +204,16 @@ impl Record {
                 let raw = take(&mut body, len)?;
                 let name = String::from_utf8(raw.to_vec()).context("cursor name not utf-8")?;
                 let seq = take_u64(&mut body)?;
+                let stamp = take_u64(&mut body)?;
                 anyhow::ensure!(body.is_empty(), "trailing bytes in cursor record");
-                Record::Cursor { name, seq }
+                Record::Cursor { name, seq, stamp }
+            }
+            TAG_DROP_CURSOR => {
+                let len = take_u64(&mut body)? as usize;
+                let raw = take(&mut body, len)?;
+                let name = String::from_utf8(raw.to_vec()).context("cursor name not utf-8")?;
+                anyhow::ensure!(body.is_empty(), "trailing bytes in drop-cursor record");
+                Record::DropCursor { name }
             }
             TAG_META => {
                 let meta = SnapshotMeta {
@@ -157,6 +223,8 @@ impl Record {
                     next_seq: take_u64(&mut body)?,
                     clock: take_u64(&mut body)?,
                     cover: take_u64(&mut body)?,
+                    params_version: take_u64(&mut body)?,
+                    params_floor: take_u64(&mut body)?,
                 };
                 anyhow::ensure!(body.is_empty(), "trailing bytes in meta record");
                 Record::Meta(meta)
@@ -195,11 +263,30 @@ pub fn crc32(data: &[u8]) -> u32 {
 /// Append one checksummed frame; returns the bytes written (header +
 /// payload).
 pub fn append_record(w: &mut impl Write, rec: &Record) -> Result<u64> {
-    let payload = rec.encode();
+    append_frame(w, &rec.encode())
+}
+
+/// Append one single-layer [`Record::ParamsLayers`] patch frame built
+/// entirely from borrows — the snapshot writer's per-layer record, which
+/// must not clone a `paper`-scale layer payload just to reach the
+/// encoder.  Byte-identical to `append_record` on the equivalent owned
+/// record (tested).
+pub fn append_params_layer_patch(
+    w: &mut impl Write,
+    version: u64,
+    name: &str,
+    bytes: &[u8],
+) -> Result<u64> {
+    let mut payload = vec![TAG_PARAMS_LAYERS];
+    payload.extend(encode_push_params_layers(version, false, &[(name, bytes)]));
+    append_frame(w, &payload)
+}
+
+fn append_frame(w: &mut impl Write, payload: &[u8]) -> Result<u64> {
     anyhow::ensure!(payload.len() <= MAX_FRAME, "record too large: {} bytes", payload.len());
     w.write_all(&(payload.len() as u32).to_le_bytes())?;
-    w.write_all(&crc32(&payload).to_le_bytes())?;
-    w.write_all(&payload)?;
+    w.write_all(&crc32(payload).to_le_bytes())?;
+    w.write_all(payload)?;
     Ok(8 + payload.len() as u64)
 }
 
@@ -333,6 +420,16 @@ mod tests {
                 version: 3,
                 bytes: vec![1, 2, 3, 255],
             },
+            Record::ParamsLayers {
+                version: 4,
+                full: false,
+                layers: vec![("layer0".into(), vec![7, 7, 7, 7]), ("layer2".into(), vec![])],
+            },
+            Record::ParamsLayers {
+                version: 1,
+                full: true,
+                layers: vec![("layer0".into(), vec![1, 2])],
+            },
             Record::Grad {
                 scale: 0.125,
                 grad: vec![1.0, -2.0],
@@ -340,6 +437,10 @@ mod tests {
             Record::Cursor {
                 name: "master".into(),
                 seq: 42,
+                stamp: 777,
+            },
+            Record::DropCursor {
+                name: "peer-3".into(),
             },
             Record::Meta(SnapshotMeta {
                 n: 100,
@@ -348,6 +449,8 @@ mod tests {
                 next_seq: 9,
                 clock: 1234,
                 cover: 2,
+                params_version: 6,
+                params_floor: 1,
             }),
         ]
     }
@@ -371,6 +474,23 @@ mod tests {
             extra.push(0);
             assert!(Record::decode(&extra).is_err());
         }
+    }
+
+    #[test]
+    fn params_layer_patch_frames_match_the_record_encoder() {
+        let mut borrowed: Vec<u8> = Vec::new();
+        append_params_layer_patch(&mut borrowed, 7, "L3", &[1, 2, 3]).unwrap();
+        let mut owned: Vec<u8> = Vec::new();
+        append_record(
+            &mut owned,
+            &Record::ParamsLayers {
+                version: 7,
+                full: false,
+                layers: vec![("L3".into(), vec![1, 2, 3])],
+            },
+        )
+        .unwrap();
+        assert_eq!(borrowed, owned);
     }
 
     #[test]

@@ -215,6 +215,17 @@ fn dispatch(store: &dyn WeightStore, req: Request) -> Response {
                 Response::Ok
             }
             Request::FetchParams { than } => Response::Params(store.fetch_params(than)?),
+            Request::PushParamsLayers {
+                version,
+                full,
+                layers,
+            } => {
+                store.push_params_layers(version, full, &layers)?;
+                Response::Ok
+            }
+            Request::FetchParamsSince { than } => {
+                Response::ParamsDelta(store.fetch_params_since(than)?)
+            }
             Request::ParamsVersion => Response::Version(store.params_version()?),
             Request::PushWeights {
                 start,
@@ -236,6 +247,10 @@ fn dispatch(store: &dyn WeightStore, req: Request) -> Response {
                 Response::Ok
             }
             Request::LoadCursor { name } => Response::Cursor(store.load_cursor(&name)?),
+            Request::DropCursor { name } => {
+                store.drop_cursor(&name)?;
+                Response::Ok
+            }
             Request::Now => Response::Now(store.now()?),
             Request::Stats => Response::Stats(store.stats()?),
             Request::Shutdown => unreachable!("handled by caller"),

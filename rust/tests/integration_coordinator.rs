@@ -471,6 +471,22 @@ impl WeightStore for FlakyStore {
         self.maybe_fail()?;
         self.inner.fetch_params(than)
     }
+    fn push_params_layers(
+        &self,
+        version: u64,
+        full: bool,
+        layers: &[(String, Vec<u8>)],
+    ) -> anyhow::Result<()> {
+        self.maybe_fail()?;
+        self.inner.push_params_layers(version, full, layers)
+    }
+    fn fetch_params_since(
+        &self,
+        than: u64,
+    ) -> anyhow::Result<Option<issgd::weightstore::ParamsDelta>> {
+        self.maybe_fail()?;
+        self.inner.fetch_params_since(than)
+    }
     fn params_version(&self) -> anyhow::Result<u64> {
         self.inner.params_version()
     }
@@ -497,6 +513,10 @@ impl WeightStore for FlakyStore {
     fn load_cursor(&self, name: &str) -> anyhow::Result<Option<u64>> {
         self.maybe_fail()?;
         self.inner.load_cursor(name)
+    }
+    fn drop_cursor(&self, name: &str) -> anyhow::Result<()> {
+        self.maybe_fail()?;
+        self.inner.drop_cursor(name)
     }
     fn now(&self) -> anyhow::Result<u64> {
         self.inner.now()

@@ -22,7 +22,7 @@ fn small_opts() -> DurableOptions {
     DurableOptions {
         segment_bytes: 1 << 14,
         compact_after_bytes: 1 << 15,
-        fsync: false,
+        ..DurableOptions::default()
     }
 }
 
@@ -69,6 +69,9 @@ fn master_and_peer_resume_from_persisted_cursors_with_bounded_disk() {
                 store.save_cursor("peer-0", peer.cursor()).unwrap();
             }
         }
+        // Compaction is a background thread now: let any signalled cycle
+        // finish before reading its counters and the disk footprint.
+        store.quiesce_compactor();
         compactions_total += store.compactions();
         disk_per_cycle.push(store.disk_bytes().unwrap());
 
@@ -178,4 +181,128 @@ fn torn_tail_recovery_is_repeatable() {
         assert_eq!(back.fetch_weights().unwrap(), want);
         drop(back);
     }
+}
+
+/// The layer-wise params acceptance point: a partial layer publish
+/// journals only the layers it carried — the durable journal no longer
+/// grows by the whole blob per publish — while crash recovery reproduces
+/// the blob, the per-layer versions, and a consumer's incremental
+/// position bit-exactly.
+#[test]
+fn params_journal_is_layerwise_and_recovery_stays_bit_exact() {
+    let dir = TempDir::new("params-journal");
+    // Explicit-compaction-only options: every byte written between the
+    // measurements below is journal growth from the pushes themselves.
+    let opts = DurableOptions {
+        segment_bytes: u64::MAX,
+        compact_after_bytes: 0,
+        ..DurableOptions::default()
+    };
+    let n_layers = 8usize;
+    let layer_bytes = 4096usize;
+    let store = DurableStore::create(&dir.0, 4, 1.0, opts.clone()).unwrap();
+    let full: Vec<(String, Vec<u8>)> = (0..n_layers)
+        .map(|i| (format!("L{i}"), vec![i as u8; layer_bytes]))
+        .collect();
+    store.push_params_layers(1, true, &full).unwrap();
+
+    // 100 single-layer updates.  Whole-blob journaling would cost
+    // ~100 × 8 × 4 KiB = 3.2 MiB; layer-wise is ~100 × 4 KiB.
+    let before = store.disk_bytes().unwrap();
+    let mut rng = Pcg64::seeded(0x1A7E5);
+    let mut version = 1u64;
+    for round in 0..100u64 {
+        let i = rng.next_below(n_layers as u64) as usize;
+        version += 1;
+        let payload = vec![(round % 251) as u8; layer_bytes];
+        store
+            .push_params_layers(version, false, &[(format!("L{i}"), payload)])
+            .unwrap();
+    }
+    let growth = store.disk_bytes().unwrap() - before;
+    let blob_cost = 100 * n_layers as u64 * layer_bytes as u64;
+    assert!(
+        growth < blob_cost / 4,
+        "params journal grew {growth} B over 100 partial pushes — \
+         whole-blob records would cost ~{blob_cost} B; layer records should be ~1/8 of that"
+    );
+
+    // A consumer absorbed everything up to the head; another sits mid-way.
+    let head = store.fetch_params_since(0).unwrap().unwrap().version;
+    assert_eq!(head, version);
+    let mid = version - 10;
+    let want_blob = store.fetch_params(0).unwrap().unwrap();
+    let want_mid_delta = store.fetch_params_since(mid).unwrap().unwrap();
+    assert!(!want_mid_delta.full, "mid-stream cursor demoted to full");
+
+    // Crash (journal replay only), then again after a checkpoint: both
+    // recovery paths must reproduce the same params state bit-exactly.
+    drop(store);
+    let back = DurableStore::open(&dir.0, opts.clone()).unwrap();
+    assert_eq!(back.fetch_params(0).unwrap().unwrap(), want_blob);
+    assert_eq!(back.fetch_params_since(mid).unwrap().unwrap(), want_mid_delta);
+    assert!(back.fetch_params_since(version).unwrap().is_none());
+    back.compact().unwrap(); // snapshot now holds the layer patches
+    drop(back);
+    let again = DurableStore::open(&dir.0, opts).unwrap();
+    assert_eq!(again.fetch_params(0).unwrap().unwrap(), want_blob);
+    assert_eq!(again.fetch_params_since(mid).unwrap().unwrap(), want_mid_delta);
+    assert!(again.fetch_params_since(version).unwrap().is_none());
+}
+
+/// Satellite regression: a dead peer's saved cursor no longer pins the
+/// compaction floor forever.  Kill the peer, drop (or expire) its pin,
+/// and the floor advances past it while the live master stays
+/// incremental.
+#[test]
+fn dead_peer_pin_is_dropped_and_the_floor_advances() {
+    let dir = TempDir::new("dead-peer");
+    let n = 64usize;
+    let store = DurableStore::create(&dir.0, n, 1.0, small_opts()).unwrap();
+    let mut master = ProposalMaintainer::new(n, 0.5, None, StalenessUnit::Versions);
+    let mut peer = ProposalMaintainer::with_coverage_prior(n, 0.5, None, StalenessUnit::Versions);
+    let d = store.fetch_weights_since(master.cursor()).unwrap();
+    master.absorb(&d, 0).unwrap();
+    store.save_cursor("master", master.cursor()).unwrap();
+    let d = store.fetch_weights_since(peer.cursor()).unwrap();
+    peer.absorb(&d, 0).unwrap();
+    store.save_cursor("peer-0", peer.cursor()).unwrap();
+    let dead_pin = peer.cursor();
+    // The peer dies here: no more fetches, no more saves.  The master
+    // keeps working.
+    for round in 0..200u64 {
+        store.push_weights((round as usize * 3) % 56, &[round as f32 + 1.0], round + 1).unwrap();
+        if round % 3 == 0 {
+            let d = store.fetch_weights_since(master.cursor()).unwrap();
+            master.absorb(&d, 0).unwrap();
+            store.save_cursor("master", master.cursor()).unwrap();
+        }
+    }
+    store.quiesce_compactor();
+    // However many cycles ran, the dead pin clamps the floor.
+    assert!(
+        store.compact_floor() <= dead_pin,
+        "floor {} moved past a live pin at {dead_pin}",
+        store.compact_floor()
+    );
+    // Reap the dead peer and compact: the floor advances to the master.
+    store.drop_cursor("peer-0").unwrap();
+    store.compact().unwrap();
+    assert!(
+        store.compact_floor() > dead_pin,
+        "floor {} still stuck at the dead peer's pin {dead_pin}",
+        store.compact_floor()
+    );
+    assert_eq!(store.compact_floor(), master.cursor());
+    // The live master is still served incrementally...
+    let d = store.fetch_weights_since(master.cursor()).unwrap();
+    assert!(!d.full, "live master demoted to full by the reap");
+    master.absorb(&d, 0).unwrap();
+    assert_eq!(*master.raw(), store.fetch_weights().unwrap());
+    // ...and the returned-from-the-dead peer degrades to the documented
+    // full fallback instead of corrupting.
+    let d = store.fetch_weights_since(peer.cursor()).unwrap();
+    assert!(d.full);
+    peer.absorb(&d, 0).unwrap();
+    assert_eq!(*peer.raw(), store.fetch_weights().unwrap());
 }

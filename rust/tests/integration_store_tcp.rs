@@ -128,6 +128,63 @@ fn two_tcp_consumers_with_independent_cursors_converge() {
 }
 
 #[test]
+fn params_layers_roundtrip_over_tcp() {
+    // The params-delta opcodes (0x0C/0x0D/0x89) end to end: full layout
+    // publish, partial layer update, incremental fetch, fallbacks.
+    let (addr, handle) = spawn_store(8);
+    {
+        let c = Client::connect(&addr).unwrap();
+        assert!(c.fetch_params_since(0).unwrap().is_none());
+        c.push_params_layers(
+            1,
+            true,
+            &[("layer0".into(), vec![1, 1, 1, 1]), ("layer1".into(), vec![2, 2, 2, 2])],
+        )
+        .unwrap();
+        let d = c.fetch_params_since(0).unwrap().unwrap();
+        assert!(d.full);
+        assert_eq!(d.version, 1);
+        assert_eq!(d.len(), 2);
+        // Partial update: only the dirty layer travels.
+        c.push_params_layers(2, false, &[("layer1".into(), vec![9, 9, 9, 9])])
+            .unwrap();
+        let d = c.fetch_params_since(1).unwrap().unwrap();
+        assert!(!d.full);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d.layers[0].name, "layer1");
+        assert_eq!(d.layers[0].bytes, vec![9, 9, 9, 9]);
+        assert!(c.fetch_params_since(2).unwrap().is_none());
+        // The blob view agrees.
+        let (v, blob) = c.fetch_params(0).unwrap().unwrap();
+        assert_eq!((v, blob), (2, vec![1, 1, 1, 1, 9, 9, 9, 9]));
+        // Errors propagate as responses, connection stays usable.
+        assert!(c
+            .push_params_layers(3, false, &[("nope".into(), vec![0, 0, 0, 0])])
+            .is_err());
+        assert_eq!(c.params_version().unwrap(), 2);
+        c.shutdown_server().unwrap();
+    }
+    handle.join().unwrap();
+}
+
+#[test]
+fn drop_cursor_over_tcp_unpins_compaction() {
+    let (addr, handle) = spawn_store(8);
+    {
+        let c = Client::connect(&addr).unwrap();
+        let d = c.fetch_weights_since(0).unwrap();
+        c.save_cursor("dead", d.seq).unwrap();
+        assert_eq!(c.load_cursor("dead").unwrap(), Some(d.seq));
+        c.drop_cursor("dead").unwrap();
+        assert_eq!(c.load_cursor("dead").unwrap(), None);
+        // Idempotent over the wire too.
+        c.drop_cursor("dead").unwrap();
+        c.shutdown_server().unwrap();
+    }
+    handle.join().unwrap();
+}
+
+#[test]
 fn server_side_errors_propagate() {
     let (addr, handle) = spawn_store(4);
     {
@@ -276,7 +333,7 @@ fn durable_store_over_tcp_resumes_across_server_restarts() {
     let opts = DurableOptions {
         segment_bytes: 1 << 14,
         compact_after_bytes: 0,
-        fsync: false,
+        ..DurableOptions::default()
     };
 
     // Serve cycle 1: create, write, persist a cursor.
