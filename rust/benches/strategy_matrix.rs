@@ -1,0 +1,49 @@
+//! Strategy-pipeline bench: one maintainer step — delta absorb plus a
+//! minibatch draw — per registered proposal strategy at N = 100k.
+//!
+//! Substrate-level (no AOT artifacts): a synthetic score stream stands in
+//! for the workers.  What this pins down is the *dispatch* cost of the
+//! trait-based pipeline: every strategy pays the same O(changes · log N)
+//! absorb, the nonlinear masses (power, exp3) pay their transform per
+//! touched entry, and the presample-top-k draw policy pays its factor×
+//! over-draw.  A strategy whose step drifts an order of magnitude from
+//! grad-norm's would show up here before any experiment runs.
+
+use issgd::bench::Harness;
+use issgd::config::StalenessUnit;
+use issgd::coordinator::ProposalMaintainer;
+use issgd::sampler::strategy::StrategyKind;
+use issgd::util::rng::Pcg64;
+use issgd::weightstore::{MemStore, WeightStore};
+
+fn main() {
+    let mut h = Harness::from_env("strategy_matrix");
+    let n = 100_000usize;
+    let m = 16usize; // one minibatch of score churn + one draw per step
+
+    for (k, &kind) in StrategyKind::all().iter().enumerate() {
+        let store = MemStore::new(n, 1.0);
+        let vals: Vec<f32> = (0..m).map(|i| 1.0 + (i % 7) as f32).collect();
+        let mut p = ProposalMaintainer::new_with_strategy(
+            n,
+            1.0,
+            None,
+            StalenessUnit::Versions,
+            kind.strategy(),
+        );
+        let d = store.fetch_weights_since(0).unwrap();
+        p.absorb(&d, 0).unwrap();
+        let mut rng = Pcg64::seeded(0x5EED + k as u64);
+        let mut off = 0usize;
+        h.bench(&format!("step/{}/n={n}/k={m}", kind.name()), || {
+            store.push_weights(off, &vals, 1).unwrap();
+            off = (off + m) % (n - m);
+            let d = store.fetch_weights_since(p.cursor()).unwrap();
+            p.absorb(&d, 0).unwrap();
+            let (idx, coefs, _) = p.draw_minibatch(&mut rng, m);
+            std::hint::black_box((idx, coefs, p.ess_ratio()));
+        });
+    }
+
+    h.finish();
+}

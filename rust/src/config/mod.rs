@@ -9,6 +9,7 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
+use crate::sampler::strategy::StrategyKind;
 use crate::util::cli::Args;
 use crate::util::json::Json;
 
@@ -59,6 +60,9 @@ pub struct RunConfig {
     /// fixed constant is replaced per-step by the constant that brings the
     /// proposal's normalised entropy up to this target in [0, 1].
     pub adaptive_entropy: Option<f64>,
+    /// How scores become sampling mass (and what workers score) — the
+    /// paper's grad-norm exact IS by default; see `sampler::strategy`.
+    pub strategy: StrategyKind,
     pub trainer: TrainerKind,
     pub sync: SyncMode,
     /// Number of scoring workers.
@@ -96,6 +100,7 @@ impl Default for RunConfig {
             lr: 0.01,
             smoothing: 10.0,
             adaptive_entropy: None,
+            strategy: StrategyKind::GradNormIs,
             trainer: TrainerKind::Issgd,
             sync: SyncMode::Relaxed,
             n_workers: 3,
@@ -185,6 +190,10 @@ impl RunConfig {
             None | Some(Json::Null) => d.adaptive_entropy,
             Some(v) => Some(v.as_f64().context("adaptive_entropy")?),
         };
+        let strategy = match json.get("strategy").and_then(Json::as_str) {
+            None => d.strategy,
+            Some(s) => StrategyKind::parse(s)?,
+        };
         let staleness_threshold = match json.get("staleness_threshold") {
             None | Some(Json::Null) => d.staleness_threshold,
             Some(v) => Some(v.as_usize().context("staleness_threshold")? as u64),
@@ -200,6 +209,7 @@ impl RunConfig {
             lr: get_f("lr", d.lr as f64)? as f32,
             smoothing: get_f("smoothing", d.smoothing)?,
             adaptive_entropy,
+            strategy,
             trainer,
             sync,
             n_workers: get_u("n_workers", d.n_workers)?,
@@ -229,7 +239,7 @@ impl RunConfig {
     /// `cli::parse` so typos are rejected).
     pub const CLI_OPTS: &'static [&'static str] = &[
         "config", "model", "n-examples", "steps", "lr", "smoothing", "target-entropy", "trainer", "sync",
-        "workers", "worker-batches", "push-every", "staleness", "staleness-unit",
+        "strategy", "workers", "worker-batches", "push-every", "staleness", "staleness-unit",
         "eval-every", "eval-max-batches", "monitor-every", "alt-smoothing", "init-weight",
         "seed",
     ];
@@ -251,6 +261,9 @@ impl RunConfig {
                 anyhow::ensure!((0.0..=1.0).contains(&v), "--target-entropy must be in [0,1]");
                 Some(v)
             };
+        }
+        if let Some(s) = args.get("strategy") {
+            self.strategy = StrategyKind::parse(s)?;
         }
         if let Some(t) = args.get("trainer") {
             self.trainer = match t {
@@ -301,6 +314,13 @@ impl RunConfig {
         anyhow::ensure!(self.smoothing >= 0.0, "smoothing must be >= 0");
         if let Some(t) = self.adaptive_entropy {
             anyhow::ensure!((0.0..=1.0).contains(&t), "adaptive_entropy must be in [0,1]");
+            // The entropy→constant solver inverts the `w + c` mass form;
+            // it has no inverse for the other transforms.
+            anyhow::ensure!(
+                self.strategy == StrategyKind::GradNormIs,
+                "adaptive_entropy requires the grad-norm strategy (got {})",
+                self.strategy.name()
+            );
         }
         anyhow::ensure!(self.n_workers > 0, "need at least one worker");
         anyhow::ensure!(self.param_push_every > 0, "param_push_every must be >= 1");
@@ -362,6 +382,25 @@ mod tests {
         assert_eq!(c.lr, 0.25);
         assert_eq!(c.trainer, TrainerKind::UniformSgd);
         assert_eq!(c.staleness_threshold, None);
+    }
+
+    #[test]
+    fn strategy_knob_parses_and_guards_adaptive_entropy() {
+        let j = Json::parse(r#"{"strategy": "loss-reject"}"#).unwrap();
+        assert_eq!(RunConfig::from_json(&j).unwrap().strategy, StrategyKind::LossReject);
+        let j = Json::parse(r#"{"strategy": "roulette"}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+        let argv: Vec<String> = ["--strategy", "exp3"].iter().map(|s| s.to_string()).collect();
+        let args = cli::parse(&argv, RunConfig::CLI_OPTS).unwrap();
+        let c = RunConfig::default().apply_args(&args).unwrap();
+        assert_eq!(c.strategy, StrategyKind::Exp3);
+        // Adaptive entropy inverts w + c: only the default strategy has it.
+        let c = RunConfig {
+            adaptive_entropy: Some(0.9),
+            strategy: StrategyKind::PowerIs,
+            ..RunConfig::default()
+        };
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -76,6 +76,10 @@ pub fn run_live(cfg: &RunConfig, opts: &LiveOptions) -> Result<SimOutcome> {
 
     // Master engine first — fail fast before spawning anything.
     let master_engine = Engine::load(&dims_dir)?;
+    // Strategy negotiation: the manifest must export the scoring entry
+    // the configured strategy's workers publish through.
+    cfg.strategy.validate_manifest(master_engine.manifest())?;
+    let score = cfg.strategy.score_source();
     let master_store = connect("master")?;
     let mut master = Master::new(cfg.clone(), &master_engine, master_store.clone())?;
 
@@ -92,8 +96,16 @@ pub fn run_live(cfg: &RunConfig, opts: &LiveOptions) -> Result<SimOutcome> {
         let store = connect(&format!("worker-{id}"))?;
         let throttle = opts.worker_throttle;
         handles.push(std::thread::spawn(move || -> Result<u64> {
-            let engine = Engine::load_entries(&dir, &["grad_norms"])?;
-            let mut w = WorkerState::new(id, shard, engine.manifest(), data, train_idx, store);
+            let engine = Engine::load_entries(&dir, &[score.required_entry()])?;
+            let mut w = WorkerState::new_with_score(
+                id,
+                shard,
+                engine.manifest(),
+                data,
+                train_idx,
+                store,
+                score,
+            );
             w.run_live(&engine, &stop, throttle)?;
             Ok(w.examples_scored)
         }));

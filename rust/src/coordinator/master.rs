@@ -20,7 +20,7 @@ use crate::data::{split_indices, BatchBuilder, Dataset, SplitSpec, SynthDataset,
 use crate::metrics::RunRecorder;
 use crate::model::ParamSet;
 use crate::runtime::Engine;
-use crate::sampler::{smoothing_for_entropy, Smoothing, StalenessFilter};
+use crate::sampler::{smoothing_for_entropy, StalenessFilter};
 use crate::util::rng::Pcg64;
 use crate::variance::{trace_sigma, GTrueEstimator, VarianceReport};
 use crate::weightstore::WeightStore;
@@ -160,11 +160,12 @@ impl Master {
             None => (0, ParamSet::init_he(manifest, &mut rng), Vec::new()),
         };
         let batch = BatchBuilder::new(manifest.batch_train, manifest.input_dim, manifest.n_classes);
-        let proposal = ProposalMaintainer::new(
+        let proposal = ProposalMaintainer::new_with_strategy(
             train_idx.len(),
             cfg.smoothing,
             cfg.staleness_threshold,
             cfg.staleness_unit,
+            cfg.strategy.strategy(),
         );
         Ok(Master {
             cfg,
@@ -291,15 +292,17 @@ impl Master {
         Ok((weights, kept_frac))
     }
 
-    /// Staleness-filter + smooth a raw weight snapshot into the sampling
-    /// weights actually used.  Returns `(weights, kept_fraction)` —
-    /// filtered-out entries get weight 0 (excluded from the proposal).
+    /// Staleness-filter + price a raw weight snapshot into the sampling
+    /// weights actually used (the configured strategy's `mass`, which for
+    /// the default grad-norm strategy is exactly the §B.3 `w + c`).
+    /// Returns `(weights, kept_fraction)` — filtered-out entries get
+    /// weight 0 (excluded from the proposal).
     pub fn effective_weights(&self, smoothing: f64) -> Result<(Vec<f64>, f64)> {
         let (raw, kept_frac) = self.raw_filtered_weights()?;
-        let smooth = Smoothing::new(smoothing);
+        let strategy = self.cfg.strategy.strategy();
         let weights = raw
             .iter()
-            .map(|w| w.map(|w| smooth.apply(w)).unwrap_or(0.0))
+            .map(|w| w.map(|w| strategy.mass(w, smoothing)).unwrap_or(0.0))
             .collect();
         Ok((weights, kept_frac))
     }

@@ -39,5 +39,5 @@ pub use peer::{run_asgd_sim, AsgdOutcome, PeerState, PeerStats};
 pub use peer_live::{run_peer_live, PeerLiveOptions};
 pub use master::{EvalSplit, Master, MASTER_CURSOR};
 pub use proposal::ProposalMaintainer;
-pub use sim::{run_sim, run_sim_with_engine, SimOutcome};
+pub use sim::{run_sim, run_sim_with_engine, run_sim_with_store, SimOutcome};
 pub use worker::WorkerState;

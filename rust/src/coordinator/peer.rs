@@ -59,6 +59,7 @@ use crate::data::{BatchBuilder, SynthDataset};
 use crate::metrics::RunRecorder;
 use crate::model::ParamSet;
 use crate::runtime::{Engine, Manifest};
+use crate::sampler::strategy::ScoreKind;
 use crate::util::rng::Pcg64;
 use crate::weightstore::{MemStore, WeightStore};
 
@@ -359,6 +360,24 @@ pub(crate) fn apply_eval_params_delta(
     Ok(delta.version)
 }
 
+/// Peers publish the ‖g‖-derived scores their `peer_step` artifact
+/// co-computes (§6 — `PeerOutput` has no per-example losses), so a
+/// strategy whose [`crate::sampler::strategy::ScoreSource`] wants a
+/// different statistic still prices grad-norm scores in the peer
+/// topology.  Warn rather than fail: the strategy's mass transform and
+/// draw policy still apply, only the raw score substitutes.
+pub(crate) fn warn_if_peer_scores_diverge(cfg: &RunConfig) {
+    if cfg.strategy.score_source().kind() != ScoreKind::GradNorm {
+        crate::log_warn!(
+            "peer",
+            "strategy {} scores by {:?}, but peers co-compute grad norms only; \
+             sampling mass will be priced from grad-norm scores",
+            cfg.strategy.name(),
+            cfg.strategy.score_source().kind()
+        );
+    }
+}
+
 /// Per-peer shutdown counters (shared by the sim and the live threaded
 /// topology — `coordinator::peer_live`).
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
@@ -429,12 +448,16 @@ pub fn run_asgd_sim(cfg: &RunConfig, engine: &Engine) -> Result<AsgdOutcome> {
     // entries fall back to the prior mass — see `proposal`'s module docs);
     // `None` keeps the original prior-only semantics.
     let proposal = if use_is {
-        Some(Arc::new(Mutex::new(ProposalMaintainer::with_coverage_prior(
-            Master::store_size(cfg),
-            cfg.smoothing,
-            cfg.staleness_threshold,
-            cfg.staleness_unit,
-        ))))
+        warn_if_peer_scores_diverge(cfg);
+        Some(Arc::new(Mutex::new(
+            ProposalMaintainer::with_coverage_prior_strategy(
+                Master::store_size(cfg),
+                cfg.smoothing,
+                cfg.staleness_threshold,
+                cfg.staleness_unit,
+                cfg.strategy.strategy(),
+            ),
+        )))
     } else {
         None
     };

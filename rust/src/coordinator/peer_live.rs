@@ -180,6 +180,9 @@ pub fn run_peer_live(cfg: &RunConfig, opts: &PeerLiveOptions) -> Result<AsgdOutc
     }
 
     let use_is = cfg.trainer == TrainerKind::Issgd;
+    if use_is {
+        super::peer::warn_if_peer_scores_diverge(cfg);
+    }
     let n_peers = cfg.n_workers;
     let stop = Arc::new(AtomicBool::new(false));
     let total = Arc::new(AtomicU64::new(0));
@@ -202,12 +205,15 @@ pub fn run_peer_live(cfg: &RunConfig, opts: &PeerLiveOptions) -> Result<AsgdOutc
             // Per-peer maintainer + per-peer cursor: cursor divergence
             // under real concurrency is the point of this mode.
             let proposal = if use_is {
-                Some(Arc::new(Mutex::new(ProposalMaintainer::with_coverage_prior(
-                    n_weights,
-                    cfg.smoothing,
-                    cfg.staleness_threshold,
-                    cfg.staleness_unit,
-                ))))
+                Some(Arc::new(Mutex::new(
+                    ProposalMaintainer::with_coverage_prior_strategy(
+                        n_weights,
+                        cfg.smoothing,
+                        cfg.staleness_threshold,
+                        cfg.staleness_unit,
+                        cfg.strategy.strategy(),
+                    ),
+                )))
             } else {
                 None
             };

@@ -49,6 +49,27 @@
 //! "treat it like an unmeasured example".  The prior itself averages only
 //! the *fresh* scored weights.  Every example therefore stays samplable
 //! at all times, which is what keeps the estimator unbiased (§2).
+//!
+//! # Strategy parameterization
+//!
+//! The transform from raw mirrored scores to sampler mass is owned by a
+//! [`ProposalStrategy`] (see `sampler::strategy` for the contracts and
+//! the cross-reference table into the follow-on literature).  The default
+//! [`ProposalMaintainer::new`] / [`ProposalMaintainer::with_coverage_prior`]
+//! constructors use the paper's grad-norm exact-IS strategy, whose
+//! `mass(raw, c) = raw + c` is bit-identical to the old hard-wired §B.3
+//! smoothing — existing trajectories are unchanged.  The `*_with_strategy`
+//! constructors swap in any registered strategy.  The §B.1 filter and the
+//! coverage prior compose with every strategy because they decide *which
+//! raw value* is priced (the fresh score, the prior, or nothing), while
+//! the strategy alone decides *how* a raw value is priced; `mass` is a
+//! pure function, so incremental `apply_entry` updates and wholesale
+//! `rebuild_from_raw` land on identical trees.
+//! [`ProposalMaintainer::draw_minibatch`] enforces the strategy's
+//! unbiasedness declaration: biased strategies draw with the identical
+//! RNG consumption but run with coefficients pinned to 1, and
+//! presample/reject strategies draw `factor · m` candidates keeping the
+//! `m` with the largest effective mass.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -56,7 +77,8 @@ use std::collections::BinaryHeap;
 use anyhow::Result;
 
 use crate::config::StalenessUnit;
-use crate::sampler::{FenwickSampler, Smoothing, StalenessFilter};
+use crate::sampler::strategy::{DrawPolicy, ProposalStrategy, StrategyKind};
+use crate::sampler::{FenwickSampler, StalenessFilter};
 use crate::util::rng::Pcg64;
 use crate::weightstore::{WeightDelta, WeightSnapshot};
 
@@ -82,6 +104,9 @@ pub struct ProposalMaintainer {
     smoothing: f64,
     threshold: Option<u64>,
     unit: StalenessUnit,
+    /// How raw scores are priced into sampler mass (module docs).  `mass`
+    /// is pure, so incremental and wholesale application agree.
+    strategy: &'static dyn ProposalStrategy,
     /// Min-heap of `(expiry_tick, index)`; lazily invalidated on refresh.
     expiry: BinaryHeap<Reverse<(u64, usize)>>,
     /// Whether each entry currently passes the staleness filter.
@@ -117,7 +142,27 @@ impl ProposalMaintainer {
         threshold: Option<u64>,
         unit: StalenessUnit,
     ) -> ProposalMaintainer {
-        Self::build(n, smoothing, threshold, unit, false)
+        Self::build(
+            n,
+            smoothing,
+            threshold,
+            unit,
+            false,
+            StrategyKind::GradNormIs.strategy(),
+        )
+    }
+
+    /// A master-mode maintainer pricing mass with a non-default
+    /// [`ProposalStrategy`].  `new` is exactly this with the paper's
+    /// grad-norm exact-IS strategy.
+    pub fn new_with_strategy(
+        n: usize,
+        smoothing: f64,
+        threshold: Option<u64>,
+        unit: StalenessUnit,
+        strategy: &'static dyn ProposalStrategy,
+    ) -> ProposalMaintainer {
+        Self::build(n, smoothing, threshold, unit, false, strategy)
     }
 
     /// A maintainer for the peer/ASGD topology: never-scored entries
@@ -132,7 +177,26 @@ impl ProposalMaintainer {
         threshold: Option<u64>,
         unit: StalenessUnit,
     ) -> ProposalMaintainer {
-        Self::build(n, smoothing, threshold, unit, true)
+        Self::build(
+            n,
+            smoothing,
+            threshold,
+            unit,
+            true,
+            StrategyKind::GradNormIs.strategy(),
+        )
+    }
+
+    /// Coverage-prior mode with a non-default [`ProposalStrategy`] (the
+    /// peer topology's strategy threading point).
+    pub fn with_coverage_prior_strategy(
+        n: usize,
+        smoothing: f64,
+        threshold: Option<u64>,
+        unit: StalenessUnit,
+        strategy: &'static dyn ProposalStrategy,
+    ) -> ProposalMaintainer {
+        Self::build(n, smoothing, threshold, unit, true, strategy)
     }
 
     fn build(
@@ -141,6 +205,7 @@ impl ProposalMaintainer {
         threshold: Option<u64>,
         unit: StalenessUnit,
         coverage_prior: bool,
+        strategy: &'static dyn ProposalStrategy,
     ) -> ProposalMaintainer {
         ProposalMaintainer {
             raw: WeightSnapshot {
@@ -155,6 +220,7 @@ impl ProposalMaintainer {
             smoothing,
             threshold,
             unit,
+            strategy,
             expiry: BinaryHeap::new(),
             kept: vec![false; n],
             n_kept: 0,
@@ -198,6 +264,11 @@ impl ProposalMaintainer {
 
     pub fn smoothing(&self) -> f64 {
         self.smoothing
+    }
+
+    /// The proposal strategy pricing this maintainer's mass.
+    pub fn strategy(&self) -> &'static dyn ProposalStrategy {
+        self.strategy
     }
 
     /// The staleness unit this maintainer's clock advances in (consumers
@@ -246,7 +317,7 @@ impl ProposalMaintainer {
                 if u <= 0.0 {
                     (0.0, 0.0)
                 } else {
-                    (u, self.smooth().apply(self.prior()))
+                    (u, self.strategy.mass(self.prior(), self.smoothing))
                 }
             }
         }
@@ -267,7 +338,7 @@ impl ProposalMaintainer {
             if self.kept[i] && self.raw.param_versions[i] > 0 {
                 self.sampler.weight(i)
             } else {
-                self.smooth().apply(self.prior())
+                self.strategy.mass(self.prior(), self.smoothing)
             }
         } else if self.kept[i] {
             self.sampler.weight(i)
@@ -323,15 +394,52 @@ impl ProposalMaintainer {
             .collect()
     }
 
-    /// Draw an importance-sampled minibatch from the maintained proposal.
+    /// Draw a minibatch from the maintained proposal, enforcing the
+    /// strategy's declarations.
     ///
-    /// Without coverage-prior mode this is exactly
+    /// Unbiased + direct (the default) is exactly the pre-refactor draw:
+    /// same RNG consumption, same indices, same `mean(w)/w_i`
+    /// coefficients.  A biased strategy draws with *identical* RNG
+    /// consumption but runs with coefficients pinned to 1 — no
+    /// coefficient recovers exactness once the mass transform is
+    /// non-linear or the draw is truncated, so none is applied.  A
+    /// presample/reject strategy draws `factor · m` candidates and keeps
+    /// the `m` with the largest effective mass (ties resolve in draw
+    /// order, so the selection is deterministic under a fixed seed).
+    pub fn draw_minibatch(&self, rng: &mut Pcg64, m: usize) -> (Vec<usize>, Vec<f32>, f64) {
+        match self.strategy.draw_policy() {
+            DrawPolicy::Direct => {
+                let (indices, mut coefs, mean_w) = self.draw_direct(rng, m);
+                if !self.strategy.unbiased() {
+                    coefs.iter_mut().for_each(|c| *c = 1.0);
+                }
+                (indices, coefs, mean_w)
+            }
+            DrawPolicy::PresampleTopK { factor } => {
+                let (cand, _, mean_w) = self.draw_direct(rng, m * factor.max(1));
+                let mut order: Vec<usize> = (0..cand.len()).collect();
+                order.sort_by(|&a, &b| {
+                    self.effective_weight(cand[b])
+                        .total_cmp(&self.effective_weight(cand[a]))
+                        .then(a.cmp(&b))
+                });
+                order.truncate(m);
+                order.sort_unstable(); // survivors keep their draw order
+                let indices: Vec<usize> = order.iter().map(|&k| cand[k]).collect();
+                let coefs = vec![1.0; indices.len()];
+                (indices, coefs, mean_w)
+            }
+        }
+    }
+
+    /// The exact multinomial draw shared by every policy.  Without
+    /// coverage-prior mode this is exactly
     /// [`crate::sampler::draw_minibatch`] on the maintained sampler (same
     /// RNG consumption, so master traces are unchanged).  With it, the
     /// proposal is the exact mixture of the scored tree and the uniform
     /// prior-priced unscored mass; coefficients use the effective weight
     /// of whichever component the index came from.
-    pub fn draw_minibatch(&self, rng: &mut Pcg64, m: usize) -> (Vec<usize>, Vec<f32>, f64) {
+    fn draw_direct(&self, rng: &mut Pcg64, m: usize) -> (Vec<usize>, Vec<f32>, f64) {
         let Some(unscored) = &self.unscored_kept else {
             return crate::sampler::draw_minibatch(&self.sampler, rng, m);
         };
@@ -381,11 +489,6 @@ impl ProposalMaintainer {
             None => StalenessFilter::disabled(),
             Some(t) => StalenessFilter::with_threshold(t),
         }
-    }
-
-    /// The §B.3 smoothing under the current constant.
-    fn smooth(&self) -> Smoothing {
-        Smoothing::new(self.smoothing)
     }
 
     /// Flip entry `i`'s kept flag, maintaining the count.
@@ -452,7 +555,11 @@ impl ProposalMaintainer {
                 self.scored_count += 1;
                 self.scored_total += w;
             }
-            let v = if in_sampler { self.smooth().apply(w) } else { 0.0 };
+            let v = if in_sampler {
+                self.strategy.mass(w, self.smoothing)
+            } else {
+                0.0
+            };
             self.set_scored_weight(i, v);
             if let Some(tree) = self.unscored_kept.as_mut() {
                 // Not fresh-scored ⇒ prior-priced, never dropped: §B.1
@@ -460,7 +567,11 @@ impl ProposalMaintainer {
                 tree.update(i, if in_sampler { 0.0 } else { 1.0 });
             }
         } else {
-            let v = if keep { self.smooth().apply(w) } else { 0.0 };
+            let v = if keep {
+                self.strategy.mass(w, self.smoothing)
+            } else {
+                0.0
+            };
             self.set_scored_weight(i, v);
         }
     }
@@ -512,7 +623,8 @@ impl ProposalMaintainer {
     fn rebuild_from_raw(&mut self) {
         let n = self.raw.len();
         let filter = self.filter();
-        let smooth = self.smooth();
+        let strategy = self.strategy;
+        let c = self.smoothing;
         let prior_mode = self.unscored_kept.is_some();
         let mut weights = vec![0.0; n];
         let mut indicator = vec![0.0; n];
@@ -534,13 +646,13 @@ impl ProposalMaintainer {
                 if keep && self.raw.param_versions[i] > 0 {
                     self.scored_count += 1;
                     self.scored_total += self.raw.weights[i];
-                    weights[i] = smooth.apply(self.raw.weights[i]);
+                    weights[i] = strategy.mass(self.raw.weights[i], c);
                 } else {
                     // Unscored or stale: prior-priced, never dropped.
                     indicator[i] = 1.0;
                 }
             } else if keep {
-                weights[i] = smooth.apply(self.raw.weights[i]);
+                weights[i] = strategy.mass(self.raw.weights[i], c);
             }
         }
         self.sum_sq = weights.iter().map(|w| w * w).sum();
@@ -1091,5 +1203,197 @@ mod tests {
         )
         .unwrap();
         assert_eq!(p.cursor(), 1);
+    }
+
+    #[test]
+    fn default_strategy_constructors_are_bit_exact() {
+        // `new` and `new_with_strategy(GradNormIs)` must be the same
+        // maintainer: identical trees, identical draws, identical coefs.
+        let d = full_delta(1, &[0.5, 2.0, 0.0, 7.0], &[0; 4], &[0; 4]);
+        let mut a = ProposalMaintainer::new(4, 1.5, None, StalenessUnit::Versions);
+        let mut b = ProposalMaintainer::new_with_strategy(
+            4,
+            1.5,
+            None,
+            StalenessUnit::Versions,
+            StrategyKind::GradNormIs.strategy(),
+        );
+        a.absorb(&d, 0).unwrap();
+        b.absorb(&d, 0).unwrap();
+        for i in 0..4 {
+            assert_eq!(a.sampler().weight(i), b.sampler().weight(i));
+        }
+        let mut ra = Pcg64::seeded(13);
+        let mut rb = Pcg64::seeded(13);
+        let (ia, ca, ma) = a.draw_minibatch(&mut ra, 32);
+        let (ib, cb, mb) = b.draw_minibatch(&mut rb, 32);
+        assert_eq!(ia, ib);
+        assert_eq!(ca, cb);
+        assert_eq!(ma, mb);
+        assert_eq!(ra.next_u64(), rb.next_u64());
+    }
+
+    #[test]
+    fn biased_strategy_pins_coefficients_without_touching_the_rng() {
+        // PowerIs is biased + direct: same indices and RNG consumption as
+        // an exact draw over its own mass, but coefficients pinned to 1.
+        let mut p = ProposalMaintainer::new_with_strategy(
+            6,
+            0.5,
+            None,
+            StalenessUnit::Versions,
+            StrategyKind::PowerIs.strategy(),
+        );
+        p.absorb(&full_delta(1, &[0.0, 1.0, 4.0, 9.0, 16.0, 25.0], &[0; 6], &[0; 6]), 0)
+            .unwrap();
+        // mass = (raw + c)^alpha — verify the tree holds the transform.
+        let alpha = crate::sampler::strategy::POWER_IS_ALPHA;
+        assert!((p.sampler().weight(3) - 9.5f64.powf(alpha)).abs() < 1e-12);
+        let mut r1 = Pcg64::seeded(17);
+        let mut r2 = Pcg64::seeded(17);
+        let (idx, coefs, _) = p.draw_minibatch(&mut r1, 48);
+        let (idx_exact, _, _) = crate::sampler::draw_minibatch(p.sampler(), &mut r2, 48);
+        assert_eq!(idx, idx_exact);
+        assert!(coefs.iter().all(|&c| c == 1.0));
+        assert_eq!(r1.next_u64(), r2.next_u64());
+    }
+
+    #[test]
+    fn presample_topk_matches_manual_truncation() {
+        // LossReject draws factor·m candidates and keeps the m heaviest
+        // (ties by draw order), surviving in draw order, coefs pinned to 1.
+        let mut p = ProposalMaintainer::new_with_strategy(
+            10,
+            0.1,
+            None,
+            StalenessUnit::Versions,
+            StrategyKind::LossReject.strategy(),
+        );
+        let raw: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        p.absorb(&full_delta(1, &raw, &[0; 10], &[0; 10]), 0).unwrap();
+        let m = 4;
+        let factor = match StrategyKind::LossReject.strategy().draw_policy() {
+            DrawPolicy::PresampleTopK { factor } => factor,
+            DrawPolicy::Direct => panic!("loss-reject must presample"),
+        };
+        let mut r1 = Pcg64::seeded(23);
+        let mut r2 = Pcg64::seeded(23);
+        let (idx, coefs, mean_w) = p.draw_minibatch(&mut r1, m);
+        let (cand, _, mean_direct) = p.draw_direct(&mut r2, m * factor);
+        let mut order: Vec<usize> = (0..cand.len()).collect();
+        order.sort_by(|&a, &b| {
+            p.effective_weight(cand[b])
+                .total_cmp(&p.effective_weight(cand[a]))
+                .then(a.cmp(&b))
+        });
+        order.truncate(m);
+        order.sort_unstable();
+        let expect: Vec<usize> = order.iter().map(|&k| cand[k]).collect();
+        assert_eq!(idx, expect);
+        assert_eq!(idx.len(), m);
+        assert!(coefs.iter().all(|&c| c == 1.0));
+        assert_eq!(mean_w, mean_direct);
+        assert_eq!(r1.next_u64(), r2.next_u64());
+        // Survivors skew heavy: their mean weight beats the candidate mean.
+        let surv: f64 =
+            idx.iter().map(|&i| p.effective_weight(i)).sum::<f64>() / idx.len() as f64;
+        let cand_mean: f64 =
+            cand.iter().map(|&i| p.effective_weight(i)).sum::<f64>() / cand.len() as f64;
+        assert!(surv >= cand_mean, "top-k kept light examples: {surv} < {cand_mean}");
+    }
+
+    #[test]
+    fn exp3_strategy_keeps_full_support_and_exact_coefs() {
+        // Exp3 is unbiased: its γ floor keeps every mass positive even at
+        // raw = 0 with c = 0, and coefficients stay exact mean(w)/w.
+        let mut p = ProposalMaintainer::new_with_strategy(
+            5,
+            0.0,
+            None,
+            StalenessUnit::Versions,
+            StrategyKind::Exp3.strategy(),
+        );
+        p.absorb(&full_delta(1, &[0.0, 0.3, 0.0, 1.2, 0.9], &[0; 5], &[0; 5]), 0)
+            .unwrap();
+        for i in 0..5 {
+            assert!(p.sampler().weight(i) > 0.0, "entry {i} lost support");
+        }
+        let mean_w = p.sampler().total() / 5.0;
+        let mut rng = Pcg64::seeded(29);
+        let (idx, coefs, got_mean) = p.draw_minibatch(&mut rng, 40);
+        assert_eq!(got_mean, mean_w);
+        for (i, c) in idx.iter().zip(&coefs) {
+            assert!(
+                (*c as f64 - mean_w / p.sampler().weight(*i)).abs() < 1e-6,
+                "coef for {i} not the exact IS scaling"
+            );
+        }
+    }
+
+    #[test]
+    fn strategy_composes_with_coverage_prior_and_staleness() {
+        // Prior + §B.1 decide *which raw value* is priced; the strategy
+        // decides *how*.  With Exp3, fresh entries price mass(raw, c) and
+        // stale/unscored entries price mass(prior, c) — never zero.
+        let c = 0.25;
+        let strat = StrategyKind::Exp3.strategy();
+        let mut p = ProposalMaintainer::with_coverage_prior_strategy(
+            6,
+            c,
+            Some(4),
+            StalenessUnit::Versions,
+            strat,
+        );
+        p.absorb(&full_delta(1, &vec![1.0; 6], &vec![0; 6], &vec![0; 6]), 0)
+            .unwrap();
+        // Fresh scores on 0 and 2 (version 8 at now 8); stale score on 1.
+        p.absorb(
+            &sparse_delta(2, 6, &[(0, 2.0, 0, 8), (2, 4.0, 0, 8), (1, 9.0, 0, 2)]),
+            8,
+        )
+        .unwrap();
+        assert!((p.prior() - 3.0).abs() < 1e-12); // mean of fresh {2, 4}
+        assert_eq!(p.effective_weight(0), strat.mass(2.0, c));
+        assert_eq!(p.effective_weight(2), strat.mass(4.0, c));
+        for i in [1usize, 3, 4, 5] {
+            assert_eq!(p.effective_weight(i), strat.mass(3.0, c), "entry {i}");
+            assert!(p.effective_weight(i) > 0.0);
+        }
+        let expect_total = strat.mass(2.0, c) + strat.mass(4.0, c) + 4.0 * strat.mass(3.0, c);
+        assert!((p.total_mass() - expect_total).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nonlinear_strategy_incremental_matches_rebuild() {
+        // `mass` is pure, so sparse `apply_entry` updates and the O(N)
+        // `rebuild_from_raw` (triggered by set_smoothing) must land on
+        // bit-identical trees even for a non-linear transform.
+        let n = 32;
+        let mut p = ProposalMaintainer::new_with_strategy(
+            n,
+            0.5,
+            None,
+            StalenessUnit::Versions,
+            StrategyKind::Exp3.strategy(),
+        );
+        let mut rng = Pcg64::seeded(31);
+        p.absorb(&full_delta(1, &vec![0.0; n], &vec![0; n], &vec![0; n]), 0)
+            .unwrap();
+        for round in 0..40u64 {
+            let entries: Vec<(usize, f64, u64, u64)> = (0..3)
+                .map(|_| {
+                    let i = rng.next_below(n as u64) as usize;
+                    (i, rng.next_f64() * 3.0, 0, round + 1)
+                })
+                .collect();
+            p.absorb(&sparse_delta(round + 2, n, &entries), 0).unwrap();
+        }
+        let incremental: Vec<f64> = (0..n).map(|i| p.sampler().weight(i)).collect();
+        // Round-trip the smoothing constant: two full rebuilds from raw.
+        p.set_smoothing(9.0);
+        p.set_smoothing(0.5);
+        for (i, &w) in incremental.iter().enumerate() {
+            assert_eq!(p.sampler().weight(i), w, "entry {i} drifted");
+        }
     }
 }

@@ -49,22 +49,39 @@ pub fn run_sim(cfg: &RunConfig) -> Result<SimOutcome> {
 /// Same as [`run_sim`] but reusing an already-compiled engine (the
 /// experiment drivers run many seeds against one engine).
 pub fn run_sim_with_engine(cfg: &RunConfig, engine: &Engine) -> Result<SimOutcome> {
-    let store: Arc<MemStore> = Arc::new(MemStore::new(Master::store_size(cfg), cfg.init_weight));
-    let store_dyn: Arc<dyn WeightStore> = store.clone();
+    let store: Arc<dyn WeightStore> =
+        Arc::new(MemStore::new(Master::store_size(cfg), cfg.init_weight));
+    run_sim_with_store(cfg, engine, store)
+}
+
+/// Same as [`run_sim_with_engine`] but against a caller-supplied store —
+/// the injection point for chaos runs (wrap a [`MemStore`] in
+/// [`crate::weightstore::faulty::FaultyStore`]) or a durable backend.
+/// The store must already be sized to [`Master::store_size`].
+pub fn run_sim_with_store(
+    cfg: &RunConfig,
+    engine: &Engine,
+    store_dyn: Arc<dyn WeightStore>,
+) -> Result<SimOutcome> {
     let mut master = Master::new(cfg.clone(), engine, store_dyn.clone())?;
 
     let manifest = engine.manifest();
+    // Workers publish the statistic the configured strategy samples by —
+    // the manifest-negotiated score entry point feeds both.
+    cfg.strategy.validate_manifest(manifest)?;
+    let score = cfg.strategy.score_source();
     let mut workers: Vec<WorkerState> = shards(master.train_idx.len(), cfg.n_workers)
         .into_iter()
         .enumerate()
         .map(|(id, shard)| {
-            WorkerState::new(
+            WorkerState::new_with_score(
                 id,
                 shard,
                 manifest,
                 Arc::clone(&master.data),
                 Arc::new(master.train_idx.clone()),
                 store_dyn.clone(),
+                score,
             )
         })
         .collect();
@@ -102,6 +119,6 @@ pub fn run_sim_with_engine(cfg: &RunConfig, engine: &Engine) -> Result<SimOutcom
         rec: master.rec,
         final_err,
         scored,
-        store_stats: store.stats()?,
+        store_stats: store_dyn.stats()?,
     })
 }

@@ -2,9 +2,13 @@
 //!
 //! A worker owns a contiguous shard of training-set *positions*, fetches
 //! the newest parameters from the store when available, sweeps its shard
-//! in scoring batches computing ‖g(x_n)‖ via the AOT `grad_norms` entry
-//! point (Proposition 1 / Pallas kernel), and pushes the norms back to the
-//! store tagged with the parameter version they were computed from.
+//! in scoring batches computing per-example statistics via the AOT
+//! `grad_norms` entry point (Proposition 1 / Pallas kernel), and pushes
+//! scores back to the store tagged with the parameter version they were
+//! computed from.  *Which* statistic is pushed — ‖g(x_n)‖ (the paper) or
+//! the loss (the reject/bandit strategies) — is the worker's
+//! [`ScoreSource`], negotiated from the training strategy so master and
+//! workers always agree on what the store's weight table means.
 //!
 //! The same `WorkerState` drives both execution modes:
 //! * **sim** — `advance(k)` called by the deterministic interleaver.
@@ -19,6 +23,7 @@ use anyhow::Result;
 use crate::data::{BatchBuilder, Shard, SynthDataset};
 use crate::model::ParamSet;
 use crate::runtime::Engine;
+use crate::sampler::strategy::{ScoreSource, StrategyKind};
 use crate::weightstore::{ParamsDelta, WeightStore};
 
 pub struct WorkerState {
@@ -43,9 +48,13 @@ pub struct WorkerState {
     pub store_errors: u64,
     /// Reusable weight staging buffer.
     push_buf: Vec<f32>,
+    /// Which per-example statistic this worker publishes as the score.
+    score: &'static dyn ScoreSource,
 }
 
 impl WorkerState {
+    /// A worker publishing the paper's grad-norm scores (the default
+    /// strategy's [`ScoreSource`]).
     pub fn new(
         id: usize,
         shard: Shard,
@@ -53,6 +62,28 @@ impl WorkerState {
         data: Arc<SynthDataset>,
         train_idx: Arc<Vec<usize>>,
         store: Arc<dyn WeightStore>,
+    ) -> WorkerState {
+        Self::new_with_score(
+            id,
+            shard,
+            engine_manifest,
+            data,
+            train_idx,
+            store,
+            StrategyKind::GradNormIs.score_source(),
+        )
+    }
+
+    /// A worker publishing an arbitrary [`ScoreSource`]'s statistic — the
+    /// strategy negotiation point for the master/worker topology.
+    pub fn new_with_score(
+        id: usize,
+        shard: Shard,
+        engine_manifest: &crate::runtime::Manifest,
+        data: Arc<SynthDataset>,
+        train_idx: Arc<Vec<usize>>,
+        store: Arc<dyn WeightStore>,
+        score: &'static dyn ScoreSource,
     ) -> WorkerState {
         let batch = BatchBuilder::new(
             engine_manifest.batch_score,
@@ -73,7 +104,13 @@ impl WorkerState {
             examples_scored: 0,
             store_errors: 0,
             push_buf: Vec::new(),
+            score,
         }
+    }
+
+    /// The statistic this worker publishes.
+    pub fn score_source(&self) -> &'static dyn ScoreSource {
+        self.score
     }
 
     /// Store half of a parameter refresh: fetch the layers written since
@@ -133,10 +170,16 @@ impl WorkerState {
         let global: Vec<usize> = positions.iter().map(|&p| self.train_idx[p]).collect();
         self.batch.fill(self.data.as_ref(), &global);
         let out = engine.grad_norms(params, &self.batch.x, &self.batch.y)?;
-        // ω̃_n = ‖g(x_n)‖ — the *norm*, not the squared norm (Theorem 1).
+        // The ScoreSource picks the published statistic: ‖g(x_n)‖ — the
+        // *norm*, not the squared norm (Theorem 1) — for the paper's
+        // strategy, the per-example loss for the reject/bandit family.
         self.push_buf.clear();
-        self.push_buf
-            .extend(out.sqnorms[..count].iter().map(|&sq| sq.max(0.0).sqrt()));
+        self.push_buf.extend(
+            out.sqnorms[..count]
+                .iter()
+                .zip(&out.losses[..count])
+                .map(|(&sq, &l)| self.score.score(sq, l)),
+        );
         Ok(Some((self.cursor, count)))
     }
 
@@ -155,8 +198,8 @@ impl WorkerState {
         Ok(())
     }
 
-    /// Score the next batch of shard positions and push ‖g‖ weights.
-    /// No-op (returns 0) until parameters have been published.
+    /// Score the next batch of shard positions and push the score-source
+    /// weights.  No-op (returns 0) until parameters have been published.
     pub fn score_next_batch(&mut self, engine: &Engine) -> Result<usize> {
         match self.compute_scores(engine)? {
             None => Ok(0),

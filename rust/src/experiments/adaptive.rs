@@ -12,7 +12,7 @@ use anyhow::Result;
 use crate::config::RunConfig;
 use crate::metrics::write_quartile_csv;
 
-use super::runner::{engine_for, mean, ExperimentScale, MultiRun};
+use super::runner::{engine_for, mean, ArmOverrides, ExperimentScale, MultiRun};
 use super::results_dir;
 
 pub struct AdaptiveRow {
@@ -25,24 +25,32 @@ pub struct AdaptiveRow {
 pub fn run_ablation(scale: &ExperimentScale) -> Result<Vec<AdaptiveRow>> {
     let engine = engine_for(scale)?;
     let mut rows = Vec::new();
-    let arms: Vec<(String, Option<f64>, f64)> = vec![
-        ("fixed +0".into(), None, 0.0),
-        ("fixed +1".into(), None, 1.0),
-        ("fixed +10".into(), None, 10.0),
-        ("adaptive H*=0.7".into(), Some(0.7), 0.0),
-        ("adaptive H*=0.9".into(), Some(0.9), 0.0),
-        ("adaptive H*=0.97".into(), Some(0.97), 0.0),
+    let fixed = |c: f64| ArmOverrides {
+        smoothing: Some(c),
+        adaptive_entropy: Some(None),
+        ..Default::default()
+    };
+    let adaptive = |h: f64| ArmOverrides {
+        smoothing: Some(0.0),
+        adaptive_entropy: Some(Some(h)),
+        ..Default::default()
+    };
+    let arms: Vec<(String, ArmOverrides)> = vec![
+        ("fixed +0".into(), fixed(0.0)),
+        ("fixed +1".into(), fixed(1.0)),
+        ("fixed +10".into(), fixed(10.0)),
+        ("adaptive H*=0.7".into(), adaptive(0.7)),
+        ("adaptive H*=0.9".into(), adaptive(0.9)),
+        ("adaptive H*=0.97".into(), adaptive(0.97)),
     ];
-    for (label, target, constant) in arms {
-        let mut cfg = scale.apply(RunConfig::setting_b());
-        cfg.smoothing = constant;
-        cfg.adaptive_entropy = target;
+    for (label, arm) in arms {
+        let cfg = scale.arm(RunConfig::setting_b(), &arm);
         let mr = MultiRun::run(&cfg, &engine, scale.seeds.min(3), &label)?;
         let final_loss = mean(&mr.tail_means("train_loss", 0.1));
-        let mean_c = if target.is_some() {
+        let mean_c = if cfg.adaptive_entropy.is_some() {
             mean(&mr.tail_means("smoothing_c", 0.5))
         } else {
-            constant
+            cfg.smoothing
         };
         let mean_ess = mean(&mr.tail_means("ess", 0.5));
         if label.starts_with("adaptive H*=0.9") {

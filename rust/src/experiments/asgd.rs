@@ -26,7 +26,7 @@ use crate::coordinator::peer_live::{run_peer_live, PeerLiveOptions};
 use crate::coordinator::run_sim_with_engine;
 use crate::metrics::{quartiles_across_runs, write_figure_csv, RunRecorder};
 
-use super::runner::{engine_for, ExperimentScale};
+use super::runner::{engine_for, ArmOverrides, ExperimentScale};
 use super::results_dir;
 
 pub struct AsgdRow {
@@ -43,21 +43,31 @@ pub fn run_comparison(scale: &ExperimentScale) -> Result<Vec<AsgdRow>> {
     let mut rows = Vec::new();
     let mut series: Vec<(&'static str, Vec<RunRecorder>)> = Vec::new();
 
-    for (name, peers, trainer) in [
-        ("sgd", None, TrainerKind::UniformSgd),
-        ("issgd", None, TrainerKind::Issgd),
-        ("asgd", Some(3usize), TrainerKind::UniformSgd),
-        ("issgd_asgd", Some(3usize), TrainerKind::Issgd),
+    let solo_arm = |trainer: TrainerKind| ArmOverrides {
+        trainer: Some(trainer),
+        ..Default::default()
+    };
+    // Peer arms: 3 peers re-fetching every 4 own-steps (genuine staleness).
+    let peer_arm = |trainer: TrainerKind| ArmOverrides {
+        trainer: Some(trainer),
+        n_workers: Some(3),
+        param_push_every: Some(4),
+        ..Default::default()
+    };
+    for (name, peers, arm) in [
+        ("sgd", false, solo_arm(TrainerKind::UniformSgd)),
+        ("issgd", false, solo_arm(TrainerKind::Issgd)),
+        ("asgd", true, peer_arm(TrainerKind::UniformSgd)),
+        ("issgd_asgd", true, peer_arm(TrainerKind::Issgd)),
     ] {
         let mut recs = Vec::new();
         let (mut errs, mut terrs, mut losses) = (Vec::new(), Vec::new(), Vec::new());
         for s in 0..scale.seeds {
-            let mut cfg = base.clone();
-            cfg.trainer = trainer;
+            let mut cfg = arm.apply(base.clone());
             cfg.seed = base.seed + s;
             let (rec, ferr) = match peers {
-                None => {
-                    let cfg = if trainer == TrainerKind::UniformSgd {
+                false => {
+                    let cfg = if cfg.trainer == TrainerKind::UniformSgd {
                         sgd_twin(&cfg)
                     } else {
                         cfg
@@ -65,10 +75,7 @@ pub fn run_comparison(scale: &ExperimentScale) -> Result<Vec<AsgdRow>> {
                     let out = run_sim_with_engine(&cfg, &engine)?;
                     (out.rec, out.final_err)
                 }
-                Some(k) => {
-                    cfg.n_workers = k;
-                    // Peers re-fetch every 4 own-steps: genuine staleness.
-                    cfg.param_push_every = 4;
+                true => {
                     // Sim vs live peer topology: the live arm runs one OS
                     // thread per peer, lockstep so seeds stay comparable.
                     let out = if scale.live_peers {

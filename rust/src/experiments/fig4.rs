@@ -10,7 +10,7 @@ use anyhow::Result;
 use crate::config::RunConfig;
 use crate::metrics::write_figure_csv;
 
-use super::runner::{engine_for, ExperimentScale, MultiRun};
+use super::runner::{engine_for, ArmOverrides, ExperimentScale, MultiRun};
 use super::results_dir;
 
 pub struct Fig4Runs {
@@ -20,13 +20,14 @@ pub struct Fig4Runs {
 
 pub fn run_monitored(scale: &ExperimentScale) -> Result<Fig4Runs> {
     let engine = engine_for(scale)?;
-    let mut a = scale.apply(RunConfig::setting_a());
     // Fig-4 shows the opposite smoothing constant as the alternate curve.
-    a.monitor_every = (scale.steps / 12).max(1);
-    a.monitor_alt_smoothing = 1.0;
-    let mut b = scale.apply(RunConfig::setting_b());
-    b.monitor_every = (scale.steps / 12).max(1);
-    b.monitor_alt_smoothing = 10.0;
+    let monitored = |alt: f64| ArmOverrides {
+        monitor_every: Some((scale.steps / 12).max(1)),
+        monitor_alt_smoothing: Some(alt),
+        ..Default::default()
+    };
+    let a = scale.arm(RunConfig::setting_a(), &monitored(1.0));
+    let b = scale.arm(RunConfig::setting_b(), &monitored(10.0));
     Ok(Fig4Runs {
         a: MultiRun::run(&a, &engine, scale.seeds, "fig4a")?,
         b: MultiRun::run(&b, &engine, scale.seeds, "fig4b")?,

@@ -13,6 +13,7 @@ pub mod fig3;
 pub mod fig4;
 pub mod runner;
 pub mod staleness;
+pub mod strategy_matrix;
 pub mod table1;
 
 pub use runner::{ExperimentScale, MultiRun};

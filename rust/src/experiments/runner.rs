@@ -2,10 +2,11 @@
 
 use anyhow::Result;
 
-use crate::config::RunConfig;
+use crate::config::{RunConfig, TrainerKind};
 use crate::coordinator::{run_sim_with_engine, SimOutcome};
 use crate::metrics::{quartiles_across_runs, QuartileSeries, RunRecorder};
 use crate::runtime::{artifacts_dir, Engine};
+use crate::sampler::strategy::StrategyKind;
 use crate::log_info;
 
 /// Scale knobs shared by all drivers: the paper ran 50 seeds for hours on
@@ -57,6 +58,73 @@ impl ExperimentScale {
         cfg.steps = self.steps;
         cfg.n_examples = self.n_examples;
         cfg.model = self.model.clone();
+        cfg
+    }
+
+    /// Scale a preset, then overlay one arm's overrides — the one-line
+    /// entry every driver's arm loop goes through.
+    pub fn arm(&self, preset: RunConfig, overrides: &ArmOverrides) -> RunConfig {
+        overrides.apply(self.apply(preset))
+    }
+}
+
+/// Per-arm config overrides, applied on top of a scaled preset.
+///
+/// Experiment drivers used to hand-mutate `RunConfig` fields positionally
+/// inside each arm loop (a tuple of anonymous values per arm, with a
+/// different tuple shape in every driver); this struct names each override
+/// once, so arms across fig2/fig3/fig4/table1/asgd/staleness/adaptive and
+/// the strategy matrix read the same way.  `None` keeps the preset/scale
+/// value; the double-`Option` fields (`staleness`, `adaptive_entropy`)
+/// distinguish "don't touch" from "explicitly disable".
+#[derive(Debug, Clone, Default)]
+pub struct ArmOverrides {
+    pub strategy: Option<StrategyKind>,
+    pub trainer: Option<TrainerKind>,
+    /// `Some(None)` explicitly disables the §B.1 filter.
+    pub staleness: Option<Option<u64>>,
+    pub n_workers: Option<usize>,
+    pub worker_batches_per_step: Option<usize>,
+    pub param_push_every: Option<u64>,
+    pub smoothing: Option<f64>,
+    /// `Some(None)` explicitly pins the fixed constant.
+    pub adaptive_entropy: Option<Option<f64>>,
+    pub monitor_every: Option<u64>,
+    pub monitor_alt_smoothing: Option<f64>,
+}
+
+impl ArmOverrides {
+    pub fn apply(&self, mut cfg: RunConfig) -> RunConfig {
+        if let Some(s) = self.strategy {
+            cfg.strategy = s;
+        }
+        if let Some(t) = self.trainer {
+            cfg.trainer = t;
+        }
+        if let Some(t) = self.staleness {
+            cfg.staleness_threshold = t;
+        }
+        if let Some(w) = self.n_workers {
+            cfg.n_workers = w;
+        }
+        if let Some(b) = self.worker_batches_per_step {
+            cfg.worker_batches_per_step = b;
+        }
+        if let Some(p) = self.param_push_every {
+            cfg.param_push_every = p;
+        }
+        if let Some(c) = self.smoothing {
+            cfg.smoothing = c;
+        }
+        if let Some(a) = self.adaptive_entropy {
+            cfg.adaptive_entropy = a;
+        }
+        if let Some(m) = self.monitor_every {
+            cfg.monitor_every = m;
+        }
+        if let Some(m) = self.monitor_alt_smoothing {
+            cfg.monitor_alt_smoothing = m;
+        }
         cfg
     }
 }
@@ -117,5 +185,50 @@ pub fn mean(xs: &[f64]) -> f64 {
         f64::NAN
     } else {
         xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arm_overrides_touch_only_set_fields() {
+        let scale = ExperimentScale::smoke();
+        let base = scale.apply(RunConfig::setting_b());
+        let arm = ArmOverrides {
+            strategy: Some(StrategyKind::Exp3),
+            staleness: Some(Some(7)),
+            n_workers: Some(5),
+            ..Default::default()
+        };
+        let cfg = scale.arm(RunConfig::setting_b(), &arm);
+        assert_eq!(cfg.strategy, StrategyKind::Exp3);
+        assert_eq!(cfg.staleness_threshold, Some(7));
+        assert_eq!(cfg.n_workers, 5);
+        // Everything unset keeps the scaled-preset value.
+        assert_eq!(cfg.steps, base.steps);
+        assert_eq!(cfg.smoothing, base.smoothing);
+        assert_eq!(cfg.trainer, base.trainer);
+        // An empty override set is the identity.
+        let id = scale.arm(RunConfig::setting_b(), &ArmOverrides::default());
+        assert_eq!(id.staleness_threshold, base.staleness_threshold);
+        assert_eq!(id.strategy, base.strategy);
+    }
+
+    #[test]
+    fn arm_overrides_double_option_disables_explicitly() {
+        let cfg = ArmOverrides {
+            staleness: Some(None),
+            adaptive_entropy: Some(None),
+            ..Default::default()
+        }
+        .apply(RunConfig {
+            staleness_threshold: Some(4),
+            adaptive_entropy: Some(0.9),
+            ..RunConfig::default()
+        });
+        assert_eq!(cfg.staleness_threshold, None);
+        assert_eq!(cfg.adaptive_entropy, None);
     }
 }

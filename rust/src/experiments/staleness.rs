@@ -12,7 +12,7 @@ use anyhow::Result;
 use crate::config::RunConfig;
 use crate::metrics::write_quartile_csv;
 
-use super::runner::{engine_for, mean, ExperimentScale, MultiRun};
+use super::runner::{engine_for, mean, ArmOverrides, ExperimentScale, MultiRun};
 use super::results_dir;
 
 pub struct StalenessRow {
@@ -31,15 +31,18 @@ pub fn run_sweep(
     let mut rows = Vec::new();
     for &workers in worker_counts {
         for &threshold in thresholds {
-            let mut cfg = scale.apply(RunConfig::setting_b());
-            cfg.n_workers = workers;
-            cfg.staleness_threshold = threshold;
             // The paper's staleness regime has workers much slower than
             // the master (570k examples / 3 GPUs): emulate by scoring one
             // batch per worker per step and publishing params every step,
             // so weight ages span several versions and thresholds bite.
-            cfg.worker_batches_per_step = 1;
-            cfg.param_push_every = 1;
+            let arm = ArmOverrides {
+                n_workers: Some(workers),
+                staleness: Some(threshold),
+                worker_batches_per_step: Some(1),
+                param_push_every: Some(1),
+                ..Default::default()
+            };
+            let cfg = scale.arm(RunConfig::setting_b(), &arm);
             let mr = MultiRun::run(
                 &cfg,
                 &engine,

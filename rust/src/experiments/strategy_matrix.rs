@@ -1,0 +1,133 @@
+//! Strategy shoot-out: every registered [`StrategyKind`] under identical
+//! seeds, the same staleness regime, and (for the chaos arms) the same
+//! `FaultyStore` schedule of withheld and truncated delta fetches.
+//!
+//! One table answers the ISSUE-6 question directly: does the paper's
+//! unbiased grad-norm proposal (arXiv 1511.06481) actually beat the
+//! biased shortcuts — loss-ranked rejection (Katharopoulos & Fleuret
+//! 2018), a tempered power proposal (K&F 2017), and an EXP3-style
+//! bandit posting (Bouchard et al. 2015) — once the score pipeline is
+//! held fixed?  Columns: tail-mean √Tr(Σ) of the *stale* proposal (the
+//! variance the master actually trains under), tail-mean effective
+//! sample size, and final test error, each averaged across seeds.
+//!
+//! The chaos arms re-run the same configs against a `MemStore` wrapped
+//! in a deterministic [`FaultyStore`] (20% withheld fetches, 20%
+//! truncated deltas, no injected errors — the master treats store
+//! errors at construction as fatal), so the table also shows which
+//! strategies degrade gracefully when the weight database misbehaves.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::coordinator::{run_sim_with_store, Master};
+use crate::sampler::strategy::StrategyKind;
+use crate::weightstore::faulty::{FaultSpec, FaultyStore};
+use crate::weightstore::{MemStore, WeightStore};
+
+use super::runner::{engine_for, mean, ArmOverrides, ExperimentScale};
+use super::results_dir;
+
+/// Withhold / truncate probability for the chaos arms.
+const CHAOS_P: f64 = 0.2;
+
+pub struct MatrixRow {
+    pub strategy: &'static str,
+    pub unbiased: bool,
+    pub chaos: bool,
+    /// Tail-mean √Tr(Σ) under the actual (stale) proposal.
+    pub sqrt_var: f64,
+    /// Tail-mean effective-sample-size ratio of the proposal.
+    pub ess: f64,
+    /// Final test error, seed-averaged.
+    pub test_err: f64,
+}
+
+pub fn run_matrix(scale: &ExperimentScale) -> Result<Vec<MatrixRow>> {
+    let engine = engine_for(scale)?;
+    let mut rows = Vec::new();
+    for &kind in StrategyKind::all() {
+        for chaos in [false, true] {
+            let arm = ArmOverrides {
+                strategy: Some(kind),
+                // A finite threshold so the staleness filter participates
+                // (the shoot-out should rank strategies under the regime
+                // the paper actually trains in, not the ideal one).
+                staleness: Some(Some(8)),
+                monitor_every: Some((scale.steps / 8).max(1)),
+                ..Default::default()
+            };
+            let (mut vars, mut esses, mut terrs) = (Vec::new(), Vec::new(), Vec::new());
+            for s in 0..scale.seeds {
+                let mut cfg = scale.arm(RunConfig::setting_b(), &arm);
+                cfg.seed += s;
+                let mem: Arc<dyn WeightStore> =
+                    Arc::new(MemStore::new(Master::store_size(&cfg), cfg.init_weight));
+                let store = if chaos {
+                    let spec = FaultSpec::quiet(cfg.seed)
+                        .with_withholding(CHAOS_P)
+                        .with_partial_deltas(CHAOS_P);
+                    Arc::new(FaultyStore::new(mem, spec)) as Arc<dyn WeightStore>
+                } else {
+                    mem
+                };
+                let out = run_sim_with_store(&cfg, &engine, store)?;
+                if let Some(v) = out.rec.tail_mean("var_stale_sqrt", 0.5) {
+                    vars.push(v);
+                }
+                if let Some(e) = out.rec.tail_mean("ess", 0.5) {
+                    esses.push(e);
+                }
+                terrs.push(out.final_err.2);
+            }
+            rows.push(MatrixRow {
+                strategy: kind.name(),
+                unbiased: kind.strategy().unbiased(),
+                chaos,
+                sqrt_var: mean(&vars),
+                ess: mean(&esses),
+                test_err: mean(&terrs),
+            });
+        }
+    }
+    Ok(rows)
+}
+
+pub fn emit(rows: &[MatrixRow]) -> Result<()> {
+    println!("\nISSUE-6 strategy matrix (identical seeds, staleness 8)");
+    println!("{:-<76}", "");
+    println!(
+        "{:<12} {:>9} {:>7} {:>12} {:>10} {:>10}",
+        "strategy", "unbiased", "chaos", "sqrt_var", "ess", "test_err"
+    );
+    for r in rows {
+        println!(
+            "{:<12} {:>9} {:>7} {:>12.4} {:>10.3} {:>10.4}",
+            r.strategy,
+            if r.unbiased { "yes" } else { "no" },
+            if r.chaos { "yes" } else { "no" },
+            r.sqrt_var,
+            r.ess,
+            r.test_err
+        );
+    }
+    let dir = results_dir();
+    std::fs::create_dir_all(&dir)?;
+    let mut csv = String::from("strategy,unbiased,chaos,sqrt_var,ess,test_err\n");
+    for r in rows {
+        csv.push_str(&format!(
+            "{},{},{},{},{},{}\n",
+            r.strategy, r.unbiased, r.chaos, r.sqrt_var, r.ess, r.test_err
+        ));
+    }
+    std::fs::write(dir.join("strategy_matrix.csv"), csv)?;
+    Ok(())
+}
+
+pub fn run(scale: &ExperimentScale) -> Result<Vec<MatrixRow>> {
+    let rows = run_matrix(scale)?;
+    emit(&rows)?;
+    Ok(rows)
+}

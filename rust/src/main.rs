@@ -4,7 +4,7 @@
 //!   train        run one training session (sim or live topology)
 //!   db-server    run the weight-store "database" actor on a TCP port
 //!   worker       run a standalone scoring worker against a remote store
-//!   experiment   regenerate a paper figure/table (fig2|fig3|fig4|table1|staleness|all)
+//!   experiment   regenerate a paper figure/table (fig2|fig3|fig4|table1|staleness|strategy-matrix|all)
 //!   info         print artifact/manifest information
 //!
 //! Examples:
@@ -37,6 +37,9 @@ SUBCOMMANDS
   train         one training session
                   --model tiny|small|paper  --trainer issgd|sgd  --sync exact|relaxed
                   --steps N --lr F --smoothing F --workers N --seed N
+                  --strategy grad-norm|loss-reject|power|exp3
+                                    proposal strategy (score + sampling-mass
+                                    transform; grad-norm is the paper's)
                   --live            use real threads instead of the deterministic sim
                   --peer            peer/ASGD topology (§6) instead of master/worker;
                                     with --live every peer is its own OS thread
@@ -54,7 +57,8 @@ SUBCOMMANDS
   worker        standalone scoring worker against a remote store
                   --store ADDR --worker-id I --workers N --model NAME
                   --n-examples N --seed N
-  experiment    regenerate paper artefacts: fig2|fig3|fig4|table1|staleness|asgd|adaptive|all
+  experiment    regenerate paper artefacts:
+                  fig2|fig3|fig4|table1|staleness|asgd|adaptive|strategy-matrix|all
                   --seeds N --steps N --n-examples N --model NAME
                   --live-peers      asgd arms run the live threaded peer mode
                   --store-path DIR  (with --live-peers) durable store per arm under DIR
@@ -282,7 +286,8 @@ fn cmd_worker(args: &Args) -> Result<()> {
     let worker_id = args.get_parse("worker-id", 0usize)?;
     anyhow::ensure!(worker_id < cfg.n_workers, "worker-id out of range");
 
-    let engine = Engine::load_entries(&artifacts_dir(&cfg.model), &["grad_norms"])?;
+    let score = cfg.strategy.score_source();
+    let engine = Engine::load_entries(&artifacts_dir(&cfg.model), &[score.required_entry()])?;
     let manifest = engine.manifest().clone();
     let spec = if manifest.input_dim == 64 {
         SynthSpec::tiny(cfg.n_examples)
@@ -303,7 +308,15 @@ fn cmd_worker(args: &Args) -> Result<()> {
         shard.start,
         shard.end
     );
-    let mut w = WorkerState::new(worker_id, shard, &manifest, data, Arc::new(train_idx), store);
+    let mut w = WorkerState::new_with_score(
+        worker_id,
+        shard,
+        &manifest,
+        data,
+        Arc::new(train_idx),
+        store,
+        score,
+    );
     let stop = AtomicBool::new(false); // runs until killed
     w.run_live(&engine, &stop, None)
 }
@@ -355,6 +368,9 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         "adaptive" => {
             experiments::adaptive::run(&scale)?;
         }
+        "strategy-matrix" => {
+            experiments::strategy_matrix::run(&scale)?;
+        }
         "all" => {
             // fig2/fig3/table1 share the four settings runs.
             let engine = experiments::runner::engine_for(&scale)?;
@@ -366,8 +382,12 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             experiments::staleness::run(&scale)?;
             experiments::asgd::run(&scale)?;
             experiments::adaptive::run(&scale)?;
+            experiments::strategy_matrix::run(&scale)?;
         }
-        other => bail!("unknown experiment {other:?} (fig2|fig3|fig4|table1|staleness|asgd|adaptive|all)"),
+        other => bail!(
+            "unknown experiment {other:?} \
+             (fig2|fig3|fig4|table1|staleness|asgd|adaptive|strategy-matrix|all)"
+        ),
     }
     println!("CSVs written to {}", experiments::results_dir().display());
     Ok(())

@@ -128,6 +128,78 @@ impl FenwickSampler {
     pub fn sample_many(&self, rng: &mut Pcg64, k: usize) -> Vec<usize> {
         (0..k).filter_map(|_| self.sample(rng)).collect()
     }
+
+    /// Sample `k` indices with replacement via one coordinated descent.
+    ///
+    /// Element-wise identical to `k` sequential [`FenwickSampler::sample`]
+    /// calls: the uniforms are drawn in the same RNG order up front, and
+    /// each follows the exact comparison/subtraction chain of the
+    /// per-draw walk — so the two paths are interchangeable under a fixed
+    /// seed.  The win is coordination: targets are sorted once and walked
+    /// top-down as groups, so each tree node is read once per *group*
+    /// instead of once per draw (k draws share the O(log N) spine instead
+    /// of repeating it).  Returns an empty vec when the mass is zero.
+    pub fn sample_batch(&self, rng: &mut Pcg64, k: usize) -> Vec<usize> {
+        if self.weights.is_empty() || k == 0 {
+            return Vec::new();
+        }
+        let total = self.total();
+        if total <= 0.0 {
+            return Vec::new();
+        }
+        // Draw every uniform up front (same RNG order as k `sample`
+        // calls), tagged with its slot so results land in draw order.
+        let mut targets: Vec<(f64, usize)> =
+            (0..k).map(|slot| (rng.next_f64() * total, slot)).collect();
+        targets.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let mut out = vec![0usize; k];
+        self.descend_batch(0, 1usize << self.log2, &mut targets, &mut out);
+        out
+    }
+
+    /// Resolve a sorted slice of `(running target, slot)` pairs rooted at
+    /// `pos` with descent width `step`, writing each slot's final index.
+    fn descend_batch(
+        &self,
+        pos: usize,
+        step: usize,
+        targets: &mut [(f64, usize)],
+        out: &mut [usize],
+    ) {
+        if targets.is_empty() {
+            return;
+        }
+        if step == 0 {
+            // Same fp-error repair as the per-draw path: clamp, then walk
+            // forward to the nearest positive weight.
+            for &(_, slot) in targets.iter() {
+                let mut idx = pos.min(self.weights.len() - 1);
+                if self.weights[idx] == 0.0 {
+                    idx = (0..self.weights.len())
+                        .map(|d| (idx + d) % self.weights.len())
+                        .find(|&j| self.weights[j] > 0.0)
+                        .expect("positive total mass but no positive weight");
+                }
+                out[slot] = idx;
+            }
+            return;
+        }
+        let next = pos + step;
+        if next >= self.tree.len() {
+            self.descend_batch(pos, step >> 1, targets, out);
+            return;
+        }
+        let node = self.tree[next];
+        // Sorted ⇒ the stay-left group (`!(node < target)`, mirroring the
+        // per-draw comparison exactly) is a prefix of the slice.
+        let split = targets.partition_point(|&(t, _)| !(node < t));
+        let (left, right) = targets.split_at_mut(split);
+        self.descend_batch(pos, step >> 1, left, out);
+        for t in right.iter_mut() {
+            t.0 -= node;
+        }
+        self.descend_batch(next, step >> 1, right, out);
+    }
 }
 
 #[cfg(test)]
@@ -230,6 +302,45 @@ mod tests {
         let mut rng = Pcg64::seeded(9);
         assert_eq!(s.sample(&mut rng), None);
         assert!(s.sample_many(&mut rng, 4).is_empty());
+    }
+
+    #[test]
+    fn sample_batch_matches_sequential_draws() {
+        // The ROADMAP-5 equivalence contract: under a fixed seed the
+        // batched descent must return element-wise exactly what k
+        // sequential `sample` calls return, and consume the same number
+        // of RNG draws (so downstream streams stay aligned).
+        for n in [1usize, 2, 3, 17, 64, 65, 200] {
+            let mut wrng = Pcg64::seeded(n as u64);
+            let mut w: Vec<f64> = (0..n)
+                .map(|i| if i % 3 == 0 { 0.0 } else { wrng.next_f64() * 10.0 })
+                .collect();
+            if w.iter().sum::<f64>() <= 0.0 {
+                w = vec![1.0; n];
+            }
+            let s = FenwickSampler::new(&w);
+            for k in [0usize, 1, 5, 64] {
+                let mut r_seq = Pcg64::new(99, n as u64);
+                let mut r_batch = r_seq.clone();
+                let seq: Vec<usize> = (0..k).map(|_| s.sample(&mut r_seq).unwrap()).collect();
+                let batch = s.sample_batch(&mut r_batch, k);
+                assert_eq!(batch, seq, "n={n} k={k}");
+                assert_eq!(r_seq.next_u64(), r_batch.next_u64(), "n={n} k={k} rng drift");
+            }
+        }
+    }
+
+    #[test]
+    fn sample_batch_zero_mass_and_empty_are_safe() {
+        let mut rng = Pcg64::seeded(8);
+        assert!(FenwickSampler::new(&[]).sample_batch(&mut rng, 4).is_empty());
+        assert!(FenwickSampler::new(&[0.0; 5]).sample_batch(&mut rng, 4).is_empty());
+        // Zero draws consume zero randomness.
+        let s = FenwickSampler::new(&[1.0, 2.0]);
+        let mut a = Pcg64::seeded(9);
+        let b_next = Pcg64::seeded(9).next_u64();
+        assert!(s.sample_batch(&mut a, 0).is_empty());
+        assert_eq!(a.next_u64(), b_next);
     }
 
     #[test]

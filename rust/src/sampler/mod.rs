@@ -9,10 +9,12 @@
 pub mod adaptive;
 pub mod alias;
 pub mod fenwick;
+pub mod strategy;
 
 pub use adaptive::{effective_sample_size_ratio, normalized_entropy, smoothing_for_entropy};
 pub use alias::AliasSampler;
 pub use fenwick::FenwickSampler;
+pub use strategy::{DrawPolicy, ProposalStrategy, ScoreKind, ScoreSource, StrategyKind};
 
 use crate::util::rng::Pcg64;
 
@@ -113,15 +115,15 @@ pub fn draw_minibatch(
         return (indices, vec![1.0; m], 0.0);
     }
     let mean_w = total / n as f64;
-    let mut indices = Vec::with_capacity(m);
-    let mut coefs = Vec::with_capacity(m);
-    for _ in 0..m {
-        let i = sampler
-            .sample(rng)
-            .expect("total mass positive but sample failed");
-        indices.push(i);
-        coefs.push((mean_w / sampler.weight(i)) as f32);
-    }
+    // One coordinated Fenwick descent for the whole minibatch — the k
+    // uniforms are consumed in the same order (and mapped to the same
+    // indices) as k sequential `sample` calls, so traces are unchanged.
+    let indices = sampler.sample_batch(rng, m);
+    debug_assert_eq!(indices.len(), m);
+    let coefs = indices
+        .iter()
+        .map(|&i| (mean_w / sampler.weight(i)) as f32)
+        .collect();
     (indices, coefs, mean_w)
 }
 

@@ -1,0 +1,415 @@
+//! Pluggable proposal strategies: how per-example scores become sampling
+//! mass.
+//!
+//! The paper hard-wires one pipeline: workers compute ω̃_n = ‖g(x_n)‖, the
+//! master smooths (`+c`, §B.3), filters (§B.1) and samples, and the update
+//! scales each loss by `mean(ω̃)/ω̃_i` (exact importance sampling).  The
+//! follow-on literature explores the same substrate with different score
+//! sources and transforms, so two traits split that design space:
+//!
+//!  * [`ScoreSource`] — *what a worker computes per example* from a
+//!    scoring pass.  [`crate::runtime::ScoreOutput`] carries both squared
+//!    gradient norms and per-example losses from the one `grad_norms`
+//!    entry point, so every registered source is served by the same AOT
+//!    artifact; [`ScoreSource::required_entry`] is the
+//!    manifest-negotiation hook ([`StrategyKind::validate_manifest`]).
+//!  * [`ProposalStrategy`] — *how raw scores become sampling mass*
+//!    ([`ProposalStrategy::mass`]), *how a minibatch is drawn* from that
+//!    mass ([`ProposalStrategy::draw_policy`]), and — the correctness
+//!    contract — *whether the resulting gradient estimate is unbiased*
+//!    ([`ProposalStrategy::unbiased`]).
+//!
+//! # The unbiasedness declaration
+//!
+//! The importance-weight correction in the update path follows from the
+//! declaration, enforced by `ProposalMaintainer::draw_minibatch`: unbiased
+//! strategies get the exact `mean(w)/w_i` coefficients (the §4.1 scaling),
+//! biased ones run with coefficients pinned to 1.  Scaling by `1/p` would
+//! *not* recover an unbiased estimate once the draw is truncated
+//! (presample/reject) or the mass transform deliberately flattens the
+//! proposal (power transforms), so a biased strategy claiming the IS
+//! correction would be wrong twice — the declaration makes the choice
+//! explicit and testable.
+//!
+//! # Purity contract
+//!
+//! `mass(raw, c)` MUST be a pure function of its two arguments (no
+//! interior state): [`crate::coordinator::ProposalMaintainer`] applies it
+//! both incrementally (per delta entry, per expiry) and wholesale (full
+//! rebuilds, smoothing changes), and the two paths must land on
+//! bit-identical Fenwick trees.  Adaptive online state (the EXP3
+//! exploration floor, the power exponent) therefore lives in constants or
+//! in the raw scores themselves, never in the strategy object.
+//!
+//! # Registered strategies vs the literature (see PAPERS.md)
+//!
+//! | `StrategyKind` | score | mass(raw, c) | unbiased | draw |
+//! |----------------|-------|--------------|----------|------|
+//! | `GradNormIs` | ‖g‖ | `raw + c` | yes | direct |
+//! | `LossReject` | loss | `raw + c` | no | presample ×4, keep top-m |
+//! | `PowerIs` | ‖g‖ | `(raw + c)^α`, α = ½ | no | direct |
+//! | `Exp3` | loss | `(1−γ)·e^min(η·raw, cap) + γ + c` | yes | direct |
+//!
+//! * `GradNormIs` — Alain et al. 2015, "Variance Reduction in SGD by
+//!   Distributed Importance Sampling" (arXiv 1511.06481): this repo's
+//!   source paper, the Theorem-1 minimum-variance proposal.  `mass` is
+//!   exactly the §B.3 smoothing, so the default strategy reproduces the
+//!   pre-refactor pipeline bit-exactly.
+//! * `LossReject` — Katharopoulos & Fleuret 2018, "Not All Samples Are
+//!   Created Equal: Deep Learning with Importance Sampling" (arXiv
+//!   1803.00942): loss as a cheap upper-bound score, large-batch
+//!   presampling, keep the top slice.  Deterministic truncation breaks IS
+//!   exactness, hence the biased declaration.
+//! * `PowerIs` — Katharopoulos & Fleuret 2017, "Biased Importance
+//!   Sampling for Deep Neural Network Training" (arXiv 1706.00043):
+//!   deliberately flattened proposal trading bias for variance.
+//! * `Exp3` — Bouchard et al. 2015, "Online Learning to Sample" (arXiv
+//!   1506.09016): bandit-style exponential reweighting of an online
+//!   reward (the loss).  The exploration floor γ keeps every example's
+//!   mass strictly positive, which is what lets it keep the unbiased
+//!   declaration: full support + exact IS coefficients.
+//!
+//! # Topology caveat: peers always publish grad-norm scores
+//!
+//! The peer/ASGD topology (§6) co-computes scores with the training step;
+//! [`crate::runtime::PeerOutput`] carries per-example squared norms but
+//! only a *scalar* minibatch loss, so peers publish ‖g‖-derived scores
+//! regardless of the configured source.  Score-kind negotiation applies
+//! to the master/worker topology; a loss-scored strategy still runs under
+//! peers, transforming ‖g‖ scores (`run_asgd_sim` logs the substitution).
+
+use anyhow::{Context, Result};
+
+use crate::runtime::Manifest;
+
+/// What per-example statistic feeds the proposal.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScoreKind {
+    /// ω̃_n = ‖g(x_n)‖ — the paper's minimum-variance score (Theorem 1).
+    GradNorm,
+    /// Per-example loss — the cheap upper-bound surrogate of the
+    /// presample/reject literature.
+    Loss,
+}
+
+/// What a worker computes per example (see the module docs).
+pub trait ScoreSource: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn kind(&self) -> ScoreKind;
+    /// Engine entry point whose [`crate::runtime::ScoreOutput`] feeds
+    /// [`ScoreSource::score`] — checked against the engine manifest by
+    /// [`StrategyKind::validate_manifest`].
+    fn required_entry(&self) -> &'static str;
+    /// The published per-example score, from one `ScoreOutput` row.
+    fn score(&self, sqnorm: f32, loss: f32) -> f32;
+}
+
+struct GradNormSource;
+
+impl ScoreSource for GradNormSource {
+    fn name(&self) -> &'static str {
+        "grad-norm"
+    }
+    fn kind(&self) -> ScoreKind {
+        ScoreKind::GradNorm
+    }
+    fn required_entry(&self) -> &'static str {
+        "grad_norms"
+    }
+    fn score(&self, sqnorm: f32, _loss: f32) -> f32 {
+        // ω̃_n = ‖g(x_n)‖ — the *norm*, not the squared norm (Theorem 1).
+        sqnorm.max(0.0).sqrt()
+    }
+}
+
+struct LossSource;
+
+impl ScoreSource for LossSource {
+    fn name(&self) -> &'static str {
+        "loss"
+    }
+    fn kind(&self) -> ScoreKind {
+        ScoreKind::Loss
+    }
+    fn required_entry(&self) -> &'static str {
+        // Per-example losses are co-computed by the grad_norms pass, so
+        // loss scoring needs no extra AOT artifact.
+        "grad_norms"
+    }
+    fn score(&self, _sqnorm: f32, loss: f32) -> f32 {
+        loss.max(0.0)
+    }
+}
+
+/// How a strategy turns its sampling mass into a minibatch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DrawPolicy {
+    /// One multinomial draw per minibatch slot (the paper's scheme).
+    Direct,
+    /// Draw `factor · m` candidates from the proposal, keep the `m` with
+    /// the largest effective mass (presample-and-reject).
+    PresampleTopK { factor: usize },
+}
+
+/// How raw scores become sampling mass (see the module docs).
+pub trait ProposalStrategy: Send + Sync {
+    fn name(&self) -> &'static str;
+    /// Sampling mass of one raw score under smoothing constant `c`.
+    /// MUST be pure, finite, non-negative for `raw >= 0, c >= 0`, and
+    /// monotone non-decreasing in `raw` (purity contract: module docs).
+    fn mass(&self, raw: f64, c: f64) -> f64;
+    /// Whether the resulting gradient estimate is unbiased — decides the
+    /// coefficient policy in `ProposalMaintainer::draw_minibatch`.
+    fn unbiased(&self) -> bool;
+    fn draw_policy(&self) -> DrawPolicy {
+        DrawPolicy::Direct
+    }
+}
+
+struct GradNormIsStrategy;
+
+impl ProposalStrategy for GradNormIsStrategy {
+    fn name(&self) -> &'static str {
+        "grad-norm"
+    }
+    fn mass(&self, raw: f64, c: f64) -> f64 {
+        // Exactly the §B.3 smoothing (`Smoothing::apply`) — keeping this
+        // bit-identical is what makes the default strategy reproduce the
+        // pre-refactor trajectory.
+        raw + c
+    }
+    fn unbiased(&self) -> bool {
+        true
+    }
+}
+
+struct LossRejectStrategy;
+
+impl ProposalStrategy for LossRejectStrategy {
+    fn name(&self) -> &'static str {
+        "loss-reject"
+    }
+    fn mass(&self, raw: f64, c: f64) -> f64 {
+        raw + c
+    }
+    fn unbiased(&self) -> bool {
+        // Deterministic top-m truncation of the candidate pool is not an
+        // importance-sampling scheme; no coefficient recovers exactness.
+        false
+    }
+    fn draw_policy(&self) -> DrawPolicy {
+        DrawPolicy::PresampleTopK { factor: 4 }
+    }
+}
+
+/// Flattening exponent of [`StrategyKind::PowerIs`].
+pub const POWER_IS_ALPHA: f64 = 0.5;
+
+struct PowerIsStrategy;
+
+impl ProposalStrategy for PowerIsStrategy {
+    fn name(&self) -> &'static str {
+        "power"
+    }
+    fn mass(&self, raw: f64, c: f64) -> f64 {
+        (raw + c).max(0.0).powf(POWER_IS_ALPHA)
+    }
+    fn unbiased(&self) -> bool {
+        false
+    }
+}
+
+/// EXP3 learning rate on the loss reward.
+pub const EXP3_ETA: f64 = 1.0;
+/// EXP3 exploration floor (also the full-support guarantee).
+pub const EXP3_GAMMA: f64 = 0.1;
+/// Cap on the exponent so a diverging loss cannot overflow the mass.
+const EXP3_CAP: f64 = 30.0;
+
+struct Exp3Strategy;
+
+impl ProposalStrategy for Exp3Strategy {
+    fn name(&self) -> &'static str {
+        "exp3"
+    }
+    fn mass(&self, raw: f64, c: f64) -> f64 {
+        (1.0 - EXP3_GAMMA) * (EXP3_ETA * raw).min(EXP3_CAP).exp() + EXP3_GAMMA + c
+    }
+    fn unbiased(&self) -> bool {
+        true
+    }
+}
+
+/// Registry of the pluggable strategies (the `--strategy` CLI surface).
+/// Every strategy is a stateless singleton, so the kind is `Copy` and
+/// threads through `RunConfig` without boxing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StrategyKind {
+    /// The source paper's exact importance sampling on ‖g‖ (default).
+    #[default]
+    GradNormIs,
+    /// Loss-scored presample-and-reject top-m (biased).
+    LossReject,
+    /// Biased power transform of the grad-norm score (α = ½).
+    PowerIs,
+    /// EXP3-style exponential loss reweighting with an exploration floor.
+    Exp3,
+}
+
+impl StrategyKind {
+    pub const ALL: [StrategyKind; 4] = [
+        StrategyKind::GradNormIs,
+        StrategyKind::LossReject,
+        StrategyKind::PowerIs,
+        StrategyKind::Exp3,
+    ];
+
+    /// Every registered strategy, in shoot-out order.
+    pub fn all() -> &'static [StrategyKind] {
+        &Self::ALL
+    }
+
+    /// The CLI/JSON name (round-trips through [`StrategyKind::parse`]).
+    pub fn name(self) -> &'static str {
+        self.strategy().name()
+    }
+
+    pub fn parse(s: &str) -> Result<StrategyKind> {
+        Ok(match s {
+            "grad-norm" | "gradnorm" | "is" => StrategyKind::GradNormIs,
+            "loss-reject" | "reject" => StrategyKind::LossReject,
+            "power" | "power-is" => StrategyKind::PowerIs,
+            "exp3" | "bandit" => StrategyKind::Exp3,
+            other => {
+                anyhow::bail!("unknown strategy {other:?} (grad-norm|loss-reject|power|exp3)")
+            }
+        })
+    }
+
+    pub fn score_source(self) -> &'static dyn ScoreSource {
+        match self {
+            StrategyKind::GradNormIs | StrategyKind::PowerIs => &GradNormSource,
+            StrategyKind::LossReject | StrategyKind::Exp3 => &LossSource,
+        }
+    }
+
+    pub fn strategy(self) -> &'static dyn ProposalStrategy {
+        match self {
+            StrategyKind::GradNormIs => &GradNormIsStrategy,
+            StrategyKind::LossReject => &LossRejectStrategy,
+            StrategyKind::PowerIs => &PowerIsStrategy,
+            StrategyKind::Exp3 => &Exp3Strategy,
+        }
+    }
+
+    /// Score-kind negotiation: the engine manifest must export the entry
+    /// point this strategy's score source reads.
+    pub fn validate_manifest(self, manifest: &Manifest) -> Result<()> {
+        let entry = self.score_source().required_entry();
+        manifest.artifact_path(entry).map(|_| ()).with_context(|| {
+            format!(
+                "strategy {:?} needs the {entry:?} entry point, which model {:?} does not export",
+                self.name(),
+                manifest.config
+            )
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_parse_back_and_are_unique() {
+        let mut seen = Vec::new();
+        for &k in StrategyKind::all() {
+            assert_eq!(StrategyKind::parse(k.name()).unwrap(), k);
+            assert!(!seen.contains(&k.name()), "duplicate name {:?}", k.name());
+            seen.push(k.name());
+        }
+        assert!(StrategyKind::parse("nope").is_err());
+    }
+
+    #[test]
+    fn default_strategy_mass_is_exactly_the_smoothing() {
+        // Bit-exactness contract: the grad-norm arm must reproduce the
+        // pre-refactor `Smoothing::apply` arithmetic identically.
+        let s = StrategyKind::GradNormIs.strategy();
+        for &(w, c) in &[(0.0, 0.0), (1.5, 10.0), (3.25, 0.125), (1e-9, 1e3)] {
+            assert_eq!(s.mass(w, c), crate::sampler::Smoothing::new(c).apply(w));
+        }
+        assert!(s.unbiased());
+        assert_eq!(s.draw_policy(), DrawPolicy::Direct);
+    }
+
+    #[test]
+    fn unbiased_strategies_have_full_support_mass() {
+        // The declaration's precondition: an unbiased strategy must give
+        // every example positive mass under a positive smoothing constant.
+        for &k in StrategyKind::all() {
+            let s = k.strategy();
+            if s.unbiased() {
+                for &raw in &[0.0, 1e-12, 0.5, 100.0, 1e9] {
+                    assert!(s.mass(raw, 0.1) > 0.0, "{} lost support at {raw}", s.name());
+                }
+            }
+        }
+        // EXP3's floor holds even at c = 0.
+        assert!(StrategyKind::Exp3.strategy().mass(0.0, 0.0) >= EXP3_GAMMA);
+    }
+
+    #[test]
+    fn mass_is_finite_monotone_and_nonnegative() {
+        for &k in StrategyKind::all() {
+            let s = k.strategy();
+            let mut prev = -1.0f64;
+            for &raw in &[0.0, 0.1, 1.0, 10.0, 1e3, 1e9, 1e300] {
+                let m = s.mass(raw, 0.5);
+                assert!(m.is_finite() && m >= 0.0, "{}({raw}) = {m}", s.name());
+                assert!(m >= prev, "{} not monotone at {raw}", s.name());
+                prev = m;
+            }
+        }
+    }
+
+    #[test]
+    fn score_sources_compute_the_declared_statistic() {
+        let g = StrategyKind::GradNormIs.score_source();
+        assert_eq!(g.kind(), ScoreKind::GradNorm);
+        assert_eq!(g.score(4.0, 7.0), 2.0); // √sqnorm, loss ignored
+        assert_eq!(g.score(-1.0, 7.0), 0.0); // negative sqnorm clamped
+        let l = StrategyKind::LossReject.score_source();
+        assert_eq!(l.kind(), ScoreKind::Loss);
+        assert_eq!(l.score(4.0, 7.0), 7.0);
+        assert_eq!(l.score(4.0, -3.0), 0.0);
+        // Both sources are served by the one scoring entry point.
+        for &k in StrategyKind::all() {
+            assert_eq!(k.score_source().required_entry(), "grad_norms");
+        }
+    }
+
+    #[test]
+    fn manifest_negotiation_rejects_missing_entry() {
+        use crate::runtime::{LayerSpec, Manifest};
+        let mut m = Manifest::synthetic_for_tests(vec![LayerSpec { d_in: 4, d_out: 2 }]);
+        for &k in StrategyKind::all() {
+            assert!(k.validate_manifest(&m).is_err(), "{:?} accepted empty manifest", k);
+        }
+        m.artifacts.push(("grad_norms".into(), "grad_norms.bin".into()));
+        for &k in StrategyKind::all() {
+            k.validate_manifest(&m).unwrap();
+        }
+    }
+
+    #[test]
+    fn biased_declarations_match_the_literature() {
+        assert!(!StrategyKind::LossReject.strategy().unbiased());
+        assert!(!StrategyKind::PowerIs.strategy().unbiased());
+        assert!(StrategyKind::Exp3.strategy().unbiased());
+        assert_eq!(
+            StrategyKind::LossReject.strategy().draw_policy(),
+            DrawPolicy::PresampleTopK { factor: 4 }
+        );
+    }
+}

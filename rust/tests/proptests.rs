@@ -499,6 +499,101 @@ fn multi_consumer_cursors_reconstruct_identically() {
     }
 }
 
+fn strategy_conformance_generic(label: &str, mk: &dyn Fn(usize, f64) -> TestStore) {
+    // Backend × strategy contract: for EVERY registered proposal strategy,
+    // a maintainer chasing any backend's cursor must (a) keep all sampling
+    // masses finite, positive and equal to the pure `mass(raw, c)` law
+    // (incremental absorbs may never drift off the rebuild), and (b) emit
+    // importance coefficients exactly when — and only when — the strategy
+    // declares itself unbiased (coef = mean mass / drawn mass; biased
+    // strategies pin 1.0).
+    use issgd::config::StalenessUnit;
+    use issgd::coordinator::ProposalMaintainer;
+    use issgd::sampler::strategy::StrategyKind;
+    prop(&format!("strategy-conformance-{label}"), 4, |rng| {
+        let n = 20 + rng.next_below(120) as usize;
+        let c = 0.25;
+        for &kind in StrategyKind::all() {
+            let strat = kind.strategy();
+            let ts = mk(n, 1.0);
+            let store = &ts.store;
+            let mut master =
+                ProposalMaintainer::new_with_strategy(n, c, None, StalenessUnit::Versions, strat);
+            let mut prior = ProposalMaintainer::with_coverage_prior_strategy(
+                n,
+                c,
+                None,
+                StalenessUnit::Versions,
+                strat,
+            );
+            for round in 0..40u64 {
+                let start = rng.next_below(n as u64) as usize;
+                let len = 1 + rng.next_below((n - start).min(12) as u64) as usize;
+                let vals: Vec<f32> = (0..len).map(|_| rng.next_f32().abs() + 0.01).collect();
+                store.push_weights(start, &vals, round + 1).unwrap();
+                if round % 2 == 0 {
+                    let d = store.fetch_weights_since(master.cursor()).unwrap();
+                    master.absorb(&d, 0).unwrap();
+                }
+                if round % 3 == 0 {
+                    let d = store.fetch_weights_since(prior.cursor()).unwrap();
+                    prior.absorb(&d, 0).unwrap();
+                }
+            }
+            // Drain both cursors so each saw every write.
+            let d = store.fetch_weights_since(master.cursor()).unwrap();
+            master.absorb(&d, 0).unwrap();
+            let d = store.fetch_weights_since(prior.cursor()).unwrap();
+            prior.absorb(&d, 0).unwrap();
+            // (a) masses obey the pure law; positive scores + c > 0 must
+            // leave every example samplable under every strategy.
+            for i in 0..n {
+                let w = master.sampler().weight(i);
+                let expect = strat.mass(master.raw().weights[i], c);
+                assert!(w.is_finite() && w > 0.0, "{}: mass {w} at {i}", kind.name());
+                assert!(
+                    (w - expect).abs() <= 1e-9 * expect.abs().max(1.0),
+                    "{}: incremental mass {w} != mass(raw) {expect} at {i}",
+                    kind.name()
+                );
+                let pw = prior.effective_weight(i);
+                assert!(
+                    pw.is_finite() && pw > 0.0,
+                    "{}: prior-mode mass {pw} at {i}",
+                    kind.name()
+                );
+            }
+            // (b) the coefficient contract follows the declaration.
+            let mut r = Pcg64::seeded(rng.next_u64());
+            let m = 8.min(n);
+            let (idx, coefs, mean_w) = master.draw_minibatch(&mut r, m);
+            assert_eq!(idx.len(), m);
+            assert_eq!(coefs.len(), m);
+            for (k, &i) in idx.iter().enumerate() {
+                let want = if strat.unbiased() {
+                    (mean_w / master.effective_weight(i)) as f32
+                } else {
+                    1.0
+                };
+                assert!(
+                    (coefs[k] - want).abs() <= 1e-6 * want.abs().max(1.0),
+                    "{}: coef {} vs {want} (unbiased={})",
+                    kind.name(),
+                    coefs[k],
+                    strat.unbiased()
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn proposal_strategies_conform_across_backends() {
+    for (label, mk) in backends("strategy") {
+        strategy_conformance_generic(label, mk.as_ref());
+    }
+}
+
 // ---------------------------------------------------------------------------
 // params-delta conformance
 // ---------------------------------------------------------------------------
