@@ -1,0 +1,127 @@
+//! Loom models of the weight-store's cross-thread protocols.
+//!
+//! These do not run the real `MemStore` (loom needs its own `Mutex`/atomic
+//! types); each model re-states one protocol from
+//! `src/weightstore/mod.rs` in loom primitives and lets loom enumerate
+//! every legal interleaving + memory-model outcome.  The protocols:
+//!
+//! 1. **Sequence claim under the shard write lock** — `push_weights`
+//!    claims the global write sequence while holding the shard's write
+//!    lock, so a reader that observed counter value `w` and then takes the
+//!    shard lock must see the entries stamped `w` (the module's "no lost
+//!    updates" guarantee).
+//! 2. **Cursor pin vs compaction** — `save_cursor` and `compact_before`
+//!    serialize on the cursors mutex; a pin present when the compactor
+//!    reads the map clamps the floor, a pin saved after may not.
+//! 3. **Floor publish ordering** — `compact_before` publishes the raised
+//!    floor *before* re-tagging per-entry sequences, and re-tags only ever
+//!    raise, so an incremental reader can never have a changed entry
+//!    hidden from it.
+//!
+//! The same contracts are exercised without loom (exhaustive *serial*
+//! interleavings over the real store) by `rust/tests/interleave_model.rs`,
+//! which runs in tier-1; this crate is built only in the CI `loom` job.
+
+#[cfg(test)]
+mod models {
+    use loom::sync::atomic::{AtomicU64, Ordering};
+    use loom::sync::{Arc, Mutex};
+    use loom::thread;
+
+    /// Protocol 1: the writer claims the next write sequence *while
+    /// holding* the shard write lock.  Invariant: a reader that observed
+    /// the claimed counter value and then acquires the shard lock sees the
+    /// stamped entry — the cursor it hands out can never cover a write the
+    /// shard does not yet show.
+    #[test]
+    fn seq_claim_under_shard_lock_is_visible() {
+        loom::model(|| {
+            let counter = Arc::new(AtomicU64::new(1));
+            let shard = Arc::new(Mutex::new(1u64)); // the entry's write seq
+            let c2 = Arc::clone(&counter);
+            let s2 = Arc::clone(&shard);
+            let writer = thread::spawn(move || {
+                let mut entry = s2.lock().unwrap();
+                let w = c2.fetch_add(1, Ordering::AcqRel) + 1;
+                *entry = w;
+            });
+            // Reader: observe the counter (this becomes delta.seq), then
+            // scan the shard under its lock.
+            let head = counter.load(Ordering::Acquire);
+            let entry = *shard.lock().unwrap();
+            assert!(
+                head < 2 || entry >= 2,
+                "cursor {head} covers write 2 but the shard still shows {entry}"
+            );
+            writer.join().unwrap();
+        });
+    }
+
+    /// Protocol 2: `save_cursor` and `compact_before` serialize on the
+    /// cursors mutex.  If the pin was in the map when the compactor read
+    /// it, the floor is clamped to the pin; if not, the floor may take the
+    /// full limit — but never anything in between.
+    #[test]
+    fn pin_present_at_fold_clamps_the_floor() {
+        const PIN: u64 = 2;
+        const LIMIT: u64 = 5;
+        loom::model(|| {
+            let cursors = Arc::new(Mutex::new(None::<u64>));
+            let floor = Arc::new(AtomicU64::new(0));
+            let cu = Arc::clone(&cursors);
+            let consumer = thread::spawn(move || {
+                *cu.lock().unwrap() = Some(PIN);
+            });
+            let saw_pin = {
+                let pins = cursors.lock().unwrap();
+                let clamp = pins.unwrap_or(u64::MAX);
+                let target = LIMIT.min(clamp);
+                if target > floor.load(Ordering::Acquire) {
+                    floor.store(target, Ordering::Release);
+                }
+                pins.is_some()
+            };
+            consumer.join().unwrap();
+            let f = floor.load(Ordering::Acquire);
+            let expected = if saw_pin { PIN } else { LIMIT };
+            assert_eq!(f, expected, "floor {f} disagrees with pin visibility");
+        });
+    }
+
+    /// Protocol 3: the compactor publishes the raised floor before
+    /// re-tagging entries, and re-tags only ever raise a sequence.  An
+    /// incremental reader (cursor not below the floor it observed) must
+    /// still be shown every entry written after its cursor — the re-tag
+    /// can widen the delta (idempotent re-delivery) but never hide it.
+    #[test]
+    fn floor_publish_never_hides_a_write() {
+        const CURSOR: u64 = 1;
+        const TARGET: u64 = 3;
+        loom::model(|| {
+            let floor = Arc::new(AtomicU64::new(0));
+            let entry_seq = Arc::new(AtomicU64::new(2)); // written after CURSOR
+            let f2 = Arc::clone(&floor);
+            let e2 = Arc::clone(&entry_seq);
+            let compactor = thread::spawn(move || {
+                // Publish first, then fold (the order the code comments
+                // insist on); the fold only raises.
+                f2.store(TARGET, Ordering::Release);
+                let s = e2.load(Ordering::Acquire);
+                if s < TARGET {
+                    e2.store(TARGET, Ordering::Release);
+                }
+            });
+            let f = floor.load(Ordering::Acquire);
+            if f <= CURSOR {
+                // Incremental service: the changed entry must be visible.
+                let s = entry_seq.load(Ordering::Acquire);
+                assert!(
+                    s > CURSOR,
+                    "incremental fetch at cursor {CURSOR} lost the entry (seq {s})"
+                );
+            }
+            // else: full fallback — trivially delivers everything.
+            compactor.join().unwrap();
+        });
+    }
+}

@@ -1,5 +1,7 @@
 //! Micro/macro-benchmark harness (criterion is unavailable offline).
 //!
+//! analyze: allow-module(wallclock): a benchmark harness times wall clock
+//!
 //! Usage in a `[[bench]] harness = false` target:
 //!
 //! ```ignore

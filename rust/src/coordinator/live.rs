@@ -116,9 +116,11 @@ pub fn run_live(cfg: &RunConfig, opts: &LiveOptions) -> Result<SimOutcome> {
         if opts.wait_for_first_scores {
             // Publish params so workers can start, then poll the store.
             master.maybe_push_params()?;
+            // analyze: allow(wallclock): live mode waits on real worker processes
             let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
             while master_store.stats()?.weight_pushes < cfg.n_workers as u64 {
                 anyhow::ensure!(
+                    // analyze: allow(wallclock): live mode waits on real worker processes
                     std::time::Instant::now() < deadline,
                     "workers produced no scores within 60s"
                 );

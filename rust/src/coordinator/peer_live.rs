@@ -325,6 +325,7 @@ pub fn run_peer_live(cfg: &RunConfig, opts: &PeerLiveOptions) -> Result<AsgdOutc
     // Driver loop: watch progress, run boundary-crossing evaluations, and
     // enforce the deadline.  Stamps use the eval boundary (k·eval_every),
     // not the racing counter.
+    // analyze: allow(wallclock): the run deadline is wall time by definition
     let started = std::time::Instant::now();
     let mut rec = RunRecorder::new();
     let mut eval_version = 0u64;
@@ -371,7 +372,9 @@ pub fn run_peer_live(cfg: &RunConfig, opts: &PeerLiveOptions) -> Result<AsgdOutc
     // Give such peers a grace period to observe the stop flag, then
     // detach the stuck ones instead of joining them.
     if deadline_hit {
+        // analyze: allow(wallclock): reap grace period for wedged live peers
         let grace = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        // analyze: allow(wallclock): reap grace period for wedged live peers
         while std::time::Instant::now() < grace && !handles.iter().all(|h| h.is_finished()) {
             std::thread::sleep(std::time::Duration::from_millis(10));
         }

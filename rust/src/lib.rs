@@ -19,6 +19,21 @@
 //! [`coordinator::Cluster`] to run the paper's master/worker/database
 //! topology; see `examples/quickstart.rs` for the 60-second tour.
 
+// Clippy baseline for the `-D warnings` CI gate.  These lints fire on
+// long-standing idioms in this crate (index loops over parallel arrays,
+// the big `Response` enum, builder-ish constructors returning `Arc`);
+// they are allowed wholesale so the gate can reject *new* warning
+// classes.  Shrink this list, don't grow it.
+#![allow(clippy::collapsible_else_if)]
+#![allow(clippy::collapsible_if)]
+#![allow(clippy::comparison_chain)]
+#![allow(clippy::large_enum_variant)]
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::new_ret_no_self)]
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::type_complexity)]
+#![allow(clippy::uninlined_format_args)]
+
 pub mod baseline;
 pub mod bench;
 pub mod config;

@@ -1,6 +1,9 @@
 //! Metrics: per-run time series, multi-seed aggregation (median/quartiles,
 //! the statistics the paper plots over its 50 runs), and CSV/JSON export
 //! consumed by the experiment drivers.
+//!
+//! analyze: allow-module(wallclock): samples are stamped with elapsed wall
+//! time for the paper's time-axis plots; step-indexed data stays exact
 
 use std::collections::BTreeMap;
 use std::io::Write;

@@ -4,6 +4,8 @@
 //! actor tag (`master`, `worker-2`, `db`), which makes interleaved
 //! multi-thread traces readable.  Level is set once at startup (CLI
 //! `--log-level`).
+//!
+//! analyze: allow-module(wallclock): log timestamps are wall time by design
 
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::time::Instant;

@@ -1,5 +1,7 @@
 //! Wall-clock measurement helpers used by the coordinator's metrics and by
 //! the bench harness (criterion is unavailable offline — see `crate::bench`).
+//!
+//! analyze: allow-module(wallclock): measuring wall time is this module's job
 
 use std::time::{Duration, Instant};
 

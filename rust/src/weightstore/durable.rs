@@ -994,7 +994,9 @@ mod tests {
             store.save_cursor("me", cursor).unwrap();
         }
         // Compactions run on the background thread now: wait for them.
+        // analyze: allow(wallclock): test waits on a real background thread
         let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+        // analyze: allow(wallclock): test waits on a real background thread
         while store.compactions() < 2 && std::time::Instant::now() < deadline {
             std::thread::sleep(std::time::Duration::from_millis(2));
         }

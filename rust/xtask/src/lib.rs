@@ -1,0 +1,20 @@
+//! `xtask` — the repo's own static-analysis pass.
+//!
+//! Run as `cargo run -p xtask -- analyze` (CI gates on its exit status).
+//! Four lints enforce invariants the compiler can't:
+//!
+//! * `protocol` — opcode table / encode / decode / server / client /
+//!   durable-journal exhaustiveness for `weightstore/protocol.rs`.
+//! * `traits` — every `WeightStore` method implemented by every backend
+//!   and dispatched by the TCP server.
+//! * `determinism` — no wall-clock or nondeterministic primitives outside
+//!   pragma-sanctioned sites.
+//! * `locks` — the inter-lock acquisition graph respects the canonical
+//!   order declared in `weightstore/mod.rs` and is cycle-free.
+//!
+//! See `xtask/README.md` for pragma syntax and how to add a lint.
+
+pub mod lints;
+pub mod source;
+
+pub use source::{Finding, Tree};

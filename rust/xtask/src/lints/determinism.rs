@@ -1,0 +1,74 @@
+//! Determinism lint: bans wall-clock reads and nondeterministic
+//! primitives everywhere in the tree unless a pragma sanctions the site.
+//!
+//! The repo's simulation/virtual-time layers (`coordinator/sim.rs`,
+//! `coordinator/peer.rs`, `weightstore/faulty.rs`, the experiment
+//! drivers) promise bit-exact reruns from a seed; a single stray
+//! `Instant::now()` or `HashMap` iteration silently breaks that.  Rather
+//! than maintain a module list (which rots as files move), the lint bans
+//! the primitives tree-wide and requires every *sanctioned* wall-clock
+//! use — live drivers, the phase timer, the metrics recorder — to carry
+//! an `analyze: allow(…)` pragma with a reason, which doubles as
+//! documentation of why that site cannot leak into a virtual-time path.
+
+use crate::source::{find_all_tokens, Finding, Tree};
+
+/// (pragma key, banned token, rationale shown in the finding)
+const BANNED: &[(&str, &str, &str)] = &[
+    (
+        "wallclock",
+        "Instant::now",
+        "wall-clock read; sim/virtual-time paths must use FaultClock/store.now()",
+    ),
+    (
+        "wallclock",
+        "SystemTime::now",
+        "wall-clock read; sim/virtual-time paths must use FaultClock/store.now()",
+    ),
+    (
+        "nondet-rng",
+        "thread_rng",
+        "OS-seeded RNG; use the seeded util::rng instead",
+    ),
+    (
+        "nondet-rng",
+        "from_entropy",
+        "OS-seeded RNG; use the seeded util::rng instead",
+    ),
+    (
+        "nondet-rng",
+        "RandomState",
+        "randomized hasher; iteration order varies across runs",
+    ),
+    (
+        "unordered-iter",
+        "HashMap",
+        "iteration order is unspecified; use BTreeMap for anything iterated",
+    ),
+    (
+        "unordered-iter",
+        "HashSet",
+        "iteration order is unspecified; use BTreeSet for anything iterated",
+    ),
+];
+
+pub fn run(tree: &Tree) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for file in &tree.files {
+        for &(key, token, why) in BANNED {
+            for pos in find_all_tokens(&file.code, token) {
+                let line = file.line_of(pos);
+                if file.allows.allowed(line, key) {
+                    continue;
+                }
+                findings.push(Finding {
+                    file: file.rel.clone(),
+                    line,
+                    lint: "determinism",
+                    msg: format!("`{token}` is banned ({why}); pragma: `// analyze: allow({key}): reason`"),
+                });
+            }
+        }
+    }
+    findings
+}

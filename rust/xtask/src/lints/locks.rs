@@ -1,0 +1,644 @@
+//! Lock-order analysis.
+//!
+//! Extracts every `.lock()` / `.read()` / `.write()` acquisition site in
+//! the tree (empty argument lists only, which cleanly separates
+//! `Mutex/RwLock` guards from `io::Read::read(&mut buf)`), classifies each
+//! site into a named lock *class* (`cursors`, `shards`, `log`, …), tracks
+//! which guards are held across statements and one level of calls
+//! (iterated to a fixpoint over a name-resolved call graph), and checks
+//! the resulting inter-class acquisition graph against the canonical
+//! order declared in `weightstore/mod.rs`:
+//!
+//! ```text
+//! //! lock-order: compact_serial -> log -> signal -> cursors -> params -> shards
+//! ```
+//!
+//! Findings: acquiring a class that precedes an already-held class in the
+//! declared order (inversion), any cycle in the class graph (covers
+//! classes outside the declared chain), and acquisition sites the
+//! classifier cannot name at all.  `// analyze: allow(lock-order): reason`
+//! on the acquiring line waives a deliberate inversion.
+//!
+//! The analysis is intra-procedural with call summaries: a guard bound by
+//! `let` is considered held until its enclosing block closes (or an
+//! explicit `drop(guard)`), a guard in expression position is released at
+//! the end of its statement, and calls made while holding a guard
+//! contribute the callee's (transitive) acquisition set as edges.  Name
+//! collisions across `impl` blocks resolve to the union of candidates,
+//! except calls through a `…mem…` receiver, which resolve only into
+//! `weightstore/mod.rs` (the durable backend's inner `MemStore`), and a
+//! list of ubiquitous std names (`new`, `push`, `insert`, …) that are
+//! never resolved — attributing `Vec::new()` to `Master::new` would wire
+//! the whole graph to itself.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::source::{
+    find_token_from, ident_ending_at, ident_starting_at, is_ident_byte, matching_brace,
+    prev_non_ws, skip_ws, Finding, Tree,
+};
+
+/// Call names never resolved through the name-based call graph: std
+/// idioms so common that resolving them to same-named repo functions
+/// would connect unrelated code (e.g. `Vec::new()` → `Master::new`).
+const UNRESOLVED_CALLS: &[&str] = &[
+    "new", "default", "clone", "from", "into", "drop", "with_capacity", "to_string", "to_vec",
+    "fmt", "len", "is_empty", "load", "store", "push", "pop", "insert", "remove", "get", "min",
+    "max", "iter", "next", "eq", "hash", "cmp", "wait", "join", "collect", "map", "filter",
+    "unwrap", "expect", "ok", "take", "contains",
+];
+
+#[derive(Debug)]
+struct FnDef {
+    file: usize,
+    name: String,
+    /// Byte span of the body (from `{` to matching `}`), in
+    /// `code_sans_tests` coordinates.
+    body: (usize, usize),
+}
+
+#[derive(Debug)]
+enum Event {
+    Open,
+    Close,
+    Acquire {
+        off: usize,
+        class: Option<String>,
+        bound: bool,
+        binder: Option<String>,
+    },
+    Call {
+        off: usize,
+        name: String,
+        mem_scoped: bool,
+    },
+    Release {
+        binder: String,
+    },
+}
+
+pub fn run(tree: &Tree) -> Vec<Finding> {
+    let mut findings = Vec::new();
+
+    // --- declared order ------------------------------------------------
+    let declared = declared_order(tree);
+    if declared.is_empty() {
+        findings.push(Finding {
+            file: "weightstore/mod.rs".into(),
+            line: 1,
+            lint: "locks",
+            msg: "no `lock-order: a -> b -> …` declaration found in the module docs".into(),
+        });
+    }
+    let pos_of = |class: &str| declared.iter().position(|c| c == class);
+
+    // --- function table ------------------------------------------------
+    let mut fns: Vec<FnDef> = Vec::new();
+    for (fi, file) in tree.files.iter().enumerate() {
+        collect_fns(fi, &file.code_sans_tests, &mut fns);
+    }
+    let mut by_name: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+    for (i, f) in fns.iter().enumerate() {
+        by_name.entry(&f.name).or_default().push(i);
+    }
+
+    // --- per-function event streams -------------------------------------
+    let events: Vec<Vec<Event>> = fns
+        .iter()
+        .map(|f| {
+            let file = &tree.files[f.file];
+            let nested: Vec<(usize, usize)> = fns
+                .iter()
+                .filter(|g| g.body.0 > f.body.0 && g.body.1 < f.body.1)
+                .map(|g| g.body)
+                .collect();
+            scan_body(&file.code_sans_tests, f.body, &nested, &declared)
+        })
+        .collect();
+
+    // --- summaries: fixpoint over the call graph -------------------------
+    let resolve = |name: &str, mem_scoped: bool| -> Vec<usize> {
+        if UNRESOLVED_CALLS.contains(&name) {
+            return Vec::new();
+        }
+        let Some(cands) = by_name.get(name) else { return Vec::new() };
+        cands
+            .iter()
+            .copied()
+            .filter(|&i| {
+                !mem_scoped || tree.files[fns[i].file].rel.ends_with("weightstore/mod.rs")
+            })
+            .collect()
+    };
+    let mut summaries: Vec<BTreeSet<String>> = fns
+        .iter()
+        .enumerate()
+        .map(|(i, _)| {
+            events[i]
+                .iter()
+                .filter_map(|e| match e {
+                    Event::Acquire { class: Some(c), .. } => Some(c.clone()),
+                    _ => None,
+                })
+                .collect()
+        })
+        .collect();
+    loop {
+        let mut changed = false;
+        for i in 0..fns.len() {
+            let mut add: BTreeSet<String> = BTreeSet::new();
+            for e in &events[i] {
+                if let Event::Call { name, mem_scoped, .. } = e {
+                    for j in resolve(name, *mem_scoped) {
+                        for c in &summaries[j] {
+                            if !summaries[i].contains(c) {
+                                add.insert(c.clone());
+                            }
+                        }
+                    }
+                }
+            }
+            if !add.is_empty() {
+                summaries[i].extend(add);
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    // --- replay: edges + unclassifiable sites ---------------------------
+    // edge (held-class, acquired-class) → first site (file, line)
+    let mut edges: BTreeMap<(String, String), (String, usize)> = BTreeMap::new();
+    for (i, f) in fns.iter().enumerate() {
+        let file = &tree.files[f.file];
+        let mut depth = 0i64;
+        let mut held: Vec<(String, i64, Option<String>)> = Vec::new();
+        for e in &events[i] {
+            match e {
+                Event::Open => depth += 1,
+                Event::Close => {
+                    depth -= 1;
+                    held.retain(|(_, d, _)| *d <= depth);
+                }
+                Event::Release { binder } => {
+                    held.retain(|(_, _, b)| b.as_deref() != Some(binder.as_str()));
+                }
+                Event::Acquire { off, class, bound, binder } => {
+                    let line = file.line_of(*off);
+                    let Some(class) = class else {
+                        if !file.allows.allowed(line, "lock-order") {
+                            findings.push(Finding {
+                                file: file.rel.clone(),
+                                line,
+                                lint: "locks",
+                                msg: format!(
+                                    "cannot classify this lock acquisition (in `fn {}`); name \
+                                     the receiver after its lock class or add a pragma",
+                                    f.name
+                                ),
+                            });
+                        }
+                        continue;
+                    };
+                    if !file.allows.allowed(line, "lock-order") {
+                        for (h, _, _) in &held {
+                            if h != class {
+                                edges
+                                    .entry((h.clone(), class.clone()))
+                                    .or_insert((file.rel.clone(), line));
+                            }
+                        }
+                    }
+                    if *bound {
+                        held.push((class.clone(), depth, binder.clone()));
+                    }
+                }
+                Event::Call { off, name, mem_scoped } => {
+                    if held.is_empty() {
+                        continue;
+                    }
+                    let line = file.line_of(*off);
+                    if file.allows.allowed(line, "lock-order") {
+                        continue;
+                    }
+                    for j in resolve(name, *mem_scoped) {
+                        for c in summaries[j].iter() {
+                            for (h, _, _) in &held {
+                                if h != c {
+                                    edges
+                                        .entry((h.clone(), c.clone()))
+                                        .or_insert((file.rel.clone(), line));
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // --- order inversions ------------------------------------------------
+    for ((a, b), (file, line)) in &edges {
+        if let (Some(pa), Some(pb)) = (pos_of(a), pos_of(b)) {
+            if pa > pb {
+                findings.push(Finding {
+                    file: file.clone(),
+                    line: *line,
+                    lint: "locks",
+                    msg: format!(
+                        "lock-order inversion: `{b}` acquired while holding `{a}` \
+                         (declared order says {b} -> … -> {a})"
+                    ),
+                });
+            }
+        }
+    }
+
+    // --- cycles over the full class graph --------------------------------
+    if let Some(cycle) = find_cycle(&edges) {
+        let key = (cycle[0].clone(), cycle[1].clone());
+        let (file, line) = edges.get(&key).cloned().unwrap_or(("".into(), 1));
+        findings.push(Finding {
+            file,
+            line,
+            lint: "locks",
+            msg: format!(
+                "lock acquisition cycle: {} (potential deadlock)",
+                cycle.join(" -> ")
+            ),
+        });
+    }
+
+    findings
+}
+
+fn declared_order(tree: &Tree) -> Vec<String> {
+    let Some(modfile) = tree.get("weightstore/mod.rs") else { return Vec::new() };
+    for line in modfile.raw.lines() {
+        let Some(pos) = line.find("lock-order:") else { continue };
+        let rest = &line[pos + "lock-order:".len()..];
+        if !rest.contains("->") {
+            continue;
+        }
+        return rest
+            .split("->")
+            .map(|c| c.trim().trim_matches('`').to_string())
+            .filter(|c| !c.is_empty() && c.bytes().all(is_ident_byte))
+            .collect();
+    }
+    Vec::new()
+}
+
+/// Append every named `fn` with a braced body in `code` to `fns`.
+fn collect_fns(file: usize, code: &str, fns: &mut Vec<FnDef>) {
+    let b = code.as_bytes();
+    let mut from = 0usize;
+    while let Some(pos) = find_token_from(code, "fn", from) {
+        from = pos + 2;
+        let j = skip_ws(b, pos + 2);
+        let Some(name) = ident_starting_at(b, j) else { continue };
+        let mut k = j + name.len();
+        while k < b.len() && b[k] != b'{' && b[k] != b';' {
+            k += 1;
+        }
+        if k >= b.len() || b[k] == b';' {
+            continue;
+        }
+        let Some(close) = matching_brace(b, k) else { continue };
+        fns.push(FnDef {
+            file,
+            name,
+            body: (k, close),
+        });
+    }
+}
+
+/// Walk one function body, emitting events in source order.  `nested`
+/// spans (inner `fn` items) are skipped — their events belong to the
+/// inner function.
+fn scan_body(
+    code: &str,
+    body: (usize, usize),
+    nested: &[(usize, usize)],
+    known_classes: &[String],
+) -> Vec<Event> {
+    let b = code.as_bytes();
+    let for_map = for_bindings(&code[body.0..body.1], known_classes);
+    let mut ev = Vec::new();
+    let mut i = body.0;
+    while i <= body.1 {
+        if let Some(&(_, e)) = nested.iter().find(|(s, _)| *s == i) {
+            i = e + 1;
+            continue;
+        }
+        let c = b[i];
+        if c == b'{' {
+            ev.push(Event::Open);
+            i += 1;
+            continue;
+        }
+        if c == b'}' {
+            ev.push(Event::Close);
+            i += 1;
+            continue;
+        }
+        // `.lock()` / `.read()` / `.write()` with an empty argument list.
+        if c == b'.' {
+            if let Some(end) = match_guard_call(b, i) {
+                let chain = receiver_chain(b, i);
+                let (_, stmt) = statement_before(code, body.0, i);
+                let class = classify(&chain, stmt, &for_map, known_classes);
+                let (bound, binder) = let_binding(stmt);
+                ev.push(Event::Acquire {
+                    off: i + 1,
+                    class,
+                    bound,
+                    binder,
+                });
+                i = end;
+                continue;
+            }
+        }
+        // Identifier: candidate call (or `drop(guard)` release).
+        if is_ident_byte(c) && !c.is_ascii_digit() && (i == 0 || !is_ident_byte(b[i - 1])) {
+            if let Some(name) = ident_starting_at(b, i) {
+                let after = skip_ws(b, i + name.len());
+                // A definition (`fn name(`) is not a call.
+                let is_def = prev_non_ws(b, i)
+                    .and_then(|p| ident_ending_at(b, p))
+                    .is_some_and(|(_, kw)| kw == "fn");
+                if after < b.len() && b[after] == b'(' && !is_def {
+                    if name == "drop" {
+                        let j = skip_ws(b, after + 1);
+                        if let Some(arg) = ident_starting_at(b, j) {
+                            let k = skip_ws(b, j + arg.len());
+                            if k < b.len() && b[k] == b')' {
+                                ev.push(Event::Release { binder: arg });
+                            }
+                        }
+                    } else {
+                        // Method call receiver (for `mem` scoping).
+                        let mem_scoped = prev_non_ws(b, i)
+                            .filter(|&d| b[d] == b'.')
+                            .map(|d| receiver_chain(b, d).iter().any(|id| id == "mem"))
+                            .unwrap_or(false);
+                        ev.push(Event::Call {
+                            off: i,
+                            name: name.clone(),
+                            mem_scoped,
+                        });
+                    }
+                }
+                i += name.len();
+                continue;
+            }
+        }
+        i += 1;
+    }
+    ev
+}
+
+/// If `b[dot]` starts `.lock()`, `.read()` or `.write()` (empty parens),
+/// return the index just past the `)`.
+fn match_guard_call(b: &[u8], dot: usize) -> Option<usize> {
+    let j = dot + 1;
+    let name = ident_starting_at(b, j)?;
+    if name != "lock" && name != "read" && name != "write" {
+        return None;
+    }
+    let k = skip_ws(b, j + name.len());
+    if k >= b.len() || b[k] != b'(' {
+        return None;
+    }
+    let m = skip_ws(b, k + 1);
+    if m >= b.len() || b[m] != b')' {
+        return None;
+    }
+    Some(m + 1)
+}
+
+/// Identifiers of the receiver expression ending just before `dot`,
+/// nearest-first: `self.core.log.lock()` → ["log", "core", "self"].
+/// Bracketed index expressions are skipped (`self.shards[s]` → ["shards",
+/// "self"] — `s` is an index, not a receiver).
+fn receiver_chain(b: &[u8], dot: usize) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut j = match prev_non_ws(b, dot) {
+        Some(j) => j,
+        None => return out,
+    };
+    loop {
+        match b[j] {
+            b']' | b')' => {
+                let (open, close) = if b[j] == b']' { (b'[', b']') } else { (b'(', b')') };
+                let mut depth = 1i64;
+                while j > 0 && depth > 0 {
+                    j -= 1;
+                    if b[j] == close {
+                        depth += 1;
+                    } else if b[j] == open {
+                        depth -= 1;
+                    }
+                }
+                if j == 0 {
+                    return out;
+                }
+                j -= 1;
+            }
+            _ if is_ident_byte(b[j]) => {
+                let Some((start, ident)) = ident_ending_at(b, j) else { return out };
+                out.push(ident);
+                if start == 0 {
+                    return out;
+                }
+                j = start - 1;
+            }
+            b'.' => {
+                let Some(p) = prev_non_ws(b, j) else { return out };
+                j = p;
+            }
+            b':' => {
+                // `::` path separator continues the chain; a lone `:`
+                // (type ascription) ends it.
+                if j > 0 && b[j - 1] == b':' {
+                    let Some(p) = prev_non_ws(b, j - 1) else { return out };
+                    j = p;
+                } else {
+                    return out;
+                }
+            }
+            _ => return out,
+        }
+        // Skip whitespace between chain elements.
+        while j > 0 && b[j].is_ascii_whitespace() {
+            j -= 1;
+        }
+        if b[j].is_ascii_whitespace() {
+            return out;
+        }
+    }
+}
+
+/// The statement text strictly before byte `at`: from the last `;`, `{`
+/// or `}` (within the body) to `at`.
+fn statement_before(code: &str, body_start: usize, at: usize) -> (usize, &str) {
+    let b = code.as_bytes();
+    let mut j = at;
+    while j > body_start {
+        let c = b[j - 1];
+        if c == b';' || c == b'{' || c == b'}' {
+            break;
+        }
+        j -= 1;
+    }
+    (j, &code[j..at])
+}
+
+/// Does the statement bind the guard (`let g = …`)?  Returns the binder
+/// ident (first ident after `let`, skipping `mut`); `let _ = …` does not
+/// bind (the guard drops immediately).
+fn let_binding(stmt: &str) -> (bool, Option<String>) {
+    let Some(pos) = find_token_from(stmt, "let", 0) else { return (false, None) };
+    let b = stmt.as_bytes();
+    let mut j = skip_ws(b, pos + 3);
+    // `let _ = …` drops the value at once; `let _named` holds it.
+    if j < b.len() && b[j] == b'_' && (j + 1 >= b.len() || !is_ident_byte(b[j + 1])) {
+        return (false, None);
+    }
+    if let Some(m) = ident_starting_at(b, j) {
+        if m == "mut" {
+            j = skip_ws(b, j + 3);
+        }
+    }
+    let binder = ident_starting_at(b, j);
+    (true, binder)
+}
+
+/// Map loop binders to lock classes: `for (i, lock) in &self.shards { …`
+/// maps both `i` and `lock` to `shards`.
+fn for_bindings(body: &str, known: &[String]) -> BTreeMap<String, String> {
+    let mut map = BTreeMap::new();
+    let b = body.as_bytes();
+    let mut from = 0usize;
+    while let Some(pos) = find_token_from(body, "for", from) {
+        from = pos + 3;
+        let Some(inpos) = find_token_from(body, "in", pos + 3) else { continue };
+        if inpos > pos + 120 {
+            continue;
+        }
+        let pattern = &body[pos + 3..inpos];
+        let Some(brace) = body[inpos..].find('{').map(|o| inpos + o) else { continue };
+        if brace > inpos + 240 {
+            continue;
+        }
+        let expr = &body[inpos + 2..brace];
+        let Some(class) = known.iter().find(|k| find_token_from(expr, k, 0).is_some()) else {
+            continue;
+        };
+        let pb = pattern.as_bytes();
+        let mut i = 0usize;
+        while i < pb.len() {
+            if is_ident_byte(pb[i]) && !pb[i].is_ascii_digit() && (i == 0 || !is_ident_byte(pb[i - 1]))
+            {
+                if let Some(id) = ident_starting_at(pb, i) {
+                    let l = id.len();
+                    if id != "mut" && id != "ref" {
+                        map.insert(id, class.clone());
+                    }
+                    i += l;
+                    continue;
+                }
+            }
+            i += 1;
+        }
+    }
+    map
+}
+
+/// Classify an acquisition site into a lock class.
+fn classify(
+    chain: &[String],
+    stmt: &str,
+    for_map: &BTreeMap<String, String>,
+    known: &[String],
+) -> Option<String> {
+    // 1. A known class name anywhere in the receiver chain, nearest first.
+    if let Some(c) = chain.iter().find(|id| known.iter().any(|k| k == *id)) {
+        return Some(c.clone());
+    }
+    // 2. The nearest receiver is a loop binder over a known class.
+    if let Some(first) = chain.first() {
+        if let Some(c) = for_map.get(first) {
+            return Some(c.clone());
+        }
+    }
+    // 3. The statement mentions a known class (`let g: … = self.shards
+    //    .iter().map(|l| l.read()…)`).
+    if let Some(k) = known.iter().find(|k| find_token_from(stmt, k, 0).is_some()) {
+        return Some(k.clone());
+    }
+    // 4. Ad-hoc class named after the receiver field (`self.rng` → `rng`).
+    //    Single-letter closure params don't qualify.
+    if let Some(first) = chain.first() {
+        if first != "self" && first.len() >= 2 {
+            return Some(first.clone());
+        }
+    }
+    None
+}
+
+/// First cycle in the class graph, as a node path `a -> b -> … -> a`.
+fn find_cycle(edges: &BTreeMap<(String, String), (String, usize)>) -> Option<Vec<String>> {
+    let mut adj: BTreeMap<&str, Vec<&str>> = BTreeMap::new();
+    let mut nodes: BTreeSet<&str> = BTreeSet::new();
+    for (a, b) in edges.keys() {
+        adj.entry(a).or_default().push(b);
+        nodes.insert(a);
+        nodes.insert(b);
+    }
+    // Iterative DFS with colors: 0 unvisited, 1 on stack, 2 done.
+    let mut color: BTreeMap<&str, u8> = nodes.iter().map(|n| (*n, 0u8)).collect();
+    fn dfs<'a>(
+        n: &'a str,
+        adj: &BTreeMap<&'a str, Vec<&'a str>>,
+        color: &mut BTreeMap<&'a str, u8>,
+        stack: &mut Vec<&'a str>,
+    ) -> Option<Vec<String>> {
+        color.insert(n, 1);
+        stack.push(n);
+        if let Some(nbrs) = adj.get(n) {
+            for &m in nbrs {
+                match color.get(m).copied().unwrap_or(0) {
+                    0 => {
+                        if let Some(c) = dfs(m, adj, color, stack) {
+                            return Some(c);
+                        }
+                    }
+                    1 => {
+                        let start = stack.iter().position(|&x| x == m).unwrap_or(0);
+                        let mut cycle: Vec<String> =
+                            stack[start..].iter().map(|s| s.to_string()).collect();
+                        cycle.push(m.to_string());
+                        return Some(cycle);
+                    }
+                    _ => {}
+                }
+            }
+        }
+        stack.pop();
+        color.insert(n, 2);
+        None
+    }
+    let node_list: Vec<&str> = nodes.into_iter().collect();
+    for n in node_list {
+        if color.get(n).copied() == Some(0) {
+            let mut stack = Vec::new();
+            if let Some(c) = dfs(n, &adj, &mut color, &mut stack) {
+                return Some(c);
+            }
+        }
+    }
+    None
+}

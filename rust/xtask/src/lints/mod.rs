@@ -1,0 +1,35 @@
+//! The lint registry.  Each lint takes the loaded [`Tree`] and returns
+//! findings; `run_all` is what `cargo run -p xtask -- analyze` executes
+//! and what the green-tree test asserts is empty.
+
+pub mod determinism;
+pub mod locks;
+pub mod protocol;
+pub mod traits;
+
+use crate::source::{Finding, Tree};
+
+pub const LINTS: &[(&str, fn(&Tree) -> Vec<Finding>)] = &[
+    ("protocol", protocol::run),
+    ("traits", traits::run),
+    ("determinism", determinism::run),
+    ("locks", locks::run),
+];
+
+pub fn run_all(tree: &Tree) -> Vec<Finding> {
+    let mut findings = tree.load_findings.clone();
+    for (_, lint) in LINTS {
+        findings.extend(lint(tree));
+    }
+    findings.sort();
+    findings.dedup();
+    findings
+}
+
+pub fn run_one(tree: &Tree, name: &str) -> Option<Vec<Finding>> {
+    let (_, lint) = LINTS.iter().find(|(n, _)| *n == name)?;
+    let mut findings = lint(tree);
+    findings.sort();
+    findings.dedup();
+    Some(findings)
+}

@@ -1,0 +1,426 @@
+//! Protocol-surface exhaustiveness lint.
+//!
+//! Cross-checks five surfaces that must agree for every opcode:
+//!   1. the opcode doc table in `weightstore/protocol.rs`'s module header,
+//!   2. the encode side (the opcode byte is written somewhere in code),
+//!   3. the decode side (a `0xNN =>` match arm exists),
+//!   4. the server dispatch and client proxy (`Request::Variant` appears
+//!      in `server.rs` and `client.rs`),
+//!   5. the durable journal: every *mutating* request variant maps to a
+//!      `Record` variant that is both appended inside
+//!      `impl WeightStore for DurableStore` and replayed in `apply_record`.
+//!
+//! A new opcode that misses any surface — including the doc table — fails
+//! CI with a finding pointing at the omission.  `FaultyStore` passthrough
+//! and `MemStore` execution are covered by the trait-wiring lint (every
+//! trait method implemented by every backend), since requests reach the
+//! backends through trait methods, not opcodes.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::source::{find_token_from, matching_brace, Finding, SourceFile, Tree};
+
+/// Request variants that do not mutate store state and therefore need no
+/// journal record.  A variant in neither this list nor [`JOURNAL_MAP`]
+/// produces a finding, which forces the author of a new opcode to decide
+/// its durability story explicitly.
+const READ_ONLY: &[&str] = &[
+    "FetchParams",
+    "FetchParamsSince",
+    "ParamsVersion",
+    "FetchWeights",
+    "FetchWeightsSince",
+    "LoadCursor",
+    "Now",
+    "Stats",
+    "Shutdown",
+];
+
+/// Mutating request variant → journal `Record` variant.
+const JOURNAL_MAP: &[(&str, &str)] = &[
+    ("PushParams", "Params"),
+    ("PushParamsLayers", "ParamsLayers"),
+    ("PushWeights", "Delta"),
+    ("ApplyGrad", "Grad"),
+    ("SaveCursor", "Cursor"),
+    ("DropCursor", "DropCursor"),
+];
+
+pub fn run(tree: &Tree) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let Some(proto) = tree.get("weightstore/protocol.rs") else {
+        findings.push(Finding {
+            file: "weightstore/protocol.rs".into(),
+            line: 1,
+            lint: "protocol",
+            msg: "file not found; protocol lint cannot run".into(),
+        });
+        return findings;
+    };
+
+    let (req_table, resp_table) = parse_doc_table(proto);
+    if req_table.is_empty() || resp_table.is_empty() {
+        findings.push(Finding {
+            file: proto.rel.clone(),
+            line: 1,
+            lint: "protocol",
+            msg: "opcode doc table missing or empty (expected `//! | 0xNN | \\`Name\\` | …` rows)"
+                .into(),
+        });
+        return findings;
+    }
+    let table: BTreeMap<u8, (String, usize)> =
+        req_table.iter().chain(resp_table.iter()).cloned().map(|(op, name, line)| (op, (name, line))).collect();
+
+    // --- opcode literals in code: decode arms vs encode writes ---------
+    let code = &proto.code_sans_tests;
+    let b = code.as_bytes();
+    let mut decode_arms: BTreeSet<u8> = BTreeSet::new();
+    let mut encode_refs: BTreeSet<u8> = BTreeSet::new();
+    for (pos, op) in hex_byte_literals(code) {
+        let line = proto.line_of(pos);
+        if !table.contains_key(&op) && !proto.allows.allowed(line, "opcode-table") {
+            findings.push(Finding {
+                file: proto.rel.clone(),
+                line,
+                lint: "protocol",
+                msg: format!("opcode 0x{op:02X} used in code but absent from the module doc table"),
+            });
+        }
+        // `0xNN =>` is a decode arm; anything else is the encode side.
+        let mut j = pos + 4;
+        while j < b.len() && b[j].is_ascii_whitespace() {
+            j += 1;
+        }
+        if j + 1 < b.len() && b[j] == b'=' && b[j + 1] == b'>' {
+            decode_arms.insert(op);
+        } else {
+            encode_refs.insert(op);
+        }
+    }
+    for (&op, (name, line)) in &table {
+        if !decode_arms.contains(&op) {
+            findings.push(Finding {
+                file: proto.rel.clone(),
+                line: *line,
+                lint: "protocol",
+                msg: format!("opcode 0x{op:02X} `{name}` has no decode arm (`0x{op:02X} =>`)"),
+            });
+        }
+        if !encode_refs.contains(&op) {
+            findings.push(Finding {
+                file: proto.rel.clone(),
+                line: *line,
+                lint: "protocol",
+                msg: format!("opcode 0x{op:02X} `{name}` is never written on the encode side"),
+            });
+        }
+    }
+
+    // --- enum variants ↔ doc table -------------------------------------
+    let req_variants = enum_variants(proto, "Request");
+    let resp_variants = enum_variants(proto, "Response");
+    check_table_matches_enum(&mut findings, proto, "Request", &req_table, &req_variants);
+    check_table_matches_enum(&mut findings, proto, "Response", &resp_table, &resp_variants);
+
+    // --- every Request variant wired through server dispatch + client --
+    for peer in ["weightstore/server.rs", "weightstore/client.rs"] {
+        let Some(file) = tree.get(peer) else {
+            findings.push(Finding {
+                file: peer.into(),
+                line: 1,
+                lint: "protocol",
+                msg: "file not found; cannot check Request variant wiring".into(),
+            });
+            continue;
+        };
+        for (name, line) in &req_variants {
+            let pat = format!("Request::{name}");
+            if find_token_from(&file.code_sans_tests, &pat, 0).is_none() {
+                findings.push(Finding {
+                    file: proto.rel.clone(),
+                    line: *line,
+                    lint: "protocol",
+                    msg: format!("Request::{name} is not handled in {}", file.rel),
+                });
+            }
+        }
+    }
+
+    // --- durable journal coverage for mutating variants ----------------
+    if let Some(durable) = tree.get("weightstore/durable.rs") {
+        let dcode = &durable.code_sans_tests;
+        let journal: BTreeMap<&str, &str> = JOURNAL_MAP.iter().cloned().collect();
+        let impl_span = impl_block_span(dcode, "WeightStore", "DurableStore");
+        let replay_span = fn_span(dcode, "apply_record");
+        for (name, line) in &req_variants {
+            if READ_ONLY.contains(&name.as_str()) {
+                continue;
+            }
+            let Some(record) = journal.get(name.as_str()) else {
+                findings.push(Finding {
+                    file: proto.rel.clone(),
+                    line: *line,
+                    lint: "protocol",
+                    msg: format!(
+                        "Request::{name} is neither in the read-only list nor the journal map; \
+                         a new mutating opcode must declare its journal Record (extend \
+                         xtask/src/lints/protocol.rs JOURNAL_MAP)"
+                    ),
+                });
+                continue;
+            };
+            let pat = format!("Record::{record}");
+            let in_span = |span: Option<(usize, usize)>| {
+                span.is_some_and(|(s, e)| {
+                    find_token_from(dcode, &pat, s).is_some_and(|p| p < e)
+                })
+            };
+            if !in_span(impl_span) {
+                findings.push(Finding {
+                    file: durable.rel.clone(),
+                    line: 1,
+                    lint: "protocol",
+                    msg: format!(
+                        "mutating Request::{name} has no `{pat}` append inside \
+                         `impl WeightStore for DurableStore`"
+                    ),
+                });
+            }
+            if !in_span(replay_span) {
+                findings.push(Finding {
+                    file: durable.rel.clone(),
+                    line: 1,
+                    lint: "protocol",
+                    msg: format!("journal `{pat}` (for Request::{name}) is not replayed in `apply_record`"),
+                });
+            }
+        }
+    } else {
+        findings.push(Finding {
+            file: "weightstore/durable.rs".into(),
+            line: 1,
+            lint: "protocol",
+            msg: "file not found; cannot check journal coverage".into(),
+        });
+    }
+
+    findings
+}
+
+fn check_table_matches_enum(
+    findings: &mut Vec<Finding>,
+    proto: &SourceFile,
+    enum_name: &str,
+    table: &[(u8, String, usize)],
+    variants: &[(String, usize)],
+) {
+    let tnames: BTreeSet<&str> = table.iter().map(|(_, n, _)| n.as_str()).collect();
+    let vnames: BTreeSet<&str> = variants.iter().map(|(n, _)| n.as_str()).collect();
+    for (_, name, line) in table {
+        if !vnames.contains(name.as_str()) {
+            findings.push(Finding {
+                file: proto.rel.clone(),
+                line: *line,
+                lint: "protocol",
+                msg: format!("doc table lists `{name}` but enum {enum_name} has no such variant"),
+            });
+        }
+    }
+    for (name, line) in variants {
+        if !tnames.contains(name.as_str()) {
+            findings.push(Finding {
+                file: proto.rel.clone(),
+                line: *line,
+                lint: "protocol",
+                msg: format!("enum {enum_name} variant `{name}` missing from the module doc table"),
+            });
+        }
+    }
+}
+
+/// Parse the module-header opcode table.  Rows pair a request and a
+/// response column:
+///
+/// ```text
+/// //! | 0x01 | `PushParams` | 0x80 | `Ok` |
+/// ```
+///
+/// Requests (opcode < 0x80) and responses (>= 0x80) are returned
+/// separately; header/separator rows and empty cells parse to nothing.
+#[allow(clippy::type_complexity)]
+fn parse_doc_table(proto: &SourceFile) -> (Vec<(u8, String, usize)>, Vec<(u8, String, usize)>) {
+    let mut req = Vec::new();
+    let mut resp = Vec::new();
+    for (idx, line) in proto.raw.lines().enumerate() {
+        let t = line.trim_start();
+        if !t.starts_with("//!") {
+            continue;
+        }
+        let cells: Vec<&str> = t.trim_start_matches("//!").split('|').collect();
+        for pair in [(1usize, 2usize), (3, 4)] {
+            let (ci, cn) = pair;
+            if cells.len() <= cn {
+                continue;
+            }
+            let Some(op) = parse_hex_byte(cells[ci].trim()) else { continue };
+            let name = cells[cn].trim().trim_matches('`').to_string();
+            if name.is_empty() || !name.chars().next().is_some_and(|c| c.is_ascii_uppercase()) {
+                continue;
+            }
+            let row = (op, name, idx + 1);
+            if op < 0x80 {
+                req.push(row);
+            } else {
+                resp.push(row);
+            }
+        }
+    }
+    (req, resp)
+}
+
+fn parse_hex_byte(s: &str) -> Option<u8> {
+    let hex = s.strip_prefix("0x").or_else(|| s.strip_prefix("0X"))?;
+    if hex.len() != 2 {
+        return None;
+    }
+    u8::from_str_radix(hex, 16).ok()
+}
+
+/// All bare `0xNN` (exactly two hex digit, no suffix) literals in
+/// scrubbed code.  Suffixed literals like `0x87u8` are intentionally
+/// excluded: opcode bytes in this codebase are written bare, and test
+/// fixtures deliberately use suffixed forms for non-opcode bytes.
+fn hex_byte_literals(code: &str) -> Vec<(usize, u8)> {
+    let b = code.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i + 3 < b.len() {
+        let boundary = i == 0 || !crate::source::is_ident_byte(b[i - 1]);
+        if boundary && b[i] == b'0' && b[i + 1] == b'x' {
+            let d = &b[i + 2..];
+            if d.len() >= 2 && d[0].is_ascii_hexdigit() && d[1].is_ascii_hexdigit() {
+                let more = d.len() > 2 && crate::source::is_ident_byte(d[2]);
+                if !more {
+                    if let Ok(v) = u8::from_str_radix(std::str::from_utf8(&d[..2]).unwrap(), 16) {
+                        out.push((i, v));
+                    }
+                }
+                i += 4;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Variant names (with lines) of `enum <name>` in scrubbed, test-stripped
+/// code: identifiers at brace depth 1 / paren depth 0 whose previous
+/// non-ws byte is `{` or `,`.
+pub fn enum_variants(file: &SourceFile, name: &str) -> Vec<(String, usize)> {
+    let code = &file.code_sans_tests;
+    let b = code.as_bytes();
+    let Some(kw) = find_enum_decl(code, name) else { return Vec::new() };
+    let Some(open) = code[kw..].find('{').map(|o| kw + o) else { return Vec::new() };
+    let Some(close) = matching_brace(b, open) else { return Vec::new() };
+    let mut out = Vec::new();
+    let mut brace = 0i64;
+    let mut paren = 0i64;
+    let mut prev_sig = b'{'; // last significant byte seen
+    let mut i = open + 1;
+    while i < close {
+        let c = b[i];
+        match c {
+            b'{' => brace += 1,
+            b'}' => brace -= 1,
+            b'(' => paren += 1,
+            b')' => paren -= 1,
+            _ => {}
+        }
+        if brace == 0 && paren == 0 && crate::source::is_ident_byte(c) && !c.is_ascii_digit() {
+            if prev_sig == b'{' || prev_sig == b',' {
+                if let Some(ident) = crate::source::ident_starting_at(b, i) {
+                    if ident.chars().next().is_some_and(|ch| ch.is_ascii_uppercase()) {
+                        out.push((ident.clone(), file.line_of(i)));
+                    }
+                    prev_sig = b'?'; // consume: fields after `Name` don't match
+                    i += ident.len();
+                    continue;
+                }
+            }
+        }
+        if !c.is_ascii_whitespace() {
+            prev_sig = c;
+            // A full ident counts as one significant token; skip it so its
+            // tail bytes don't update prev_sig byte-by-byte.
+            if crate::source::is_ident_byte(c) {
+                while i + 1 < close && crate::source::is_ident_byte(b[i + 1]) {
+                    i += 1;
+                }
+                prev_sig = b'?';
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+fn find_enum_decl(code: &str, name: &str) -> Option<usize> {
+    let mut from = 0usize;
+    while let Some(pos) = find_token_from(code, "enum", from) {
+        from = pos + 4;
+        let b = code.as_bytes();
+        let j = crate::source::skip_ws(b, pos + 4);
+        if let Some(ident) = crate::source::ident_starting_at(b, j) {
+            if ident == name {
+                return Some(pos);
+            }
+        }
+    }
+    None
+}
+
+/// Byte span (start, end) of the body of `impl <trait_name> for <type_name>`.
+pub fn impl_block_span(code: &str, trait_name: &str, type_name: &str) -> Option<(usize, usize)> {
+    let b = code.as_bytes();
+    let mut from = 0usize;
+    while let Some(pos) = find_token_from(code, "impl", from) {
+        from = pos + 4;
+        let head_end = code[pos..].find('{')? + pos;
+        let head = &code[pos..head_end];
+        if find_token_from(head, trait_name, 0).is_some()
+            && find_token_from(head, "for", 0).is_some()
+            && find_token_from(head, type_name, 0).is_some()
+        {
+            let close = matching_brace(b, head_end)?;
+            return Some((head_end, close));
+        }
+    }
+    None
+}
+
+/// Byte span of the body of `fn <name>`.
+pub fn fn_span(code: &str, name: &str) -> Option<(usize, usize)> {
+    let b = code.as_bytes();
+    let mut from = 0usize;
+    while let Some(pos) = find_token_from(code, "fn", from) {
+        from = pos + 2;
+        let j = crate::source::skip_ws(b, pos + 2);
+        let Some(ident) = crate::source::ident_starting_at(b, j) else { continue };
+        if ident != name {
+            continue;
+        }
+        // Scan to the body `{` (or `;` for a bare declaration).
+        let mut k = j + ident.len();
+        while k < b.len() && b[k] != b'{' && b[k] != b';' {
+            k += 1;
+        }
+        if k >= b.len() || b[k] == b';' {
+            continue;
+        }
+        let close = matching_brace(b, k)?;
+        return Some((k, close));
+    }
+    None
+}

@@ -1,0 +1,190 @@
+//! Trait-wiring completeness lint.
+//!
+//! The `WeightStore` trait is the store's entire behavioural surface:
+//! every backend (`MemStore`, `DurableStore`, `FaultyStore`, the TCP
+//! `Client`) must implement every method, and the TCP server must
+//! dispatch every method (`store.<method>(…)` in `server.rs`).  A method
+//! added to the trait without touching all five places compiles fine
+//! today — trait methods have no defaults here, but a forgotten server
+//! arm or a decorator that silently diverges is exactly the class of bug
+//! that corrupts the paper's unbiasedness contract.  This lint makes the
+//! omission a CI failure with a pointable span.
+
+use crate::source::{find_token_from, matching_brace, Finding, SourceFile, Tree};
+
+/// Backends that must implement the full trait.  Discovered impls outside
+/// this list are linted too (completeness is universal); this list only
+/// adds "the impl must exist somewhere" on top.
+const REQUIRED_IMPLS: &[&str] = &["MemStore", "DurableStore", "FaultyStore", "Client"];
+
+pub fn run(tree: &Tree) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let Some(modfile) = tree.get("weightstore/mod.rs") else {
+        findings.push(Finding {
+            file: "weightstore/mod.rs".into(),
+            line: 1,
+            lint: "traits",
+            msg: "file not found; trait lint cannot run".into(),
+        });
+        return findings;
+    };
+    let methods = trait_methods(modfile, "WeightStore");
+    if methods.is_empty() {
+        findings.push(Finding {
+            file: modfile.rel.clone(),
+            line: 1,
+            lint: "traits",
+            msg: "trait WeightStore not found or has no methods".into(),
+        });
+        return findings;
+    }
+
+    // Discover every `impl WeightStore for <Type>` in the tree.
+    let mut impls: Vec<(String, &SourceFile, usize)> = Vec::new(); // (type, file, line)
+    for file in &tree.files {
+        for (ty, line, span) in trait_impls(file, "WeightStore") {
+            let body = &file.code_sans_tests[span.0..span.1];
+            for (m, _) in &methods {
+                if !has_fn(body, m) {
+                    findings.push(Finding {
+                        file: file.rel.clone(),
+                        line,
+                        lint: "traits",
+                        msg: format!("impl WeightStore for {ty} is missing `fn {m}`"),
+                    });
+                }
+            }
+            impls.push((ty, file, line));
+        }
+    }
+    for required in REQUIRED_IMPLS {
+        if !impls.iter().any(|(ty, _, _)| ty == required) {
+            findings.push(Finding {
+                file: modfile.rel.clone(),
+                line: 1,
+                lint: "traits",
+                msg: format!("no `impl WeightStore for {required}` found anywhere in the tree"),
+            });
+        }
+    }
+
+    // Server dispatch: every trait method must be called on the store.
+    match tree.get("weightstore/server.rs") {
+        Some(server) => {
+            for (m, decl_line) in &methods {
+                if !has_store_call(&server.code_sans_tests, m) {
+                    findings.push(Finding {
+                        file: modfile.rel.clone(),
+                        line: *decl_line,
+                        lint: "traits",
+                        msg: format!(
+                            "trait method `{m}` has no server dispatch (`store.{m}(…)` in {})",
+                            server.rel
+                        ),
+                    });
+                }
+            }
+        }
+        None => findings.push(Finding {
+            file: "weightstore/server.rs".into(),
+            line: 1,
+            lint: "traits",
+            msg: "file not found; cannot check server dispatch".into(),
+        }),
+    }
+
+    findings
+}
+
+/// Method names (with declaration lines) of `trait <name>`.
+pub fn trait_methods(file: &SourceFile, name: &str) -> Vec<(String, usize)> {
+    let code = &file.code_sans_tests;
+    let b = code.as_bytes();
+    let mut from = 0usize;
+    while let Some(pos) = find_token_from(code, "trait", from) {
+        from = pos + 5;
+        let j = crate::source::skip_ws(b, pos + 5);
+        let Some(ident) = crate::source::ident_starting_at(b, j) else { continue };
+        if ident != name {
+            continue;
+        }
+        let Some(open) = code[pos..].find('{').map(|o| pos + o) else { return Vec::new() };
+        let Some(close) = matching_brace(b, open) else { return Vec::new() };
+        let mut out = Vec::new();
+        let mut k = open;
+        while let Some(fnpos) = find_token_from(code, "fn", k) {
+            if fnpos >= close {
+                break;
+            }
+            k = fnpos + 2;
+            let nj = crate::source::skip_ws(b, fnpos + 2);
+            if let Some(m) = crate::source::ident_starting_at(b, nj) {
+                out.push((m, file.line_of(fnpos)));
+            }
+        }
+        return out;
+    }
+    Vec::new()
+}
+
+/// Every `impl <trait> for <Type>` in a file: (type name, line, body span).
+fn trait_impls(file: &SourceFile, trait_name: &str) -> Vec<(String, usize, (usize, usize))> {
+    let code = &file.code_sans_tests;
+    let b = code.as_bytes();
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(pos) = find_token_from(code, "impl", from) {
+        from = pos + 4;
+        let Some(open) = code[pos..].find('{').map(|o| pos + o) else { break };
+        let head = &code[pos..open];
+        let Some(tpos) = find_token_from(head, trait_name, 0) else { continue };
+        let Some(forpos) = find_token_from(head, "for", tpos) else { continue };
+        let hb = head.as_bytes();
+        let tj = crate::source::skip_ws(hb, forpos + 3);
+        let Some(ty) = crate::source::ident_starting_at(hb, tj) else { continue };
+        let Some(close) = matching_brace(b, open) else { continue };
+        out.push((ty, file.line_of(pos), (open, close)));
+        from = close;
+    }
+    out
+}
+
+/// Does `body` define `fn <name>`?
+fn has_fn(body: &str, name: &str) -> bool {
+    let b = body.as_bytes();
+    let mut from = 0usize;
+    while let Some(pos) = find_token_from(body, "fn", from) {
+        from = pos + 2;
+        let j = crate::source::skip_ws(b, pos + 2);
+        if crate::source::ident_starting_at(b, j).is_some_and(|m| m == name) {
+            return true;
+        }
+    }
+    false
+}
+
+/// Does the code contain `store.<method>(` (whitespace-tolerant)?
+fn has_store_call(code: &str, method: &str) -> bool {
+    let b = code.as_bytes();
+    let mut from = 0usize;
+    while let Some(pos) = find_token_from(code, method, from) {
+        from = pos + 1;
+        // Forward: next non-ws must open the call.
+        let j = crate::source::skip_ws(b, pos + method.len());
+        if j >= b.len() || b[j] != b'(' {
+            continue;
+        }
+        // Backward: `.`, then the receiver ident `store`.
+        let Some(dot) = crate::source::prev_non_ws(b, pos) else { continue };
+        if b[dot] != b'.' {
+            continue;
+        }
+        let Some(recv_end) = crate::source::prev_non_ws(b, dot) else { continue };
+        if let Some((_, recv)) = crate::source::ident_ending_at(b, recv_end) {
+            if recv == "store" {
+                return true;
+            }
+        }
+    }
+    false
+}

@@ -1,0 +1,81 @@
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use xtask::lints;
+use xtask::Tree;
+
+const USAGE: &str = "\
+usage: cargo run -p xtask -- analyze [--root <dir>] [--lint <name>]
+
+  analyze            run every lint over the source tree (default root:
+                     ./src or ./rust/src, whichever exists)
+  --root <dir>       analyze a different tree (used by the fixture tests)
+  --lint <name>      run a single lint: protocol | traits | determinism | locks
+";
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut cmd = None;
+    let mut root: Option<PathBuf> = None;
+    let mut lint: Option<String> = None;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "analyze" => cmd = Some("analyze"),
+            "--root" => root = it.next().map(PathBuf::from),
+            "--lint" => lint = it.next().cloned(),
+            "-h" | "--help" => {
+                print!("{USAGE}");
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("unknown argument `{other}`\n{USAGE}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    if cmd != Some("analyze") {
+        eprint!("{USAGE}");
+        return ExitCode::from(2);
+    }
+    let root = root.unwrap_or_else(|| {
+        for cand in ["src", "rust/src", "../src"] {
+            let p = PathBuf::from(cand);
+            if p.join("lib.rs").exists() {
+                return p;
+            }
+        }
+        PathBuf::from("src")
+    });
+    let tree = match Tree::load(&root) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("error: cannot load source tree at {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    let findings = match &lint {
+        Some(name) => match lints::run_one(&tree, name) {
+            Some(f) => f,
+            None => {
+                eprintln!("unknown lint `{name}`\n{USAGE}");
+                return ExitCode::from(2);
+            }
+        },
+        None => lints::run_all(&tree),
+    };
+    for f in &findings {
+        println!("{f}");
+    }
+    if findings.is_empty() {
+        println!(
+            "analyze: {} files, {} lints, 0 findings",
+            tree.files.len(),
+            lint.map_or(lints::LINTS.len(), |_| 1)
+        );
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("analyze: {} finding(s)", findings.len());
+        ExitCode::FAILURE
+    }
+}

@@ -1,0 +1,527 @@
+//! Source model for the analyzer: file loading, a line-preserving
+//! comment/string scrubber, allowlist pragmas, and small token utilities.
+//!
+//! The analyzer deliberately has no dependencies (no `syn` — builds must
+//! work offline), so it operates on scrubbed text: comments, string
+//! literals and char literals are blanked with spaces (newlines kept), so
+//! byte offsets and line numbers in the scrubbed text match the original
+//! file exactly.  Every lint that looks for tokens (`0x04`, `.lock()`,
+//! `Instant::now`) runs over scrubbed text and therefore cannot be fooled
+//! by doc comments or log strings; lints that read the opcode doc table
+//! use the raw text.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// One `.rs` file under the analyzed source root.
+pub struct SourceFile {
+    /// Path relative to the source root, with `/` separators.
+    pub rel: String,
+    /// Original file contents.
+    pub raw: String,
+    /// Contents with comments/strings/chars blanked; same length and line
+    /// structure as `raw`.
+    pub code: String,
+    /// `code` with `#[cfg(test)] mod … { … }` bodies additionally blanked.
+    /// Conformance lints (protocol/trait/locks) use this so fixture bytes
+    /// inside unit tests (e.g. a bogus `0xEE` opcode) are not mistaken for
+    /// production protocol surface.  The determinism lint scans `code`:
+    /// tests are held to the same wall-clock rules as the library.
+    pub code_sans_tests: String,
+    /// Byte offset of the start of each line (for offset → line mapping).
+    line_starts: Vec<usize>,
+    /// Allowlist pragmas parsed from comments (see [`Allows`]).
+    pub allows: Allows,
+}
+
+/// Parsed `analyze: allow…` pragmas for one file.
+///
+/// Syntax (inside any comment):
+///   `// analyze: allow(key[, key…]): reason`          — allows the pragma's
+///       own line and the line directly below it (so a full-line comment
+///       immediately above the offending line covers it).
+///   `// analyze: allow-module(key[, key…]): reason`   — allows the whole file.
+///
+/// A non-empty reason is mandatory; a pragma without one is itself a
+/// finding (reported by the loader).
+#[derive(Default)]
+pub struct Allows {
+    line: BTreeMap<usize, BTreeSet<String>>,
+    module: BTreeSet<String>,
+}
+
+impl Allows {
+    /// Is `key` allowed on 1-based line `line`?
+    pub fn allowed(&self, line: usize, key: &str) -> bool {
+        if self.module.contains(key) {
+            return true;
+        }
+        let hit = |l: usize| self.line.get(&l).is_some_and(|s| s.contains(key));
+        hit(line) || (line > 1 && hit(line - 1))
+    }
+}
+
+/// A single lint finding, pointable to `file:line`.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub lint: &'static str,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.lint, self.msg)
+    }
+}
+
+/// All `.rs` files under one source root.
+pub struct Tree {
+    pub root: PathBuf,
+    pub files: Vec<SourceFile>,
+    /// Findings produced while loading (malformed pragmas).
+    pub load_findings: Vec<Finding>,
+}
+
+impl Tree {
+    pub fn load(root: &Path) -> io::Result<Tree> {
+        let mut paths = Vec::new();
+        collect_rs(root, &mut paths)?;
+        paths.sort();
+        let mut files = Vec::new();
+        let mut load_findings = Vec::new();
+        for p in paths {
+            let raw = fs::read_to_string(&p)?;
+            let rel = p
+                .strip_prefix(root)
+                .unwrap_or(&p)
+                .to_string_lossy()
+                .replace('\\', "/");
+            files.push(SourceFile::parse(rel, raw, &mut load_findings));
+        }
+        Ok(Tree {
+            root: root.to_path_buf(),
+            files,
+            load_findings,
+        })
+    }
+
+    pub fn get(&self, rel_suffix: &str) -> Option<&SourceFile> {
+        self.files
+            .iter()
+            .find(|f| f.rel == rel_suffix || f.rel.ends_with(rel_suffix))
+    }
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+impl SourceFile {
+    pub fn parse(rel: String, raw: String, findings: &mut Vec<Finding>) -> SourceFile {
+        let allows = parse_pragmas(&rel, &raw, findings);
+        let code = scrub(&raw);
+        let code_sans_tests = strip_test_mods(&code);
+        let line_starts = line_starts(&raw);
+        SourceFile {
+            rel,
+            raw,
+            code,
+            code_sans_tests,
+            line_starts,
+            allows,
+        }
+    }
+
+    /// 1-based line number of a byte offset.
+    pub fn line_of(&self, offset: usize) -> usize {
+        match self.line_starts.binary_search(&offset) {
+            Ok(i) => i + 1,
+            Err(i) => i,
+        }
+    }
+}
+
+fn line_starts(s: &str) -> Vec<usize> {
+    let mut v = vec![0usize];
+    for (i, b) in s.bytes().enumerate() {
+        if b == b'\n' {
+            v.push(i + 1);
+        }
+    }
+    v
+}
+
+fn parse_pragmas(rel: &str, raw: &str, findings: &mut Vec<Finding>) -> Allows {
+    let mut allows = Allows::default();
+    for (idx, line) in raw.lines().enumerate() {
+        let lineno = idx + 1;
+        for (marker, module_wide) in [("analyze: allow-module(", true), ("analyze: allow(", false)]
+        {
+            let Some(pos) = line.find(marker) else { continue };
+            // Pragmas must live in comments; anything else is someone
+            // writing the literal string, which we ignore.
+            if !line[..pos].contains("//") {
+                continue;
+            }
+            let rest = &line[pos + marker.len()..];
+            let Some(close) = rest.find(')') else {
+                findings.push(Finding {
+                    file: rel.to_string(),
+                    line: lineno,
+                    lint: "pragma",
+                    msg: "malformed allow pragma: missing ')'".into(),
+                });
+                continue;
+            };
+            let keys: Vec<String> = rest[..close]
+                .split(',')
+                .map(|k| k.trim().to_string())
+                .filter(|k| !k.is_empty())
+                .collect();
+            let after = rest[close + 1..].trim_start();
+            let reason_ok = after.starts_with(':') && !after[1..].trim().is_empty();
+            if keys.is_empty() || !reason_ok {
+                findings.push(Finding {
+                    file: rel.to_string(),
+                    line: lineno,
+                    lint: "pragma",
+                    msg: "malformed allow pragma: need `allow(key): non-empty reason`".into(),
+                });
+                continue;
+            }
+            for k in keys {
+                if module_wide {
+                    allows.module.insert(k);
+                } else {
+                    allows.line.entry(lineno).or_default().insert(k);
+                }
+            }
+        }
+    }
+    allows
+}
+
+/// Blank comments, string literals and char literals with spaces,
+/// preserving newlines and byte length.
+pub fn scrub(src: &str) -> String {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut out = b.to_vec();
+    let blank = |out: &mut Vec<u8>, from: usize, to: usize| {
+        for x in out.iter_mut().take(to).skip(from) {
+            if *x != b'\n' {
+                *x = b' ';
+            }
+        }
+    };
+    let prev_is_ident = |i: usize| i > 0 && is_ident_byte(b[i - 1]);
+    let mut i = 0usize;
+    while i < n {
+        let c = b[i];
+        // Line comment (also covers `///` and `//!`).
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            let start = i;
+            while i < n && b[i] != b'\n' {
+                i += 1;
+            }
+            blank(&mut out, start, i);
+            continue;
+        }
+        // Block comment, nested.
+        if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let start = i;
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            blank(&mut out, start, i);
+            continue;
+        }
+        // Raw strings r"…", r#"…"#, br"…" (and raw identifiers r#foo,
+        // which fall through to plain code).
+        if (c == b'r' || c == b'b') && !prev_is_ident(i) {
+            let mut j = i;
+            if b[j] == b'b' && j + 1 < n && b[j + 1] == b'r' {
+                j += 1;
+            }
+            if b[j] == b'r' {
+                let mut k = j + 1;
+                let mut hashes = 0usize;
+                while k < n && b[k] == b'#' {
+                    hashes += 1;
+                    k += 1;
+                }
+                if k < n && b[k] == b'"' {
+                    let start = i;
+                    i = k + 1;
+                    'raw: while i < n {
+                        if b[i] == b'"' {
+                            let mut h = 0usize;
+                            while h < hashes && i + 1 + h < n && b[i + 1 + h] == b'#' {
+                                h += 1;
+                            }
+                            if h == hashes {
+                                i += 1 + hashes;
+                                break 'raw;
+                            }
+                        }
+                        i += 1;
+                    }
+                    blank(&mut out, start, i);
+                    continue;
+                }
+            }
+        }
+        // Byte string b"…" and plain "…".
+        if c == b'"' || (c == b'b' && !prev_is_ident(i) && i + 1 < n && b[i + 1] == b'"') {
+            let start = i;
+            i += if c == b'b' { 2 } else { 1 };
+            while i < n {
+                if b[i] == b'\\' {
+                    i += 2;
+                } else if b[i] == b'"' {
+                    i += 1;
+                    break;
+                } else {
+                    i += 1;
+                }
+            }
+            blank(&mut out, start, i.min(n));
+            continue;
+        }
+        // Char literal b'…' / '…' vs lifetime 'a.
+        if c == b'\'' || (c == b'b' && !prev_is_ident(i) && i + 1 < n && b[i + 1] == b'\'') {
+            let q = if c == b'b' { i + 1 } else { i };
+            if q + 1 < n {
+                let nx = b[q + 1];
+                let is_char = if nx == b'\\' {
+                    true
+                } else if nx < 0x80 {
+                    // `'x'` (any single ASCII char incl. punctuation) is a
+                    // char literal iff the very next byte closes it;
+                    // otherwise it's a lifetime/label like `'a`.
+                    q + 2 < n && b[q + 2] == b'\''
+                } else {
+                    // Multi-byte scalar: can't be a lifetime.
+                    true
+                };
+                if is_char {
+                    let start = i;
+                    i = q + 1;
+                    while i < n {
+                        if b[i] == b'\\' {
+                            i += 2;
+                        } else if b[i] == b'\'' {
+                            i += 1;
+                            break;
+                        } else {
+                            i += 1;
+                        }
+                    }
+                    blank(&mut out, start, i.min(n));
+                    continue;
+                }
+            }
+        }
+        i += 1;
+    }
+    // Blanking is ASCII-space only, so the result is valid UTF-8 wherever
+    // the input was; fall back to lossy for robustness.
+    String::from_utf8(out).unwrap_or_else(|e| String::from_utf8_lossy(e.as_bytes()).into_owned())
+}
+
+/// Blank the bodies of `#[cfg(test)] mod … { … }` items in scrubbed code.
+pub fn strip_test_mods(code: &str) -> String {
+    let mut out = code.as_bytes().to_vec();
+    let mut search_from = 0usize;
+    while let Some(pos) = find_token_from(code, "cfg", search_from) {
+        search_from = pos + 3;
+        // Require the `#[cfg(test)]` shape around the token.
+        let rest = &code[pos..];
+        if !rest.starts_with("cfg(test)") {
+            continue;
+        }
+        // Find the following `mod` token, then its opening brace.
+        let Some(mod_pos) = find_token_from(code, "mod", pos) else { continue };
+        if mod_pos > pos + 200 {
+            continue; // cfg(test) on something other than a nearby mod
+        }
+        let Some(open) = code[mod_pos..].find('{').map(|o| mod_pos + o) else { continue };
+        let Some(close) = matching_brace(code.as_bytes(), open) else { continue };
+        for x in out.iter_mut().take(close).skip(open + 1) {
+            if *x != b'\n' {
+                *x = b' ';
+            }
+        }
+        search_from = close;
+    }
+    String::from_utf8(out).unwrap_or_else(|e| String::from_utf8_lossy(e.as_bytes()).into_owned())
+}
+
+/// Index of the `}` matching the `{` at `open` (input must be scrubbed).
+pub fn matching_brace(b: &[u8], open: usize) -> Option<usize> {
+    debug_assert_eq!(b[open], b'{');
+    let mut depth = 0i64;
+    for (i, &c) in b.iter().enumerate().skip(open) {
+        if c == b'{' {
+            depth += 1;
+        } else if c == b'}' {
+            depth -= 1;
+            if depth == 0 {
+                return Some(i);
+            }
+        }
+    }
+    None
+}
+
+pub fn is_ident_byte(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Find `tok` at an identifier boundary, starting at byte `from`.
+pub fn find_token_from(code: &str, tok: &str, from: usize) -> Option<usize> {
+    let b = code.as_bytes();
+    let t = tok.as_bytes();
+    let mut i = from;
+    while let Some(off) = code.get(i..)?.find(tok) {
+        let pos = i + off;
+        let pre_ok = pos == 0 || !is_ident_byte(b[pos - 1]);
+        let post = pos + t.len();
+        let post_ok = post >= b.len() || !is_ident_byte(b[post]);
+        // For tokens that themselves start/end with non-ident bytes
+        // (e.g. `Instant::now`), the boundary checks above still apply to
+        // the first/last byte, which is what we want.
+        if pre_ok && post_ok {
+            return Some(pos);
+        }
+        i = pos + 1;
+    }
+    None
+}
+
+/// All boundary-correct occurrences of `tok`.
+pub fn find_all_tokens(code: &str, tok: &str) -> Vec<usize> {
+    let mut v = Vec::new();
+    let mut from = 0usize;
+    while let Some(pos) = find_token_from(code, tok, from) {
+        v.push(pos);
+        from = pos + 1;
+    }
+    v
+}
+
+/// Skip ASCII whitespace forward from `i`, returning the next index.
+pub fn skip_ws(b: &[u8], mut i: usize) -> usize {
+    while i < b.len() && b[i].is_ascii_whitespace() {
+        i += 1;
+    }
+    i
+}
+
+/// Skip ASCII whitespace backward from `i` (exclusive), returning the index
+/// of the last non-ws byte, or None if none.
+pub fn prev_non_ws(b: &[u8], i: usize) -> Option<usize> {
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        if !b[j].is_ascii_whitespace() {
+            return Some(j);
+        }
+    }
+    None
+}
+
+/// The maximal identifier ending at byte `end` (inclusive), if any.
+pub fn ident_ending_at(b: &[u8], end: usize) -> Option<(usize, String)> {
+    if !is_ident_byte(b[end]) {
+        return None;
+    }
+    let mut start = end;
+    while start > 0 && is_ident_byte(b[start - 1]) {
+        start -= 1;
+    }
+    Some((start, String::from_utf8_lossy(&b[start..=end]).into_owned()))
+}
+
+/// The maximal identifier starting at byte `start`, if any.
+pub fn ident_starting_at(b: &[u8], start: usize) -> Option<String> {
+    if start >= b.len() || !is_ident_byte(b[start]) || b[start].is_ascii_digit() {
+        return None;
+    }
+    let mut end = start;
+    while end < b.len() && is_ident_byte(b[end]) {
+        end += 1;
+    }
+    Some(String::from_utf8_lossy(&b[start..end]).into_owned())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scrub_blanks_comments_and_strings() {
+        let src = "let x = \"0x04\"; // 0x05\nlet y = 0x06; /* 0x07 */ let c = '\\n';";
+        let s = scrub(src);
+        assert_eq!(s.len(), src.len());
+        assert!(!s.contains("0x04"));
+        assert!(!s.contains("0x05"));
+        assert!(s.contains("0x06"));
+        assert!(!s.contains("0x07"));
+        assert_eq!(s.matches('\n').count(), src.matches('\n').count());
+    }
+
+    #[test]
+    fn scrub_handles_raw_strings_and_lifetimes() {
+        let src = "fn f<'a>(x: &'a str) { let r = r#\"lock()\"#; let q = 'q'; }";
+        let s = scrub(src);
+        assert!(!s.contains("lock()"));
+        assert!(s.contains("fn f<'a>"));
+        assert!(!s.contains("'q'"));
+    }
+
+    #[test]
+    fn strip_test_mods_blanks_bodies() {
+        let src = "fn real() { a(); }\n#[cfg(test)]\nmod tests {\n    fn t() { bad(); }\n}\n";
+        let s = strip_test_mods(&scrub(src));
+        assert!(s.contains("real"));
+        assert!(!s.contains("bad"));
+    }
+
+    #[test]
+    fn pragma_parsing() {
+        let mut f = Vec::new();
+        let sf = SourceFile::parse(
+            "x.rs".into(),
+            "// analyze: allow(wallclock): timer is wall-time by design\nlet t = 1;\n// analyze: allow(oops)\n".into(),
+            &mut f,
+        );
+        assert!(sf.allows.allowed(1, "wallclock"));
+        assert!(sf.allows.allowed(2, "wallclock"));
+        assert!(!sf.allows.allowed(3, "wallclock"));
+        assert_eq!(f.len(), 1, "missing reason is a finding: {f:?}");
+    }
+}

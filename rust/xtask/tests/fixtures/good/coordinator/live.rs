@@ -1,0 +1,8 @@
+//! Mini live driver (analyzer fixture): wall-clock use sanctioned by a
+//! line pragma — exercises the allowlist path of the determinism lint.
+
+pub fn deadline_passed() -> bool {
+    // analyze: allow(wallclock): live mode genuinely waits on wall time
+    let start = std::time::Instant::now();
+    start.elapsed().as_secs() > 60
+}

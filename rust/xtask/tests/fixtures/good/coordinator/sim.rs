@@ -1,0 +1,10 @@
+//! Mini sim driver (analyzer fixture): virtual time only, fully
+//! deterministic — the determinism lint must stay green here.
+
+pub fn run(steps: u64) -> u64 {
+    let mut t = 0u64;
+    for _ in 0..steps {
+        t = t.wrapping_add(1);
+    }
+    t
+}

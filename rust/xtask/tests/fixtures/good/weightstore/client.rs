@@ -1,0 +1,37 @@
+//! Mini TCP client proxy (analyzer fixture).
+
+use std::sync::Mutex;
+
+use super::protocol::Request;
+use super::WeightStore;
+
+pub struct Client {
+    stream: Mutex<Vec<u8>>,
+}
+
+impl Client {
+    pub fn shutdown(&self) {
+        let mut stream = self.stream.lock().unwrap();
+        stream.extend_from_slice(&Request::Shutdown.encode());
+    }
+}
+
+impl WeightStore for Client {
+    fn push_params(&self, version: u64, bytes: Vec<u8>) -> Result<(), String> {
+        let mut stream = self.stream.lock().unwrap();
+        stream.extend_from_slice(&Request::PushParams { version, bytes }.encode());
+        Ok(())
+    }
+
+    fn fetch_params(&self, than: u64) -> Result<Vec<u8>, String> {
+        let mut stream = self.stream.lock().unwrap();
+        stream.extend_from_slice(&Request::FetchParams { than }.encode());
+        Ok(Vec::new())
+    }
+
+    fn now(&self) -> Result<u64, String> {
+        let mut stream = self.stream.lock().unwrap();
+        stream.extend_from_slice(&Request::Now.encode());
+        Ok(0)
+    }
+}

@@ -1,0 +1,49 @@
+//! Mini durable store (analyzer fixture).
+
+use std::sync::Mutex;
+
+use super::{MemStore, WeightStore};
+
+pub enum Record {
+    Params(Vec<u8>),
+}
+
+pub struct LogState {
+    pub frames: Vec<Vec<u8>>,
+}
+
+pub struct DurableStore {
+    mem: MemStore,
+    log: Mutex<LogState>,
+}
+
+impl DurableStore {
+    fn append(&self, log: &mut LogState, rec: &Record) {
+        match rec {
+            Record::Params(b) => log.frames.push(b.to_vec()),
+        }
+    }
+
+    fn apply_record(&self, rec: &Record) -> Result<(), String> {
+        match rec {
+            Record::Params(b) => self.mem.push_params(0, b.to_vec()),
+        }
+    }
+}
+
+impl WeightStore for DurableStore {
+    fn push_params(&self, version: u64, bytes: Vec<u8>) -> Result<(), String> {
+        let mut log = self.log.lock().unwrap();
+        self.mem.push_params(version, bytes.to_vec())?;
+        self.append(&mut log, &Record::Params(bytes));
+        Ok(())
+    }
+
+    fn fetch_params(&self, than: u64) -> Result<Vec<u8>, String> {
+        self.mem.fetch_params(than)
+    }
+
+    fn now(&self) -> Result<u64, String> {
+        self.mem.now()
+    }
+}

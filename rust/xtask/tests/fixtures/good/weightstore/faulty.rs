@@ -1,0 +1,35 @@
+//! Mini fault-injection decorator (analyzer fixture).
+
+use std::sync::Mutex;
+
+use super::{MemStore, WeightStore};
+
+pub struct FaultyStore {
+    inner: MemStore,
+    rng: Mutex<u64>,
+}
+
+impl FaultyStore {
+    fn roll(&self) -> u64 {
+        let mut rng = self.rng.lock().unwrap();
+        *rng = rng.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        *rng
+    }
+}
+
+impl WeightStore for FaultyStore {
+    fn push_params(&self, version: u64, bytes: Vec<u8>) -> Result<(), String> {
+        if self.roll() % 7 == 0 {
+            return Err(String::from("injected fault"));
+        }
+        self.inner.push_params(version, bytes)
+    }
+
+    fn fetch_params(&self, than: u64) -> Result<Vec<u8>, String> {
+        self.inner.fetch_params(than)
+    }
+
+    fn now(&self) -> Result<u64, String> {
+        self.inner.now()
+    }
+}

@@ -1,0 +1,64 @@
+//! Mini weight store (analyzer fixture).
+//!
+//! lock-order: log -> cursors -> params -> shards
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, RwLock};
+
+pub mod client;
+pub mod durable;
+pub mod faulty;
+pub mod protocol;
+pub mod server;
+
+pub trait WeightStore: Send + Sync {
+    fn push_params(&self, version: u64, bytes: Vec<u8>) -> Result<(), String>;
+    fn fetch_params(&self, than: u64) -> Result<Vec<u8>, String>;
+    fn now(&self) -> Result<u64, String>;
+}
+
+pub struct MemStore {
+    params: Mutex<Vec<u8>>,
+    shards: Vec<RwLock<Vec<f64>>>,
+    cursors: Mutex<BTreeMap<String, u64>>,
+    version: AtomicU64,
+}
+
+impl MemStore {
+    pub fn compact(&self) {
+        let cursors = self.cursors.lock().unwrap();
+        let _pin = cursors.values().min();
+        for lock in &self.shards {
+            let mut sh = lock.write().unwrap();
+            sh.clear();
+        }
+    }
+
+    pub fn snapshot(&self) -> Vec<f64> {
+        let guards: Vec<_> = self.shards.iter().map(|l| l.read().unwrap()).collect();
+        let mut out = Vec::new();
+        for g in &guards {
+            out.extend_from_slice(g);
+        }
+        out
+    }
+}
+
+impl WeightStore for MemStore {
+    fn push_params(&self, version: u64, bytes: Vec<u8>) -> Result<(), String> {
+        let mut slot = self.params.lock().unwrap();
+        *slot = bytes;
+        self.version.store(version, Ordering::Release);
+        Ok(())
+    }
+
+    fn fetch_params(&self, _than: u64) -> Result<Vec<u8>, String> {
+        let slot = self.params.lock().unwrap();
+        Ok(slot.to_vec())
+    }
+
+    fn now(&self) -> Result<u64, String> {
+        Ok(self.version.load(Ordering::Acquire))
+    }
+}

@@ -1,0 +1,84 @@
+//! Mini wire protocol (analyzer fixture — this tree is read by the
+//! lints, never compiled).
+//!
+//! # Opcode table
+//!
+//! | op   | request       | op   | response |
+//! |------|---------------|------|----------|
+//! | 0x01 | `PushParams`  | 0x80 | `Ok`     |
+//! | 0x02 | `FetchParams` | 0x81 | `Err`    |
+//! | 0x06 | `Now`         | 0x85 | `Now`    |
+//! | 0x0F | `Shutdown`    |      |          |
+
+pub enum Request {
+    PushParams { version: u64, bytes: Vec<u8> },
+    FetchParams { than: u64 },
+    Now,
+    Shutdown,
+}
+
+pub enum Response {
+    Ok,
+    Err(String),
+    Now(u64),
+}
+
+impl Request {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut p = Vec::new();
+        match self {
+            Request::PushParams { version, bytes } => {
+                p.push(0x01);
+                p.extend_from_slice(&version.to_le_bytes());
+                p.extend_from_slice(bytes);
+            }
+            Request::FetchParams { than } => {
+                p.push(0x02);
+                p.extend_from_slice(&than.to_le_bytes());
+            }
+            Request::Now => p.push(0x06),
+            Request::Shutdown => p.push(0x0F),
+        }
+        p
+    }
+
+    pub fn decode(buf: &[u8]) -> Option<Request> {
+        match *buf.first()? {
+            0x01 => Some(Request::PushParams {
+                version: 0,
+                bytes: buf.get(9..)?.to_vec(),
+            }),
+            0x02 => Some(Request::FetchParams { than: 0 }),
+            0x06 => Some(Request::Now),
+            0x0F => Some(Request::Shutdown),
+            _ => None,
+        }
+    }
+}
+
+impl Response {
+    pub fn encode(&self) -> Vec<u8> {
+        match self {
+            Response::Ok => vec![0x80],
+            Response::Err(e) => {
+                let mut p = vec![0x81];
+                p.extend_from_slice(e.as_bytes());
+                p
+            }
+            Response::Now(t) => {
+                let mut p = vec![0x85];
+                p.extend_from_slice(&t.to_le_bytes());
+                p
+            }
+        }
+    }
+
+    pub fn decode(buf: &[u8]) -> Option<Response> {
+        match *buf.first()? {
+            0x80 => Some(Response::Ok),
+            0x81 => Some(Response::Err(String::new())),
+            0x85 => Some(Response::Now(0)),
+            _ => None,
+        }
+    }
+}

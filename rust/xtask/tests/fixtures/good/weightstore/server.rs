@@ -1,0 +1,22 @@
+//! Mini server dispatch (analyzer fixture).
+
+use super::protocol::{Request, Response};
+use super::WeightStore;
+
+pub fn dispatch(store: &dyn WeightStore, req: Request) -> Response {
+    match req {
+        Request::PushParams { version, bytes } => match store.push_params(version, bytes) {
+            Ok(()) => Response::Ok,
+            Err(e) => Response::Err(e),
+        },
+        Request::FetchParams { than } => match store.fetch_params(than) {
+            Ok(_bytes) => Response::Ok,
+            Err(e) => Response::Err(e),
+        },
+        Request::Now => match store.now() {
+            Ok(t) => Response::Now(t),
+            Err(e) => Response::Err(e),
+        },
+        Request::Shutdown => Response::Ok,
+    }
+}

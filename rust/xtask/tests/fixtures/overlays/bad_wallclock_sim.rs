@@ -1,0 +1,11 @@
+//! Overlay for coordinator/sim.rs: calls `Instant::now` with no pragma —
+//! the determinism lint must fail pointing at the exact line.
+
+pub fn run(steps: u64) -> u64 {
+    let start = std::time::Instant::now();
+    let mut t = 0u64;
+    for _ in 0..steps {
+        t = t.wrapping_add(1);
+    }
+    t.wrapping_add(start.elapsed().as_secs())
+}
