@@ -1,0 +1,85 @@
+//! Connection-scale bench: the event-loop store server under ~1k
+//! concurrent TCP clients (the thread-per-connection design it replaced
+//! topped out at a few hundred), reporting per-operation push/fetch
+//! latency with p99 — the tail is what slow-client eviction and request
+//! pipelining are supposed to protect.  `--quick` shrinks the fleet so
+//! the CI smoke stays cheap; the full run feeds BENCH_pr8.json.
+
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+use issgd::bench::Harness;
+use issgd::weightstore::client::{Client, ClientOptions};
+use issgd::weightstore::server::Server;
+use issgd::weightstore::{MemStore, WeightStore};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("ISSGD_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    // Full run: 1000 live sockets against one event loop.  Quick run: a
+    // fleet small enough for the CI smoke but still far beyond what one
+    // thread-per-connection server tick could interleave.
+    let (n_clients, rounds) = if quick { (64usize, 3usize) } else { (1000usize, 5usize) };
+    let n_threads = 8usize.min(n_clients);
+    let mut h = Harness::from_env("connection_scale");
+
+    let n_weights = 1024usize;
+    let server = Server::bind("127.0.0.1:0", Arc::new(MemStore::new(n_weights, 1.0))).unwrap();
+    let (addr, handle) = server.serve_in_background().unwrap();
+    let addr = addr.to_string();
+
+    // Ramp every client up before timing any operation, so the samples
+    // measure steady-state latency rather than connect storms.
+    let barrier = Arc::new(Barrier::new(n_threads + 1));
+    let t_ramp = Instant::now();
+    let mut joins = Vec::new();
+    for t in 0..n_threads {
+        let addr = addr.clone();
+        let barrier = Arc::clone(&barrier);
+        let share = n_clients / n_threads + usize::from(t < n_clients % n_threads);
+        joins.push(std::thread::spawn(move || {
+            let clients: Vec<Client> = (0..share)
+                .map(|_| Client::connect_with(&addr, ClientOptions::default()).unwrap())
+                .collect();
+            barrier.wait();
+            let weights = [1.0f32; 16];
+            let mut push_lat: Vec<Duration> = Vec::with_capacity(share * rounds);
+            let mut fetch_lat: Vec<Duration> = Vec::with_capacity(share * rounds);
+            for round in 0..rounds {
+                for (i, client) in clients.iter().enumerate() {
+                    let start = (t * 131 + i * 17) % (n_weights - weights.len());
+                    let t0 = Instant::now();
+                    client.push_weights(start, &weights, (round + 1) as u64).unwrap();
+                    push_lat.push(t0.elapsed());
+                    let t1 = Instant::now();
+                    std::hint::black_box(client.fetch_weights_since(0).unwrap());
+                    fetch_lat.push(t1.elapsed());
+                }
+            }
+            (push_lat, fetch_lat)
+        }));
+    }
+    barrier.wait();
+    let ramp = t_ramp.elapsed();
+
+    let mut push_lat: Vec<Duration> = Vec::new();
+    let mut fetch_lat: Vec<Duration> = Vec::new();
+    for j in joins {
+        let (p, f) = j.join().unwrap();
+        push_lat.extend(p);
+        fetch_lat.extend(f);
+    }
+    println!(
+        "connection_scale: {n_clients} clients connected in {ramp:?} \
+         ({} push + {} fetch samples over {rounds} rounds)",
+        push_lat.len(),
+        fetch_lat.len()
+    );
+    h.record_samples(&format!("push_weights/conns={n_clients}"), &push_lat, Some(1));
+    h.record_samples(&format!("fetch_since/conns={n_clients}"), &fetch_lat, Some(1));
+
+    let ctl = Client::connect(&addr).unwrap();
+    ctl.shutdown_server().unwrap();
+    handle.join().unwrap();
+    h.finish();
+}

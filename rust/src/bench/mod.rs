@@ -20,8 +20,14 @@
 //! `cargo bench --bench sampler --bench weightstore -- --json out.json` —
 //! accumulate into a single machine-readable file).  CI uploads it as a
 //! perf-trajectory artifact.  Fields: `group`, `name`, `samples`,
-//! `min_ns`/`median_ns`/`mean_ns`/`p95_ns`, and `items_per_sec` when
-//! throughput was declared.
+//! `min_ns`/`median_ns`/`mean_ns`/`p95_ns`/`p99_ns`, and `items_per_sec`
+//! when throughput was declared.
+//!
+//! Benchmarks that collect their own latency samples (e.g. per-operation
+//! timings gathered across many client threads in the connection-scale
+//! bench) feed them in through [`Harness::record_samples`], which reuses
+//! the same stats/printing/JSON pipeline without the harness driving the
+//! timing loop.
 
 use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
@@ -34,6 +40,7 @@ pub struct BenchResult {
     pub median: Duration,
     pub mean: Duration,
     pub p95: Duration,
+    pub p99: Duration,
     /// items/sec if throughput was declared.
     pub throughput: Option<f64>,
 }
@@ -126,6 +133,30 @@ impl Harness {
             f();
             samples.push(t0.elapsed());
         }
+        self.push_result(name, samples, items)
+    }
+
+    /// Fold externally-collected per-operation latency samples into the
+    /// report — for benchmarks where the harness cannot drive the timing
+    /// loop itself (e.g. many client threads each timing their own store
+    /// round-trips).  `items` is the work per *sample* (usually 1 for
+    /// per-op latencies), reported as items/sec against the mean.
+    pub fn record_samples(
+        &mut self,
+        name: &str,
+        samples: &[Duration],
+        items: Option<u64>,
+    ) -> BenchResult {
+        assert!(!samples.is_empty(), "record_samples needs at least one sample");
+        self.push_result(name, samples.to_vec(), items)
+    }
+
+    fn push_result(
+        &mut self,
+        name: &str,
+        mut samples: Vec<Duration>,
+        items: Option<u64>,
+    ) -> BenchResult {
         samples.sort();
         let n = samples.len();
         let mean = samples.iter().sum::<Duration>() / n as u32;
@@ -136,6 +167,7 @@ impl Harness {
             median: samples[n / 2],
             mean,
             p95: samples[(n * 95 / 100).min(n - 1)],
+            p99: samples[(n * 99 / 100).min(n - 1)],
             throughput: items.map(|i| i as f64 / mean.as_secs_f64()),
         };
         print_result(&result);
@@ -171,6 +203,7 @@ fn append_json(path: &Path, group: &str, results: &[BenchResult]) -> anyhow::Res
             ("median_ns", Json::Num(r.median.as_nanos() as f64)),
             ("mean_ns", Json::Num(r.mean.as_nanos() as f64)),
             ("p95_ns", Json::Num(r.p95.as_nanos() as f64)),
+            ("p99_ns", Json::Num(r.p99.as_nanos() as f64)),
         ];
         if let Some(tp) = r.throughput {
             pairs.push(("items_per_sec", Json::Num(tp)));
@@ -199,12 +232,13 @@ fn print_result(r: &BenchResult) {
         None => String::new(),
     };
     println!(
-        "{:<48} min {}  med {}  mean {}  p95 {}  (n={}){tp}",
+        "{:<48} min {}  med {}  mean {}  p95 {}  p99 {}  (n={}){tp}",
         r.name,
         fmt_dur(r.min),
         fmt_dur(r.median),
         fmt_dur(r.mean),
         fmt_dur(r.p95),
+        fmt_dur(r.p99),
         r.samples
     );
 }
@@ -219,12 +253,28 @@ mod tests {
         let r = h.bench("sleep", || std::thread::sleep(Duration::from_micros(200)));
         assert!(r.samples >= 5);
         assert!(r.min >= Duration::from_micros(200));
-        assert!(r.min <= r.median && r.median <= r.p95);
+        assert!(r.min <= r.median && r.median <= r.p95 && r.p95 <= r.p99);
         let r2 = h.bench_throughput("tp", 1000, || {
             std::hint::black_box((0..1000).sum::<u64>());
         });
         assert!(r2.throughput.unwrap() > 0.0);
         assert_eq!(h.finish().len(), 2);
+    }
+
+    #[test]
+    fn record_samples_matches_driven_stats() {
+        let mut h = Harness::new("test", Duration::from_millis(10), 5);
+        // 100 samples 1..=100 ms: median = 51st, p95 = 96th, p99 = 100th.
+        let samples: Vec<Duration> =
+            (1..=100u64).map(Duration::from_millis).collect();
+        let r = h.record_samples("external", &samples, Some(1));
+        assert_eq!(r.samples, 100);
+        assert_eq!(r.min, Duration::from_millis(1));
+        assert_eq!(r.median, Duration::from_millis(51));
+        assert_eq!(r.p95, Duration::from_millis(96));
+        assert_eq!(r.p99, Duration::from_millis(100));
+        assert!(r.throughput.unwrap() > 0.0);
+        assert_eq!(h.finish().len(), 1);
     }
 
     #[test]
@@ -249,6 +299,7 @@ mod tests {
             let v = Json::parse(line).unwrap();
             assert_eq!(v.req_str("group").unwrap(), group);
             assert!(v.req_f64("median_ns").unwrap() >= 0.0);
+            assert!(v.req_f64("p99_ns").unwrap() >= 0.0);
             assert!(v.req_f64("items_per_sec").unwrap() > 0.0);
             assert!(v.req_str("name").unwrap().starts_with(group));
         }

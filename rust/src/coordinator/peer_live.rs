@@ -150,12 +150,31 @@ pub fn run_peer_live(cfg: &RunConfig, opts: &PeerLiveOptions) -> Result<AsgdOutc
     } else {
         None
     };
+    // One shared connection pool for every role in TCP mode: peers +
+    // driver multiplex over at most `n_workers + 2` sockets, and peers
+    // polling the same delta cursor coalesce into one fetch.
+    let pool: Option<Arc<crate::weightstore::client::ClientPool>> =
+        opts.store_addr.as_ref().map(|addr| {
+            Arc::new(crate::weightstore::client::ClientPool::new(
+                addr,
+                cfg.n_workers + 2,
+            ))
+        });
+    if let Some(pool) = &pool {
+        // The pool dials lazily; ping once so a bad address still fails
+        // fast here rather than from inside a peer thread.
+        pool.now()?;
+    }
     let connect = |role: &str| -> Result<Arc<dyn WeightStore>> {
-        Ok(match (&opts.store_addr, &opts.store, &mem) {
-            (Some(addr), _, _) => {
-                let c = crate::weightstore::client::Client::connect(addr)?;
-                log_info!(role, "connected to store at {addr}");
-                Arc::new(c)
+        Ok(match (&pool, &opts.store, &mem) {
+            (Some(pool), _, _) => {
+                log_info!(
+                    role,
+                    "sharing store pool at {} ({} conns max)",
+                    opts.store_addr.as_deref().unwrap_or("?"),
+                    cfg.n_workers + 2
+                );
+                Arc::clone(pool) as Arc<dyn WeightStore>
             }
             (None, Some(store), _) => Arc::clone(store),
             (None, None, Some(mem)) => mem.clone() as Arc<dyn WeightStore>,

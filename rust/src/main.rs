@@ -61,6 +61,8 @@ SUBCOMMANDS
                   --addr HOST:PORT  --n-examples N  --init-weight F
                   --store-path DIR  serve a durable store (created on first run,
                                     recovered — snapshot + log replay — on later runs)
+                  --write-queue-mb N  per-connection queued-response cap before a
+                                    slow client is evicted (default 64)
   worker        standalone scoring worker against a remote store
                   --store ADDR --worker-id I --workers N --model NAME
                   --n-examples N --seed N
@@ -86,7 +88,7 @@ fn value_opts() -> Vec<&'static str> {
     let mut opts = RunConfig::CLI_OPTS.to_vec();
     opts.extend([
         "log-level", "addr", "store", "store-path", "worker-id", "seeds", "results",
-        "throttle-ms", "width", "height",
+        "throttle-ms", "width", "height", "write-queue-mb",
     ]);
     opts
 }
@@ -273,7 +275,15 @@ fn cmd_db_server(args: &Args) -> Result<()> {
         }
         None => Arc::new(MemStore::new(n_weights, init)),
     };
-    let server = Server::bind(addr, store)?;
+    // Slow-client eviction cap for the event loop (bytes of queued
+    // responses per connection); 0 picks the default.
+    let opts = match args.get_parse("write-queue-mb", 0usize)? {
+        0 => issgd::weightstore::server::ServerOptions::default(),
+        mb => issgd::weightstore::server::ServerOptions {
+            max_write_queue: mb << 20,
+        },
+    };
+    let server = Server::bind_with_options(addr, store, opts)?;
     log_info!(
         "db",
         "weight store listening on {} ({n_weights} weights)",
@@ -307,7 +317,10 @@ fn cmd_worker(args: &Args) -> Result<()> {
     let data = Arc::new(SynthDataset::generate(cfg.seed, spec));
     let (train_idx, _, _) = split_indices(cfg.n_examples, SplitSpec::default());
     let shard = shards(train_idx.len(), cfg.n_workers)[worker_id];
-    let store = Arc::new(issgd::weightstore::client::Client::connect(addr)?);
+    // A pool (even for one logical worker) so delta fetches coalesce with
+    // any in-process helpers and a poisoned connection heals transparently.
+    let store = Arc::new(issgd::weightstore::client::ClientPool::new(addr, 2));
+    store.now().context("store unreachable")?;
     log_info!(
         "worker",
         "worker {worker_id}/{} scoring shard {}..{} against {addr}",

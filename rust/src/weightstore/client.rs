@@ -1,36 +1,187 @@
-//! TCP client: a [`WeightStore`] implementation backed by a remote server.
+//! TCP client layer: [`Client`] (one connection) and [`ClientPool`] (a
+//! bounded set of connections shared by many actors), both implementing
+//! [`WeightStore`] against a remote server.
 //!
-//! One `TcpStream` per client, requests are strictly request/response, and
-//! the stream sits behind a `Mutex` so a client handle can be shared across
-//! threads (each actor normally owns its own client, though — connections
-//! are cheap at this scale).
+//! ## Connection discipline (`Client`)
+//!
+//! A `Client` owns at most one `TcpStream` behind a mutex.  Every call is
+//! strictly request/response on the wire, and two failure modes that used
+//! to be silent are now handled explicitly:
+//!
+//! - **Desync poisoning.**  If any frame-level error occurs mid-call
+//!   (write failed, read timed out, response undecodable), the stream may
+//!   have a partial frame in flight — pairing the *next* request with
+//!   those stale bytes would hand the caller another call's answer.  The
+//!   connection is therefore poisoned (dropped) on any frame-level error;
+//!   the next call transparently reconnects with bounded exponential
+//!   backoff.  A failed call is *never* retried automatically: requests
+//!   like `ApplyGrad` are not idempotent, and the caller (workers already
+//!   count `store_errors`) owns the retry decision.
+//! - **Timeouts.**  Connect, read, and write all carry configurable
+//!   timeouts ([`ClientOptions`]), so a hung or dead server surfaces as an
+//!   error instead of blocking an actor forever.
+//!
+//! `Response::Err` — a server-side *request* error on a healthy framed
+//! stream — does not poison the connection.
+//!
+//! ## Pooling (`ClientPool`)
+//!
+//! `ClientPool` keeps up to `max_conns` lazily-created `Client`s and
+//! checks one out per call, so any number of threads can share one pool
+//! handle without serializing on a single socket.  Poisoned connections
+//! heal themselves on next checkout via the `Client` reconnect path.
+//! `fetch_weights_since` additionally *coalesces*: concurrent callers
+//! behind the same cursor share one in-flight fetch and all receive its
+//! (cloned) result — N maintainers polling the same sequence floor cost
+//! one round-trip, not N.
+use std::collections::BTreeMap;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
 
-use std::net::TcpStream;
-use std::sync::Mutex;
-
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use super::protocol::{read_frame, write_frame, Request, Response};
 use super::{ParamsDelta, StoreStats, WeightDelta, WeightSnapshot, WeightStore};
 
+/// Timeout/backoff knobs for [`Client`] (and, via [`ClientPool`], every
+/// pooled connection).
+#[derive(Debug, Clone)]
+pub struct ClientOptions {
+    /// TCP connect timeout per address attempt.
+    pub connect_timeout: Duration,
+    /// Read *and* write timeout per syscall.  Applies per `read`/`write`
+    /// call, so a slowly-streaming but live server keeps resetting it; a
+    /// fully hung one errors out within one period.
+    pub io_timeout: Duration,
+    /// Connection attempts per (re)connect before giving up on a call.
+    pub connect_attempts: u32,
+    /// Backoff before the 2nd connection attempt; doubles per attempt.
+    pub backoff_base: Duration,
+    /// Ceiling on the exponential backoff.
+    pub backoff_cap: Duration,
+}
+
+impl Default for ClientOptions {
+    fn default() -> ClientOptions {
+        ClientOptions {
+            connect_timeout: Duration::from_secs(5),
+            io_timeout: Duration::from_secs(30),
+            connect_attempts: 3,
+            backoff_base: Duration::from_millis(10),
+            backoff_cap: Duration::from_secs(2),
+        }
+    }
+}
+
 pub struct Client {
-    stream: Mutex<TcpStream>,
+    addr: String,
+    opts: ClientOptions,
+    /// `None` = not connected (never connected, or poisoned by a
+    /// frame-level error).  The next call reconnects.
+    stream: Mutex<Option<TcpStream>>,
 }
 
 impl Client {
+    /// Connect eagerly with default options (bad addresses fail here, not
+    /// on first use).
     pub fn connect(addr: &str) -> Result<Client> {
-        let stream = TcpStream::connect(addr)?;
-        stream.set_nodelay(true).ok();
+        Client::connect_with(addr, ClientOptions::default())
+    }
+
+    /// Connect eagerly with explicit options.
+    pub fn connect_with(addr: &str, opts: ClientOptions) -> Result<Client> {
+        let stream = Client::open(addr, &opts)?;
         Ok(Client {
-            stream: Mutex::new(stream),
+            addr: addr.to_string(),
+            opts,
+            stream: Mutex::new(Some(stream)),
         })
     }
 
+    /// Create without connecting; the first call dials.  Used by
+    /// [`ClientPool`] so checkout never blocks on the network.
+    pub fn lazy(addr: &str, opts: ClientOptions) -> Client {
+        Client {
+            addr: addr.to_string(),
+            opts,
+            stream: Mutex::new(None),
+        }
+    }
+
+    /// One TCP dial honoring `connect_timeout`, with per-syscall i/o
+    /// timeouts installed on the resulting stream.
+    fn open(addr: &str, opts: &ClientOptions) -> Result<TcpStream> {
+        let mut last: Option<std::io::Error> = None;
+        for sockaddr in addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving store address {addr}"))?
+        {
+            match TcpStream::connect_timeout(&sockaddr, opts.connect_timeout) {
+                Ok(stream) => {
+                    stream.set_nodelay(true).ok();
+                    stream.set_read_timeout(Some(opts.io_timeout)).ok();
+                    stream.set_write_timeout(Some(opts.io_timeout)).ok();
+                    return Ok(stream);
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        match last {
+            Some(e) => Err(e).with_context(|| format!("connecting to store at {addr}")),
+            None => Err(anyhow!("store address {addr} resolved to nothing")),
+        }
+    }
+
+    /// Dial with bounded exponential backoff between attempts.
+    fn open_with_backoff(addr: &str, opts: &ClientOptions) -> Result<TcpStream> {
+        let mut backoff = opts.backoff_base;
+        let mut attempt = 0u32;
+        loop {
+            match Client::open(addr, opts) {
+                Ok(stream) => return Ok(stream),
+                Err(e) => {
+                    attempt += 1;
+                    if attempt >= opts.connect_attempts.max(1) {
+                        return Err(e).with_context(|| {
+                            format!("giving up after {attempt} connection attempts")
+                        });
+                    }
+                    std::thread::sleep(backoff);
+                    backoff = (backoff * 2).min(opts.backoff_cap);
+                }
+            }
+        }
+    }
+
     fn call(&self, req: Request) -> Result<Response> {
-        let mut stream = self.stream.lock().unwrap();
-        write_frame(&mut *stream, &req.encode())?;
-        let frame = read_frame(&mut *stream)?;
-        Response::decode(&frame)?.into_result()
+        let mut guard = self.stream.lock().unwrap();
+        if guard.is_none() {
+            // Reconnect after poisoning (or first use of a lazy client).
+            // The mutex is held through the backoff: concurrent callers
+            // would only race to dial the same dead server.
+            *guard = Some(Client::open_with_backoff(&self.addr, &self.opts)?);
+        }
+        let stream = guard.as_mut().expect("connected above");
+        let exchanged: Result<Response> = (|| {
+            write_frame(stream, &req.encode())?;
+            let frame = read_frame(stream)?;
+            Response::decode(&frame)
+        })();
+        match exchanged {
+            // A decoded response means the stream is still framed
+            // correctly; `Response::Err` surfaces via into_result
+            // without poisoning.
+            Ok(resp) => resp.into_result(),
+            Err(e) => {
+                // Frame-level failure: a partial frame may be in flight
+                // either direction, so this stream can never be trusted
+                // to pair requests with responses again.
+                *guard = None;
+                Err(e).context("store connection poisoned (will reconnect on next call)")
+            }
+        }
     }
 
     /// Ask the remote server to stop accepting connections.
@@ -162,5 +313,200 @@ impl WeightStore for Client {
             Response::Stats(s) => Ok(s),
             other => bail!("unexpected response: {other:?}"),
         }
+    }
+}
+
+/// One coalesced `fetch_weights_since` in flight: the leader publishes
+/// the result here; followers wait on the condvar and clone it.  The
+/// error arm is a `String` because `anyhow::Error` is not `Clone`.
+struct FetchFlight {
+    done: Mutex<Option<std::result::Result<WeightDelta, String>>>,
+    cv: Condvar,
+}
+
+/// A bounded pool of [`Client`] connections sharing one server address.
+///
+/// Cloneable-by-`Arc` and safe to hand to every actor in a process: each
+/// call checks a connection out (waiting if all `max_conns` are busy),
+/// runs exactly one request/response on it, and checks it back in.
+/// Connections are created lazily up to the cap and heal from poisoning
+/// transparently.  See the module docs for the coalescing contract.
+pub struct ClientPool {
+    addr: String,
+    opts: ClientOptions,
+    max_conns: usize,
+    /// Checked-in connections.  Paired with `available` for checkout
+    /// waits.
+    idle: Mutex<Vec<Client>>,
+    available: Condvar,
+    /// Connections in existence (idle + checked out); bounded by
+    /// `max_conns`.
+    live: AtomicUsize,
+    /// In-flight coalesced fetches keyed by cursor sequence.
+    inflight: Mutex<BTreeMap<u64, std::sync::Arc<FetchFlight>>>,
+}
+
+impl ClientPool {
+    /// Pool against `addr` with default per-connection options.
+    /// `max_conns` is clamped to ≥ 1.
+    pub fn new(addr: &str, max_conns: usize) -> ClientPool {
+        ClientPool::with_options(addr, max_conns, ClientOptions::default())
+    }
+
+    pub fn with_options(addr: &str, max_conns: usize, opts: ClientOptions) -> ClientPool {
+        ClientPool {
+            addr: addr.to_string(),
+            opts,
+            max_conns: max_conns.max(1),
+            idle: Mutex::new(Vec::new()),
+            available: Condvar::new(),
+            live: AtomicUsize::new(0),
+            inflight: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Take a connection: an idle one, a freshly created one while under
+    /// the cap, or block until a peer checks one in.
+    fn checkout(&self) -> Client {
+        let mut idle = self.idle.lock().unwrap();
+        loop {
+            if let Some(client) = idle.pop() {
+                return client;
+            }
+            if self.live.load(Ordering::SeqCst) < self.max_conns {
+                self.live.fetch_add(1, Ordering::SeqCst);
+                // Lazy: no network under the lock; the call itself dials.
+                return Client::lazy(&self.addr, self.opts.clone());
+            }
+            idle = self.available.wait(idle).unwrap();
+        }
+    }
+
+    fn checkin(&self, client: Client) {
+        self.idle.lock().unwrap().push(client);
+        self.available.notify_one();
+    }
+
+    /// Run `f` with a checked-out connection; always checks back in
+    /// (poisoned connections self-heal on their next use).
+    fn with_conn<T>(&self, f: impl FnOnce(&Client) -> Result<T>) -> Result<T> {
+        let client = self.checkout();
+        let result = f(&client);
+        self.checkin(client);
+        result
+    }
+}
+
+impl WeightStore for ClientPool {
+    fn push_params(&self, version: u64, bytes: Vec<u8>) -> Result<()> {
+        self.with_conn(|c| c.push_params(version, bytes))
+    }
+
+    fn fetch_params(&self, than: u64) -> Result<Option<(u64, Vec<u8>)>> {
+        self.with_conn(|c| c.fetch_params(than))
+    }
+
+    fn push_params_layers(
+        &self,
+        version: u64,
+        full: bool,
+        layers: &[(String, Vec<u8>)],
+    ) -> Result<()> {
+        self.with_conn(|c| c.push_params_layers(version, full, layers))
+    }
+
+    fn fetch_params_since(&self, than: u64) -> Result<Option<ParamsDelta>> {
+        self.with_conn(|c| c.fetch_params_since(than))
+    }
+
+    fn params_version(&self) -> Result<u64> {
+        self.with_conn(|c| c.params_version())
+    }
+
+    fn push_weights(&self, start: usize, weights: &[f32], param_version: u64) -> Result<()> {
+        self.with_conn(|c| c.push_weights(start, weights, param_version))
+    }
+
+    fn fetch_weights(&self) -> Result<WeightSnapshot> {
+        self.with_conn(|c| c.fetch_weights())
+    }
+
+    /// Coalesced: concurrent callers behind the same `seq` share one
+    /// round-trip.  The leader (first caller for a given seq) performs
+    /// the fetch; followers block on the flight and clone its result.
+    /// Correctness note: a follower may receive a delta computed slightly
+    /// *after* it asked — that is the same read the leader got, and any
+    /// delta for `seq` taken at-or-after call time satisfies the cursor
+    /// contract (consumers advance to `delta.to` and re-poll).
+    fn fetch_weights_since(&self, seq: u64) -> Result<WeightDelta> {
+        enum Role {
+            Leader(std::sync::Arc<FetchFlight>),
+            Follower(std::sync::Arc<FetchFlight>),
+        }
+        let role = {
+            let mut inflight = self.inflight.lock().unwrap();
+            match inflight.get(&seq) {
+                Some(flight) => Role::Follower(std::sync::Arc::clone(flight)),
+                None => {
+                    let flight = std::sync::Arc::new(FetchFlight {
+                        done: Mutex::new(None),
+                        cv: Condvar::new(),
+                    });
+                    inflight.insert(seq, std::sync::Arc::clone(&flight));
+                    Role::Leader(flight)
+                }
+            }
+            // inflight guard drops here — never held across the network
+            // call or the flight's own lock.
+        };
+        match role {
+            Role::Leader(flight) => {
+                let result = self.with_conn(|c| c.fetch_weights_since(seq));
+                {
+                    let mut done = flight.done.lock().unwrap();
+                    *done = Some(match &result {
+                        Ok(delta) => Ok(delta.clone()),
+                        Err(e) => Err(format!("{e:#}")),
+                    });
+                }
+                flight.cv.notify_all();
+                self.inflight.lock().unwrap().remove(&seq);
+                result
+            }
+            Role::Follower(flight) => {
+                let mut done = flight.done.lock().unwrap();
+                while done.is_none() {
+                    done = flight.cv.wait(done).unwrap();
+                }
+                match done.as_ref().expect("checked above") {
+                    Ok(delta) => Ok(delta.clone()),
+                    Err(e) => Err(anyhow!("coalesced fetch failed: {e}")),
+                }
+            }
+        }
+    }
+
+    fn apply_grad(&self, scale: f32, grad: &[f32]) -> Result<u64> {
+        self.with_conn(|c| c.apply_grad(scale, grad))
+    }
+
+    fn save_cursor(&self, name: &str, seq: u64) -> Result<()> {
+        self.with_conn(|c| c.save_cursor(name, seq))
+    }
+
+    fn load_cursor(&self, name: &str) -> Result<Option<u64>> {
+        self.with_conn(|c| c.load_cursor(name))
+    }
+
+    fn drop_cursor(&self, name: &str) -> Result<()> {
+        self.with_conn(|c| c.drop_cursor(name))
+    }
+
+    fn now(&self) -> Result<u64> {
+        self.with_conn(|c| c.now())
+    }
+
+    fn stats(&self) -> Result<StoreStats> {
+        self.with_conn(|c| c.stats())
     }
 }

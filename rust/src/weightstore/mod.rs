@@ -8,10 +8,16 @@
 //!   write lock, and every write is tagged with a monotonic
 //!   **write sequence** so the master can fetch *deltas* instead of full
 //!   snapshots.
-//! * [`server`]/[`client`] — a thread-per-connection TCP layer with a
-//!   length-prefixed binary protocol, so master and workers can run as
-//!   separate OS processes like the paper's deployment.  Both implement
-//!   the same [`WeightStore`] trait, so the coordinator is oblivious to
+//! * [`server`]/[`client`] — an event-driven TCP layer (one `poll(2)`
+//!   loop over nonblocking sockets, request pipelining, batched writes;
+//!   see [`server`] and the [`sys`] shim) with a length-prefixed binary
+//!   protocol, so master and workers can run as separate OS processes
+//!   like the paper's deployment — and so one server scales to
+//!   thousand-connection worker fleets without a thread per socket.
+//!   [`client::Client`] (one pooled-or-private connection with desync
+//!   poisoning + timeouts) and [`client::ClientPool`] (bounded
+//!   connection pool with coalesced delta fetches) both implement the
+//!   same [`WeightStore`] trait, so the coordinator is oblivious to
 //!   which transport it talks to ("fire and forget", §4.2).
 //! * [`faulty::FaultyStore`] — a fault-injection decorator over any
 //!   [`WeightStore`]: deterministic (seeded RNG + virtual-time clock)
@@ -29,11 +35,12 @@
 //! | backend                | transport   | durability        | concurrency                                   |
 //! |------------------------|-------------|-------------------|-----------------------------------------------|
 //! | [`MemStore`]           | in-process  | none (RAM only)   | striped shard `RwLock`s, concurrent push/fetch |
-//! | [`client::Client`]     | TCP         | that of the server| one in-flight request per client handle        |
+//! | [`client::Client`]     | TCP         | that of the server| one in-flight request per client handle; poisons + reconnects on frame-level errors |
+//! | [`client::ClientPool`] | TCP         | that of the server| up to `max_conns` concurrent requests; same-cursor `fetch_weights_since` coalesced into one round-trip |
 //! | [`faulty::FaultyStore`]| decorator   | that of the inner | that of the inner (RNG under a mutex)          |
 //! | [`durable::DurableStore`] | in-process | crash-consistent journal + snapshots | reads concurrent (inner `MemStore`), writes serialized on the journal lock |
 //!
-//! All four implement the same [`WeightStore`] trait, so every topology
+//! All five implement the same [`WeightStore`] trait, so every topology
 //! (master/worker sim + live, peer sim + live, remote TCP deployments)
 //! composes with every backend — including `FaultyStore` over
 //! `DurableStore` for chaos-recovery tests.  The on-disk segment/snapshot
@@ -142,8 +149,10 @@
 //!   rule the analyzer cannot see — keep it when writing new sweeps).
 //!
 //! Ad-hoc leaf locks that never nest with the above (a client's `stream`,
-//! a peer's `state`, `FaultyStore`'s `rng`) stay out of the declared chain;
-//! the analyzer still folds them into its cycle check.
+//! a peer's `state`, `FaultyStore`'s `rng`, `ClientPool`'s `idle` /
+//! `inflight` / per-flight `done` — the pool drops each before taking the
+//! next) stay out of the declared chain; the analyzer still folds them
+//! into its cycle check.
 
 pub mod client;
 pub mod durable;
@@ -151,6 +160,7 @@ pub mod faulty;
 pub mod protocol;
 pub mod segment;
 pub mod server;
+pub mod sys;
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -351,6 +361,12 @@ pub struct StoreStats {
     /// this is folded in by the driver that owns the clients — raw
     /// `WeightStore::stats` reads report 0.
     pub push_calls_saved: u64,
+    /// Well-framed but undecodable request frames answered with
+    /// `Response::Err` by the TCP server.  A transport-level counter: the
+    /// event loop folds it into `Stats` responses (same pattern as the
+    /// driver-folded `push_calls_saved`); raw backend `stats` reads
+    /// report 0.
+    pub protocol_errors: u64,
 }
 
 /// The master/worker-facing interface of the database actor.
@@ -1195,6 +1211,7 @@ impl WeightStore for MemStore {
             params_delta_fetches: self.params_delta_fetches.load(Ordering::Relaxed),
             params_delta_layers: self.params_delta_layers.load(Ordering::Relaxed),
             push_calls_saved: 0,
+            protocol_errors: 0,
         })
     }
 }

@@ -31,6 +31,28 @@
 //! the version/fallback contract lives on
 //! [`super::WeightStore::fetch_params_since`] and in the `weightstore`
 //! module docs.  `DropCursor` removes a dead consumer's compaction pin.
+//!
+//! # Pipelining and the in-order response contract
+//!
+//! The transport is *pipelined*: a client may write any number of request
+//! frames without waiting for responses.  The server guarantees that
+//! responses come back **one per request, in request order, with nothing
+//! skipped** — the k-th response frame on a connection always answers the
+//! k-th request frame.  There are no request IDs on the wire; ordering
+//! *is* the correlation mechanism, which is why a desynced stream must be
+//! abandoned rather than resynchronized (see `client`'s poisoning rules).
+//!
+//! Two qualifications:
+//!
+//! * A *well-framed but undecodable* request (bad opcode, truncated
+//!   fields) still consumes its slot in the order and is answered with
+//!   `Response::Err` — the connection survives.  Only framing-level
+//!   corruption (a length prefix over [`MAX_FRAME`]) kills the
+//!   connection, because frame boundaries themselves are then lost.
+//! * The contract is per-connection and ends with the connection: if the
+//!   server evicts a slow reader or the connection drops, the unsent tail
+//!   of the response stream is discarded — a client never observes
+//!   reordering, only truncation.
 
 use std::io::{Read, Write};
 
@@ -452,6 +474,7 @@ impl Response {
                     s.params_delta_fetches,
                     s.params_delta_layers,
                     s.push_calls_saved,
+                    s.protocol_errors,
                 ] {
                     p.extend(v.to_le_bytes());
                 }
@@ -573,6 +596,7 @@ impl Response {
                 params_delta_fetches: c.u64()?,
                 params_delta_layers: c.u64()?,
                 push_calls_saved: c.u64()?,
+                protocol_errors: c.u64()?,
             }),
             _ => bail!("unknown response opcode {op:#04x}"),
         };
@@ -747,6 +771,7 @@ mod tests {
             params_delta_fetches: 9,
             params_delta_layers: 10,
             push_calls_saved: 11,
+            protocol_errors: 12,
         }));
     }
 

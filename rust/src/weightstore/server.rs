@@ -1,57 +1,235 @@
-//! TCP server exposing any [`WeightStore`] to remote masters/workers.
+//! Event-driven TCP server exposing any [`WeightStore`] to remote
+//! masters/workers/peers.
 //!
-//! Thread-per-connection over std::net (tokio is unavailable offline, and
-//! the connection count here is tiny: one master + a handful of workers).
+//! One thread, one `poll(2)` loop (via the zero-dependency [`super::sys`]
+//! shim — tokio/mio are unavailable offline), every socket nonblocking.
+//! Each connection owns a read buffer that accumulates partial frames and
+//! a write buffer of queued responses:
+//!
+//! - **Accept**: the listener is polled alongside the connections; ready
+//!   means accept-until-`WouldBlock`, so a connect storm drains in one
+//!   tick instead of one accept per tick.
+//! - **Read + pipelining**: a readable connection is drained to its read
+//!   buffer, then *every* complete frame in the buffer is decoded and
+//!   dispatched, in arrival order.  Clients may therefore pipeline many
+//!   requests without waiting for responses; responses are queued in
+//!   request order (the in-order contract documented in
+//!   [`super::protocol`]).
+//! - **Write batching**: responses accumulate in the write buffer and are
+//!   flushed with as few `write` syscalls as the socket accepts; whatever
+//!   does not fit stays queued and the socket is polled for `POLLOUT`.
+//! - **Slow-client eviction**: a connection whose pending write queue
+//!   exceeds [`ServerOptions::max_write_queue`] is dropped.  This replaces
+//!   the old thread-per-connection `WRITE_STALL` write timeout: back
+//!   pressure is now measured in bytes queued, not seconds stalled, and a
+//!   stalled reader can no longer pin server resources beyond its cap.
+//!
+//! Malformed traffic splits into two cases (see ISSUE 8): a *well-framed
+//! but undecodable* payload gets a `Response::Err` answer and bumps the
+//! `protocol_errors` counter surfaced through `Stats` — the connection
+//! stays up; *framing-level corruption* (a length prefix beyond
+//! [`MAX_FRAME`]) means the byte stream itself can't be trusted, so the
+//! connection is dropped.
+//!
+//! The loop exits when any client sends `Shutdown`.  Because the loop is
+//! single-threaded, the shutdown/join contract that `integration_durable`
+//! relies on is trivial: when [`Server::serve`] returns, no code anywhere
+//! still holds the store handle through the server — a caller may drop the
+//! server and immediately reopen a durable backend's directory without
+//! racing a late write.  Pending responses (including the `Ok` answer to
+//! `Shutdown` itself) get a short, bounded best-effort flush before the
+//! remaining connections are dropped; idle and hung connections observe
+//! EOF at that point.
+//!
 //! The server is generic over its backend — `issgd db-server` hands it a
 //! [`super::MemStore`] or a [`super::durable::DurableStore`]; tests wrap
 //! either in a [`super::faulty::FaultyStore`] — so one transport serves
 //! every storage engine.
-//!
-//! The accept loop exits when any client sends `Shutdown`, letting
-//! integration tests and the `issgd db-server` subcommand terminate
-//! cleanly.  Connection reads poll at [`READ_POLL`] against the stop
-//! flag: a hung or idle client can no longer pin its handler thread
-//! forever after `Shutdown` (previously only the accept loop was
-//! unblocked by a self-connection; handler threads blocked in a frame
-//! read leaked).  Partial frames accumulate across polls, so slow-but-
-//! live clients are unaffected.
 
-use std::io::Read;
+use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::os::unix::io::AsRawFd;
 use std::sync::Arc;
 
 use anyhow::Result;
 
-use super::protocol::{write_frame, Request, Response, MAX_FRAME};
+use super::protocol::{Request, Response, MAX_FRAME};
+use super::sys;
 use super::WeightStore;
 use crate::log_debug;
 
-/// How often a blocked connection read re-checks the stop flag.
-const READ_POLL: std::time::Duration = std::time::Duration::from_millis(100);
+/// Poll timeout per loop tick.  Every event the loop reacts to arrives
+/// through a polled fd, so this is defensive liveness only (retrying
+/// flushes after transient weirdness), not a correctness knob.
+const POLL_TICK_MS: i32 = 500;
 
-/// Per-syscall write timeout.  A client that stops *reading* would
-/// otherwise block its handler in `write_frame` forever — past the stop
-/// flag, and since [`Server::serve`] joins handlers on shutdown, past the
-/// server's lifetime too.  The timeout is per `write` call, so a slowly
-/// draining but live client keeps making progress; only a fully stalled
-/// one gets its connection dropped.
-const WRITE_STALL: std::time::Duration = std::time::Duration::from_secs(5);
+/// Bound on the post-shutdown flush: how many short poll ticks pending
+/// responses get before the remaining connections are dropped anyway.
+/// Counted ticks rather than a wall-clock deadline keep the server free
+/// of `Instant::now` (the determinism lint bans it tree-wide).
+const SHUTDOWN_DRAIN_TICKS: u32 = 50;
+/// Poll timeout per shutdown-drain tick (ms); with the tick cap above the
+/// drain is bounded by ~1s of poll waiting.
+const SHUTDOWN_DRAIN_TICK_MS: i32 = 20;
+
+/// Max bytes pulled off one socket per loop tick.  Bounds both the
+/// latency one firehosing client can inflict on its neighbours and the
+/// read-buffer growth between decode passes.
+const READ_SLICE_PER_TICK: usize = 1 << 20;
+
+/// Tuning knobs for [`Server`]; `Default` matches `Server::bind`.
+#[derive(Debug, Clone)]
+pub struct ServerOptions {
+    /// A connection whose queued-but-unsent responses exceed this many
+    /// bytes is evicted (slow-client back pressure).  Must comfortably
+    /// exceed the largest single response the deployment can produce —
+    /// a full `FetchWeights` snapshot is ~24 bytes/example — since even a
+    /// prompt reader briefly queues each response it asked for.
+    pub max_write_queue: usize,
+}
+
+impl Default for ServerOptions {
+    fn default() -> ServerOptions {
+        ServerOptions {
+            max_write_queue: 64 << 20,
+        }
+    }
+}
 
 pub struct Server {
     listener: TcpListener,
     store: Arc<dyn WeightStore>,
-    stop: Arc<AtomicBool>,
+    opts: ServerOptions,
+}
+
+/// One live connection's state in the event loop.
+struct Conn {
+    stream: TcpStream,
+    /// Inbound bytes; `rpos..` is the unconsumed suffix (partial-frame
+    /// accumulation across ticks).
+    rbuf: Vec<u8>,
+    rpos: usize,
+    /// Outbound bytes; `wpos..` is the not-yet-written suffix.
+    wbuf: Vec<u8>,
+    wpos: usize,
+    /// Peer half-closed (EOF seen): answer what was already received,
+    /// flush, then close.
+    close_after_flush: bool,
+    /// Connection is finished (error, eviction, framing corruption, or
+    /// flushed after close) and will be dropped at end of tick.
+    dead: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            rbuf: Vec::new(),
+            rpos: 0,
+            wbuf: Vec::new(),
+            wpos: 0,
+            close_after_flush: false,
+            dead: false,
+        }
+    }
+
+    /// Bytes queued for the peer but not yet accepted by the socket.
+    fn pending(&self) -> usize {
+        self.wbuf.len() - self.wpos
+    }
+
+    /// Queue one response frame (length prefix + payload).
+    fn queue_response(&mut self, resp: &Response) {
+        let payload = resp.encode();
+        self.wbuf.extend((payload.len() as u32).to_le_bytes());
+        self.wbuf.extend(payload);
+    }
+
+    /// Drain the socket into `rbuf` until `WouldBlock`, EOF, or the
+    /// per-tick fairness slice is used up.
+    fn fill_read_buf(&mut self) {
+        let mut scratch = [0u8; 64 * 1024];
+        let mut taken = 0usize;
+        loop {
+            match self.stream.read(&mut scratch) {
+                Ok(0) => {
+                    self.close_after_flush = true;
+                    return;
+                }
+                Ok(n) => {
+                    self.rbuf.extend(&scratch[..n]);
+                    taken += n;
+                    if taken >= READ_SLICE_PER_TICK {
+                        return;
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    log_debug!("db", "read error, dropping connection: {e}");
+                    self.dead = true;
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Write as much queued output as the socket will take right now.
+    fn flush_write_buf(&mut self) {
+        while self.pending() > 0 {
+            match self.stream.write(&self.wbuf[self.wpos..]) {
+                Ok(0) => {
+                    self.dead = true;
+                    return;
+                }
+                Ok(n) => self.wpos += n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    log_debug!("db", "write error, dropping connection: {e}");
+                    self.dead = true;
+                    return;
+                }
+            }
+        }
+        if self.pending() == 0 {
+            self.wbuf.clear();
+            self.wpos = 0;
+            if self.close_after_flush {
+                self.dead = true;
+            }
+        }
+    }
+
+    /// Drop the consumed prefix of the read buffer so it doesn't grow
+    /// without bound across pipelined batches.
+    fn compact_read_buf(&mut self) {
+        if self.rpos > 0 {
+            self.rbuf.drain(..self.rpos);
+            self.rpos = 0;
+        }
+    }
 }
 
 impl Server {
-    /// Bind to `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port).
+    /// Bind to `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) with
+    /// default options.
     pub fn bind(addr: &str, store: Arc<dyn WeightStore>) -> Result<Server> {
+        Server::bind_with_options(addr, store, ServerOptions::default())
+    }
+
+    /// Bind with explicit [`ServerOptions`] (tests use a tiny
+    /// `max_write_queue` to exercise slow-client eviction).
+    pub fn bind_with_options(
+        addr: &str,
+        store: Arc<dyn WeightStore>,
+        opts: ServerOptions,
+    ) -> Result<Server> {
         let listener = TcpListener::bind(addr)?;
         Ok(Server {
             listener,
             store,
-            stop: Arc::new(AtomicBool::new(false)),
+            opts,
         })
     }
 
@@ -60,48 +238,112 @@ impl Server {
         Ok(self.listener.local_addr()?)
     }
 
-    /// Serve until a client sends `Shutdown`.  Each connection gets its own
-    /// thread; per-request errors are answered as `Response::Err`, i/o
-    /// errors drop the connection (the peer retries or dies, its choice).
+    /// Run the event loop until a client sends `Shutdown`.
     ///
-    /// On shutdown every handler thread is joined before returning (each
-    /// notices the stop flag within one [`READ_POLL`]), so when `serve`
-    /// returns no handler still holds a store handle — a caller may drop
-    /// the server and immediately reopen a durable backend's directory
-    /// without racing a late write from a lingering connection.
+    /// Per-request errors are answered as `Response::Err`; i/o errors and
+    /// framing corruption drop the offending connection only.  When this
+    /// returns, every connection has been dropped and nothing still holds
+    /// the store handle through the server (see module docs).
     pub fn serve(self) -> Result<()> {
-        // The accept loop is unblocked on shutdown by a self-connection
-        // made from the handler thread that received Shutdown.
-        let mut handlers: Vec<std::thread::JoinHandle<()>> = Vec::new();
-        for conn in self.listener.incoming() {
-            if self.stop.load(Ordering::SeqCst) {
-                break;
+        self.listener.set_nonblocking(true)?;
+        let mut conns: Vec<Conn> = Vec::new();
+        let mut fds: Vec<sys::PollFd> = Vec::new();
+        // Single-threaded loop, so plain locals — not atomics — carry the
+        // stop flag and the protocol-error count.
+        let mut stop = false;
+        let mut protocol_errors: u64 = 0;
+
+        while !stop {
+            fds.clear();
+            fds.push(sys::PollFd::new(self.listener.as_raw_fd(), sys::POLLIN));
+            for c in &conns {
+                let mut events = sys::POLLIN;
+                if c.pending() > 0 {
+                    events |= sys::POLLOUT;
+                }
+                fds.push(sys::PollFd::new(c.stream.as_raw_fd(), events));
             }
-            // Reap finished handlers as we go (dropping a finished
-            // JoinHandle detaches and frees the thread) so a long-lived
-            // server does not accumulate one joinable stack per
-            // connection it ever served.
-            handlers.retain(|h| !h.is_finished());
-            let stream = match conn {
-                Ok(s) => s,
+            sys::poll(&mut fds, POLL_TICK_MS)?;
+
+            // Service existing connections first: `fds[1..]` maps onto the
+            // first `fds.len() - 1` conns, and accepting first would push
+            // unpolled entries past that prefix.
+            let polled = fds.len() - 1;
+            for (i, conn) in conns.iter_mut().enumerate().take(polled) {
+                let revents = fds[i + 1].revents;
+                if revents & (sys::POLLIN | sys::POLL_ANY_ERR) != 0 {
+                    conn.fill_read_buf();
+                    if !conn.dead {
+                        process_frames(conn, self.store.as_ref(), &mut stop, &mut protocol_errors);
+                    }
+                }
+                if !conn.dead && (conn.pending() > 0 || conn.close_after_flush) {
+                    // Flush eagerly: freshly queued responses shouldn't
+                    // wait a poll tick for a POLLOUT edge.
+                    conn.flush_write_buf();
+                }
+                if !conn.dead && conn.pending() > self.opts.max_write_queue {
+                    log_debug!(
+                        "db",
+                        "evicting slow client: {} bytes pending (cap {})",
+                        conn.pending(),
+                        self.opts.max_write_queue
+                    );
+                    conn.dead = true;
+                }
+            }
+            conns.retain(|c| !c.dead);
+            if fds[0].revents != 0 {
+                self.accept_ready(&mut conns);
+            }
+        }
+
+        self.drain_after_shutdown(conns);
+        Ok(())
+    }
+
+    /// Accept until `WouldBlock`; new sockets become nonblocking conns.
+    fn accept_ready(&self, conns: &mut Vec<Conn>) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    stream.set_nodelay(true).ok();
+                    conns.push(Conn::new(stream));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
                 Err(e) => {
                     log_debug!("db", "accept error: {e}");
-                    continue;
+                    return;
                 }
-            };
-            let store = Arc::clone(&self.store);
-            let stop = Arc::clone(&self.stop);
-            let addr = self.local_addr()?;
-            handlers.push(std::thread::spawn(move || {
-                if let Err(e) = handle_connection(stream, store.as_ref(), &stop, addr) {
-                    log_debug!("db", "connection ended: {e}");
-                }
-            }));
+            }
         }
-        for h in handlers {
-            let _ = h.join();
+    }
+
+    /// Best-effort bounded flush of queued responses after `Shutdown` —
+    /// most importantly the `Ok` owed to whoever requested it — then drop
+    /// everything.
+    fn drain_after_shutdown(&self, mut conns: Vec<Conn>) {
+        let mut fds: Vec<sys::PollFd> = Vec::new();
+        for _ in 0..SHUTDOWN_DRAIN_TICKS {
+            conns.retain(|c| !c.dead && c.pending() > 0);
+            if conns.is_empty() {
+                return;
+            }
+            fds.clear();
+            for c in &conns {
+                fds.push(sys::PollFd::new(c.stream.as_raw_fd(), sys::POLLOUT));
+            }
+            if sys::poll(&mut fds, SHUTDOWN_DRAIN_TICK_MS).is_err() {
+                return;
+            }
+            for conn in conns.iter_mut() {
+                conn.flush_write_buf();
+            }
         }
-        Ok(())
     }
 
     /// Serve in a background thread; returns `(addr, join-handle)`.
@@ -116,98 +358,58 @@ impl Server {
     }
 }
 
-/// Outcome of one stoppable frame read.
-enum FrameRead {
-    Frame(Vec<u8>),
-    /// Peer closed (cleanly or mid-frame): drop the connection.
-    Closed,
-    /// The stop flag flipped: release the handler thread.
-    Stopped,
-}
-
-fn handle_connection(
-    mut stream: TcpStream,
+/// Decode and dispatch every complete frame in `conn`'s read buffer
+/// (request pipelining), queueing responses in request order.
+fn process_frames(
+    conn: &mut Conn,
     store: &dyn WeightStore,
-    stop: &AtomicBool,
-    self_addr: std::net::SocketAddr,
-) -> Result<()> {
-    stream.set_nodelay(true).ok();
-    // Poll reads so this thread observes `stop` even while idle or facing
-    // a hung client — the handler-leak fix (see module docs) — and bound
-    // write stalls so a client that stops reading cannot pin us either.
-    stream.set_read_timeout(Some(READ_POLL)).ok();
-    stream.set_write_timeout(Some(WRITE_STALL)).ok();
+    stop: &mut bool,
+    protocol_errors: &mut u64,
+) {
     loop {
-        let frame = match read_frame_stoppable(&mut stream, stop)? {
-            FrameRead::Frame(f) => f,
-            FrameRead::Closed | FrameRead::Stopped => return Ok(()),
-        };
-        let req = Request::decode(&frame)?;
-        if matches!(req, Request::Shutdown) {
-            stop.store(true, Ordering::SeqCst);
-            write_frame(&mut stream, &Response::Ok.encode())?;
-            // Poke the accept loop so it observes the stop flag.
-            let _ = TcpStream::connect(self_addr);
-            return Ok(());
+        let avail = conn.rbuf.len() - conn.rpos;
+        if avail < 4 {
+            break;
         }
-        let resp = dispatch(store, req);
-        write_frame(&mut stream, &resp.encode())?;
-    }
-}
-
-/// Length-prefixed frame read that re-checks `stop` on every read-timeout
-/// tick.  Partial data accumulates across ticks, so a slow client's frame
-/// survives any number of polls.
-fn read_frame_stoppable(stream: &mut TcpStream, stop: &AtomicBool) -> Result<FrameRead> {
-    let mut len_buf = [0u8; 4];
-    match read_full_stoppable(stream, &mut len_buf, stop)? {
-        FullRead::Done => {}
-        FullRead::Closed => return Ok(FrameRead::Closed),
-        FullRead::Stopped => return Ok(FrameRead::Stopped),
-    }
-    let len = u32::from_le_bytes(len_buf) as usize;
-    anyhow::ensure!(len <= MAX_FRAME, "frame length {len} exceeds cap");
-    let mut payload = vec![0u8; len];
-    match read_full_stoppable(stream, &mut payload, stop)? {
-        FullRead::Done => Ok(FrameRead::Frame(payload)),
-        FullRead::Closed => Ok(FrameRead::Closed),
-        FullRead::Stopped => Ok(FrameRead::Stopped),
-    }
-}
-
-enum FullRead {
-    Done,
-    Closed,
-    Stopped,
-}
-
-fn read_full_stoppable(
-    stream: &mut TcpStream,
-    buf: &mut [u8],
-    stop: &AtomicBool,
-) -> Result<FullRead> {
-    let mut filled = 0usize;
-    while filled < buf.len() {
-        if stop.load(Ordering::SeqCst) {
-            return Ok(FullRead::Stopped);
+        let len_bytes: [u8; 4] = conn.rbuf[conn.rpos..conn.rpos + 4].try_into().unwrap();
+        let len = u32::from_le_bytes(len_bytes) as usize;
+        if len > MAX_FRAME {
+            // Framing-level corruption: the stream offset itself is no
+            // longer trustworthy, so this connection cannot be saved.
+            log_debug!("db", "frame length {len} exceeds cap, dropping connection");
+            conn.dead = true;
+            break;
         }
-        match stream.read(&mut buf[filled..]) {
-            Ok(0) => return Ok(FullRead::Closed),
-            Ok(n) => filled += n,
-            Err(e)
-                if e.kind() == std::io::ErrorKind::WouldBlock
-                    || e.kind() == std::io::ErrorKind::TimedOut
-                    || e.kind() == std::io::ErrorKind::Interrupted =>
-            {
-                continue
+        if avail < 4 + len {
+            break;
+        }
+        let frame = &conn.rbuf[conn.rpos + 4..conn.rpos + 4 + len];
+        match Request::decode(frame) {
+            Ok(Request::Shutdown) => {
+                conn.rpos += 4 + len;
+                conn.queue_response(&Response::Ok);
+                conn.close_after_flush = true;
+                *stop = true;
+                break;
             }
-            Err(e) => return Err(e.into()),
+            Ok(req) => {
+                let resp = dispatch(store, req, *protocol_errors);
+                conn.rpos += 4 + len;
+                conn.queue_response(&resp);
+            }
+            Err(e) => {
+                // Well-framed but undecodable: answer in-band and keep
+                // the connection (the frame boundary is still sound).
+                *protocol_errors += 1;
+                conn.rpos += 4 + len;
+                conn.queue_response(&Response::Err(format!("protocol error: {e}")));
+            }
         }
     }
-    Ok(FullRead::Done)
+    conn.compact_read_buf();
 }
 
-fn dispatch(store: &dyn WeightStore, req: Request) -> Response {
+fn dispatch(store: &dyn WeightStore, req: Request, protocol_errors: u64) -> Response {
     let result: Result<Response> = (|| {
         Ok(match req {
             Request::PushParams { version, bytes } => {
@@ -252,7 +454,14 @@ fn dispatch(store: &dyn WeightStore, req: Request) -> Response {
                 Response::Ok
             }
             Request::Now => Response::Now(store.now()?),
-            Request::Stats => Response::Stats(store.stats()?),
+            Request::Stats => {
+                let mut stats = store.stats()?;
+                // The raw backends can't see transport-level problems;
+                // the server folds its own count in here (same pattern
+                // as the driver-folded `push_calls_saved`).
+                stats.protocol_errors = protocol_errors;
+                Response::Stats(stats)
+            }
             Request::Shutdown => unreachable!("handled by caller"),
         })
     })();

@@ -1,0 +1,119 @@
+//! Thin zero-dependency `poll(2)` shim for the event-loop server.
+//!
+//! tokio/mio (and even the `libc` crate) are unavailable offline, so the
+//! handful of constants and the one syscall wrapper the server needs are
+//! declared here directly.  `poll(2)` is POSIX and the constant values
+//! below are identical on every unix this crate builds on (Linux, macOS,
+//! BSDs); the only platform split is the width of `nfds_t`.
+//!
+//! Kept deliberately minimal: one struct, five event bits, one function.
+//! If the per-tick O(connections) pollfd scan ever becomes the measured
+//! bottleneck, this is the seam where an epoll/kqueue backend slots in
+//! without touching the server's state machine.
+
+use std::io;
+use std::os::unix::io::RawFd;
+
+/// `struct pollfd` from `<poll.h>` — layout is fixed by POSIX.
+#[repr(C)]
+#[derive(Debug, Clone, Copy)]
+pub struct PollFd {
+    pub fd: RawFd,
+    pub events: i16,
+    pub revents: i16,
+}
+
+impl PollFd {
+    pub fn new(fd: RawFd, events: i16) -> PollFd {
+        PollFd { fd, events, revents: 0 }
+    }
+}
+
+/// Data may be read without blocking.
+pub const POLLIN: i16 = 0x001;
+/// Data may be written without blocking.
+pub const POLLOUT: i16 = 0x004;
+/// Error condition (revents only).
+pub const POLLERR: i16 = 0x008;
+/// Peer hung up (revents only).
+pub const POLLHUP: i16 = 0x010;
+/// Invalid fd (revents only).
+pub const POLLNVAL: i16 = 0x020;
+
+/// Any revents bit that means "this socket needs service even if you were
+/// only waiting for readability".
+pub const POLL_ANY_ERR: i16 = POLLERR | POLLHUP | POLLNVAL;
+
+#[cfg(target_os = "linux")]
+type NfdsT = u64;
+#[cfg(not(target_os = "linux"))]
+type NfdsT = u32;
+
+extern "C" {
+    #[link_name = "poll"]
+    fn c_poll(fds: *mut PollFd, nfds: NfdsT, timeout_ms: i32) -> i32;
+}
+
+/// Block until any fd in `fds` is ready or `timeout_ms` elapses (-1 =
+/// forever).  Returns the number of ready fds (0 = timeout); `EINTR` is
+/// retried internally so callers never see a spurious error from a
+/// signal.
+pub fn poll(fds: &mut [PollFd], timeout_ms: i32) -> io::Result<usize> {
+    loop {
+        let rc = unsafe { c_poll(fds.as_mut_ptr(), fds.len() as NfdsT, timeout_ms) };
+        if rc >= 0 {
+            return Ok(rc as usize);
+        }
+        let err = io::Error::last_os_error();
+        if err.kind() != io::ErrorKind::Interrupted {
+            return Err(err);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+    use std::net::{TcpListener, TcpStream};
+    use std::os::unix::io::AsRawFd;
+
+    #[test]
+    fn poll_times_out_on_idle_socket() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let _client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (server_side, _) = listener.accept().unwrap();
+        let mut fds = [PollFd::new(server_side.as_raw_fd(), POLLIN)];
+        let n = poll(&mut fds, 10).unwrap();
+        assert_eq!(n, 0, "idle socket reported ready");
+        assert_eq!(fds[0].revents, 0);
+    }
+
+    #[test]
+    fn poll_reports_readable_and_writable() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let mut client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (server_side, _) = listener.accept().unwrap();
+        client.write_all(b"x").unwrap();
+        // The byte needs a moment to cross loopback; poll blocks for it.
+        let mut fds = [PollFd::new(server_side.as_raw_fd(), POLLIN | POLLOUT)];
+        let n = poll(&mut fds, 1000).unwrap();
+        assert!(n >= 1);
+        assert_ne!(fds[0].revents & POLLIN, 0, "written byte not readable");
+        assert_ne!(fds[0].revents & POLLOUT, 0, "fresh socket not writable");
+    }
+
+    #[test]
+    fn poll_reports_hangup_or_eof() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (server_side, _) = listener.accept().unwrap();
+        drop(client);
+        let mut fds = [PollFd::new(server_side.as_raw_fd(), POLLIN)];
+        let n = poll(&mut fds, 1000).unwrap();
+        assert_eq!(n, 1);
+        // A closed peer is either POLLIN-with-EOF or POLLHUP depending on
+        // the platform; both mean "service this socket".
+        assert_ne!(fds[0].revents & (POLLIN | POLL_ANY_ERR), 0);
+    }
+}

@@ -375,6 +375,385 @@ fn durable_store_over_tcp_resumes_across_server_restarts() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+// ---------------------------------------------------------------------------
+// Event-loop regressions: desync poisoning, timeouts, malformed frames,
+// pipelining, connection-scale soak, slow-reader eviction.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn client_poisons_desynced_connection_and_reconnects() {
+    // The desync bug: a mid-call i/o error used to leave the shared stream
+    // with half a response in flight; the next call would pair its request
+    // with the stale bytes and return another call's answer.  The client
+    // must poison the connection instead and reconnect.
+    use issgd::weightstore::client::ClientOptions;
+    use issgd::weightstore::protocol::{read_frame, write_frame, Response};
+    use std::io::Write;
+    use std::time::Duration;
+
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let (tx, rx) = std::sync::mpsc::channel::<()>();
+    let fake = std::thread::spawn(move || {
+        // Connection 1: read the request, answer with HALF a frame
+        // carrying a stale cursor Some(7), then stall.
+        let (mut s1, _) = listener.accept().unwrap();
+        let _req = read_frame(&mut s1).unwrap();
+        let payload = Response::Cursor(Some(7)).encode();
+        let mut frame = (payload.len() as u32).to_le_bytes().to_vec();
+        frame.extend_from_slice(&payload);
+        let half = frame.len() / 2;
+        s1.write_all(&frame[..half]).unwrap();
+        s1.flush().unwrap();
+        // Once the client has timed out, complete the stale frame: a
+        // non-poisoning client would read it as the answer to its NEXT
+        // request and report Some(7).
+        rx.recv().unwrap();
+        let _ = s1.write_all(&frame[half..]);
+        // Connection 2: a well-behaved responder with the true value.
+        let (mut s2, _) = listener.accept().unwrap();
+        while let Ok(_req) = read_frame(&mut s2) {
+            write_frame(&mut s2, &Response::Cursor(Some(42)).encode()).unwrap();
+        }
+    });
+
+    let opts = ClientOptions {
+        io_timeout: Duration::from_millis(200),
+        connect_attempts: 1,
+        ..ClientOptions::default()
+    };
+    let c = Client::connect_with(&addr, opts).unwrap();
+    // Mid-frame stall: the call errors out instead of hanging, and the
+    // connection is poisoned.
+    let err = c.load_cursor("x").unwrap_err();
+    assert!(format!("{err:#}").contains("poisoned"), "{err:#}");
+    tx.send(()).unwrap();
+    // The next call transparently reconnects and gets the *correct*
+    // answer — not the stale Some(7) now sitting in the first stream.
+    assert_eq!(c.load_cursor("x").unwrap(), Some(42));
+    drop(c);
+    fake.join().unwrap();
+}
+
+#[test]
+fn hung_server_times_out_instead_of_blocking_forever() {
+    // The no-timeout bug: a server that accepts but never responds used to
+    // block the calling actor forever on a bare `read`.
+    use issgd::weightstore::client::ClientOptions;
+    use std::time::Duration;
+
+    // Accepts via the kernel backlog, never answers.
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let opts = ClientOptions {
+        connect_timeout: Duration::from_secs(2),
+        io_timeout: Duration::from_millis(200),
+        connect_attempts: 1,
+        ..ClientOptions::default()
+    };
+    let c = Client::connect_with(&addr, opts).unwrap();
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        tx.send(c.now().map(|_| ())).unwrap();
+    });
+    let outcome = rx
+        .recv_timeout(Duration::from_secs(5))
+        .expect("client call hung: io timeout never kicked in");
+    assert!(outcome.is_err());
+    drop(listener);
+}
+
+#[test]
+fn malformed_frame_gets_err_response_and_keeps_connection() {
+    use issgd::weightstore::protocol::{read_frame, write_frame, Request, Response};
+    use std::io::{Read, Write};
+
+    let (addr, handle) = spawn_store(4);
+    let mut s = std::net::TcpStream::connect(&addr).unwrap();
+    // Well-framed but undecodable payload (no such opcode): answered
+    // in-band, connection kept.
+    write_frame(&mut s, &[0x7f]).unwrap();
+    match Response::decode(&read_frame(&mut s).unwrap()).unwrap() {
+        Response::Err(msg) => assert!(msg.contains("protocol error"), "{msg}"),
+        other => panic!("expected Response::Err, got {other:?}"),
+    }
+    // Same connection still serves valid requests.
+    write_frame(&mut s, &Request::Now.encode()).unwrap();
+    let resp = Response::decode(&read_frame(&mut s).unwrap()).unwrap();
+    assert!(matches!(resp, Response::Now(_)), "{resp:?}");
+    // The transport folds its error count into Stats.
+    let c = Client::connect(&addr).unwrap();
+    assert_eq!(c.stats().unwrap().protocol_errors, 1);
+    // Framing-level corruption (length beyond MAX_FRAME) is different:
+    // the stream offset can't be trusted, so the connection is dropped.
+    let mut bad = std::net::TcpStream::connect(&addr).unwrap();
+    bad.write_all(&u32::MAX.to_le_bytes()).unwrap();
+    bad.set_read_timeout(Some(std::time::Duration::from_secs(10)))
+        .unwrap();
+    let mut buf = [0u8; 1];
+    match bad.read(&mut buf) {
+        Ok(0) => {} // EOF: dropped as required
+        Err(e)
+            if e.kind() == std::io::ErrorKind::WouldBlock
+                || e.kind() == std::io::ErrorKind::TimedOut =>
+        {
+            panic!("connection survived framing corruption")
+        }
+        Err(_) => {} // reset is also a drop
+        Ok(n) => panic!("expected drop, got {n} bytes"),
+    }
+    c.shutdown_server().unwrap();
+    handle.join().unwrap();
+}
+
+#[test]
+fn pipelined_requests_get_in_order_responses() {
+    use issgd::weightstore::protocol::{read_frame, Request, Response};
+    use std::io::Write;
+
+    let (addr, handle) = spawn_store(8);
+    let mut s = std::net::TcpStream::connect(&addr).unwrap();
+    let reqs = [
+        Request::SaveCursor {
+            name: "pipe".into(),
+            seq: 5,
+        },
+        Request::Now,
+        Request::LoadCursor { name: "pipe".into() },
+    ];
+    let mut batch = Vec::new();
+    for req in &reqs {
+        let p = req.encode();
+        batch.extend_from_slice(&(p.len() as u32).to_le_bytes());
+        batch.extend_from_slice(&p);
+    }
+    // One write, three frames: the server must decode all of them in this
+    // tick and answer the k-th response to the k-th request.
+    s.write_all(&batch).unwrap();
+    let r = Response::decode(&read_frame(&mut s).unwrap()).unwrap();
+    assert!(matches!(r, Response::Ok), "{r:?}");
+    let r = Response::decode(&read_frame(&mut s).unwrap()).unwrap();
+    assert!(matches!(r, Response::Now(_)), "{r:?}");
+    match Response::decode(&read_frame(&mut s).unwrap()).unwrap() {
+        Response::Cursor(cur) => assert_eq!(cur, Some(5)),
+        other => panic!("out-of-order response: {other:?}"),
+    }
+    Client::connect(&addr).unwrap().shutdown_server().unwrap();
+    handle.join().unwrap();
+}
+
+/// 256 pipelined connections hammering one event loop with mixed traffic;
+/// every client asserts the in-order response contract and that it reads
+/// back its *own* cursor, never a neighbour's.
+fn soak_event_loop(store: Arc<dyn WeightStore>) {
+    use issgd::weightstore::protocol::{read_frame, Request, Response};
+    use std::io::Write;
+
+    const CLIENTS: usize = 256;
+    const THREADS: usize = 16;
+    const PER: usize = CLIENTS / THREADS;
+    const ROUNDS: usize = 3;
+
+    let server = Server::bind("127.0.0.1:0", store).unwrap();
+    let (addr, handle) = server.serve_in_background().unwrap();
+    let addr = addr.to_string();
+    let mut joins = Vec::new();
+    for t in 0..THREADS {
+        let addr = addr.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut socks: Vec<std::net::TcpStream> = (0..PER)
+                .map(|_| {
+                    let s = std::net::TcpStream::connect(&addr).unwrap();
+                    s.set_nodelay(true).ok();
+                    s
+                })
+                .collect();
+            for round in 0..ROUNDS {
+                for (j, s) in socks.iter_mut().enumerate() {
+                    let id = t * PER + j;
+                    let name = format!("client-{id}");
+                    let seq = (round as u64 + 1) * 1_000 + id as u64;
+                    let val = (id * 8 + round) as f32;
+                    let reqs = [
+                        Request::PushWeights {
+                            start: (id * 4) as u64,
+                            param_version: round as u64 + 1,
+                            weights: vec![val; 4],
+                        },
+                        Request::FetchWeightsSince { seq: 0 },
+                        Request::SaveCursor {
+                            name: name.clone(),
+                            seq,
+                        },
+                        Request::LoadCursor { name: name.clone() },
+                        Request::Now,
+                    ];
+                    let mut batch = Vec::new();
+                    for req in &reqs {
+                        let p = req.encode();
+                        batch.extend_from_slice(&(p.len() as u32).to_le_bytes());
+                        batch.extend_from_slice(&p);
+                    }
+                    s.write_all(&batch).unwrap();
+                    let r = Response::decode(&read_frame(s).unwrap()).unwrap();
+                    assert!(matches!(r, Response::Ok), "client {id}: push ack, got {r:?}");
+                    match Response::decode(&read_frame(s).unwrap()).unwrap() {
+                        Response::WeightsDelta(d) => {
+                            assert!(d.full, "client {id}: seq-0 fetch must be full")
+                        }
+                        other => panic!("client {id}: fetch, got {other:?}"),
+                    }
+                    let r = Response::decode(&read_frame(s).unwrap()).unwrap();
+                    assert!(matches!(r, Response::Ok), "client {id}: cursor ack, got {r:?}");
+                    match Response::decode(&read_frame(s).unwrap()).unwrap() {
+                        Response::Cursor(cur) => {
+                            assert_eq!(cur, Some(seq), "client {id}: read a foreign cursor")
+                        }
+                        other => panic!("client {id}: load_cursor, got {other:?}"),
+                    }
+                    let r = Response::decode(&read_frame(s).unwrap()).unwrap();
+                    assert!(matches!(r, Response::Now(_)), "client {id}: now, got {r:?}");
+                }
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let c = Client::connect(&addr).unwrap();
+    let snap = c.fetch_weights().unwrap();
+    for id in 0..CLIENTS {
+        let expect = (id * 8 + ROUNDS - 1) as f64;
+        for k in 0..4 {
+            assert_eq!(snap.weights[id * 4 + k], expect, "client {id} lost its final write");
+        }
+    }
+    let stats = c.stats().unwrap();
+    assert_eq!(stats.weight_pushes, (CLIENTS * ROUNDS) as u64);
+    assert_eq!(stats.protocol_errors, 0);
+    c.shutdown_server().unwrap();
+    handle.join().unwrap();
+}
+
+#[test]
+fn soak_256_clients_over_memstore() {
+    soak_event_loop(Arc::new(MemStore::new(1024, 0.0)));
+}
+
+#[test]
+fn soak_256_clients_over_durable_store() {
+    use issgd::weightstore::durable::{DurableOptions, DurableStore};
+    let dir = std::env::temp_dir().join(format!("issgd-tcp-soak-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    soak_event_loop(Arc::new(
+        DurableStore::create(&dir, 1024, 0.0, DurableOptions::default()).unwrap(),
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn slow_reader_is_evicted_but_prompt_clients_survive() {
+    use issgd::weightstore::protocol::{Request, Response};
+    use issgd::weightstore::server::ServerOptions;
+    use std::io::{Read, Write};
+
+    let n = 64_000usize;
+    let server = Server::bind_with_options(
+        "127.0.0.1:0",
+        Arc::new(MemStore::new(n, 1.0)),
+        ServerOptions {
+            max_write_queue: 256 << 10,
+        },
+    )
+    .unwrap();
+    let (addr, handle) = server.serve_in_background().unwrap();
+    let addr = addr.to_string();
+
+    // One full-snapshot response is ~24 B/weight — far over the cap.
+    let frame_len = 4 + Response::Weights(MemStore::new(n, 1.0).fetch_weights().unwrap())
+        .encode()
+        .len();
+
+    let mut slow = std::net::TcpStream::connect(&addr).unwrap();
+    let req = Request::FetchWeights.encode();
+    let mut batch = Vec::new();
+    for _ in 0..10 {
+        batch.extend_from_slice(&(req.len() as u32).to_le_bytes());
+        batch.extend_from_slice(&req);
+    }
+    slow.write_all(&batch).unwrap();
+    // Never read.  The queue blows past the cap, the server evicts, and
+    // draining afterwards yields only what the kernel had already
+    // buffered — far less than the 10 snapshots a live connection owes.
+    slow.set_read_timeout(Some(std::time::Duration::from_secs(30)))
+        .unwrap();
+    let mut total = 0usize;
+    let mut buf = vec![0u8; 64 << 10];
+    loop {
+        match slow.read(&mut buf) {
+            Ok(0) => break,
+            Ok(k) => total += k,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                panic!("slow reader was never evicted ({total} bytes read so far)")
+            }
+            Err(_) => break, // reset is eviction too
+        }
+    }
+    assert!(
+        total < 5 * frame_len,
+        "evicted connection still received {total} of {} queued bytes",
+        10 * frame_len
+    );
+
+    // Eviction killed one connection, not the loop: prompt clients are
+    // still served.
+    let c = Client::connect(&addr).unwrap();
+    c.now().unwrap();
+    assert_eq!(c.fetch_weights().unwrap().weights.len(), n);
+    c.shutdown_server().unwrap();
+    handle.join().unwrap();
+}
+
+#[test]
+fn client_pool_shares_connections_across_threads() {
+    use issgd::weightstore::client::ClientPool;
+
+    let (addr, handle) = spawn_store(32);
+    let pool = Arc::new(ClientPool::new(&addr, 3));
+    // More threads than pooled connections: every op checks a connection
+    // out, runs exactly one request/response, and checks it back in.
+    let mut joins = Vec::new();
+    for t in 0..8usize {
+        let pool = Arc::clone(&pool);
+        joins.push(std::thread::spawn(move || {
+            for i in 0..10usize {
+                pool.push_weights(t * 4, &[t as f32 + 1.0], (i + 1) as u64)
+                    .unwrap();
+                let d = pool.fetch_weights_since(0).unwrap();
+                assert!(d.full);
+                assert_eq!(pool.load_cursor("missing").unwrap(), None);
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let stats = pool.stats().unwrap();
+    assert_eq!(stats.weight_pushes, 80);
+    // Same-cursor fetches may coalesce into shared round-trips, so the
+    // server-side count can be below the 80 issued — never above.
+    assert!(
+        (1..=80u64).contains(&stats.delta_fetches),
+        "delta_fetches = {}",
+        stats.delta_fetches
+    );
+    Client::connect(&addr).unwrap().shutdown_server().unwrap();
+    handle.join().unwrap();
+}
+
 #[test]
 fn shutdown_releases_idle_and_hung_connections() {
     // The handler-leak fix: connection reads poll the stop flag, so after
