@@ -181,7 +181,7 @@ impl Harness {
         println!("== {} done: {} benchmarks ==", self.group, self.results.len());
         if let Some(path) = &self.json_path {
             if let Err(e) = append_json(path, &self.group, &self.results) {
-                eprintln!("bench: could not write {}: {e}", path.display());
+                crate::log_warn!("bench", "could not write {}: {e}", path.display());
             } else {
                 println!("== {} results appended to {} ==", self.group, path.display());
             }

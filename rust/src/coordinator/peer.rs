@@ -214,6 +214,7 @@ impl PeerState {
                         Ok(()) => self.saved_cursor = cursor,
                         Err(e) => {
                             self.store_errors += 1;
+                            crate::telemetry::counter("peer.store_errors").inc();
                             crate::log_warn!(
                                 "peer",
                                 "peer-{} cursor save failed (continuing): {e}",
@@ -306,9 +307,12 @@ impl PeerState {
                 Ok(()) => {
                     // One call covered the whole run.
                     self.push_calls_saved += self.run_buf.len() as u64 - 1;
+                    crate::telemetry::counter("peer.push_calls_saved")
+                        .add(self.run_buf.len() as u64 - 1);
                 }
                 Err(e) => {
                     self.store_errors += 1;
+                    crate::telemetry::counter("peer.store_errors").inc();
                     crate::log_warn!(
                         "peer",
                         "peer-{} weight push failed (run queued for retry): {e}",

@@ -471,6 +471,7 @@ pub fn run_peer_live(cfg: &RunConfig, opts: &PeerLiveOptions) -> Result<AsgdOutc
         }
         report.stats.final_cursor = prop.cursor();
         report.stats.cursor_lag = top_seq.saturating_sub(before);
+        crate::telemetry::gauge("peer.cursor_lag").set(report.stats.cursor_lag as f64);
         if !drained {
             log_warn!(
                 "peer-driver",

@@ -680,6 +680,7 @@ impl ProposalMaintainer {
                 && delta.stamps.len() == delta.param_versions.len(),
             "delta columns disagree on length"
         );
+        let absorb = crate::telemetry::start();
         self.now = self.now.max(now);
         if delta.full {
             // Reuse the canonical delta application (it re-validates and
@@ -707,6 +708,8 @@ impl ProposalMaintainer {
             self.last_changes = delta.len() + evicted;
         }
         self.cursor = delta.seq;
+        crate::telemetry::histogram("proposal.absorb_ns").record_elapsed(&absorb);
+        crate::telemetry::gauge("proposal.ess").set(self.ess_ratio());
         Ok(())
     }
 

@@ -44,6 +44,7 @@ pub mod metrics;
 pub mod model;
 pub mod runtime;
 pub mod sampler;
+pub mod telemetry;
 pub mod util;
 pub mod variance;
 pub mod weightstore;

@@ -5,6 +5,7 @@
 //!   db-server    run the weight-store "database" actor on a TCP port
 //!   worker       run a standalone scoring worker against a remote store
 //!   experiment   regenerate a paper figure/table (fig2|fig3|fig4|table1|staleness|strategy-matrix|all)
+//!   metrics      scrape a live db-server's telemetry registry
 //!   info         print artifact/manifest information
 //!
 //! Examples:
@@ -63,6 +64,8 @@ SUBCOMMANDS
                                     recovered — snapshot + log replay — on later runs)
                   --write-queue-mb N  per-connection queued-response cap before a
                                     slow client is evicted (default 64)
+                  --telemetry-dump PATH  append a JSONL telemetry snapshot
+                                    to PATH about once a second (flight recorder)
   worker        standalone scoring worker against a remote store
                   --store ADDR --worker-id I --workers N --model NAME
                   --n-examples N --seed N
@@ -71,6 +74,9 @@ SUBCOMMANDS
                   --seeds N --steps N --n-examples N --model NAME
                   --live-peers      asgd arms run the live threaded peer mode
                   --store-path DIR  (with --live-peers) durable store per arm under DIR
+  metrics       scrape a live db-server's telemetry (counters, gauges,
+                latency histograms with p50/p99)
+                  issgd metrics 127.0.0.1:7070 [--format prom|json]
   plot          render a result CSV as a terminal chart
                   issgd plot results/fig4b_sqrt_trace.csv [--log-y] [--width N] [--height N]
   info          print manifest info for --model
@@ -79,7 +85,7 @@ Global: --log-level error|warn|info|debug|trace  --results DIR";
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     if let Err(e) = dispatch(&argv) {
-        eprintln!("error: {e:#}");
+        issgd::log_error!("cli", "{e:#}");
         std::process::exit(1);
     }
 }
@@ -88,7 +94,7 @@ fn value_opts() -> Vec<&'static str> {
     let mut opts = RunConfig::CLI_OPTS.to_vec();
     opts.extend([
         "log-level", "addr", "store", "store-path", "worker-id", "seeds", "results",
-        "throttle-ms", "width", "height", "write-queue-mb",
+        "throttle-ms", "width", "height", "write-queue-mb", "telemetry-dump", "format",
     ]);
     opts
 }
@@ -115,6 +121,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "db-server" => cmd_db_server(&args),
         "worker" => cmd_worker(&args),
         "experiment" => cmd_experiment(&args),
+        "metrics" => cmd_metrics(&args),
         "plot" => cmd_plot(&args),
         "info" => cmd_info(&args),
         "help" | "--help" => {
@@ -275,14 +282,14 @@ fn cmd_db_server(args: &Args) -> Result<()> {
         }
         None => Arc::new(MemStore::new(n_weights, init)),
     };
-    // Slow-client eviction cap for the event loop (bytes of queued
+    let mut opts = issgd::weightstore::server::ServerOptions::default();
+    // Slow-client eviction cap for the event loop (MiB of queued
     // responses per connection); 0 picks the default.
-    let opts = match args.get_parse("write-queue-mb", 0usize)? {
-        0 => issgd::weightstore::server::ServerOptions::default(),
-        mb => issgd::weightstore::server::ServerOptions {
-            max_write_queue: mb << 20,
-        },
-    };
+    match args.get_parse("write-queue-mb", 0usize)? {
+        0 => {}
+        mb => opts.max_write_queue = mb << 20,
+    }
+    opts.telemetry_dump = args.get("telemetry-dump").map(std::path::PathBuf::from);
     let server = Server::bind_with_options(addr, store, opts)?;
     log_info!(
         "db",
@@ -290,6 +297,31 @@ fn cmd_db_server(args: &Args) -> Result<()> {
         server.local_addr()?
     );
     server.serve()
+}
+
+/// Scrape a live db-server's telemetry registry (`FetchMetrics` opcode)
+/// and print it as a Prometheus-style exposition (default) or pretty
+/// JSON (`--format json`).
+fn cmd_metrics(args: &Args) -> Result<()> {
+    let addr = match args.positional().get(1) {
+        Some(a) => a.as_str(),
+        None => args.require("store").map_err(|e| anyhow::anyhow!(e))?,
+    };
+    let client = issgd::weightstore::client::Client::connect(addr)?;
+    let text = client.fetch_metrics()?;
+    match args.get_or("format", "prom") {
+        "prom" => {
+            let snap = issgd::telemetry::Snapshot::from_json_str(&text)?;
+            print!("{}", snap.to_prometheus());
+        }
+        "json" => {
+            let parsed = issgd::util::json::Json::parse(&text)
+                .map_err(|e| anyhow::anyhow!("bad metrics payload: {e}"))?;
+            println!("{}", parsed.to_pretty());
+        }
+        other => bail!("unknown metrics format {other:?} (expected prom|json)"),
+    }
+    Ok(())
 }
 
 fn cmd_worker(args: &Args) -> Result<()> {

@@ -1,0 +1,678 @@
+//! Process-wide telemetry: counters, gauges and log2-bucket latency
+//! histograms behind one registry, scrapeable over the wire.
+//!
+//! analyze: allow-module(wallclock): latency histograms and the flight
+//! recorder time wall clock by design; nothing here feeds back into
+//! training decisions, so virtual-time determinism is unaffected
+//!
+//! The paper's claim is operational — importance sampling has to win
+//! *"even in a context where the cost of synchronization across machines
+//! cannot be ignored"* — so that cost must be observable on a live
+//! system, not just in post-mortem `BENCH_*` artifacts.  This module is
+//! the repo's `prometheus`/`metrics`-crate substitute (those are
+//! unavailable offline): a zero-dependency, process-wide registry that
+//! the hot paths bump through lock-free atomics and that `issgd metrics
+//! <addr>` scrapes from a live `db-server` via the `FetchMetrics` opcode.
+//!
+//! # Metric kinds
+//!
+//! * [`Counter`] — monotone `u64` (`server.evictions`).
+//! * [`Gauge`] — last-written `f64` (`proposal.ess`, `compact.floor`).
+//! * [`Histogram`] — 64 fixed log2 buckets plus exact count/sum/max;
+//!   recording is a few relaxed atomic ops, no allocation, and p50/p99
+//!   are derived at snapshot time from the bucket counts (upper-bound
+//!   estimates, exact `max`).
+//!
+//! # Naming scheme
+//!
+//! Dotted `subsystem.metric` names, `_ns` suffix for nanosecond
+//! histograms: `server.tick_ns`, `journal.fsync_ns`, `compact.floor`,
+//! `client.reconnects`, `pool.coalesced_fetches`, `proposal.ess`,
+//! `peer.cursor_lag`, …  The canonical store-side set is listed in
+//! [`STORE_METRICS`] and pre-registered by the server so a scrape always
+//! exposes the full schema, even before the first event.
+//!
+//! # How to add a metric
+//!
+//! Call [`counter`]/[`gauge`]/[`histogram`] with a new dotted name at the
+//! instrumentation site — first use registers it (the handle is
+//! `&'static`; cache it in a loop-local when the site is per-tick hot).
+//! Timing uses [`start`]/[`Stopwatch`] so the *call site* never touches
+//! `Instant::now` — the wallclock pragma policy is that the determinism
+//! lint's waiver lives here, on this module, and instrumented files stay
+//! pragma-free.  If the metric belongs to the store process, add it to
+//! [`STORE_METRICS`] so scrapes expose it from boot.
+//!
+//! # Registry vs the per-instance ad-hoc structs
+//!
+//! `StoreStats`, client `Stats`, `FaultStats` and `PeerStats` remain the
+//! *per-instance* views their callers assert on; their increment sites
+//! dual-write into this registry, which accumulates the *process-wide*
+//! totals that one snapshot reports together.
+//!
+//! # Export formats
+//!
+//! [`Snapshot::to_json`] is the canonical machine format (the
+//! `FetchMetrics` payload and the `--telemetry-dump` JSONL lines);
+//! [`Snapshot::to_prometheus`] renders the same snapshot as a
+//! Prometheus-style text exposition (`issgd metrics` default).  Counts
+//! ride in JSON `f64`s, exact up to 2^53 — beyond any plausible run.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Log2 bucket count: bucket `i` holds values whose bit length is `i`
+/// (bucket 0 = zero, bucket `i` = `[2^(i-1), 2^i)`), with everything of
+/// 63+ bits clamped into the last bucket.
+pub const HIST_BUCKETS: usize = 64;
+
+/// Canonical store-process metric names, pre-registered by the server at
+/// boot ([`register_store_metrics`]) so every scrape and flight-recorder
+/// line carries the full schema even before the first event.
+/// `(name, kind)` with kind `c`ounter / `g`auge / `h`istogram.
+pub const STORE_METRICS: &[(&str, char)] = &[
+    ("server.tick_ns", 'h'),
+    ("server.evictions", 'c'),
+    ("server.protocol_errors", 'c'),
+    ("journal.fsync_ns", 'h'),
+    ("journal.bytes", 'c'),
+    ("compact.duration_ns", 'h'),
+    ("compact.floor", 'g'),
+    ("client.reconnects", 'c'),
+    ("client.protocol_errors", 'c'),
+    ("pool.coalesced_fetches", 'c'),
+    ("proposal.absorb_ns", 'h'),
+    ("proposal.ess", 'g'),
+    ("peer.cursor_lag", 'g'),
+];
+
+// ---------------------------------------------------------------------------
+// metric kinds
+// ---------------------------------------------------------------------------
+
+/// Monotone counter.  All ops are relaxed atomics: per-metric totals are
+/// exact, cross-metric consistency is best-effort (see `snapshot`).
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-written `f64` value (stored as bits in an atomic).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Fixed log2-bucket histogram: recording is 4 relaxed atomic ops and no
+/// allocation; quantiles are derived from the buckets at snapshot time.
+#[derive(Debug)]
+pub struct Histogram {
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+    buckets: [AtomicU64; HIST_BUCKETS],
+}
+
+impl Histogram {
+    fn new() -> Histogram {
+        Histogram {
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    /// Record one observation (typically nanoseconds).
+    pub fn record(&self, v: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record the elapsed time of `sw` in nanoseconds.
+    pub fn record_elapsed(&self, sw: &Stopwatch) {
+        self.record(sw.elapsed_ns());
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+}
+
+/// Bucket index of a value: its bit length, clamped into the last bucket.
+fn bucket_of(v: u64) -> usize {
+    ((64 - v.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+}
+
+/// Inclusive upper bound of bucket `i` (what quantile estimates report).
+fn bucket_upper(i: usize) -> u64 {
+    if i >= HIST_BUCKETS - 1 {
+        u64::MAX
+    } else if i == 0 {
+        0
+    } else {
+        (1u64 << i) - 1
+    }
+}
+
+// ---------------------------------------------------------------------------
+// timing without leaking Instant::now to call sites
+// ---------------------------------------------------------------------------
+
+/// A started wall-clock timer (see [`start`]).
+pub struct Stopwatch {
+    t0: Instant,
+}
+
+impl Stopwatch {
+    pub fn elapsed_ns(&self) -> u64 {
+        self.t0.elapsed().as_nanos().min(u64::MAX as u128) as u64
+    }
+}
+
+/// Start a stopwatch for a latency histogram.  Lives here (not at the
+/// instrumentation site) so the determinism lint's wallclock waiver stays
+/// confined to this module.
+pub fn start() -> Stopwatch {
+    Stopwatch { t0: Instant::now() }
+}
+
+// ---------------------------------------------------------------------------
+// registry
+// ---------------------------------------------------------------------------
+
+enum Metric {
+    Counter(&'static Counter),
+    Gauge(&'static Gauge),
+    Histogram(&'static Histogram),
+}
+
+fn registry() -> std::sync::MutexGuard<'static, BTreeMap<String, Metric>> {
+    static REGISTRY: OnceLock<Mutex<BTreeMap<String, Metric>>> = OnceLock::new();
+    // Poison-tolerant: the only panics under this lock are the kind-mismatch
+    // panics below, which never leave the map half-updated, so a poisoned
+    // guard is still safe to use (and tests exercise the panic path).
+    REGISTRY
+        .get_or_init(|| Mutex::new(BTreeMap::new()))
+        .lock()
+        .unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Counter handle for `name`, registering on first use.  Leaks one
+/// allocation per distinct name — bounded by the metric namespace.
+/// Panics if `name` is already registered as a different kind
+/// (programmer error, caught by any test touching the site).
+pub fn counter(name: &str) -> &'static Counter {
+    let mut reg = registry();
+    let entry = reg.entry(name.to_string());
+    match entry.or_insert_with(|| Metric::Counter(Box::leak(Box::default()))) {
+        Metric::Counter(c) => c,
+        _ => panic!("telemetry metric {name:?} is not a counter"),
+    }
+}
+
+/// Gauge handle for `name` (see [`counter`] for registry semantics).
+pub fn gauge(name: &str) -> &'static Gauge {
+    let mut reg = registry();
+    let entry = reg.entry(name.to_string());
+    match entry.or_insert_with(|| Metric::Gauge(Box::leak(Box::default()))) {
+        Metric::Gauge(g) => g,
+        _ => panic!("telemetry metric {name:?} is not a gauge"),
+    }
+}
+
+/// Histogram handle for `name` (see [`counter`] for registry semantics).
+pub fn histogram(name: &str) -> &'static Histogram {
+    let mut reg = registry();
+    let entry = reg.entry(name.to_string());
+    match entry.or_insert_with(|| Metric::Histogram(Box::leak(Box::new(Histogram::new())))) {
+        Metric::Histogram(h) => h,
+        _ => panic!("telemetry metric {name:?} is not a histogram"),
+    }
+}
+
+/// Pre-register the canonical store-process metrics ([`STORE_METRICS`])
+/// so scrapes expose the full schema from boot.  Idempotent.
+pub fn register_store_metrics() {
+    for &(name, kind) in STORE_METRICS {
+        match kind {
+            'c' => {
+                counter(name);
+            }
+            'g' => {
+                gauge(name);
+            }
+            _ => {
+                histogram(name);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// snapshots
+// ---------------------------------------------------------------------------
+
+/// Point-in-time copy of one histogram.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    pub count: u64,
+    pub sum: u64,
+    /// Exact maximum observed value (0 when empty).
+    pub max: u64,
+    /// Sparse `(bucket index, count)` pairs, ascending by index.
+    pub buckets: Vec<(u8, u64)>,
+}
+
+impl HistogramSnapshot {
+    /// Upper-bound quantile estimate from the log2 buckets (`q` in 0..=1).
+    /// The top bucket reports the exact `max` instead of `u64::MAX`.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for &(i, c) in &self.buckets {
+            seen += c;
+            if seen >= rank {
+                return bucket_upper(i as usize).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.5)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+}
+
+/// Point-in-time copy of the whole registry.
+///
+/// Snapshot consistency: each metric is internally coherent (a counter is
+/// one atomic read; a histogram's `count` is read before its buckets so
+/// per-bucket sums can only trail, never exceed, concurrent recording),
+/// and successive snapshots are monotone per counter/histogram.  Cross-
+/// metric alignment is best-effort — there is no global stop-the-world.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Snapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, f64>,
+    pub histograms: BTreeMap<String, HistogramSnapshot>,
+}
+
+/// Snapshot the registry (see [`Snapshot`] for consistency guarantees).
+pub fn snapshot() -> Snapshot {
+    let reg = registry();
+    let mut snap = Snapshot::default();
+    for (name, metric) in reg.iter() {
+        match metric {
+            Metric::Counter(c) => {
+                snap.counters.insert(name.clone(), c.get());
+            }
+            Metric::Gauge(g) => {
+                snap.gauges.insert(name.clone(), g.get());
+            }
+            Metric::Histogram(h) => {
+                // Concurrent records bump count before buckets, so the
+                // bucket counts read below may trail or lead this value;
+                // `quantile` tolerates both (ranks past the bucket sum
+                // fall back to the exact max).
+                let count = h.count.load(Ordering::Relaxed);
+                let sum = h.sum.load(Ordering::Relaxed);
+                let max = h.max.load(Ordering::Relaxed);
+                let mut buckets = Vec::new();
+                for (i, b) in h.buckets.iter().enumerate() {
+                    let c = b.load(Ordering::Relaxed);
+                    if c > 0 {
+                        buckets.push((i as u8, c));
+                    }
+                }
+                snap.histograms.insert(
+                    name.clone(),
+                    HistogramSnapshot {
+                        count,
+                        sum,
+                        max,
+                        buckets,
+                    },
+                );
+            }
+        }
+    }
+    snap
+}
+
+impl Snapshot {
+    /// Canonical machine format: the `FetchMetrics` payload and the
+    /// flight-recorder line.  `p50`/`p99` are included for human readers
+    /// but re-derived from the buckets on parse.
+    pub fn to_json(&self) -> Json {
+        let mut counters = BTreeMap::new();
+        for (k, &v) in &self.counters {
+            counters.insert(k.clone(), Json::Num(v as f64));
+        }
+        let mut gauges = BTreeMap::new();
+        for (k, &v) in &self.gauges {
+            gauges.insert(k.clone(), Json::Num(v));
+        }
+        let mut histograms = BTreeMap::new();
+        for (k, h) in &self.histograms {
+            let mut buckets = Vec::new();
+            for &(i, c) in &h.buckets {
+                buckets.push(Json::Arr(vec![Json::Num(i as f64), Json::Num(c as f64)]));
+            }
+            let obj = Json::obj(vec![
+                ("count", Json::Num(h.count as f64)),
+                ("sum", Json::Num(h.sum as f64)),
+                ("max", Json::Num(h.max as f64)),
+                ("p50", Json::Num(h.p50() as f64)),
+                ("p99", Json::Num(h.p99() as f64)),
+                ("buckets", Json::Arr(buckets)),
+            ]);
+            histograms.insert(k.clone(), obj);
+        }
+        Json::obj(vec![
+            ("counters", Json::Obj(counters)),
+            ("gauges", Json::Obj(gauges)),
+            ("histograms", Json::Obj(histograms)),
+        ])
+    }
+
+    /// Parse a snapshot back from [`Snapshot::to_json`] output (the
+    /// `issgd metrics` client does this to render the exposition).
+    pub fn from_json(j: &Json) -> Result<Snapshot> {
+        fn section<'a>(j: &'a Json, key: &str) -> Result<&'a BTreeMap<String, Json>> {
+            let sec = j.get(key).and_then(Json::as_obj);
+            sec.with_context(|| format!("snapshot missing {key:?}"))
+        }
+        let mut snap = Snapshot::default();
+        for (k, v) in section(j, "counters")? {
+            let v = v.as_f64().with_context(|| format!("counter {k:?}"))?;
+            snap.counters.insert(k.clone(), v as u64);
+        }
+        for (k, v) in section(j, "gauges")? {
+            let v = v.as_f64().with_context(|| format!("gauge {k:?}"))?;
+            snap.gauges.insert(k.clone(), v);
+        }
+        for (k, v) in section(j, "histograms")? {
+            let mut buckets = Vec::new();
+            for pair in v.req_arr("buckets")? {
+                let pair = pair.as_arr().context("histogram bucket not a pair")?;
+                anyhow::ensure!(pair.len() == 2, "histogram bucket not a pair");
+                let i = pair[0].as_usize().context("bucket index not numeric")?;
+                anyhow::ensure!(i < HIST_BUCKETS, "bucket index {i} out of range");
+                let c = pair[1].as_f64().context("bucket count not numeric")? as u64;
+                buckets.push((i as u8, c));
+            }
+            snap.histograms.insert(
+                k.clone(),
+                HistogramSnapshot {
+                    count: v.req_f64("count")? as u64,
+                    sum: v.req_f64("sum")? as u64,
+                    max: v.req_f64("max")? as u64,
+                    buckets,
+                },
+            );
+        }
+        Ok(snap)
+    }
+
+    /// Parse from serialized JSON text (the `FetchMetrics` payload).
+    pub fn from_json_str(text: &str) -> Result<Snapshot> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("snapshot JSON: {e}"))?;
+        Snapshot::from_json(&j)
+    }
+
+    /// Prometheus-style text exposition: counters and gauges as single
+    /// samples, histograms as summaries with `quantile` labels plus
+    /// `_sum`/`_count`/`_max` samples.  Names are prefixed `issgd_` and
+    /// dots become underscores.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, &v) in &self.counters {
+            let n = prom_name(name);
+            out.push_str(&format!("# TYPE {n} counter\n{n} {v}\n"));
+        }
+        for (name, &v) in &self.gauges {
+            let n = prom_name(name);
+            out.push_str(&format!("# TYPE {n} gauge\n{n} {v}\n"));
+        }
+        for (name, h) in &self.histograms {
+            let n = prom_name(name);
+            out.push_str(&format!("# TYPE {n} summary\n"));
+            out.push_str(&format!("{n}{{quantile=\"0.5\"}} {}\n", h.p50()));
+            out.push_str(&format!("{n}{{quantile=\"0.99\"}} {}\n", h.p99()));
+            out.push_str(&format!("{n}_sum {}\n", h.sum));
+            out.push_str(&format!("{n}_count {}\n", h.count));
+            out.push_str(&format!("{n}_max {}\n", h.max));
+        }
+        out
+    }
+}
+
+fn prom_name(name: &str) -> String {
+    let mut out = String::from("issgd_");
+    for ch in name.chars() {
+        if ch.is_ascii_alphanumeric() {
+            out.push(ch);
+        } else {
+            out.push('_');
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// flight recorder
+// ---------------------------------------------------------------------------
+
+/// Periodic JSONL dump of the registry (`db-server --telemetry-dump`):
+/// one [`Snapshot::to_json`] line per interval, appended so chaos runs
+/// can be reconstructed post-hoc.  Drive it by calling [`Dumper::tick`]
+/// from a loop; it no-ops until the interval has elapsed and disables
+/// itself (with one warning) on a write error.
+pub struct Dumper {
+    path: PathBuf,
+    every: Duration,
+    last: Option<Instant>,
+    dead: bool,
+}
+
+impl Dumper {
+    pub fn new(path: &Path, every: Duration) -> Dumper {
+        Dumper {
+            path: path.to_path_buf(),
+            every,
+            last: None,
+            dead: false,
+        }
+    }
+
+    /// Append one snapshot line if the interval has elapsed.
+    pub fn tick(&mut self) {
+        if self.dead || self.last.is_some_and(|t| t.elapsed() < self.every) {
+            return;
+        }
+        self.last = Some(Instant::now());
+        if let Err(e) = self.append_line() {
+            crate::log_warn!(
+                "telemetry",
+                "disabling --telemetry-dump, could not write {}: {e}",
+                self.path.display()
+            );
+            self.dead = true;
+        }
+    }
+
+    fn append_line(&self) -> Result<()> {
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(&self.path)?;
+        writeln!(f, "{}", snapshot().to_json().to_string())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(1023), 10);
+        assert_eq!(bucket_of(1024), 11);
+        assert_eq!(bucket_of(u64::MAX), HIST_BUCKETS - 1);
+        assert_eq!(bucket_upper(0), 0);
+        assert_eq!(bucket_upper(2), 3);
+        assert_eq!(bucket_upper(10), 1023);
+        assert_eq!(bucket_upper(HIST_BUCKETS - 1), u64::MAX);
+    }
+
+    #[test]
+    fn histogram_quantiles_are_upper_bounds() {
+        let h = histogram("test.unit.quantiles");
+        for v in [1u64, 2, 3, 100, 1000, 1_000_000] {
+            h.record(v);
+        }
+        let snap = snapshot();
+        let hs = &snap.histograms["test.unit.quantiles"];
+        assert_eq!(hs.count, 6);
+        assert_eq!(hs.sum, 1 + 2 + 3 + 100 + 1000 + 1_000_000);
+        assert_eq!(hs.max, 1_000_000);
+        // p50 falls in the bucket holding 3 (values 2..=3).
+        assert_eq!(hs.p50(), 3);
+        // p99 lands in the last bucket, capped at the exact max.
+        assert_eq!(hs.p99(), 1_000_000);
+        assert!(hs.quantile(0.0) >= 1);
+        assert_eq!(hs.quantile(1.0), 1_000_000);
+    }
+
+    #[test]
+    fn empty_histogram_quantiles_are_zero() {
+        let h = histogram("test.unit.empty");
+        let _ = h; // registered but never recorded
+        let snap = snapshot();
+        let hs = &snap.histograms["test.unit.empty"];
+        assert_eq!(hs.count, 0);
+        assert_eq!(hs.p50(), 0);
+        assert_eq!(hs.p99(), 0);
+    }
+
+    #[test]
+    fn counter_and_gauge_roundtrip() {
+        let c = counter("test.unit.counter");
+        let g = gauge("test.unit.gauge");
+        c.add(41);
+        c.inc();
+        g.set(0.75);
+        let snap = snapshot();
+        assert!(snap.counters["test.unit.counter"] >= 42);
+        assert_eq!(snap.gauges["test.unit.gauge"], 0.75);
+        // Same name returns the same handle.
+        assert_eq!(counter("test.unit.counter").get(), c.get());
+    }
+
+    #[test]
+    #[should_panic(expected = "not a gauge")]
+    fn kind_mismatch_panics() {
+        counter("test.unit.mismatch");
+        gauge("test.unit.mismatch");
+    }
+
+    #[test]
+    fn json_roundtrip_and_prometheus_render() {
+        counter("test.unit.json_c").add(7);
+        gauge("test.unit.json_g").set(0.5);
+        let h = histogram("test.unit.json_h");
+        h.record(5);
+        h.record(900);
+        let snap = snapshot();
+        let text = snap.to_json().to_string();
+        let back = Snapshot::from_json_str(&text).unwrap();
+        assert_eq!(back.counters["test.unit.json_c"], snap.counters["test.unit.json_c"]);
+        assert_eq!(back.gauges["test.unit.json_g"], 0.5);
+        assert_eq!(back.histograms["test.unit.json_h"], snap.histograms["test.unit.json_h"]);
+        let prom = snap.to_prometheus();
+        assert!(prom.contains("# TYPE issgd_test_unit_json_c counter"));
+        assert!(prom.contains("issgd_test_unit_json_c 7"));
+        assert!(prom.contains("# TYPE issgd_test_unit_json_h summary"));
+        assert!(prom.contains("issgd_test_unit_json_h{quantile=\"0.99\"}"));
+        assert!(prom.contains("issgd_test_unit_json_h_count 2"));
+    }
+
+    #[test]
+    fn store_metrics_preregister_idempotently() {
+        register_store_metrics();
+        register_store_metrics();
+        let snap = snapshot();
+        for &(name, kind) in STORE_METRICS {
+            let present = match kind {
+                'c' => snap.counters.contains_key(name),
+                'g' => snap.gauges.contains_key(name),
+                _ => snap.histograms.contains_key(name),
+            };
+            assert!(present, "{name} missing after register_store_metrics");
+        }
+    }
+
+    #[test]
+    fn dumper_appends_parseable_lines() {
+        let path = std::env::temp_dir().join(format!("issgd-telem-{}", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        counter("test.unit.dumped").inc();
+        let mut d = Dumper::new(&path, Duration::from_millis(1));
+        d.tick(); // first tick dumps immediately
+        std::thread::sleep(Duration::from_millis(3));
+        d.tick();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in lines {
+            let snap = Snapshot::from_json_str(line).unwrap();
+            assert!(snap.counters["test.unit.dumped"] >= 1);
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -2,8 +2,10 @@
 //!
 //! Each log line carries the elapsed wall-clock since process start and an
 //! actor tag (`master`, `worker-2`, `db`), which makes interleaved
-//! multi-thread traces readable.  Level is set once at startup (CLI
-//! `--log-level`).
+//! multi-thread traces readable.  Level comes from CLI `--log-level` when
+//! given; otherwise the `ISSGD_LOG` environment variable (same names:
+//! `error`/`warn`/`info`/`debug`/`trace`), so spawned test/CI processes
+//! can enable debug logs without CLI plumbing.  Default: `info`.
 //!
 //! analyze: allow-module(wallclock): log timestamps are wall time by design
 
@@ -19,12 +21,37 @@ pub enum Level {
     Trace = 4,
 }
 
-static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+/// Sentinel for "no level chosen yet": the first `enabled()` check
+/// resolves `ISSGD_LOG` (falling back to `Info`) and caches the result,
+/// so the env read happens at most once.
+const LEVEL_UNSET: u8 = u8::MAX;
+
+static LEVEL: AtomicU8 = AtomicU8::new(LEVEL_UNSET);
 
 static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
 
 pub fn set_level(level: Level) {
     LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Current effective level, resolving the `ISSGD_LOG` fallback on first
+/// use.  A concurrent `set_level` wins over the env resolution.
+fn effective_level() -> u8 {
+    let cur = LEVEL.load(Ordering::Relaxed);
+    if cur != LEVEL_UNSET {
+        return cur;
+    }
+    let from_env = std::env::var("ISSGD_LOG")
+        .ok()
+        .as_deref()
+        .and_then(level_from_str)
+        .unwrap_or(Level::Info) as u8;
+    // compare_exchange so an explicit set_level racing this resolution is
+    // never overwritten by the env default.
+    match LEVEL.compare_exchange(LEVEL_UNSET, from_env, Ordering::Relaxed, Ordering::Relaxed) {
+        Ok(_) => from_env,
+        Err(set_meanwhile) => set_meanwhile,
+    }
 }
 
 pub fn level_from_str(s: &str) -> Option<Level> {
@@ -39,7 +66,7 @@ pub fn level_from_str(s: &str) -> Option<Level> {
 }
 
 pub fn enabled(level: Level) -> bool {
-    (level as u8) <= LEVEL.load(Ordering::Relaxed)
+    (level as u8) <= effective_level()
 }
 
 pub fn log(level: Level, actor: &str, msg: std::fmt::Arguments<'_>) {

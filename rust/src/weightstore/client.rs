@@ -36,7 +36,7 @@
 //! one round-trip, not N.
 use std::collections::BTreeMap;
 use std::net::{TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
@@ -81,6 +81,9 @@ pub struct Client {
     /// `None` = not connected (never connected, or poisoned by a
     /// frame-level error).  The next call reconnects.
     stream: Mutex<Option<TcpStream>>,
+    /// Whether this client has ever held a live connection — separates a
+    /// lazy first dial from a genuine *re*connect in `client.reconnects`.
+    ever_connected: AtomicBool,
 }
 
 impl Client {
@@ -97,6 +100,7 @@ impl Client {
             addr: addr.to_string(),
             opts,
             stream: Mutex::new(Some(stream)),
+            ever_connected: AtomicBool::new(true),
         })
     }
 
@@ -107,6 +111,7 @@ impl Client {
             addr: addr.to_string(),
             opts,
             stream: Mutex::new(None),
+            ever_connected: AtomicBool::new(false),
         }
     }
 
@@ -162,6 +167,9 @@ impl Client {
             // The mutex is held through the backoff: concurrent callers
             // would only race to dial the same dead server.
             *guard = Some(Client::open_with_backoff(&self.addr, &self.opts)?);
+            if self.ever_connected.swap(true, Ordering::Relaxed) {
+                crate::telemetry::counter("client.reconnects").inc();
+            }
         }
         let stream = guard.as_mut().expect("connected above");
         let exchanged: Result<Response> = (|| {
@@ -179,6 +187,7 @@ impl Client {
                 // either direction, so this stream can never be trusted
                 // to pair requests with responses again.
                 *guard = None;
+                crate::telemetry::counter("client.protocol_errors").inc();
                 Err(e).context("store connection poisoned (will reconnect on next call)")
             }
         }
@@ -189,6 +198,15 @@ impl Client {
         match self.call(Request::Shutdown)? {
             Response::Ok => Ok(()),
             other => bail!("unexpected response to shutdown: {other:?}"),
+        }
+    }
+
+    /// Scrape the server's telemetry registry; returns the snapshot as
+    /// `util::json` text (`telemetry::Snapshot::from_json_str` parses it).
+    pub fn fetch_metrics(&self) -> Result<String> {
+        match self.call(Request::FetchMetrics)? {
+            Response::Metrics(text) => Ok(text),
+            other => bail!("unexpected response to metrics scrape: {other:?}"),
         }
     }
 }
@@ -474,6 +492,7 @@ impl WeightStore for ClientPool {
                 result
             }
             Role::Follower(flight) => {
+                crate::telemetry::counter("pool.coalesced_fetches").inc();
                 let mut done = flight.done.lock().unwrap();
                 while done.is_none() {
                     done = flight.cv.wait(done).unwrap();

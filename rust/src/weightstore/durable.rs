@@ -485,16 +485,19 @@ impl Core {
     fn append(&self, log: &mut LogState, rec: &Record) -> Result<()> {
         let res = (|| -> Result<u64> {
             let bytes = append_record(&mut log.file, rec)?;
+            let sync = crate::telemetry::start();
             log.file.flush()?;
             if self.opts.fsync {
                 log.file.get_ref().sync_data()?;
             }
+            crate::telemetry::histogram("journal.fsync_ns").record_elapsed(&sync);
             Ok(bytes)
         })();
         match res {
             Ok(b) => {
                 log.seg_bytes += b;
                 log.since_snapshot += b;
+                crate::telemetry::counter("journal.bytes").add(b);
                 Ok(())
             }
             Err(e) => {
@@ -540,6 +543,7 @@ impl Core {
     fn compact_now(&self) -> Result<()> {
         let _serial = self.compact_serial.lock().unwrap();
         self.check_wounded()?;
+        let cycle = crate::telemetry::start();
         // 0. Reap pins from dead consumers so they stop clamping the fold.
         //    No journal record needed: the checkpoint below omits them and
         //    supersedes every segment holding their saves.
@@ -555,6 +559,7 @@ impl Core {
         // 1. Fold in-memory history up to the oldest saved consumer cursor
         //    (the trait's cursor-safety contract).
         let floor = self.mem.compact_before(u64::MAX);
+        crate::telemetry::gauge("compact.floor").set(floor as f64);
         // 2. Seal the active segment and memcpy the state it covers, then
         //    hand writers a fresh segment — the only part under the lock.
         let (cover, state) = {
@@ -572,6 +577,7 @@ impl Core {
         self.write_checkpoint(&state)?;
         self.compactions_total.fetch_add(1, Ordering::Relaxed);
         gc_below(&self.dir, cover);
+        crate::telemetry::histogram("compact.duration_ns").record_elapsed(&cycle);
         Ok(())
     }
 

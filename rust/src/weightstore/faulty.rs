@@ -272,6 +272,7 @@ impl FaultyStore {
     fn maybe_fail(&self, op: &str) -> Result<()> {
         if self.roll(self.spec.error_prob) {
             self.injected_errors.fetch_add(1, Ordering::Relaxed);
+            crate::telemetry::counter("fault.injected_errors").inc();
             anyhow::bail!("injected transient {op} failure (virtual t = {} ns)", self.clock.now());
         }
         Ok(())
@@ -318,6 +319,7 @@ impl WeightStore for FaultyStore {
                     // everything is re-delivered on a later fetch — params
                     // arrive late and possibly reordered, never corrupted.
                     self.withheld_params.fetch_add(1, Ordering::Relaxed);
+                    crate::telemetry::counter("fault.withheld_params").inc();
                     Ok(None)
                 } else {
                     Ok(Some(d))
@@ -360,6 +362,7 @@ impl WeightStore for FaultyStore {
             // so every write is re-scanned (and delivered) on a later
             // fetch.  No lost updates — only lateness.
             self.withheld_deltas.fetch_add(1, Ordering::Relaxed);
+            crate::telemetry::counter("fault.withheld_deltas").inc();
             return Ok(WeightDelta {
                 seq,
                 n: delta.n,
@@ -373,6 +376,7 @@ impl WeightStore for FaultyStore {
             // relative to newer writes) is idempotent.  The cursor again
             // stays at `seq`.
             self.partial_deltas.fetch_add(1, Ordering::Relaxed);
+            crate::telemetry::counter("fault.partial_deltas").inc();
             let mut kept = WeightDelta {
                 seq,
                 n: delta.n,

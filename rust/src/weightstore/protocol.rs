@@ -25,6 +25,7 @@
 //! | 0x0D | `FetchParamsSince`     |      |                     |
 //! | 0x0E | `DropCursor`           |      |                     |
 //! | 0x0F | `Shutdown`             |      |                     |
+//! | 0x10 | `FetchMetrics`         | 0x8A | `Metrics`           |
 //!
 //! The params-delta pair (`PushParamsLayers`/`FetchParamsSince` →
 //! `ParamsDelta`) carries *named layer chunks* instead of the whole blob;
@@ -92,6 +93,8 @@ pub enum Request {
     DropCursor { name: String },
     Now,
     Stats,
+    /// Scrape the server's telemetry registry (read-only diagnostics).
+    FetchMetrics,
     /// Ask the server process to exit its accept loop.
     Shutdown,
 }
@@ -111,6 +114,10 @@ pub enum Response {
     Cursor(Option<u64>),
     /// A params delta (`None` = caller up to date / nothing published).
     ParamsDelta(Option<ParamsDelta>),
+    /// A telemetry snapshot, serialized as `util::json` text (the
+    /// `telemetry::Snapshot::to_json` schema).  Text rather than a binary
+    /// table so the metric set can grow without a protocol change.
+    Metrics(String),
 }
 
 // ---------------------------------------------------------------------------
@@ -329,6 +336,7 @@ impl Request {
             }
             Request::Now => p.push(0x06),
             Request::Stats => p.push(0x07),
+            Request::FetchMetrics => p.push(0x10),
             Request::Shutdown => p.push(0x0F),
         }
         p
@@ -388,6 +396,7 @@ impl Request {
             },
             0x06 => Request::Now,
             0x07 => Request::Stats,
+            0x10 => Request::FetchMetrics,
             0x0F => Request::Shutdown,
             _ => bail!("unknown request opcode {op:#04x}"),
         };
@@ -459,6 +468,10 @@ impl Response {
                         }
                     }
                 }
+            }
+            Response::Metrics(text) => {
+                p.push(0x8A);
+                put_bytes(&mut p, text.as_bytes());
             }
             Response::Stats(s) => {
                 p.push(0x86);
@@ -584,6 +597,9 @@ impl Response {
                     }))
                 }
             }
+            0x8A => Response::Metrics(
+                String::from_utf8(c.bytes()?).context("metrics snapshot not utf-8")?,
+            ),
             0x86 => Response::Stats(StoreStats {
                 param_pushes: c.u64()?,
                 param_fetches: c.u64()?,
@@ -700,6 +716,7 @@ mod tests {
         });
         roundtrip_req(Request::Now);
         roundtrip_req(Request::Stats);
+        roundtrip_req(Request::FetchMetrics);
         roundtrip_req(Request::Shutdown);
     }
 
@@ -759,6 +776,10 @@ mod tests {
                 bytes: vec![42; 17],
             }],
         })));
+        roundtrip_resp(Response::Metrics(String::new()));
+        roundtrip_resp(Response::Metrics(
+            r#"{"counters":{"server.evictions":3},"gauges":{},"histograms":{}}"#.into(),
+        ));
         roundtrip_resp(Response::Stats(StoreStats {
             param_pushes: 1,
             param_fetches: 2,
@@ -810,6 +831,22 @@ mod tests {
         for cut in 0..enc.len() {
             assert!(Request::decode(&enc[..cut]).is_err(), "prefix {cut} decoded");
         }
+        let mut extra = enc;
+        extra.push(0);
+        assert!(Request::decode(&extra).is_err());
+    }
+
+    #[test]
+    fn metrics_frames_reject_truncation_and_trailing() {
+        let enc = Response::Metrics(r#"{"counters":{"a":1}}"#.into()).encode();
+        for cut in 0..enc.len() {
+            assert!(Response::decode(&enc[..cut]).is_err(), "prefix {cut} decoded");
+        }
+        let mut extra = enc;
+        extra.push(0);
+        assert!(Response::decode(&extra).is_err());
+
+        let enc = Request::FetchMetrics.encode();
         let mut extra = enc;
         extra.push(0);
         assert!(Request::decode(&extra).is_err());

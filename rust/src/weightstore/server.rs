@@ -86,12 +86,16 @@ pub struct ServerOptions {
     /// a full `FetchWeights` snapshot is ~24 bytes/example — since even a
     /// prompt reader briefly queues each response it asked for.
     pub max_write_queue: usize,
+    /// Flight recorder: append a JSONL telemetry snapshot to this path
+    /// roughly once a second (`issgd db-server --telemetry-dump <path>`).
+    pub telemetry_dump: Option<std::path::PathBuf>,
 }
 
 impl Default for ServerOptions {
     fn default() -> ServerOptions {
         ServerOptions {
             max_write_queue: 64 << 20,
+            telemetry_dump: None,
         }
     }
 }
@@ -253,6 +257,17 @@ impl Server {
         let mut stop = false;
         let mut protocol_errors: u64 = 0;
 
+        // Pre-register the canonical metric set so a `FetchMetrics` scrape
+        // exposes the full schema from the first tick, then grab the
+        // per-tick handles once (the registry lock is not for hot loops).
+        crate::telemetry::register_store_metrics();
+        let tick_hist = crate::telemetry::histogram("server.tick_ns");
+        let evictions = crate::telemetry::counter("server.evictions");
+        let mut dumper = None;
+        if let Some(p) = &self.opts.telemetry_dump {
+            dumper = Some(crate::telemetry::Dumper::new(p, std::time::Duration::from_secs(1)));
+        }
+
         while !stop {
             fds.clear();
             fds.push(sys::PollFd::new(self.listener.as_raw_fd(), sys::POLLIN));
@@ -264,6 +279,9 @@ impl Server {
                 fds.push(sys::PollFd::new(c.stream.as_raw_fd(), events));
             }
             sys::poll(&mut fds, POLL_TICK_MS)?;
+            // Time the work slice of the tick only — the poll wait above
+            // is idle time and would swamp the latency histogram.
+            let tick = crate::telemetry::start();
 
             // Service existing connections first: `fds[1..]` maps onto the
             // first `fds.len() - 1` conns, and accepting first would push
@@ -289,12 +307,17 @@ impl Server {
                         conn.pending(),
                         self.opts.max_write_queue
                     );
+                    evictions.inc();
                     conn.dead = true;
                 }
             }
             conns.retain(|c| !c.dead);
             if fds[0].revents != 0 {
                 self.accept_ready(&mut conns);
+            }
+            tick_hist.record_elapsed(&tick);
+            if let Some(d) = dumper.as_mut() {
+                d.tick();
             }
         }
 
@@ -401,6 +424,7 @@ fn process_frames(
                 // Well-framed but undecodable: answer in-band and keep
                 // the connection (the frame boundary is still sound).
                 *protocol_errors += 1;
+                crate::telemetry::counter("server.protocol_errors").inc();
                 conn.rpos += 4 + len;
                 conn.queue_response(&Response::Err(format!("protocol error: {e}")));
             }
@@ -454,6 +478,9 @@ fn dispatch(store: &dyn WeightStore, req: Request, protocol_errors: u64) -> Resp
                 Response::Ok
             }
             Request::Now => Response::Now(store.now()?),
+            Request::FetchMetrics => {
+                Response::Metrics(crate::telemetry::snapshot().to_json().to_string())
+            }
             Request::Stats => {
                 let mut stats = store.stats()?;
                 // The raw backends can't see transport-level problems;

@@ -306,3 +306,37 @@ fn dead_peer_pin_is_dropped_and_the_floor_advances() {
     peer.absorb(&d, 0).unwrap();
     assert_eq!(*peer.raw(), store.fetch_weights().unwrap());
 }
+
+/// `FetchMetrics` against a DurableStore-backed server: the journal's
+/// fsync-latency histogram and appended-bytes counter must reflect the
+/// writes served between two scrapes.  (The telemetry registry is
+/// process-global, so assertions are deltas between scrapes — other
+/// tests' journals only push the deltas higher, never lower.)
+#[test]
+fn metrics_scrape_reflects_journal_activity() {
+    use issgd::telemetry::Snapshot;
+    use issgd::weightstore::client::Client;
+    use issgd::weightstore::server::Server;
+
+    let dir = TempDir::new("metrics");
+    let store = DurableStore::create(&dir.0, 32, 1.0, small_opts()).unwrap();
+    let server = Server::bind("127.0.0.1:0", Arc::new(store)).unwrap();
+    let (addr, handle) = server.serve_in_background().unwrap();
+    {
+        let c = Client::connect(&addr.to_string()).unwrap();
+        let before = Snapshot::from_json_str(&c.fetch_metrics().unwrap()).unwrap();
+        for i in 0..16u64 {
+            c.push_weights((i % 32) as usize, &[i as f32 + 0.5], i).unwrap();
+        }
+        // Request/response is synchronous, so by this scrape all 16
+        // appends have hit the journal.
+        let after = Snapshot::from_json_str(&c.fetch_metrics().unwrap()).unwrap();
+        let fsyncs = after.histograms["journal.fsync_ns"].count
+            - before.histograms["journal.fsync_ns"].count;
+        assert!(fsyncs >= 16, "expected >= 16 timed journal appends, saw {fsyncs}");
+        let bytes = after.counters["journal.bytes"] - before.counters["journal.bytes"];
+        assert!(bytes > 0, "journal byte counter did not move");
+        c.shutdown_server().unwrap();
+    }
+    handle.join().unwrap();
+}

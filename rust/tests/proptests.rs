@@ -1044,3 +1044,65 @@ fn synth_shards_compose_to_full_dataset() {
         }
     });
 }
+
+#[test]
+fn telemetry_registry_loses_no_increments_under_threads() {
+    use issgd::telemetry;
+    // The registry is process-global and this binary's tests run in
+    // parallel, so: names unique to this test, delta-based assertions.
+    let c = telemetry::counter("test.prop.conc_counter");
+    let h = telemetry::histogram("test.prop.conc_hist");
+    prop("telemetry-concurrency", 4, |rng| {
+        let threads = 2 + rng.next_below(6) as usize;
+        let per_thread = 100 + rng.next_below(400);
+        let (c_before, h_before) = {
+            let snap = telemetry::snapshot();
+            (
+                snap.counters["test.prop.conc_counter"],
+                snap.histograms["test.prop.conc_hist"].clone(),
+            )
+        };
+        let stop = std::sync::atomic::AtomicBool::new(false);
+        std::thread::scope(|s| {
+            // Monitor: successive snapshots must be monotone per metric
+            // while the writers hammer away.
+            s.spawn(|| {
+                let mut last_c = 0u64;
+                let mut last_h = 0u64;
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    let snap = telemetry::snapshot();
+                    let now_c = snap.counters["test.prop.conc_counter"];
+                    let now_h = snap.histograms["test.prop.conc_hist"].count;
+                    assert!(now_c >= last_c, "counter went backwards: {last_c} -> {now_c}");
+                    assert!(now_h >= last_h, "hist count went backwards: {last_h} -> {now_h}");
+                    last_c = now_c;
+                    last_h = now_h;
+                    std::thread::sleep(std::time::Duration::from_micros(100));
+                }
+            });
+            let mut workers = Vec::new();
+            for t in 0..threads as u64 {
+                workers.push(s.spawn(move || {
+                    for _ in 0..per_thread {
+                        c.inc();
+                        // Fixed per-thread value so the sum delta below is
+                        // exactly predictable.
+                        h.record(t + 1);
+                    }
+                }));
+            }
+            for w in workers {
+                w.join().unwrap();
+            }
+            stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        });
+        let snap = telemetry::snapshot();
+        let c_after = snap.counters["test.prop.conc_counter"];
+        let h_after = &snap.histograms["test.prop.conc_hist"];
+        let expected = threads as u64 * per_thread;
+        assert_eq!(c_after - c_before, expected, "lost counter increments");
+        assert_eq!(h_after.count - h_before.count, expected, "lost histogram records");
+        let expected_sum: u64 = (1..=threads as u64).map(|t| t * per_thread).sum();
+        assert_eq!(h_after.sum - h_before.sum, expected_sum, "lost histogram sum");
+    });
+}

@@ -33,6 +33,7 @@ const READ_ONLY: &[&str] = &[
     "LoadCursor",
     "Now",
     "Stats",
+    "FetchMetrics",
     "Shutdown",
 ];
 
