@@ -32,6 +32,15 @@
 //! [`STORE_METRICS`] and pre-registered by the server so a scrape always
 //! exposes the full schema, even before the first event.
 //!
+//! The grammar is **enforced** by `cargo run -p xtask -- analyze` (the
+//! `telemetry` lint): a metric name literal must be exactly two
+//! dot-separated segments, each lowercase `snake_case` starting with a
+//! letter (`[a-z][a-z0-9_]*`).  Files under `weightstore/` must also
+//! declare every name in [`STORE_METRICS`] with a matching kind, and no
+//! name may be used as two different instrument kinds anywhere in the
+//! tree (the registry's runtime kind guard panics; the lint catches the
+//! conflict before it can).
+//!
 //! # How to add a metric
 //!
 //! Call [`counter`]/[`gauge`]/[`histogram`] with a new dotted name at the
@@ -92,6 +101,10 @@ pub const STORE_METRICS: &[(&str, char)] = &[
     ("proposal.absorb_ns", 'h'),
     ("proposal.ess", 'g'),
     ("peer.cursor_lag", 'g'),
+    ("fault.injected_errors", 'c'),
+    ("fault.withheld_params", 'c'),
+    ("fault.withheld_deltas", 'c'),
+    ("fault.partial_deltas", 'c'),
 ];
 
 // ---------------------------------------------------------------------------
@@ -241,6 +254,7 @@ pub fn counter(name: &str) -> &'static Counter {
     let entry = reg.entry(name.to_string());
     match entry.or_insert_with(|| Metric::Counter(Box::leak(Box::default()))) {
         Metric::Counter(c) => c,
+        // analyze: allow(panics): kind mismatch is a programmer error the telemetry lint rejects statically
         _ => panic!("telemetry metric {name:?} is not a counter"),
     }
 }
@@ -251,6 +265,7 @@ pub fn gauge(name: &str) -> &'static Gauge {
     let entry = reg.entry(name.to_string());
     match entry.or_insert_with(|| Metric::Gauge(Box::leak(Box::default()))) {
         Metric::Gauge(g) => g,
+        // analyze: allow(panics): kind mismatch is a programmer error the telemetry lint rejects statically
         _ => panic!("telemetry metric {name:?} is not a gauge"),
     }
 }
@@ -261,6 +276,7 @@ pub fn histogram(name: &str) -> &'static Histogram {
     let entry = reg.entry(name.to_string());
     match entry.or_insert_with(|| Metric::Histogram(Box::leak(Box::new(Histogram::new())))) {
         Metric::Histogram(h) => h,
+        // analyze: allow(panics): kind mismatch is a programmer error the telemetry lint rejects statically
         _ => panic!("telemetry metric {name:?} is not a histogram"),
     }
 }

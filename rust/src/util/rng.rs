@@ -62,6 +62,7 @@ impl Pcg64 {
 
     /// Uniform integer in `[0, n)` via Lemire's unbiased method.
     pub fn next_below(&mut self, n: u64) -> u64 {
+        // analyze: allow(panics): n == 0 is a caller bug, not reachable from wire input — store-path callers pass constant+1 bounds
         assert!(n > 0, "next_below(0)");
         let mut x = self.next_u64();
         let mut m = (x as u128).wrapping_mul(n as u128);

@@ -171,7 +171,9 @@ impl Client {
                 crate::telemetry::counter("client.reconnects").inc();
             }
         }
-        let stream = guard.as_mut().expect("connected above");
+        let stream = guard
+            .as_mut()
+            .context("store connection unavailable after reconnect")?;
         let exchanged: Result<Response> = (|| {
             write_frame(stream, &req.encode())?;
             let frame = read_frame(stream)?;
@@ -497,9 +499,12 @@ impl WeightStore for ClientPool {
                 while done.is_none() {
                     done = flight.cv.wait(done).unwrap();
                 }
-                match done.as_ref().expect("checked above") {
-                    Ok(delta) => Ok(delta.clone()),
-                    Err(e) => Err(anyhow!("coalesced fetch failed: {e}")),
+                match done.as_ref() {
+                    Some(Ok(delta)) => Ok(delta.clone()),
+                    Some(Err(e)) => Err(anyhow!("coalesced fetch failed: {e}")),
+                    // The wait loop above only exits on Some; answer a
+                    // (can't-happen) bare wakeup with an error, not a panic.
+                    None => Err(anyhow!("coalesced fetch signaled without a result")),
                 }
             }
         }

@@ -488,6 +488,7 @@ impl Core {
             let sync = crate::telemetry::start();
             log.file.flush()?;
             if self.opts.fsync {
+                // analyze: allow(blocking): opt-in DurableOptions::fsync durability contract; tick-path cost is measured by the journal.fsync_ns histogram, not hidden behind the compactor seam
                 log.file.get_ref().sync_data()?;
             }
             crate::telemetry::histogram("journal.fsync_ns").record_elapsed(&sync);
@@ -527,6 +528,7 @@ impl Core {
 
     fn roll_segment(&self, log: &mut LogState) -> Result<()> {
         log.file.flush()?;
+        // analyze: allow(blocking): one sync per sealed segment, amortized over segment_bytes of appends; seals the segment before the background compactor may GC its predecessors
         let _ = log.file.get_ref().sync_data();
         let mut fresh = open_segment(&self.dir, log.seg_index + 1)?;
         fresh.since_snapshot = log.since_snapshot;

@@ -995,10 +995,11 @@ impl WeightStore for MemStore {
                 full,
                 "first layer publish must be full (the layout is undefined)"
             );
+            let mut seen = std::collections::BTreeSet::new();
             for (i, (n, _)) in layers.iter().enumerate() {
                 anyhow::ensure!(!n.is_empty(), "layer {i} has an empty name");
                 anyhow::ensure!(
-                    !layers[..i].iter().any(|(m, _)| m == n),
+                    seen.insert(n.as_str()),
                     "duplicate layer name {n:?} in full publish"
                 );
             }
@@ -1027,9 +1028,12 @@ impl WeightStore for MemStore {
                 );
             }
             for (n, b) in layers {
-                let l = slot.layers.iter_mut().find(|l| &l.name == n).unwrap();
-                l.bytes = b.clone();
-                l.version = version;
+                // Presence was validated above; a (can't-happen) miss is a
+                // no-op rather than an event-loop abort.
+                if let Some(l) = slot.layers.iter_mut().find(|l| &l.name == n) {
+                    l.bytes = b.clone();
+                    l.version = version;
+                }
             }
         }
         slot.version = version;
@@ -1170,8 +1174,10 @@ impl WeightStore for MemStore {
         let mut off = 0usize;
         for l in slot.layers.iter_mut() {
             for chunk in l.bytes.chunks_exact_mut(4) {
-                let v = f32::from_le_bytes(chunk.try_into().unwrap()) - scale * grad[off];
-                chunk.copy_from_slice(&v.to_le_bytes());
+                if let [a, b, c, d] = *chunk {
+                    let v = f32::from_le_bytes([a, b, c, d]) - scale * grad[off];
+                    chunk.copy_from_slice(&v.to_le_bytes());
+                }
                 off += 1;
             }
             l.version = new_version;

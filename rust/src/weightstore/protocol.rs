@@ -149,11 +149,15 @@ impl<'a> Cursor<'a> {
 
     #[allow(dead_code)]
     fn f64_scalar(&mut self) -> Result<f64> {
-        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(f64::from_le_bytes(
+            self.take(8)?.try_into().context("truncated f64 field")?,
+        ))
     }
 
     fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(u64::from_le_bytes(
+            self.take(8)?.try_into().context("truncated u64 field")?,
+        ))
     }
 
     fn bytes(&mut self) -> Result<Vec<u8>> {
@@ -161,31 +165,42 @@ impl<'a> Cursor<'a> {
         Ok(self.take(len)?.to_vec())
     }
 
+    /// Element count → byte count, rejecting lengths whose product would
+    /// wrap (a wrapped length would pass `take`'s bound check with a
+    /// bogus element count).
+    fn vec_bytes(len: usize, width: usize) -> Result<usize> {
+        len.checked_mul(width)
+            .with_context(|| format!("vector length {len} overflows the frame"))
+    }
+
     fn f32s(&mut self) -> Result<Vec<f32>> {
         let len = self.u64()? as usize;
-        let raw = self.take(len * 4)?;
-        Ok(raw
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-            .collect())
+        let raw = self.take(Self::vec_bytes(len, 4)?)?;
+        let mut out = Vec::with_capacity(len);
+        for c in raw.chunks_exact(4) {
+            out.push(f32::from_le_bytes(c.try_into().context("short f32 chunk")?));
+        }
+        Ok(out)
     }
 
     fn u64s(&mut self) -> Result<Vec<u64>> {
         let len = self.u64()? as usize;
-        let raw = self.take(len * 8)?;
-        Ok(raw
-            .chunks_exact(8)
-            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
-            .collect())
+        let raw = self.take(Self::vec_bytes(len, 8)?)?;
+        let mut out = Vec::with_capacity(len);
+        for c in raw.chunks_exact(8) {
+            out.push(u64::from_le_bytes(c.try_into().context("short u64 chunk")?));
+        }
+        Ok(out)
     }
 
     fn f64s(&mut self) -> Result<Vec<f64>> {
         let len = self.u64()? as usize;
-        let raw = self.take(len * 8)?;
-        Ok(raw
-            .chunks_exact(8)
-            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
-            .collect())
+        let raw = self.take(Self::vec_bytes(len, 8)?)?;
+        let mut out = Vec::with_capacity(len);
+        for c in raw.chunks_exact(8) {
+            out.push(f64::from_le_bytes(c.try_into().context("short f64 chunk")?));
+        }
+        Ok(out)
     }
 
     fn done(&self) -> Result<()> {
@@ -362,7 +377,7 @@ impl Request {
             0x08 => Request::ApplyGrad {
                 scale: {
                     let raw = c.take(4)?;
-                    f32::from_le_bytes(raw.try_into().unwrap())
+                    f32::from_le_bytes(raw.try_into().context("truncated f32 scale")?)
                 },
                 grad: c.f32s()?,
             },

@@ -171,9 +171,10 @@ impl Record {
     }
 
     pub fn decode(buf: &[u8]) -> Result<Record> {
-        anyhow::ensure!(!buf.is_empty(), "empty record");
-        let tag = buf[0];
-        let mut body = &buf[1..];
+        let Some((&tag, body)) = buf.split_first() else {
+            bail!("empty record");
+        };
+        let mut body = body;
         let rec = match tag {
             TAG_DELTA => match Response::decode(body)? {
                 Response::WeightsDelta(d) => Record::Delta(d),
@@ -218,7 +219,9 @@ impl Record {
             TAG_META => {
                 let meta = SnapshotMeta {
                     n: take_u64(&mut body)?,
-                    init_weight: f64::from_le_bytes(take(&mut body, 8)?.try_into().unwrap()),
+                    init_weight: f64::from_le_bytes(
+                        take(&mut body, 8)?.try_into().context("short f64 field")?,
+                    ),
                     floor: take_u64(&mut body)?,
                     next_seq: take_u64(&mut body)?,
                     clock: take_u64(&mut body)?,
@@ -243,7 +246,9 @@ fn take<'a>(buf: &mut &'a [u8], n: usize) -> Result<&'a [u8]> {
 }
 
 fn take_u64(buf: &mut &[u8]) -> Result<u64> {
-    Ok(u64::from_le_bytes(take(buf, 8)?.try_into().unwrap()))
+    Ok(u64::from_le_bytes(
+        take(buf, 8)?.try_into().context("short u64 field")?,
+    ))
 }
 
 /// CRC-32 (IEEE 802.3, reflected) — bitwise, no table: recovery-path

@@ -161,6 +161,7 @@ impl Conn {
                     return;
                 }
                 Ok(n) => {
+                    // analyze: allow(panics): Read::read returns n <= buf.len() by contract
                     self.rbuf.extend(&scratch[..n]);
                     taken += n;
                     if taken >= READ_SLICE_PER_TICK {
@@ -181,6 +182,7 @@ impl Conn {
     /// Write as much queued output as the socket will take right now.
     fn flush_write_buf(&mut self) {
         while self.pending() > 0 {
+            // analyze: allow(panics): wpos <= wbuf.len() — write() returns at most the slice length
             match self.stream.write(&self.wbuf[self.wpos..]) {
                 Ok(0) => {
                     self.dead = true;
@@ -394,8 +396,8 @@ fn process_frames(
         if avail < 4 {
             break;
         }
-        let len_bytes: [u8; 4] = conn.rbuf[conn.rpos..conn.rpos + 4].try_into().unwrap();
-        let len = u32::from_le_bytes(len_bytes) as usize;
+        let Some(hdr) = conn.rbuf.get(conn.rpos..conn.rpos + 4) else { break };
+        let len = u32::from_le_bytes([hdr[0], hdr[1], hdr[2], hdr[3]]) as usize;
         if len > MAX_FRAME {
             // Framing-level corruption: the stream offset itself is no
             // longer trustworthy, so this connection cannot be saved.
@@ -406,7 +408,7 @@ fn process_frames(
         if avail < 4 + len {
             break;
         }
-        let frame = &conn.rbuf[conn.rpos + 4..conn.rpos + 4 + len];
+        let Some(frame) = conn.rbuf.get(conn.rpos + 4..conn.rpos + 4 + len) else { break };
         match Request::decode(frame) {
             Ok(Request::Shutdown) => {
                 conn.rpos += 4 + len;
@@ -489,7 +491,10 @@ fn dispatch(store: &dyn WeightStore, req: Request, protocol_errors: u64) -> Resp
                 stats.protocol_errors = protocol_errors;
                 Response::Stats(stats)
             }
-            Request::Shutdown => unreachable!("handled by caller"),
+            // `process_frames` intercepts Shutdown before dispatch; if a
+            // refactor ever breaks that, answer in-band instead of
+            // aborting the event loop.
+            Request::Shutdown => Response::Err("shutdown is handled by the event loop".into()),
         })
     })();
     result.unwrap_or_else(|e| Response::Err(e.to_string()))

@@ -1,0 +1,518 @@
+//! Name-resolved call graph shared by the reachability lints.
+//!
+//! Built once per tree from scrubbed, test-stripped text (so byte offsets
+//! and line numbers still match the original files): every named `fn`
+//! with a braced body becomes a node, every `ident(`-shaped token inside
+//! a body becomes a call site, and calls resolve *by name* to the union
+//! of same-named definitions.  Two deliberate precision tweaks carried
+//! over from the locks lint, where this machinery was born:
+//!
+//! - a list of ubiquitous std idioms ([`UNRESOLVED_CALLS`]: `new`,
+//!   `push`, `insert`, `open`, …) is never resolved — attributing
+//!   `Vec::new()` to `Master::new` (or `OpenOptions::open` to
+//!   `Durable::open`) would wire the whole graph to itself;
+//! - calls through a `…mem…` receiver resolve only into
+//!   `weightstore/mod.rs` (the durable backend's inner `MemStore`);
+//! - resolution is **local-first**: when the caller's own file defines the
+//!   called name, only those definitions are candidates.  `dispatch(…)`
+//!   inside `server.rs` means the server's dispatch, not the same-named
+//!   CLI dispatcher in `main.rs`; without this, the whole coordinator
+//!   world rides into the serve graph on three shared names.
+//!
+//! Union resolution is conservative in the right direction for
+//! reachability lints: `store.push_params(…)` through `&dyn WeightStore`
+//! reaches *every* backend's `push_params`, which is exactly the set of
+//! bodies a server tick might execute.  On top of the graph this module
+//! offers:
+//!
+//! - [`Graph::resolve`] — candidates for one call site;
+//! - [`Graph::reach`] — BFS from root functions with a predecessor map,
+//!   so findings can print the witness chain (`serve -> process_frames ->
+//!   dispatch -> …`); an edge filter lets a lint cut sanctioned seams
+//!   (e.g. the background compactor) out of the walk;
+//! - [`Graph::propagate`] — generic fixpoint propagation of per-function
+//!   summaries along call edges (callee summary absorbed into caller),
+//!   used by the locks lint for held-class summaries.
+
+use std::collections::BTreeMap;
+
+use crate::source::{
+    find_token_from, ident_ending_at, ident_starting_at, is_ident_byte, matching_brace,
+    prev_non_ws, skip_ws, SourceFile, Tree,
+};
+
+/// Call names never resolved through the name-based call graph: std
+/// idioms so common that resolving them to same-named repo functions
+/// would connect unrelated code (e.g. `Vec::new()` → `Master::new`).
+pub const UNRESOLVED_CALLS: &[&str] = &[
+    "new", "default", "clone", "from", "into", "drop", "with_capacity", "to_string", "to_vec",
+    "fmt", "len", "is_empty", "load", "store", "push", "pop", "insert", "remove", "get", "min",
+    "max", "iter", "next", "eq", "hash", "cmp", "wait", "join", "collect", "map", "filter",
+    "unwrap", "expect", "ok", "take", "contains", "open", "create",
+];
+
+/// One named `fn` with a braced body.
+#[derive(Debug)]
+pub struct FnDef {
+    /// Index into `tree.files`.
+    pub file: usize,
+    pub name: String,
+    /// Byte span of the body (from `{` to matching `}`), in
+    /// `code_sans_tests` coordinates.
+    pub body: (usize, usize),
+}
+
+/// One call site inside a function body.
+#[derive(Debug)]
+pub struct CallSite {
+    /// Byte offset of the callee identifier, in `code_sans_tests`
+    /// coordinates of the enclosing file.
+    pub off: usize,
+    pub name: String,
+    /// Called through a `…mem…` receiver (resolves only into
+    /// `weightstore/mod.rs`).
+    pub mem_scoped: bool,
+}
+
+/// The tree-wide call graph: function table plus per-function call sites.
+pub struct Graph<'t> {
+    pub tree: &'t Tree,
+    pub fns: Vec<FnDef>,
+    by_name: BTreeMap<String, Vec<usize>>,
+    /// `calls[i]` are the call sites inside `fns[i]`, in source order,
+    /// with nested `fn` items excluded (their calls belong to them).
+    pub calls: Vec<Vec<CallSite>>,
+}
+
+impl<'t> Graph<'t> {
+    pub fn build(tree: &'t Tree) -> Graph<'t> {
+        let mut fns: Vec<FnDef> = Vec::new();
+        for (fi, file) in tree.files.iter().enumerate() {
+            collect_fns(fi, &file.code_sans_tests, &mut fns);
+        }
+        let mut by_name: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        for (i, f) in fns.iter().enumerate() {
+            by_name.entry(f.name.clone()).or_default().push(i);
+        }
+        let mut calls = Vec::with_capacity(fns.len());
+        for i in 0..fns.len() {
+            let nested = nested_spans(&fns, i);
+            let code = &tree.files[fns[i].file].code_sans_tests;
+            calls.push(collect_calls(code, fns[i].body, &nested));
+        }
+        Graph {
+            tree,
+            fns,
+            by_name,
+            calls,
+        }
+    }
+
+    /// The source file containing `fns[i]`.
+    pub fn file_of(&self, i: usize) -> &SourceFile {
+        &self.tree.files[self.fns[i].file]
+    }
+
+    /// Spans of `fn` items nested inside `fns[i]`'s body (to be skipped
+    /// when scanning the body — their contents belong to them).
+    pub fn nested_spans(&self, i: usize) -> Vec<(usize, usize)> {
+        nested_spans(&self.fns, i)
+    }
+
+    /// Indices of functions named `name` defined in a file whose path
+    /// ends with `file_suffix`.
+    pub fn fns_named_in(&self, name: &str, file_suffix: &str) -> Vec<usize> {
+        self.fns
+            .iter()
+            .enumerate()
+            .filter(|(i, f)| f.name == name && self.file_of(*i).rel.ends_with(file_suffix))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Candidate definitions for a call, minus [`UNRESOLVED_CALLS`]:
+    ///
+    /// - `mem`-scoped calls resolve only into `weightstore/mod.rs`;
+    /// - otherwise **local-first**: if the caller's own file defines the
+    ///   name, only those definitions are candidates (`dispatch(…)` inside
+    ///   `server.rs` means the server's dispatch, not a same-named CLI
+    ///   dispatcher elsewhere);
+    /// - only then the tree-wide union of same-named functions.
+    pub fn resolve(&self, caller_file: Option<usize>, name: &str, mem_scoped: bool) -> Vec<usize> {
+        if UNRESOLVED_CALLS.contains(&name) {
+            return Vec::new();
+        }
+        let Some(cands) = self.by_name.get(name) else { return Vec::new() };
+        if mem_scoped {
+            return cands
+                .iter()
+                .copied()
+                .filter(|&i| self.file_of(i).rel.ends_with("weightstore/mod.rs"))
+                .collect();
+        }
+        if let Some(cf) = caller_file {
+            let local: Vec<usize> = cands
+                .iter()
+                .copied()
+                .filter(|&i| self.fns[i].file == cf)
+                .collect();
+            if !local.is_empty() {
+                return local;
+            }
+        }
+        cands.to_vec()
+    }
+
+    /// Propagate per-function summaries along call edges until fixpoint:
+    /// each caller absorbs every resolved callee's summary.  `absorb`
+    /// returns whether the caller's summary changed.
+    pub fn propagate<T: Clone>(&self, summaries: &mut [T], absorb: impl Fn(&mut T, &T) -> bool) {
+        assert_eq!(summaries.len(), self.fns.len());
+        loop {
+            let mut changed = false;
+            for i in 0..self.fns.len() {
+                for call in &self.calls[i] {
+                    for j in self.resolve(Some(self.fns[i].file), &call.name, call.mem_scoped) {
+                        if i == j {
+                            continue;
+                        }
+                        let callee = summaries[j].clone();
+                        if absorb(&mut summaries[i], &callee) {
+                            changed = true;
+                        }
+                    }
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+    }
+
+    /// BFS over call edges from `roots`.  `allow_callee(j)` can veto
+    /// walking *into* `fns[j]` (sanctioned seams); vetoed functions are
+    /// not reached and not scanned further.
+    pub fn reach(&self, roots: &[usize], allow_callee: impl Fn(usize) -> bool) -> Reach {
+        let mut pred: Vec<Option<(usize, usize)>> = vec![None; self.fns.len()];
+        let mut reached = vec![false; self.fns.len()];
+        let mut queue: Vec<usize> = Vec::new();
+        for &r in roots {
+            if !reached[r] {
+                reached[r] = true;
+                queue.push(r);
+            }
+        }
+        let mut qi = 0;
+        while qi < queue.len() {
+            let i = queue[qi];
+            qi += 1;
+            for call in &self.calls[i] {
+                for j in self.resolve(Some(self.fns[i].file), &call.name, call.mem_scoped) {
+                    if !reached[j] && allow_callee(j) {
+                        reached[j] = true;
+                        pred[j] = Some((i, call.off));
+                        queue.push(j);
+                    }
+                }
+            }
+        }
+        Reach { reached, pred }
+    }
+}
+
+/// Result of a reachability walk: which functions are reached, plus a
+/// predecessor map for witness-chain reconstruction.
+pub struct Reach {
+    reached: Vec<bool>,
+    pred: Vec<Option<(usize, usize)>>,
+}
+
+impl Reach {
+    pub fn contains(&self, i: usize) -> bool {
+        self.reached[i]
+    }
+
+    /// Indices of all reached functions.
+    pub fn all(&self) -> Vec<usize> {
+        (0..self.reached.len()).filter(|&i| self.reached[i]).collect()
+    }
+
+    /// Witness chain from a root to `fns[i]`, e.g.
+    /// `serve -> process_frames -> dispatch`.
+    pub fn path(&self, g: &Graph<'_>, i: usize) -> String {
+        let mut names = vec![g.fns[i].name.clone()];
+        let mut cur = i;
+        // The pred map is acyclic by construction (set once, BFS), but
+        // cap the walk defensively.
+        for _ in 0..self.pred.len() {
+            match self.pred[cur] {
+                Some((p, _)) => {
+                    names.push(g.fns[p].name.clone());
+                    cur = p;
+                }
+                None => break,
+            }
+        }
+        names.reverse();
+        names.join(" -> ")
+    }
+}
+
+/// Append every named `fn` with a braced body in `code` to `fns`.
+pub fn collect_fns(file: usize, code: &str, fns: &mut Vec<FnDef>) {
+    let b = code.as_bytes();
+    let mut from = 0usize;
+    while let Some(pos) = find_token_from(code, "fn", from) {
+        from = pos + 2;
+        let j = skip_ws(b, pos + 2);
+        let Some(name) = ident_starting_at(b, j) else { continue };
+        let mut k = j + name.len();
+        while k < b.len() && b[k] != b'{' && b[k] != b';' {
+            k += 1;
+        }
+        if k >= b.len() || b[k] == b';' {
+            continue;
+        }
+        let Some(close) = matching_brace(b, k) else { continue };
+        fns.push(FnDef {
+            file,
+            name,
+            body: (k, close),
+        });
+    }
+}
+
+fn nested_spans(fns: &[FnDef], i: usize) -> Vec<(usize, usize)> {
+    let f = &fns[i];
+    fns.iter()
+        .filter(|g| g.file == f.file && g.body.0 > f.body.0 && g.body.1 < f.body.1)
+        .map(|g| g.body)
+        .collect()
+}
+
+/// If an identifier starts at `b[i]` and forms a call (`name(` with no
+/// `!` — macros are not calls — and not a `fn name(` definition), return
+/// the call site.
+pub fn call_at(b: &[u8], i: usize) -> Option<CallSite> {
+    if !is_ident_byte(b[i]) || b[i].is_ascii_digit() || (i > 0 && is_ident_byte(b[i - 1])) {
+        return None;
+    }
+    let name = ident_starting_at(b, i)?;
+    let after = skip_ws(b, i + name.len());
+    if after >= b.len() || b[after] != b'(' {
+        return None;
+    }
+    let is_def = prev_non_ws(b, i)
+        .and_then(|p| ident_ending_at(b, p))
+        .is_some_and(|(_, kw)| kw == "fn");
+    if is_def {
+        return None;
+    }
+    let mem_scoped = prev_non_ws(b, i)
+        .filter(|&d| b[d] == b'.')
+        .map(|d| receiver_chain(b, d).iter().any(|id| id == "mem"))
+        .unwrap_or(false);
+    Some(CallSite {
+        off: i,
+        name,
+        mem_scoped,
+    })
+}
+
+/// All call sites in one body, source order, skipping `nested` fn spans.
+fn collect_calls(code: &str, body: (usize, usize), nested: &[(usize, usize)]) -> Vec<CallSite> {
+    let b = code.as_bytes();
+    let mut out = Vec::new();
+    let mut i = body.0;
+    while i <= body.1 {
+        if let Some(&(_, e)) = nested.iter().find(|(s, _)| *s == i) {
+            i = e + 1;
+            continue;
+        }
+        if let Some(site) = call_at(b, i) {
+            i += site.name.len();
+            out.push(site);
+            continue;
+        }
+        if is_ident_byte(b[i]) {
+            // Skip the rest of a non-call identifier in one step.
+            while i <= body.1 && is_ident_byte(b[i]) {
+                i += 1;
+            }
+            continue;
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Identifiers of the receiver expression ending just before `dot`,
+/// nearest-first: `self.core.log.lock()` → ["log", "core", "self"].
+/// Bracketed index expressions are skipped (`self.shards[s]` → ["shards",
+/// "self"] — `s` is an index, not a receiver).
+pub fn receiver_chain(b: &[u8], dot: usize) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut j = match prev_non_ws(b, dot) {
+        Some(j) => j,
+        None => return out,
+    };
+    loop {
+        match b[j] {
+            b']' | b')' => {
+                let (open, close) = if b[j] == b']' { (b'[', b']') } else { (b'(', b')') };
+                let mut depth = 1i64;
+                while j > 0 && depth > 0 {
+                    j -= 1;
+                    if b[j] == close {
+                        depth += 1;
+                    } else if b[j] == open {
+                        depth -= 1;
+                    }
+                }
+                if j == 0 {
+                    return out;
+                }
+                j -= 1;
+            }
+            _ if is_ident_byte(b[j]) => {
+                let Some((start, ident)) = ident_ending_at(b, j) else { return out };
+                out.push(ident);
+                if start == 0 {
+                    return out;
+                }
+                j = start - 1;
+            }
+            b'.' => {
+                let Some(p) = prev_non_ws(b, j) else { return out };
+                j = p;
+            }
+            b':' => {
+                // `::` path separator continues the chain; a lone `:`
+                // (type ascription) ends it.
+                if j > 0 && b[j - 1] == b':' {
+                    let Some(p) = prev_non_ws(b, j - 1) else { return out };
+                    j = p;
+                } else {
+                    return out;
+                }
+            }
+            _ => return out,
+        }
+        // Skip whitespace between chain elements.
+        while j > 0 && b[j].is_ascii_whitespace() {
+            j -= 1;
+        }
+        if b[j].is_ascii_whitespace() {
+            return out;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::source::SourceFile;
+    use std::path::PathBuf;
+
+    fn tree_of(files: &[(&str, &str)]) -> Tree {
+        let mut findings = Vec::new();
+        Tree {
+            root: PathBuf::from("."),
+            files: files
+                .iter()
+                .map(|(rel, src)| SourceFile::parse(rel.to_string(), src.to_string(), &mut findings))
+                .collect(),
+            load_findings: findings,
+        }
+    }
+
+    #[test]
+    fn reach_walks_call_chain_and_reports_path() {
+        let tree = tree_of(&[(
+            "a.rs",
+            "fn serve() { tick(); }\nfn tick() { helper(); }\nfn helper() { leaf(); }\nfn leaf() {}\nfn island() {}\n",
+        )]);
+        let g = Graph::build(&tree);
+        let roots = g.fns_named_in("serve", "a.rs");
+        assert_eq!(roots.len(), 1);
+        let reach = g.reach(&roots, |_| true);
+        let leaf = g.fns_named_in("leaf", "a.rs")[0];
+        let island = g.fns_named_in("island", "a.rs")[0];
+        assert!(reach.contains(leaf));
+        assert!(!reach.contains(island));
+        assert_eq!(reach.path(&g, leaf), "serve -> tick -> helper -> leaf");
+    }
+
+    #[test]
+    fn reach_edge_filter_cuts_seams() {
+        let tree = tree_of(&[(
+            "a.rs",
+            "fn serve() { seam(); }\nfn seam() { leaf(); }\nfn leaf() {}\n",
+        )]);
+        let g = Graph::build(&tree);
+        let roots = g.fns_named_in("serve", "a.rs");
+        let seam = g.fns_named_in("seam", "a.rs")[0];
+        let leaf = g.fns_named_in("leaf", "a.rs")[0];
+        let reach = g.reach(&roots, |j| j != seam);
+        assert!(!reach.contains(seam));
+        assert!(!reach.contains(leaf), "cutting a seam cuts everything behind it");
+    }
+
+    #[test]
+    fn unresolved_idioms_and_macros_are_not_edges() {
+        let tree = tree_of(&[(
+            "a.rs",
+            "fn serve() { let v: Vec<u8> = Vec::new(); v.len(); helper!(); }\nfn new() { leaf(); }\nfn helper() { leaf(); }\nfn leaf() {}\n",
+        )]);
+        let g = Graph::build(&tree);
+        let roots = g.fns_named_in("serve", "a.rs");
+        let reach = g.reach(&roots, |_| true);
+        let leaf = g.fns_named_in("leaf", "a.rs")[0];
+        assert!(!reach.contains(leaf), "`new` is unresolved and `helper!` is a macro");
+    }
+
+    #[test]
+    fn resolution_is_local_first() {
+        let tree = tree_of(&[
+            (
+                "server.rs",
+                "fn serve() { dispatch(); }\nfn dispatch() { local_leaf(); }\nfn local_leaf() {}\n",
+            ),
+            ("cli.rs", "fn dispatch() { cli_leaf(); }\nfn cli_leaf() {}\n"),
+        ]);
+        let g = Graph::build(&tree);
+        let roots = g.fns_named_in("serve", "server.rs");
+        let reach = g.reach(&roots, |_| true);
+        assert!(reach.contains(g.fns_named_in("local_leaf", "server.rs")[0]));
+        assert!(
+            !reach.contains(g.fns_named_in("cli_leaf", "cli.rs")[0]),
+            "a local `dispatch` definition shadows the cross-file union"
+        );
+    }
+
+    #[test]
+    fn propagate_reaches_fixpoint_transitively() {
+        let tree = tree_of(&[(
+            "a.rs",
+            "fn a() { b(); }\nfn b() { c(); }\nfn c() {}\n",
+        )]);
+        let g = Graph::build(&tree);
+        let mut sums: Vec<Vec<&str>> = g
+            .fns
+            .iter()
+            .map(|f| if f.name == "c" { vec!["mark"] } else { vec![] })
+            .collect();
+        g.propagate(&mut sums, |caller, callee| {
+            let mut changed = false;
+            for m in callee {
+                if !caller.contains(m) {
+                    caller.push(m);
+                    changed = true;
+                }
+            }
+            changed
+        });
+        let a = g.fns_named_in("a", "a.rs")[0];
+        assert_eq!(sums[a], vec!["mark"]);
+    }
+}

@@ -1,0 +1,330 @@
+//! Diagnostics layer: structured output formats and the findings
+//! baseline.
+//!
+//! `analyze` can render findings three ways:
+//!
+//! - `text` (default) — `file:line: [lint] msg`, one per line;
+//! - `json` — a machine-readable array (same schema as the baseline);
+//! - `github` — `::error file=…,line=…::…` workflow annotations, so CI
+//!   findings land on the touched lines of a pull request.
+//!
+//! The *baseline* (`xtask/analyze-baseline.json`, checked in) turns
+//! "shrink, don't grow" into a gate: `analyze` exits nonzero only for
+//! findings **not** in the baseline, so legacy findings can be burned
+//! down incrementally while new ones fail CI immediately.
+//! `--write-baseline` rewrites the file from the current findings (which
+//! is also how it shrinks).  Baseline entries match on `(file, lint,
+//! msg)` — line numbers drift with unrelated edits and are recorded for
+//! humans only.  The repo's target state is an *empty* baseline: every
+//! deliberate waiver should be a reasoned in-source pragma instead.
+//!
+//! Everything here is hand-rolled (the crate has no dependencies); the
+//! JSON reader accepts exactly the subset the writer emits.
+
+use std::fmt::Write as _;
+
+use crate::source::Finding;
+
+/// One accepted legacy finding.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BaselineEntry {
+    pub file: String,
+    pub line: usize,
+    pub lint: String,
+    pub msg: String,
+}
+
+impl BaselineEntry {
+    pub fn matches(&self, f: &Finding) -> bool {
+        self.file == f.file && self.lint == f.lint && self.msg == f.msg
+    }
+}
+
+/// Split findings into (new, baselined) against the baseline, and report
+/// stale baseline entries that no longer fire.
+pub fn diff<'f>(
+    findings: &'f [Finding],
+    baseline: &[BaselineEntry],
+) -> (Vec<&'f Finding>, Vec<&'f Finding>, Vec<BaselineEntry>) {
+    let mut fresh = Vec::new();
+    let mut known = Vec::new();
+    for f in findings {
+        if baseline.iter().any(|b| b.matches(f)) {
+            known.push(f);
+        } else {
+            fresh.push(f);
+        }
+    }
+    let stale = baseline
+        .iter()
+        .filter(|b| !findings.iter().any(|f| b.matches(f)))
+        .cloned()
+        .collect();
+    (fresh, known, stale)
+}
+
+/// Serialize findings as the baseline/`--format json` document.
+pub fn to_json(findings: &[&Finding]) -> String {
+    let mut out = String::from("[");
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(
+            out,
+            "\n  {{\"file\": {}, \"line\": {}, \"lint\": {}, \"msg\": {}}}",
+            json_str(&f.file),
+            f.line,
+            json_str(f.lint),
+            json_str(&f.msg)
+        );
+    }
+    out.push_str(if findings.is_empty() { "]\n" } else { "\n]\n" });
+    out
+}
+
+/// One GitHub workflow annotation. `prefix` is the path from the repo
+/// root to the analyzed source root (annotations are repo-relative).
+pub fn github_annotation(f: &Finding, prefix: &str) -> String {
+    let path = if prefix.is_empty() {
+        f.file.clone()
+    } else {
+        format!("{}/{}", prefix.trim_end_matches('/'), f.file)
+    };
+    // Annotation messages must escape %, CR and LF.
+    let msg = format!("[{}] {}", f.lint, f.msg)
+        .replace('%', "%25")
+        .replace('\r', "%0D")
+        .replace('\n', "%0A");
+    format!("::error file={path},line={}::{msg}", f.line)
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Parse a baseline document: an array of `{file, line, lint, msg}`
+/// objects (the exact subset `to_json` writes).
+pub fn parse_baseline(text: &str) -> Result<Vec<BaselineEntry>, String> {
+    let mut p = Parser {
+        b: text.as_bytes(),
+        i: 0,
+    };
+    p.ws();
+    p.expect(b'[')?;
+    let mut out = Vec::new();
+    p.ws();
+    if p.peek() == Some(b']') {
+        p.i += 1;
+        return Ok(out);
+    }
+    loop {
+        out.push(p.object()?);
+        p.ws();
+        match p.next()? {
+            b',' => p.ws(),
+            b']' => break,
+            c => return Err(format!("expected ',' or ']', got '{}'", c as char)),
+        }
+    }
+    Ok(out)
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+    fn next(&mut self) -> Result<u8, String> {
+        let c = self.peek().ok_or("unexpected end of baseline json")?;
+        self.i += 1;
+        Ok(c)
+    }
+    fn expect(&mut self, want: u8) -> Result<(), String> {
+        let got = self.next()?;
+        if got != want {
+            return Err(format!("expected '{}', got '{}'", want as char, got as char));
+        }
+        Ok(())
+    }
+    fn object(&mut self) -> Result<BaselineEntry, String> {
+        self.ws();
+        self.expect(b'{')?;
+        let mut entry = BaselineEntry {
+            file: String::new(),
+            line: 0,
+            lint: String::new(),
+            msg: String::new(),
+        };
+        loop {
+            self.ws();
+            let key = self.string()?;
+            self.ws();
+            self.expect(b':')?;
+            self.ws();
+            match key.as_str() {
+                "line" => entry.line = self.number()?,
+                "file" => entry.file = self.string()?,
+                "lint" => entry.lint = self.string()?,
+                "msg" => entry.msg = self.string()?,
+                other => return Err(format!("unknown baseline key {other:?}")),
+            }
+            self.ws();
+            match self.next()? {
+                b',' => continue,
+                b'}' => break,
+                c => return Err(format!("expected ',' or '}}', got '{}'", c as char)),
+            }
+        }
+        Ok(entry)
+    }
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.next()? {
+                b'"' => return Ok(out),
+                b'\\' => match self.next()? {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'n' => out.push('\n'),
+                    b'r' => out.push('\r'),
+                    b't' => out.push('\t'),
+                    b'u' => {
+                        let mut code = 0u32;
+                        for _ in 0..4 {
+                            let d = self.next()?;
+                            code = code * 16
+                                + (d as char)
+                                    .to_digit(16)
+                                    .ok_or_else(|| format!("bad \\u digit '{}'", d as char))?;
+                        }
+                        out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                    }
+                    c => return Err(format!("unsupported escape '\\{}'", c as char)),
+                },
+                c => {
+                    // Multi-byte UTF-8 passes through byte by byte; the
+                    // source was a valid &str, so re-assembly is safe via
+                    // a byte buffer.
+                    if c < 0x80 {
+                        out.push(c as char);
+                    } else {
+                        // Collect the full scalar's continuation bytes.
+                        let mut buf = vec![c];
+                        while self.peek().is_some_and(|n| (0x80..0xC0).contains(&n)) {
+                            buf.push(self.next()?);
+                        }
+                        out.push_str(&String::from_utf8_lossy(&buf));
+                    }
+                }
+            }
+        }
+    }
+    fn number(&mut self) -> Result<usize, String> {
+        let start = self.i;
+        while self.peek().is_some_and(|c| c.is_ascii_digit()) {
+            self.i += 1;
+        }
+        if self.i == start {
+            return Err("expected a number".into());
+        }
+        std::str::from_utf8(&self.b[start..self.i])
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| "bad number".into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finding(file: &str, line: usize, msg: &str) -> Finding {
+        Finding {
+            file: file.into(),
+            line,
+            lint: "panics",
+            msg: msg.into(),
+        }
+    }
+
+    #[test]
+    fn json_round_trips_through_the_baseline_parser() {
+        let f1 = finding("a.rs", 3, "has \"quotes\" and \\slashes\\");
+        let f2 = finding("b/c.rs", 99, "plain");
+        let doc = to_json(&[&f1, &f2]);
+        let parsed = parse_baseline(&doc).unwrap();
+        assert_eq!(parsed.len(), 2);
+        assert!(parsed[0].matches(&f1));
+        assert!(parsed[1].matches(&f2));
+        assert!(!parsed[0].matches(&f2));
+    }
+
+    #[test]
+    fn empty_baseline_parses() {
+        assert_eq!(parse_baseline("[]").unwrap(), vec![]);
+        assert_eq!(parse_baseline(" [\n]\n").unwrap(), vec![]);
+    }
+
+    #[test]
+    fn diff_partitions_new_known_stale() {
+        let f1 = finding("a.rs", 3, "old");
+        let f2 = finding("a.rs", 9, "new");
+        let base = parse_baseline(&to_json(&[&f1, &finding("gone.rs", 1, "fixed")])).unwrap();
+        let findings = vec![f1.clone(), f2.clone()];
+        let (fresh, known, stale) = diff(&findings, &base);
+        assert_eq!(fresh, vec![&f2]);
+        assert_eq!(known, vec![&f1]);
+        assert_eq!(stale.len(), 1);
+        assert_eq!(stale[0].file, "gone.rs");
+    }
+
+    #[test]
+    fn github_annotation_escapes_and_prefixes() {
+        let f = finding("a.rs", 7, "50% bad\nline two");
+        let ann = github_annotation(&f, "rust/src");
+        assert_eq!(
+            ann,
+            "::error file=rust/src/a.rs,line=7::[panics] 50%25 bad%0Aline two"
+        );
+        assert!(github_annotation(&f, "").starts_with("::error file=a.rs,"));
+    }
+
+    #[test]
+    fn baseline_line_numbers_do_not_affect_matching() {
+        let entry = BaselineEntry {
+            file: "a.rs".into(),
+            line: 1,
+            lint: "panics".into(),
+            msg: "m".into(),
+        };
+        assert!(entry.matches(&finding("a.rs", 42, "m")));
+    }
+}

@@ -1,7 +1,7 @@
 //! `xtask` — the repo's own static-analysis pass.
 //!
 //! Run as `cargo run -p xtask -- analyze` (CI gates on its exit status).
-//! Four lints enforce invariants the compiler can't:
+//! Seven lints enforce invariants the compiler can't:
 //!
 //! * `protocol` — opcode table / encode / decode / server / client /
 //!   durable-journal exhaustiveness for `weightstore/protocol.rs`.
@@ -11,9 +11,20 @@
 //!   pragma-sanctioned sites.
 //! * `locks` — the inter-lock acquisition graph respects the canonical
 //!   order declared in `weightstore/mod.rs` and is cycle-free.
+//! * `blocking` — no blocking operation reachable from the server
+//!   event-loop tick path (call-graph reachability from `serve()`).
+//! * `panics` — no `unwrap`/`expect`/panicking macro/range-index
+//!   reachable from server dispatch or `Client`/`ClientPool` paths.
+//! * `telemetry` — metric-name grammar, `STORE_METRICS` membership, and
+//!   cross-site instrument-kind consistency.
 //!
-//! See `xtask/README.md` for pragma syntax and how to add a lint.
+//! The reachability lints share the name-resolved call graph in
+//! [`callgraph`].  Findings diff against a checked-in baseline
+//! (`xtask/analyze-baseline.json`, see [`diag`]) so CI fails on growth
+//! only.  See `xtask/README.md` for pragma syntax and how to add a lint.
 
+pub mod callgraph;
+pub mod diag;
 pub mod lints;
 pub mod source;
 

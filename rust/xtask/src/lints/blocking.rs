@@ -1,0 +1,145 @@
+//! Blocking-in-event-loop analysis.
+//!
+//! The store server is one thread and one `poll(2)` loop; a blocking
+//! syscall inside a tick stalls every connected master/worker/peer at
+//! once.  This lint walks the shared call graph ([`crate::callgraph`])
+//! from `serve()` in `weightstore/server.rs` and flags any *blocking
+//! operation* in a reachable function body:
+//!
+//! - `sync_all(…)` / `sync_data(…)` — file sync (also what inline
+//!   compaction would reach; the background compactor is the sanctioned
+//!   seam and is only *signaled* from the tick path);
+//! - `sleep(…)` — `thread::sleep` and friends;
+//! - `connect(…)` / `connect_timeout(…)` — blocking TCP dials;
+//! - `.wait(…)` / `.wait_timeout(…)` / `.wait_while(…)` — condvar waits.
+//!
+//! Two scope decisions keep the walk honest:
+//!
+//! - **Seams.** `after_append` only `notify_one`s the compactor thread —
+//!   notifications are non-blocking, so `compactor_loop` and everything
+//!   behind it is simply not reachable through call edges.  No special
+//!   carve-out is needed; if someone ever calls `compact_now` from the
+//!   tick path, the sync sites inside it light up.
+//! - **Client exclusion.** Union-by-name resolution would drag
+//!   `weightstore/client.rs` (the *other end* of the wire: blocking
+//!   `read_exact`/`connect_timeout`/backoff sleeps by design) into the
+//!   serve graph through the shared `WeightStore` method names.  The
+//!   server never fronts a remote `Client` — its backends are the
+//!   in-process stores — so edges into `client.rs` are cut.  A future
+//!   proxy deployment must revisit this lint first.
+//!
+//! Nonblocking-socket `read`/`write` in the loop itself are fine (the
+//! sockets are `set_nonblocking(true)`); the tokens above are the calls
+//! that block regardless of socket mode.  Waive a deliberate site with
+//! `// analyze: allow(blocking): reason` — e.g. the opt-in
+//! `DurableOptions::fsync` append path, whose cost is measured by the
+//! `journal.fsync_ns` histogram.
+
+use crate::callgraph::Graph;
+use crate::source::{ident_starting_at, is_ident_byte, prev_non_ws, skip_ws, Finding, Tree};
+
+const KEY: &str = "blocking";
+
+/// Bare or method calls that block the calling thread.
+const BLOCKING_CALLS: &[(&str, &str)] = &[
+    ("sync_all", "file sync"),
+    ("sync_data", "file sync"),
+    ("sleep", "thread sleep"),
+    ("connect", "blocking TCP connect"),
+    ("connect_timeout", "blocking TCP connect"),
+];
+
+/// Method calls (dot-preceded only) that block: condvar waits.  Bare
+/// `wait` would also match unrelated helpers, so these require a `.`.
+const BLOCKING_METHODS: &[(&str, &str)] = &[
+    ("wait", "condvar wait"),
+    ("wait_timeout", "condvar wait"),
+    ("wait_while", "condvar wait"),
+];
+
+pub fn run(tree: &Tree) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let Some(server) = tree.get("weightstore/server.rs") else {
+        // Trees without a server (partial fixtures) have no event loop to
+        // protect.
+        return findings;
+    };
+    let server_rel = server.rel.clone();
+
+    let graph = Graph::build(tree);
+    let roots = graph.fns_named_in("serve", "weightstore/server.rs");
+    if roots.is_empty() {
+        findings.push(Finding {
+            file: server_rel,
+            line: 1,
+            lint: "blocking",
+            msg: "no `fn serve` found in weightstore/server.rs — the blocking lint has no \
+                  event-loop root"
+                .into(),
+        });
+        return findings;
+    }
+    let reach = graph.reach(&roots, |j| {
+        // Cut edges into the client side of the wire (see module docs).
+        !graph.file_of(j).rel.ends_with("weightstore/client.rs")
+    });
+
+    for i in reach.all() {
+        let file = graph.file_of(i);
+        let b = file.code_sans_tests.as_bytes();
+        let body = graph.fns[i].body;
+        let nested = graph.nested_spans(i);
+        let mut k = body.0;
+        while k <= body.1 {
+            if let Some(&(_, e)) = nested.iter().find(|(s, _)| *s == k) {
+                k = e + 1;
+                continue;
+            }
+            if !is_ident_byte(b[k]) || b[k].is_ascii_digit() || (k > 0 && is_ident_byte(b[k - 1]))
+            {
+                k += 1;
+                continue;
+            }
+            let Some(name) = ident_starting_at(b, k) else {
+                k += 1;
+                continue;
+            };
+            let after = skip_ws(b, k + name.len());
+            let is_call = after < b.len() && b[after] == b'(';
+            let dotted = prev_non_ws(b, k).is_some_and(|p| b[p] == b'.');
+            let what = if is_call {
+                BLOCKING_CALLS
+                    .iter()
+                    .find(|(n, _)| *n == name)
+                    .or_else(|| {
+                        if dotted {
+                            BLOCKING_METHODS.iter().find(|(n, _)| *n == name)
+                        } else {
+                            None
+                        }
+                    })
+                    .map(|(_, w)| *w)
+            } else {
+                None
+            };
+            if let Some(what) = what {
+                let line = file.line_of(k);
+                if !file.allows.allowed(line, KEY) {
+                    findings.push(Finding {
+                        file: file.rel.clone(),
+                        line,
+                        lint: "blocking",
+                        msg: format!(
+                            "{what} `{name}(…)` is reachable from the event-loop tick \
+                             ({}); move it behind the background-compactor/offload seam or \
+                             waive with `analyze: allow(blocking): reason`",
+                            reach.path(&graph, i)
+                        ),
+                    });
+                }
+            }
+            k += name.len();
+        }
+    }
+    findings
+}

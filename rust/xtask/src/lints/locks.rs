@@ -5,9 +5,10 @@
 //! `Mutex/RwLock` guards from `io::Read::read(&mut buf)`), classifies each
 //! site into a named lock *class* (`cursors`, `shards`, `log`, …), tracks
 //! which guards are held across statements and one level of calls
-//! (iterated to a fixpoint over a name-resolved call graph), and checks
-//! the resulting inter-class acquisition graph against the canonical
-//! order declared in `weightstore/mod.rs`:
+//! (iterated to a fixpoint over the shared name-resolved call graph in
+//! [`crate::callgraph`]), and checks the resulting inter-class
+//! acquisition graph against the canonical order declared in
+//! `weightstore/mod.rs`:
 //!
 //! ```text
 //! //! lock-order: compact_serial -> log -> signal -> cursors -> params -> shards
@@ -23,39 +24,17 @@
 //! `let` is considered held until its enclosing block closes (or an
 //! explicit `drop(guard)`), a guard in expression position is released at
 //! the end of its statement, and calls made while holding a guard
-//! contribute the callee's (transitive) acquisition set as edges.  Name
-//! collisions across `impl` blocks resolve to the union of candidates,
-//! except calls through a `…mem…` receiver, which resolve only into
-//! `weightstore/mod.rs` (the durable backend's inner `MemStore`), and a
-//! list of ubiquitous std names (`new`, `push`, `insert`, …) that are
-//! never resolved — attributing `Vec::new()` to `Master::new` would wire
-//! the whole graph to itself.
+//! contribute the callee's (transitive) acquisition set as edges.  Call
+//! resolution policy (local-first, then union of same-named candidates;
+//! `mem` scoping; the never-resolved std idiom list) lives in
+//! [`crate::callgraph`].
 
 use std::collections::{BTreeMap, BTreeSet};
 
+use crate::callgraph::{call_at, receiver_chain, Graph};
 use crate::source::{
-    find_token_from, ident_ending_at, ident_starting_at, is_ident_byte, matching_brace,
-    prev_non_ws, skip_ws, Finding, Tree,
+    find_token_from, ident_starting_at, is_ident_byte, skip_ws, Finding, Tree,
 };
-
-/// Call names never resolved through the name-based call graph: std
-/// idioms so common that resolving them to same-named repo functions
-/// would connect unrelated code (e.g. `Vec::new()` → `Master::new`).
-const UNRESOLVED_CALLS: &[&str] = &[
-    "new", "default", "clone", "from", "into", "drop", "with_capacity", "to_string", "to_vec",
-    "fmt", "len", "is_empty", "load", "store", "push", "pop", "insert", "remove", "get", "min",
-    "max", "iter", "next", "eq", "hash", "cmp", "wait", "join", "collect", "map", "filter",
-    "unwrap", "expect", "ok", "take", "contains",
-];
-
-#[derive(Debug)]
-struct FnDef {
-    file: usize,
-    name: String,
-    /// Byte span of the body (from `{` to matching `}`), in
-    /// `code_sans_tests` coordinates.
-    body: (usize, usize),
-}
 
 #[derive(Debug)]
 enum Event {
@@ -92,50 +71,21 @@ pub fn run(tree: &Tree) -> Vec<Finding> {
     }
     let pos_of = |class: &str| declared.iter().position(|c| c == class);
 
-    // --- function table ------------------------------------------------
-    let mut fns: Vec<FnDef> = Vec::new();
-    for (fi, file) in tree.files.iter().enumerate() {
-        collect_fns(fi, &file.code_sans_tests, &mut fns);
-    }
-    let mut by_name: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
-    for (i, f) in fns.iter().enumerate() {
-        by_name.entry(&f.name).or_default().push(i);
-    }
-
-    // --- per-function event streams -------------------------------------
-    let events: Vec<Vec<Event>> = fns
-        .iter()
-        .map(|f| {
-            let file = &tree.files[f.file];
-            let nested: Vec<(usize, usize)> = fns
-                .iter()
-                .filter(|g| g.body.0 > f.body.0 && g.body.1 < f.body.1)
-                .map(|g| g.body)
-                .collect();
-            scan_body(&file.code_sans_tests, f.body, &nested, &declared)
+    // --- shared call graph + per-function event streams ------------------
+    let graph = Graph::build(tree);
+    let events: Vec<Vec<Event>> = (0..graph.fns.len())
+        .map(|i| {
+            let file = graph.file_of(i);
+            let nested = graph.nested_spans(i);
+            scan_body(&file.code_sans_tests, graph.fns[i].body, &nested, &declared)
         })
         .collect();
 
     // --- summaries: fixpoint over the call graph -------------------------
-    let resolve = |name: &str, mem_scoped: bool| -> Vec<usize> {
-        if UNRESOLVED_CALLS.contains(&name) {
-            return Vec::new();
-        }
-        let Some(cands) = by_name.get(name) else { return Vec::new() };
-        cands
-            .iter()
-            .copied()
-            .filter(|&i| {
-                !mem_scoped || tree.files[fns[i].file].rel.ends_with("weightstore/mod.rs")
-            })
-            .collect()
-    };
-    let mut summaries: Vec<BTreeSet<String>> = fns
+    let mut summaries: Vec<BTreeSet<String>> = events
         .iter()
-        .enumerate()
-        .map(|(i, _)| {
-            events[i]
-                .iter()
+        .map(|evs| {
+            evs.iter()
                 .filter_map(|e| match e {
                     Event::Acquire { class: Some(c), .. } => Some(c.clone()),
                     _ => None,
@@ -143,36 +93,17 @@ pub fn run(tree: &Tree) -> Vec<Finding> {
                 .collect()
         })
         .collect();
-    loop {
-        let mut changed = false;
-        for i in 0..fns.len() {
-            let mut add: BTreeSet<String> = BTreeSet::new();
-            for e in &events[i] {
-                if let Event::Call { name, mem_scoped, .. } = e {
-                    for j in resolve(name, *mem_scoped) {
-                        for c in &summaries[j] {
-                            if !summaries[i].contains(c) {
-                                add.insert(c.clone());
-                            }
-                        }
-                    }
-                }
-            }
-            if !add.is_empty() {
-                summaries[i].extend(add);
-                changed = true;
-            }
-        }
-        if !changed {
-            break;
-        }
-    }
+    graph.propagate(&mut summaries, |caller, callee| {
+        let before = caller.len();
+        caller.extend(callee.iter().cloned());
+        caller.len() != before
+    });
 
     // --- replay: edges + unclassifiable sites ---------------------------
     // edge (held-class, acquired-class) → first site (file, line)
     let mut edges: BTreeMap<(String, String), (String, usize)> = BTreeMap::new();
-    for (i, f) in fns.iter().enumerate() {
-        let file = &tree.files[f.file];
+    for i in 0..graph.fns.len() {
+        let file = graph.file_of(i);
         let mut depth = 0i64;
         let mut held: Vec<(String, i64, Option<String>)> = Vec::new();
         for e in &events[i] {
@@ -196,7 +127,7 @@ pub fn run(tree: &Tree) -> Vec<Finding> {
                                 msg: format!(
                                     "cannot classify this lock acquisition (in `fn {}`); name \
                                      the receiver after its lock class or add a pragma",
-                                    f.name
+                                    graph.fns[i].name
                                 ),
                             });
                         }
@@ -223,7 +154,7 @@ pub fn run(tree: &Tree) -> Vec<Finding> {
                     if file.allows.allowed(line, "lock-order") {
                         continue;
                     }
-                    for j in resolve(name, *mem_scoped) {
+                    for j in graph.resolve(Some(graph.fns[i].file), name, *mem_scoped) {
                         for c in summaries[j].iter() {
                             for (h, _, _) in &held {
                                 if h != c {
@@ -291,30 +222,6 @@ fn declared_order(tree: &Tree) -> Vec<String> {
     Vec::new()
 }
 
-/// Append every named `fn` with a braced body in `code` to `fns`.
-fn collect_fns(file: usize, code: &str, fns: &mut Vec<FnDef>) {
-    let b = code.as_bytes();
-    let mut from = 0usize;
-    while let Some(pos) = find_token_from(code, "fn", from) {
-        from = pos + 2;
-        let j = skip_ws(b, pos + 2);
-        let Some(name) = ident_starting_at(b, j) else { continue };
-        let mut k = j + name.len();
-        while k < b.len() && b[k] != b'{' && b[k] != b';' {
-            k += 1;
-        }
-        if k >= b.len() || b[k] == b';' {
-            continue;
-        }
-        let Some(close) = matching_brace(b, k) else { continue };
-        fns.push(FnDef {
-            file,
-            name,
-            body: (k, close),
-        });
-    }
-}
-
 /// Walk one function body, emitting events in source order.  `nested`
 /// spans (inner `fn` items) are skipped — their events belong to the
 /// inner function.
@@ -362,38 +269,31 @@ fn scan_body(
             }
         }
         // Identifier: candidate call (or `drop(guard)` release).
-        if is_ident_byte(c) && !c.is_ascii_digit() && (i == 0 || !is_ident_byte(b[i - 1])) {
-            if let Some(name) = ident_starting_at(b, i) {
-                let after = skip_ws(b, i + name.len());
-                // A definition (`fn name(`) is not a call.
-                let is_def = prev_non_ws(b, i)
-                    .and_then(|p| ident_ending_at(b, p))
-                    .is_some_and(|(_, kw)| kw == "fn");
-                if after < b.len() && b[after] == b'(' && !is_def {
-                    if name == "drop" {
-                        let j = skip_ws(b, after + 1);
-                        if let Some(arg) = ident_starting_at(b, j) {
-                            let k = skip_ws(b, j + arg.len());
-                            if k < b.len() && b[k] == b')' {
-                                ev.push(Event::Release { binder: arg });
-                            }
-                        }
-                    } else {
-                        // Method call receiver (for `mem` scoping).
-                        let mem_scoped = prev_non_ws(b, i)
-                            .filter(|&d| b[d] == b'.')
-                            .map(|d| receiver_chain(b, d).iter().any(|id| id == "mem"))
-                            .unwrap_or(false);
-                        ev.push(Event::Call {
-                            off: i,
-                            name: name.clone(),
-                            mem_scoped,
-                        });
+        if let Some(site) = call_at(b, i) {
+            if site.name == "drop" {
+                let after = skip_ws(b, i + site.name.len());
+                let j = skip_ws(b, after + 1);
+                if let Some(arg) = ident_starting_at(b, j) {
+                    let k = skip_ws(b, j + arg.len());
+                    if k < b.len() && b[k] == b')' {
+                        ev.push(Event::Release { binder: arg });
                     }
                 }
-                i += name.len();
-                continue;
+            } else {
+                ev.push(Event::Call {
+                    off: site.off,
+                    name: site.name.clone(),
+                    mem_scoped: site.mem_scoped,
+                });
             }
+            i += site.name.len();
+            continue;
+        }
+        if is_ident_byte(c) {
+            while i <= body.1 && is_ident_byte(b[i]) {
+                i += 1;
+            }
+            continue;
         }
         i += 1;
     }
@@ -417,68 +317,6 @@ fn match_guard_call(b: &[u8], dot: usize) -> Option<usize> {
         return None;
     }
     Some(m + 1)
-}
-
-/// Identifiers of the receiver expression ending just before `dot`,
-/// nearest-first: `self.core.log.lock()` → ["log", "core", "self"].
-/// Bracketed index expressions are skipped (`self.shards[s]` → ["shards",
-/// "self"] — `s` is an index, not a receiver).
-fn receiver_chain(b: &[u8], dot: usize) -> Vec<String> {
-    let mut out = Vec::new();
-    let mut j = match prev_non_ws(b, dot) {
-        Some(j) => j,
-        None => return out,
-    };
-    loop {
-        match b[j] {
-            b']' | b')' => {
-                let (open, close) = if b[j] == b']' { (b'[', b']') } else { (b'(', b')') };
-                let mut depth = 1i64;
-                while j > 0 && depth > 0 {
-                    j -= 1;
-                    if b[j] == close {
-                        depth += 1;
-                    } else if b[j] == open {
-                        depth -= 1;
-                    }
-                }
-                if j == 0 {
-                    return out;
-                }
-                j -= 1;
-            }
-            _ if is_ident_byte(b[j]) => {
-                let Some((start, ident)) = ident_ending_at(b, j) else { return out };
-                out.push(ident);
-                if start == 0 {
-                    return out;
-                }
-                j = start - 1;
-            }
-            b'.' => {
-                let Some(p) = prev_non_ws(b, j) else { return out };
-                j = p;
-            }
-            b':' => {
-                // `::` path separator continues the chain; a lone `:`
-                // (type ascription) ends it.
-                if j > 0 && b[j - 1] == b':' {
-                    let Some(p) = prev_non_ws(b, j - 1) else { return out };
-                    j = p;
-                } else {
-                    return out;
-                }
-            }
-            _ => return out,
-        }
-        // Skip whitespace between chain elements.
-        while j > 0 && b[j].is_ascii_whitespace() {
-            j -= 1;
-        }
-        if b[j].is_ascii_whitespace() {
-            return out;
-        }
-    }
 }
 
 /// The statement text strictly before byte `at`: from the last `;`, `{`

@@ -2,9 +2,12 @@
 //! findings; `run_all` is what `cargo run -p xtask -- analyze` executes
 //! and what the green-tree test asserts is empty.
 
+pub mod blocking;
 pub mod determinism;
 pub mod locks;
+pub mod panics;
 pub mod protocol;
+pub mod telemetry;
 pub mod traits;
 
 use crate::source::{Finding, Tree};
@@ -14,6 +17,9 @@ pub const LINTS: &[(&str, fn(&Tree) -> Vec<Finding>)] = &[
     ("traits", traits::run),
     ("determinism", determinism::run),
     ("locks", locks::run),
+    ("blocking", blocking::run),
+    ("panics", panics::run),
+    ("telemetry", telemetry::run),
 ];
 
 pub fn run_all(tree: &Tree) -> Vec<Finding> {

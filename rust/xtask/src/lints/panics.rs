@@ -1,0 +1,237 @@
+//! Panic-freedom analysis for the serving paths.
+//!
+//! A panic inside the single-threaded event loop kills every connected
+//! peer; a panic inside `Client`/`ClientPool` kills a worker mid-step.
+//! The PR 8 contract says malformed input must surface as
+//! `Response::Err` (server) or an `Err` return (client) — never as a
+//! process abort.  This lint walks the shared call graph
+//! ([`crate::callgraph`]) from two root sets:
+//!
+//! - `serve()` in `weightstore/server.rs` (covers `process_frames`,
+//!   `dispatch`, and — by union-of-candidates resolution — every
+//!   backend's `WeightStore` method bodies);
+//! - every function in `weightstore/client.rs` (the request paths a
+//!   worker drives).
+//!
+//! In each reachable body it flags:
+//!
+//! - `.unwrap()` / `.expect(…)` — **except** when chained directly onto a
+//!   lock acquisition (`.lock()`, `.read()`, `.write()`, condvar
+//!   `.wait(…)` / `.wait_timeout(…)`): those unwrap `LockResult` poison,
+//!   which only fires after another thread has *already* panicked —
+//!   deliberate fail-stop propagation, a separate failure domain owned by
+//!   the loom/TSan suites, not input-dependent control flow;
+//! - panicking macros: `panic!`, `unreachable!`, `todo!`,
+//!   `unimplemented!`, `assert!`, `assert_eq!`, `assert_ne!`
+//!   (`debug_assert*` is compiled out of release servers and allowed);
+//! - **range** slice indexing `x[a..b]` (incl. `[..b]` / `[a..]`) — the
+//!   frame-slicing bug class; write `x.get(a..b)` and handle `None`.
+//!   Plain single-element indexing `x[i]` is *not* flagged: it is
+//!   pervasive and almost always loop- or length-bounded; the lint aims
+//!   at unvalidated wire-length arithmetic, which arrives as ranges.
+//!
+//! Waive a deliberate site with `// analyze: allow(panics): reason` —
+//! e.g. the telemetry kind-mismatch guards, whose impossibility is
+//! proven statically by the `telemetry` lint.
+
+use crate::callgraph::Graph;
+use crate::source::{
+    ident_ending_at, ident_starting_at, is_ident_byte, prev_non_ws, skip_ws, Finding, Tree,
+};
+
+const KEY: &str = "panics";
+
+/// Receiver methods whose `Result` is lock-poison (see module docs):
+/// `.lock().unwrap()` et al. are exempt.
+const POISON_SOURCES: &[&str] = &["lock", "read", "write", "wait", "wait_timeout", "wait_while"];
+
+const PANIC_MACROS: &[&str] = &[
+    "panic",
+    "unreachable",
+    "todo",
+    "unimplemented",
+    "assert",
+    "assert_eq",
+    "assert_ne",
+];
+
+pub fn run(tree: &Tree) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let graph = Graph::build(tree);
+
+    let mut roots = graph.fns_named_in("serve", "weightstore/server.rs");
+    for i in 0..graph.fns.len() {
+        if graph.file_of(i).rel.ends_with("weightstore/client.rs") {
+            roots.push(i);
+        }
+    }
+    if roots.is_empty() {
+        // Nothing to protect in this tree.
+        return findings;
+    }
+    let reach = graph.reach(&roots, |_| true);
+
+    for i in reach.all() {
+        let file = graph.file_of(i);
+        let b = file.code_sans_tests.as_bytes();
+        let body = graph.fns[i].body;
+        let nested = graph.nested_spans(i);
+        let mut k = body.0;
+        while k <= body.1 {
+            if let Some(&(_, e)) = nested.iter().find(|(s, _)| *s == k) {
+                k = e + 1;
+                continue;
+            }
+            // Range slice indexing: `expr[ … .. … ]`.
+            if b[k] == b'[' && is_index_bracket(b, k) {
+                if let Some(close) = matching_bracket(b, k) {
+                    if let Some(range) = range_inside(&file.code_sans_tests[k + 1..close]) {
+                        let line = file.line_of(k);
+                        if !file.allows.allowed(line, KEY) {
+                            findings.push(Finding {
+                                file: file.rel.clone(),
+                                line,
+                                lint: "panics",
+                                msg: format!(
+                                    "range indexing `[{range}]` can panic on malformed \
+                                     bounds and is reachable from a serving path \
+                                     ({}); use `.get(…)` and surface an error",
+                                    reach.path(&graph, i)
+                                ),
+                            });
+                        }
+                    }
+                }
+                k += 1;
+                continue;
+            }
+            if !is_ident_byte(b[k]) || b[k].is_ascii_digit() || (k > 0 && is_ident_byte(b[k - 1]))
+            {
+                k += 1;
+                continue;
+            }
+            let Some(name) = ident_starting_at(b, k) else {
+                k += 1;
+                continue;
+            };
+            let after = skip_ws(b, k + name.len());
+            let site = if (name == "unwrap" || name == "expect")
+                && after < b.len()
+                && b[after] == b'('
+                && prev_non_ws(b, k).is_some_and(|p| b[p] == b'.')
+                && !is_poison_unwrap(b, k)
+            {
+                Some(format!("`.{name}(…)`"))
+            } else if PANIC_MACROS.contains(&name.as_str())
+                && after < b.len()
+                && b[after] == b'!'
+            {
+                Some(format!("`{name}!`"))
+            } else {
+                None
+            };
+            if let Some(site) = site {
+                let line = file.line_of(k);
+                if !file.allows.allowed(line, KEY) {
+                    findings.push(Finding {
+                        file: file.rel.clone(),
+                        line,
+                        lint: "panics",
+                        msg: format!(
+                            "{site} is reachable from a serving path ({}); malformed input \
+                             must surface as Response::Err / an Err return, not a panic",
+                            reach.path(&graph, i)
+                        ),
+                    });
+                }
+            }
+            k += name.len();
+        }
+    }
+    findings
+}
+
+/// Is the `unwrap`/`expect` whose ident starts at `k` chained directly
+/// onto a poison-carrying acquisition (`….lock().unwrap()`)?
+fn is_poison_unwrap(b: &[u8], k: usize) -> bool {
+    // k points at `unwrap`; the previous non-ws byte is the `.`.
+    let Some(dot) = prev_non_ws(b, k) else { return false };
+    if b[dot] != b'.' {
+        return false;
+    }
+    // Receiver must end with a call: `… name ( … ) . unwrap()`.
+    let Some(close) = prev_non_ws(b, dot) else { return false };
+    if b[close] != b')' {
+        return false;
+    }
+    // Walk back to the matching `(`.
+    let mut depth = 1i64;
+    let mut j = close;
+    while j > 0 && depth > 0 {
+        j -= 1;
+        if b[j] == b')' {
+            depth += 1;
+        } else if b[j] == b'(' {
+            depth -= 1;
+        }
+    }
+    if depth != 0 || j == 0 {
+        return false;
+    }
+    let Some(end) = prev_non_ws(b, j) else { return false };
+    ident_ending_at(b, end).is_some_and(|(_, name)| POISON_SOURCES.contains(&name.as_str()))
+}
+
+/// Is `b[k] == b'['` an *index* bracket (postfix on an expression) rather
+/// than an array literal / type / attribute / slice pattern?
+fn is_index_bracket(b: &[u8], k: usize) -> bool {
+    match prev_non_ws(b, k) {
+        Some(p) => is_ident_byte(b[p]) || b[p] == b')' || b[p] == b']',
+        None => false,
+    }
+}
+
+/// Index of the `]` matching the `[` at `open`.
+fn matching_bracket(b: &[u8], open: usize) -> Option<usize> {
+    let mut depth = 0i64;
+    for (i, &c) in b.iter().enumerate().skip(open) {
+        if c == b'[' {
+            depth += 1;
+        } else if c == b']' {
+            depth -= 1;
+            if depth == 0 {
+                return Some(i);
+            }
+        }
+    }
+    None
+}
+
+/// If the bracket interior is a range expression with at least one bound
+/// (`a..b`, `..b`, `a..`, `a..=b`), return it trimmed.  A bare `..` (full
+/// slice, cannot panic) and non-range interiors return None.
+fn range_inside(interior: &str) -> Option<&str> {
+    // Only consider `..` at bracket nesting depth 0 of the interior.
+    let ib = interior.as_bytes();
+    let mut depth = 0i64;
+    let mut has_range = false;
+    let mut i = 0;
+    while i < ib.len() {
+        match ib[i] {
+            b'[' | b'(' => depth += 1,
+            b']' | b')' => depth -= 1,
+            b'.' if depth == 0 && i + 1 < ib.len() && ib[i + 1] == b'.' => {
+                has_range = true;
+                i += 1;
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    let trimmed = interior.trim();
+    if has_range && trimmed != ".." {
+        Some(trimmed)
+    } else {
+        None
+    }
+}

@@ -1,0 +1,215 @@
+//! Telemetry-conformance analysis.
+//!
+//! The telemetry registry keys instruments by string name; nothing in the
+//! type system stops a typo'd name, a third dotted segment, or one name
+//! registered as a counter here and a histogram there (which panics at
+//! runtime — the registry's kind guard).  This lint makes those static:
+//!
+//! - every `counter("…")` / `gauge("…")` / `histogram("…")` literal must
+//!   match the `subsystem.metric` grammar — exactly two dot-separated
+//!   lowercase `snake_case` segments (the grammar documented in
+//!   `telemetry/mod.rs`);
+//! - every metric literal in store-process code (files under
+//!   `weightstore/`) must appear in `telemetry::STORE_METRICS` with a
+//!   matching kind — the canonical schema a `FetchMetrics` scrape
+//!   pre-registers at `serve()` start;
+//! - no name may be used with conflicting instrument kinds anywhere in
+//!   the tree, and `STORE_METRICS` itself must be well-formed (valid
+//!   kind chars, grammar-clean names, no duplicates).
+//!
+//! Sites are located in test-stripped scrubbed code (so `test.unit.*`
+//! names inside `#[cfg(test)]` modules are exempt) but the literal text
+//! is read from the raw file at the same offsets.  Trees without a
+//! `telemetry/mod.rs` (partial fixtures) skip the membership check.
+//! Waive a deliberate site with `// analyze: allow(telemetry): reason`.
+
+use std::collections::BTreeMap;
+
+use crate::source::{find_token_from, ident_ending_at, prev_non_ws, skip_ws, Finding, Tree};
+
+const KEY: &str = "telemetry";
+
+const INSTRUMENTS: &[(&str, char)] = &[("counter", 'c'), ("gauge", 'g'), ("histogram", 'h')];
+
+fn kind_word(k: char) -> &'static str {
+    match k {
+        'c' => "counter",
+        'g' => "gauge",
+        'h' => "histogram",
+        _ => "?",
+    }
+}
+
+pub fn run(tree: &Tree) -> Vec<Finding> {
+    let mut findings = Vec::new();
+
+    // --- canonical schema ------------------------------------------------
+    let store_metrics = parse_store_metrics(tree, &mut findings);
+
+    // --- every literal call site ----------------------------------------
+    // name → (kind, file, line) of the first site, for conflict reports.
+    let mut first_use: BTreeMap<String, (char, String, usize)> = BTreeMap::new();
+    for file in &tree.files {
+        let code = &file.code_sans_tests;
+        let cb = code.as_bytes();
+        let rb = file.raw.as_bytes();
+        for &(inst, kind) in INSTRUMENTS {
+            let mut from = 0usize;
+            while let Some(pos) = find_token_from(code, inst, from) {
+                from = pos + inst.len();
+                // Must be a call, not a definition or a type name.
+                let open = skip_ws(cb, pos + inst.len());
+                if open >= cb.len() || cb[open] != b'(' {
+                    continue;
+                }
+                let is_def = prev_non_ws(cb, pos)
+                    .and_then(|p| ident_ending_at(cb, p))
+                    .is_some_and(|(_, kw)| kw == "fn");
+                if is_def {
+                    continue;
+                }
+                // The argument must be a string literal — read it from the
+                // raw text (literals are blanked in scrubbed code).
+                let q = skip_ws(rb, open + 1);
+                if q >= rb.len() || rb[q] != b'"' {
+                    continue; // non-literal name (registry internals)
+                }
+                let Some(rel_end) = file.raw[q + 1..].find('"') else { continue };
+                let name = &file.raw[q + 1..q + 1 + rel_end];
+                let line = file.line_of(pos);
+                let waived = file.allows.allowed(line, KEY);
+
+                if !grammar_ok(name) && !waived {
+                    findings.push(Finding {
+                        file: file.rel.clone(),
+                        line,
+                        lint: "telemetry",
+                        msg: format!(
+                            "metric name {name:?} does not match the `subsystem.metric` \
+                             grammar (two dot-separated lowercase snake_case segments)"
+                        ),
+                    });
+                }
+                if let Some(schema) = &store_metrics {
+                    if file.rel.starts_with("weightstore/") && !waived {
+                        match schema.get(name) {
+                            None => findings.push(Finding {
+                                file: file.rel.clone(),
+                                line,
+                                lint: "telemetry",
+                                msg: format!(
+                                    "store-process metric {name:?} is not declared in \
+                                     telemetry::STORE_METRICS — a FetchMetrics scrape would \
+                                     not expose it until first use; add it to the canonical \
+                                     schema"
+                                ),
+                            }),
+                            Some(&k) if k != kind => findings.push(Finding {
+                                file: file.rel.clone(),
+                                line,
+                                lint: "telemetry",
+                                msg: format!(
+                                    "metric {name:?} used as a {} here but declared '{k}' \
+                                     ({}) in telemetry::STORE_METRICS",
+                                    kind_word(kind),
+                                    kind_word(k),
+                                ),
+                            }),
+                            Some(_) => {}
+                        }
+                    }
+                }
+                let prior = first_use
+                    .get(name)
+                    .map(|(k0, f0, l0)| (*k0, f0.clone(), *l0));
+                match prior {
+                    None => {
+                        first_use
+                            .insert(name.to_string(), (kind, file.rel.clone(), line));
+                    }
+                    Some((k0, f0, l0)) if k0 != kind && !waived => {
+                        findings.push(Finding {
+                            file: file.rel.clone(),
+                            line,
+                            lint: "telemetry",
+                            msg: format!(
+                                "metric {name:?} used as a {} here but as a {} at {f0}:{l0} \
+                                 — the registry panics on kind mismatch",
+                                kind_word(kind),
+                                kind_word(k0),
+                            ),
+                        });
+                    }
+                    Some(_) => {}
+                }
+            }
+        }
+    }
+    findings
+}
+
+fn grammar_ok(name: &str) -> bool {
+    let mut parts = name.split('.');
+    let seg_ok = |s: &str| {
+        !s.is_empty()
+            && s.as_bytes()[0].is_ascii_lowercase()
+            && s.bytes().all(|b| b.is_ascii_lowercase() || b.is_ascii_digit() || b == b'_')
+    };
+    match (parts.next(), parts.next(), parts.next()) {
+        (Some(a), Some(b), None) => seg_ok(a) && seg_ok(b),
+        _ => false,
+    }
+}
+
+/// Parse the `STORE_METRICS: &[(&str, char)]` table out of
+/// `telemetry/mod.rs` raw text.  Returns None when the tree has no such
+/// table (partial fixture trees), which disables the membership check.
+fn parse_store_metrics(tree: &Tree, findings: &mut Vec<Finding>) -> Option<BTreeMap<String, char>> {
+    let file = tree.get("telemetry/mod.rs")?;
+    let pos = find_token_from(&file.raw, "STORE_METRICS", 0)?;
+    let close = file.raw[pos..].find("];").map(|o| pos + o)?;
+    let table = &file.raw[pos..close];
+    let mut schema = BTreeMap::new();
+    let mut from = 0usize;
+    while let Some(off) = table[from..].find("(\"") {
+        let name_start = from + off + 2;
+        let Some(name_len) = table[name_start..].find('"') else { break };
+        let name = &table[name_start..name_start + name_len];
+        let rest = &table[name_start + name_len..];
+        let line = file.line_of(pos + name_start);
+        let kind = rest
+            .find('\'')
+            .and_then(|q| rest[q + 1..].chars().next())
+            .unwrap_or('?');
+        if !matches!(kind, 'c' | 'g' | 'h') {
+            findings.push(Finding {
+                file: file.rel.clone(),
+                line,
+                lint: "telemetry",
+                msg: format!(
+                    "STORE_METRICS entry {name:?} has invalid kind {kind:?} (want 'c'/'g'/'h')"
+                ),
+            });
+        }
+        if !grammar_ok(name) {
+            findings.push(Finding {
+                file: file.rel.clone(),
+                line,
+                lint: "telemetry",
+                msg: format!(
+                    "STORE_METRICS entry {name:?} does not match the `subsystem.metric` grammar"
+                ),
+            });
+        }
+        if schema.insert(name.to_string(), kind).is_some() {
+            findings.push(Finding {
+                file: file.rel.clone(),
+                line,
+                lint: "telemetry",
+                msg: format!("STORE_METRICS declares {name:?} twice"),
+            });
+        }
+        from = name_start + name_len;
+    }
+    Some(schema)
+}

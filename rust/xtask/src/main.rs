@@ -1,16 +1,25 @@
 use std::path::PathBuf;
 use std::process::ExitCode;
 
+use xtask::diag;
 use xtask::lints;
 use xtask::Tree;
 
 const USAGE: &str = "\
 usage: cargo run -p xtask -- analyze [--root <dir>] [--lint <name>]
+                                     [--format text|json|github]
+                                     [--baseline <path>] [--write-baseline]
 
   analyze            run every lint over the source tree (default root:
                      ./src or ./rust/src, whichever exists)
   --root <dir>       analyze a different tree (used by the fixture tests)
-  --lint <name>      run a single lint: protocol | traits | determinism | locks
+  --lint <name>      run a single lint: protocol | traits | determinism |
+                     locks | blocking | panics | telemetry
+  --format <fmt>     text (default) | json | github (workflow annotations)
+  --baseline <path>  findings baseline to diff against (default:
+                     xtask/analyze-baseline.json next to the source root);
+                     only findings NOT in the baseline fail the run
+  --write-baseline   rewrite the baseline from the current findings
 ";
 
 fn main() -> ExitCode {
@@ -18,12 +27,18 @@ fn main() -> ExitCode {
     let mut cmd = None;
     let mut root: Option<PathBuf> = None;
     let mut lint: Option<String> = None;
+    let mut format = "text".to_string();
+    let mut baseline_path: Option<PathBuf> = None;
+    let mut write_baseline = false;
     let mut it = args.iter();
     while let Some(a) = it.next() {
         match a.as_str() {
             "analyze" => cmd = Some("analyze"),
             "--root" => root = it.next().map(PathBuf::from),
             "--lint" => lint = it.next().cloned(),
+            "--format" => format = it.next().cloned().unwrap_or_default(),
+            "--baseline" => baseline_path = it.next().map(PathBuf::from),
+            "--write-baseline" => write_baseline = true,
             "-h" | "--help" => {
                 print!("{USAGE}");
                 return ExitCode::SUCCESS;
@@ -36,6 +51,10 @@ fn main() -> ExitCode {
     }
     if cmd != Some("analyze") {
         eprint!("{USAGE}");
+        return ExitCode::from(2);
+    }
+    if !matches!(format.as_str(), "text" | "json" | "github") {
+        eprintln!("unknown --format `{format}` (want text|json|github)\n{USAGE}");
         return ExitCode::from(2);
     }
     let root = root.unwrap_or_else(|| {
@@ -64,18 +83,91 @@ fn main() -> ExitCode {
         },
         None => lints::run_all(&tree),
     };
-    for f in &findings {
-        println!("{f}");
-    }
-    if findings.is_empty() {
+
+    // The baseline lives next to the analyzed tree: <root>/../xtask/….
+    let baseline_path = baseline_path.unwrap_or_else(|| {
+        root.parent()
+            .unwrap_or(&root)
+            .join("xtask/analyze-baseline.json")
+    });
+    if write_baseline {
+        let refs: Vec<&xtask::Finding> = findings.iter().collect();
+        if let Err(e) = std::fs::write(&baseline_path, diag::to_json(&refs)) {
+            eprintln!("error: cannot write baseline {}: {e}", baseline_path.display());
+            return ExitCode::from(2);
+        }
         println!(
-            "analyze: {} files, {} lints, 0 findings",
-            tree.files.len(),
-            lint.map_or(lints::LINTS.len(), |_| 1)
+            "analyze: wrote {} finding(s) to {}",
+            findings.len(),
+            baseline_path.display()
         );
+        return ExitCode::SUCCESS;
+    }
+    let baseline = match std::fs::read_to_string(&baseline_path) {
+        Ok(text) => match diag::parse_baseline(&text) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!(
+                    "error: malformed baseline {}: {e}",
+                    baseline_path.display()
+                );
+                return ExitCode::from(2);
+            }
+        },
+        Err(_) => Vec::new(), // no baseline file = empty baseline
+    };
+    let (fresh, known, stale) = diag::diff(&findings, &baseline);
+
+    match format.as_str() {
+        "json" => print!("{}", diag::to_json(&fresh)),
+        "github" => {
+            // Annotation paths are repo-root-relative: when analyzing
+            // e.g. `rust/src`, the root itself is the prefix.
+            let prefix = root.to_string_lossy().replace('\\', "/");
+            let prefix = prefix.trim_start_matches("./");
+            for f in &fresh {
+                println!("{}", diag::github_annotation(f, prefix));
+            }
+            for f in &known {
+                println!(
+                    "::warning file={prefix}/{},line={}::[{}] baselined: {}",
+                    f.file, f.line, f.lint, f.msg
+                );
+            }
+        }
+        _ => {
+            for f in &fresh {
+                println!("{f}");
+            }
+        }
+    }
+    if !known.is_empty() {
+        eprintln!(
+            "analyze: {} baselined finding(s) suppressed (burn them down: fix and \
+             `--write-baseline` to shrink {})",
+            known.len(),
+            baseline_path.display()
+        );
+    }
+    if !stale.is_empty() {
+        eprintln!(
+            "analyze: {} stale baseline entr(y/ies) no longer fire — shrink the baseline \
+             with `--write-baseline`",
+            stale.len()
+        );
+    }
+    if fresh.is_empty() {
+        if format == "text" {
+            println!(
+                "analyze: {} files, {} lints, 0 new findings ({} baselined)",
+                tree.files.len(),
+                lint.map_or(lints::LINTS.len(), |_| 1),
+                known.len()
+            );
+        }
         ExitCode::SUCCESS
     } else {
-        eprintln!("analyze: {} finding(s)", findings.len());
+        eprintln!("analyze: {} new finding(s)", fresh.len());
         ExitCode::FAILURE
     }
 }

@@ -1,0 +1,11 @@
+//! Mini telemetry schema (analyzer fixture).
+//!
+//! Metric names follow the `subsystem.metric` grammar: exactly two
+//! dot-separated lowercase `snake_case` segments, each starting with a
+//! letter.  The telemetry lint checks every literal instrument call
+//! against this grammar and — for files under `weightstore/` — against
+//! the canonical schema below.
+
+/// Canonical store-process metric schema: `(name, kind)` with kind
+/// `'c'` counter, `'g'` gauge, `'h'` histogram.
+pub const STORE_METRICS: &[(&str, char)] = &[("server.ticks", 'c')];

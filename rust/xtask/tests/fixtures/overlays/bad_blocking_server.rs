@@ -1,10 +1,11 @@
-//! Mini server event loop + dispatch (analyzer fixture).
+//! Overlay for weightstore/server.rs: `tick` smuggles blocking calls
+//! into the event loop through a helper two edges below `serve` — a
+//! thread sleep and a file sync.  The blocking lint must flag both with
+//! a serve-rooted witness path.
 
 use super::protocol::{Request, Response};
 use super::WeightStore;
 
-/// Event-loop root the blocking/panics lints walk from.  One tick per
-/// queued frame; malformed frames surface as `Response::Err`.
 pub fn serve(store: &dyn WeightStore, frames: &[Vec<u8>]) -> Vec<Response> {
     let mut out = Vec::new();
     for frame in frames {
@@ -14,10 +15,19 @@ pub fn serve(store: &dyn WeightStore, frames: &[Vec<u8>]) -> Vec<Response> {
 }
 
 fn tick(store: &dyn WeightStore, frame: &[u8]) -> Response {
-    crate::telemetry::counter("server.ticks").inc();
-    match Request::decode(frame) {
+    let resp = match Request::decode(frame) {
         Some(req) => dispatch(store, req),
         None => Response::Err(String::from("malformed frame")),
+    };
+    settle();
+    resp
+}
+
+/// "Durability" done in the worst possible place: inline in the tick.
+fn settle() {
+    std::thread::sleep(std::time::Duration::from_millis(1));
+    if let Ok(f) = std::fs::File::open("journal.log") {
+        let _ = f.sync_all();
     }
 }
 

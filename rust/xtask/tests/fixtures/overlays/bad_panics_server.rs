@@ -1,10 +1,11 @@
-//! Mini server event loop + dispatch (analyzer fixture).
+//! Overlay for weightstore/server.rs: the frame parse path panics on
+//! malformed input instead of surfacing `Response::Err` — a decode
+//! `.unwrap()` and an unvalidated range slice, both transitively below
+//! `serve`.  The panics lint must flag both sites.
 
 use super::protocol::{Request, Response};
 use super::WeightStore;
 
-/// Event-loop root the blocking/panics lints walk from.  One tick per
-/// queued frame; malformed frames surface as `Response::Err`.
 pub fn serve(store: &dyn WeightStore, frames: &[Vec<u8>]) -> Vec<Response> {
     let mut out = Vec::new();
     for frame in frames {
@@ -14,11 +15,15 @@ pub fn serve(store: &dyn WeightStore, frames: &[Vec<u8>]) -> Vec<Response> {
 }
 
 fn tick(store: &dyn WeightStore, frame: &[u8]) -> Response {
-    crate::telemetry::counter("server.ticks").inc();
-    match Request::decode(frame) {
-        Some(req) => dispatch(store, req),
-        None => Response::Err(String::from("malformed frame")),
-    }
+    dispatch(store, parse(frame))
+}
+
+fn parse(frame: &[u8]) -> Request {
+    Request::decode(header(frame)).unwrap()
+}
+
+fn header(frame: &[u8]) -> &[u8] {
+    &frame[0..9]
 }
 
 pub fn dispatch(store: &dyn WeightStore, req: Request) -> Response {

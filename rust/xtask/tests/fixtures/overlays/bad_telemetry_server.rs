@@ -1,10 +1,12 @@
-//! Mini server event loop + dispatch (analyzer fixture).
+//! Overlay for weightstore/server.rs: three telemetry-conformance
+//! violations in one tick — a metric name that breaks the
+//! `subsystem.metric` grammar, a store-process metric missing from
+//! `telemetry::STORE_METRICS`, and a registered name used with the
+//! wrong instrument kind.  The telemetry lint must flag all three.
 
 use super::protocol::{Request, Response};
 use super::WeightStore;
 
-/// Event-loop root the blocking/panics lints walk from.  One tick per
-/// queued frame; malformed frames surface as `Response::Err`.
 pub fn serve(store: &dyn WeightStore, frames: &[Vec<u8>]) -> Vec<Response> {
     let mut out = Vec::new();
     for frame in frames {
@@ -14,7 +16,9 @@ pub fn serve(store: &dyn WeightStore, frames: &[Vec<u8>]) -> Vec<Response> {
 }
 
 fn tick(store: &dyn WeightStore, frame: &[u8]) -> Response {
-    crate::telemetry::counter("server.ticks").inc();
+    crate::telemetry::counter("Server.Ticks").inc();
+    crate::telemetry::counter("server.frames_total").inc();
+    crate::telemetry::histogram("server.ticks").observe(1.0);
     match Request::decode(frame) {
         Some(req) => dispatch(store, req),
         None => Response::Err(String::from("malformed frame")),

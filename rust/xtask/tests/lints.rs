@@ -180,6 +180,100 @@ fn pragma_sanctions_wallclock_in_good_tree() {
 }
 
 #[test]
+fn blocking_lint_catches_sleep_and_sync_in_tick_path() {
+    let tree = load_with_overlay(Some(("bad_blocking_server.rs", "weightstore/server.rs")));
+    let findings = lints::run_one(&tree, "blocking").unwrap();
+    assert_spans(&findings);
+    // The overlay sleeps on its line 28 and syncs on line 30, two call
+    // edges below serve; the witness path must name the root.
+    for (name, line) in [("sleep", 28), ("sync_all", 30)] {
+        let hit = findings
+            .iter()
+            .find(|f| {
+                f.msg.contains(&format!("`{name}(…)`"))
+                    && f.file.ends_with("weightstore/server.rs")
+            })
+            .unwrap_or_else(|| panic!("expected `{name}` finding, got:\n{}", render(&findings)));
+        assert_eq!(hit.line, line, "finding points at the wrong line: {hit}");
+        assert!(
+            hit.msg.contains("serve -> tick -> settle"),
+            "witness path should walk from serve: {hit}"
+        );
+    }
+    assert_eq!(
+        findings.len(),
+        2,
+        "unexpected extra findings:\n{}",
+        render(&findings)
+    );
+}
+
+#[test]
+fn panics_lint_catches_decode_unwrap_and_range_index() {
+    let tree = load_with_overlay(Some(("bad_panics_server.rs", "weightstore/server.rs")));
+    let findings = lints::run_one(&tree, "panics").unwrap();
+    assert_spans(&findings);
+    // Overlay line 22: `Request::decode(…).unwrap()`; line 26: `frame[0..9]`.
+    let unwrap_hit = findings
+        .iter()
+        .find(|f| f.msg.contains("`.unwrap(…)`"))
+        .unwrap_or_else(|| panic!("expected `.unwrap()` finding, got:\n{}", render(&findings)));
+    assert_eq!(unwrap_hit.line, 22, "finding points at the wrong line: {unwrap_hit}");
+    let range_hit = findings
+        .iter()
+        .find(|f| f.msg.contains("range indexing `[0..9]`"))
+        .unwrap_or_else(|| panic!("expected range-index finding, got:\n{}", render(&findings)));
+    assert_eq!(range_hit.line, 26, "finding points at the wrong line: {range_hit}");
+    assert!(
+        range_hit.msg.contains("serve -> tick -> parse -> header"),
+        "witness path should walk from serve: {range_hit}"
+    );
+    // The good tree's poison unwraps (`.lock().unwrap()`) must NOT fire:
+    // only the two injected sites are findings.
+    assert_eq!(
+        findings.len(),
+        2,
+        "unexpected extra findings:\n{}",
+        render(&findings)
+    );
+}
+
+#[test]
+fn telemetry_lint_catches_grammar_membership_and_kind() {
+    let tree = load_with_overlay(Some(("bad_telemetry_server.rs", "weightstore/server.rs")));
+    let findings = lints::run_one(&tree, "telemetry").unwrap();
+    assert_spans(&findings);
+    // Line 19 breaks the grammar (and is therefore also undeclared),
+    // line 20 is a grammar-clean name missing from STORE_METRICS, and
+    // line 21 uses a declared counter as a histogram.
+    assert!(
+        findings.iter().any(|f| f.line == 19 && f.msg.contains("grammar")),
+        "expected grammar finding on line 19, got:\n{}",
+        render(&findings)
+    );
+    assert!(
+        findings
+            .iter()
+            .any(|f| f.line == 20 && f.msg.contains("not declared in")),
+        "expected STORE_METRICS membership finding on line 20, got:\n{}",
+        render(&findings)
+    );
+    assert!(
+        findings
+            .iter()
+            .any(|f| f.line == 21 && f.msg.contains("declared 'c'")),
+        "expected kind-mismatch finding on line 21, got:\n{}",
+        render(&findings)
+    );
+    assert_eq!(
+        findings.len(),
+        4,
+        "unexpected extra findings:\n{}",
+        render(&findings)
+    );
+}
+
+#[test]
 fn unknown_lint_name_is_rejected() {
     let tree = load_with_overlay(None);
     assert!(lints::run_one(&tree, "no-such-lint").is_none());
